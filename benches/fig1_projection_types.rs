@@ -1,0 +1,71 @@
+//! E1 — Figure 1: comparison of projection methods across Llama models.
+//!
+//! Trains GaLore end-to-end (through the fwd_bwd artifact) once per
+//! (preset × projection kind) with identical data/seed/schedule and prints
+//! the validation-loss table. Expected shape (the paper's finding):
+//! rand_svd ≈ svd; q8 close; q4 noticeably worse; random clearly worse.
+
+use galore2::config::TrainConfig;
+use galore2::train::Trainer;
+
+const KINDS: [&str; 5] = ["svd", "rand_svd", "q8", "q4", "random"];
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let presets: &[&str] = if quick {
+        &["llama-nano"]
+    } else {
+        &["llama-nano", "llama-micro"]
+    };
+    // Budget/refresh scaling: the paper runs T = 500 of ~476K steps —
+    // refreshes are RARE relative to the run, so subspace quality matters.
+    // A short budget with one mid-run refresh reproduces that regime;
+    // long budgets with frequent refreshes let even a random subspace
+    // catch up (we verified this — see EXPERIMENTS.md E1 note).
+    let steps: u64 = if quick { 80 } else { 140 };
+
+    println!("== E1 / Figure 1: projection types x model sizes ({steps} steps) ==\n");
+    println!("{:<12} {:>9} {:>9} {:>9} {:>9} {:>9}", "preset", "svd", "rand_svd", "q8", "q4", "random");
+    for preset in presets {
+        let hidden = galore2::model::LlamaCfg::preset(preset).unwrap().hidden;
+        let mut losses = Vec::new();
+        for kind in KINDS {
+            let cfg = TrainConfig {
+                preset: preset.to_string(),
+                run_name: format!("bench-fig1-{preset}-{kind}"),
+                out_dir: std::env::temp_dir().join("galore2_bench"),
+                optimizer: "galore".into(),
+                lr: 0.02,
+                steps,
+                galore_rank: hidden / 8,
+                galore_update_freq: steps / 2, // one refresh mid-run
+                galore_alpha: 0.25,
+                galore_projection: kind.into(),
+                eval_every: 0,
+                eval_batches: 8,
+                log_every: steps,
+                corpus_tokens: 300_000,
+                val_tokens: 30_000,
+                seed: 7,
+                ..TrainConfig::default()
+            };
+            let mut trainer = Trainer::new(cfg)?;
+            let outcome = trainer.run()?;
+            losses.push(outcome.final_val_loss);
+        }
+        println!(
+            "{:<12} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.4}",
+            preset, losses[0], losses[1], losses[2], losses[3], losses[4]
+        );
+        let ok_rand_svd = (losses[1] - losses[0]).abs() < 0.1;
+        let ok_random = losses[4] > losses[0] + 0.05;
+        println!(
+            "             rand_svd≈svd: {}   random degrades: {}",
+            if ok_rand_svd { "✓" } else { "✗" },
+            if ok_random { "✓" } else { "✗" }
+        );
+    }
+    println!("\npaper (Fig. 1): randomized SVD fully matches the GaLore baseline;");
+    println!("random and extremely-quantized projections degrade significantly.");
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! E10 — end-to-end and component throughput (§Perf).
+//!
+//! Sections:
+//!   1. optimizer step time per engine: AdamW / Adam8bit / GaLore-native /
+//!      GaLore-pjrt on a llama-micro-shaped layer set;
+//!   2. GEMM plan sweep for the native projection kernels (feeds the
+//!      MatmulPlan defaults);
+//!   3. collectives throughput (all-reduce / reduce-scatter / all-gather);
+//!   4. full train-step wall time per optimizer (artifact execution +
+//!      optimizer) — the headline table in EXPERIMENTS.md §Perf.
+
+use galore2::bench::Bench;
+use galore2::config::TrainConfig;
+use galore2::dist::Comm;
+use galore2::optim::{
+    Adam8bit, AdamCfg, AdamW, GaLore, GaLoreCfg, Optimizer, ProjectionKind,
+};
+use galore2::tensor::{matmul_with_plan, Matrix, MatmulPlan};
+use galore2::train::Trainer;
+use galore2::util::rng::Pcg64;
+
+fn layer_set() -> Vec<(Matrix, Matrix)> {
+    // llama-micro's distinct 2-d shapes (param, grad).
+    let mut rng = Pcg64::new(1, 0);
+    [(128usize, 128usize), (128, 352), (352, 128), (512, 128)]
+        .iter()
+        .map(|&(m, n)| {
+            (
+                Matrix::randn(m, n, 0.02, &mut rng),
+                Matrix::randn(m, n, 0.01, &mut rng),
+            )
+        })
+        .collect()
+}
+
+fn bench_optimizer(b: &mut Bench, name: &str, opt: &mut dyn Optimizer) {
+    let mut layers = layer_set();
+    let grads: Vec<Matrix> = layers.iter().map(|(_, g)| g.clone()).collect();
+    let mut t = 0u64;
+    b.run(&format!("optstep_{name}"), || {
+        opt.begin_step(t);
+        for (idx, ((p, _), g)) in layers.iter_mut().zip(&grads).enumerate() {
+            opt.step_param(idx, p, g, 1e-3);
+        }
+        t += 1;
+    });
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new();
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+
+    println!("== 1. optimizer step time (4 micro-shaped layers) ==");
+    bench_optimizer(&mut b, "adamw", &mut AdamW::new(AdamCfg::default()));
+    bench_optimizer(&mut b, "adam8bit", &mut Adam8bit::new(AdamCfg::default()));
+    let gcfg = GaLoreCfg {
+        rank: 32,
+        update_freq: 100,
+        alpha: 0.25,
+        projection: ProjectionKind::RandSvd,
+        ..GaLoreCfg::default()
+    };
+    bench_optimizer(
+        &mut b,
+        "galore_native",
+        &mut GaLore::new(gcfg, AdamCfg::default(), 3),
+    );
+    // pjrt engine (needs micro kernel artifacts)
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if artifacts.join("manifest_llama-micro.json").exists() {
+        let manifest =
+            galore2::runtime::Manifest::load(artifacts.join("manifest_llama-micro.json"))?;
+        if !manifest.kernels.is_empty() {
+            let rt = std::sync::Arc::new(galore2::runtime::Runtime::cpu()?);
+            let mut pjrt = galore2::train::PjrtGaLore::new(
+                gcfg,
+                AdamCfg::default(),
+                rt,
+                artifacts.clone(),
+                manifest,
+                3,
+            );
+            bench_optimizer(&mut b, "galore_pjrt", &mut pjrt);
+        }
+    }
+
+    println!("\n== 2. GEMM plan sweep (projection shape 128x352 · 352x32) ==");
+    let mut rng = Pcg64::new(2, 0);
+    let a = Matrix::randn(128, 352, 1.0, &mut rng);
+    let c = Matrix::randn(352, 128, 1.0, &mut rng);
+    let flops = 2.0 * 128.0 * 352.0 * 128.0;
+    for (mc, kc, nc) in [(32, 64, 64), (64, 256, 256), (64, 128, 512), (128, 512, 512)] {
+        b.run_with_throughput(
+            &format!("gemm_mc{mc}_kc{kc}_nc{nc}"),
+            Some((flops, "flop")),
+            || matmul_with_plan(&a, &c, MatmulPlan { mc, kc, nc }),
+        );
+    }
+
+    println!("\n== 3. collectives (world 4, 1 MiB payloads) ==");
+    let elems = 256 * 1024usize;
+    for op in ["all_reduce", "reduce_scatter", "all_gather"] {
+        let bytes = (elems * 4) as f64;
+        b.run_with_throughput(&format!("collective_{op}"), Some((bytes, "B")), || {
+            let comms = Comm::create_world(4);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = comms
+                    .into_iter()
+                    .map(|c| {
+                        s.spawn(move || {
+                            let data = vec![1.0f32; elems];
+                            match op {
+                                "all_reduce" => {
+                                    c.all_reduce_sum(data).len()
+                                }
+                                "reduce_scatter" => {
+                                    let off: Vec<usize> =
+                                        (0..=4).map(|i| i * elems / 4).collect();
+                                    c.reduce_scatter_sum(data, &off).len()
+                                }
+                                _ => c.all_gather(data).len(),
+                            }
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+            })
+        });
+    }
+
+    println!("\n== 4. full train step (llama-nano, artifact + optimizer) ==");
+    let steps = if quick { 10 } else { 30 };
+    for optimizer in ["adamw", "adam8bit", "galore"] {
+        let cfg = TrainConfig {
+            preset: "llama-nano".into(),
+            run_name: format!("bench-tp-{optimizer}"),
+            out_dir: std::env::temp_dir().join("galore2_bench"),
+            optimizer: optimizer.into(),
+            lr: 0.01,
+            steps,
+            galore_rank: 16,
+            galore_update_freq: 10,
+            eval_every: 0,
+            corpus_tokens: 50_000,
+            val_tokens: 5_000,
+            ..TrainConfig::default()
+        };
+        let mut trainer = Trainer::new(cfg)?;
+        let flops = trainer.llama.step_flops();
+        let timer = galore2::util::Timer::start();
+        for t in 0..steps {
+            trainer.train_step(t)?;
+        }
+        let per_step = timer.elapsed_secs() / steps as f64;
+        println!(
+            "trainstep_{optimizer:<9} {:>9.2} ms/step  {:>8.3} GFLOP/s  ({} tokens/step)",
+            per_step * 1e3,
+            flops / per_step / 1e9,
+            trainer.llama.batch * trainer.llama.seq
+        );
+    }
+    b.summarize_vs_baseline();
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Table 1 reproduction driver: per-GPU memory, GaLore+FSDP vs AdamW+FSDP.
+//!
+//!     cargo run --release --example fsdp_memory
+//!
+//! Two halves:
+//!   1. the analytic model at the paper's scale (Llama3-8B, 2 GPUs,
+//!      seq 2048/4096) — regenerates Table 1's rows;
+//!   2. a LIVE llama-nano FSDP cluster whose worker threads report actual
+//!      byte counters, validating the model's state terms and showing the
+//!      per-layer fused-update gradient behaviour (Fig. 2).
+
+use galore2::config::{ParallelMode, TrainConfig};
+use galore2::memory::{estimate, MemoryCfg, OptimKind, Parallelism, Precision};
+use galore2::model::LlamaCfg;
+use galore2::train::Trainer;
+use galore2::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // ---------- analytic Table 1 ----------------------------------------
+    println!("=== Table 1 (analytic model): Llama3-8B, FSDP x2, batch 1 ===");
+    println!(
+        "{:<10} {:>6} {:<16} {:>14} {:>14}",
+        "model", "seq", "method", "model (GiB)", "paper (GB)"
+    );
+    let cfg8b = LlamaCfg::preset("llama3-8b").unwrap();
+    let rank = cfg8b.default_rank(); // 1024
+    let rows: [(&str, usize, OptimKind, bool, &str); 4] = [
+        ("Llama3 8B", 4096, OptimKind::GaLore { rank }, true, "77.45"),
+        ("Llama3 8B", 4096, OptimKind::AdamW, false, "OOM (/)"),
+        ("Llama3 8B", 2048, OptimKind::GaLore { rank }, true, "72.84"),
+        ("Llama3 8B", 2048, OptimKind::AdamW, false, "77.64"),
+    ];
+    for (model, seq, optim, per_layer, paper) in rows {
+        let est = estimate(
+            &cfg8b,
+            &MemoryCfg {
+                optim,
+                parallelism: Parallelism::Fsdp { world: 2 },
+                precision: Precision::mixed_bf16(),
+                seq,
+                batch: 1,
+                per_layer_update: per_layer,
+                activation_factor: 0.3,
+            },
+        );
+        let method = match optim {
+            OptimKind::AdamW => "AdamW + FSDP",
+            _ => "GaLore + FSDP",
+        };
+        println!(
+            "{:<10} {:>6} {:<16} {:>14.2} {:>14}",
+            model,
+            seq,
+            method,
+            est.total_gib(),
+            paper
+        );
+    }
+
+    // ---------- §1 single-GPU claims ------------------------------------
+    println!("\n=== §1 claims: Llama 7B single GPU, batch 1 ===");
+    let cfg7b = LlamaCfg::preset("llama-7b").unwrap();
+    let adam = estimate(
+        &cfg7b,
+        &MemoryCfg {
+            optim: OptimKind::AdamW,
+            parallelism: Parallelism::Single,
+            precision: Precision::full_fp32(),
+            seq: 1024,
+            batch: 1,
+            per_layer_update: false,
+            activation_factor: 0.15,
+        },
+    );
+    let galore = estimate(
+        &cfg7b,
+        &MemoryCfg {
+            optim: OptimKind::GaLore8bit { rank: 1024 },
+            parallelism: Parallelism::Single,
+            precision: Precision {
+                param_bytes: 2,
+                grad_bytes: 2,
+                master_fp32: false,
+            },
+            seq: 256,
+            batch: 1,
+            per_layer_update: true,
+            activation_factor: 0.15,
+        },
+    );
+    println!(
+        "fp32 Adam:        {:>8.1} GiB   (paper: \"at least 58 GB\")",
+        adam.total_gib()
+    );
+    println!(
+        "GaLore + 8bit:    {:>8.1} GiB   (paper: fits a 24 GB RTX 4090)",
+        galore.total_gib()
+    );
+
+    // ---------- live FSDP cluster counters ------------------------------
+    println!("\n=== live validation: llama-nano FSDP x4, real byte counters ===");
+    for optimizer in ["adamw", "galore"] {
+        let cfg = TrainConfig {
+            preset: "llama-nano".into(),
+            run_name: format!("fsdpmem-{optimizer}"),
+            optimizer: optimizer.into(),
+            parallel: ParallelMode::Fsdp,
+            world: 4,
+            steps: 12,
+            lr: 0.01,
+            galore_rank: 16,
+            galore_update_freq: 5,
+            eval_every: 0,
+            corpus_tokens: 30_000,
+            val_tokens: 5_000,
+            ..TrainConfig::default()
+        };
+        let mut trainer = Trainer::new(cfg)?;
+        for t in 0..12 {
+            trainer.train_step(t)?;
+        }
+        let reports = trainer.fsdp_memory().unwrap();
+        let r0 = &reports[0];
+        println!(
+            "{:<8} rank0: param shard {:>10}  optimizer {:>10}  transient ≤ {:>10}  traffic {:>10} elems",
+            optimizer,
+            human_bytes(r0.param_shard_bytes as u64),
+            human_bytes(r0.optimizer_bytes as u64),
+            human_bytes(r0.peak_transient_bytes as u64),
+            r0.traffic_elems,
+        );
+    }
+    println!(
+        "\nGaLore's per-rank optimizer bytes are a fraction of AdamW's — the\n\
+         sharded moments live in the rank-r space while only the projector\n\
+         is replicated (§4.3)."
+    );
+    Ok(())
+}

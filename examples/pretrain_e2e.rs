@@ -1,0 +1,119 @@
+//! End-to-end headline run: GaLore vs 8-bit Adam (the paper's §5 matchup)
+//! on a real training workload through all three layers.
+//!
+//!     cargo run --release --example pretrain_e2e                # micro
+//!     cargo run --release --example pretrain_e2e -- --preset llama-mini \
+//!         --steps 400                                           # bigger
+//!
+//! For each optimizer: full pre-training on the synthetic corpus with the
+//! paper's schedule (10% warmup + cosine→10%), validation sweeps, then the
+//! five-category downstream suite (§6) on the final parameters — the
+//! miniature of Fig. 3 + Fig. 4/Tables 3–7. Results land in
+//! runs/e2e-*/metrics.csv and EXPERIMENTS.md cites this driver.
+
+use galore2::config::TrainConfig;
+use galore2::coordinator;
+use galore2::metrics::ascii_chart;
+use galore2::util::cli::Args;
+use galore2::util::human_count;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let preset = args.str_or("preset", "llama-micro");
+    let steps = args.u64_or("steps", 400);
+    let questions = args.usize_or("questions", 60);
+    let llama = galore2::model::LlamaCfg::preset(&preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {preset}"))?;
+    println!(
+        "=== pretrain_e2e: {} ({} params), {} steps x {} tokens/step ===\n",
+        preset,
+        human_count(llama.n_params() as u64),
+        steps,
+        llama.batch * llama.seq
+    );
+
+    let base = TrainConfig {
+        preset: preset.clone(),
+        steps,
+        eval_every: (steps / 20).max(1),
+        eval_batches: 8,
+        log_every: (steps / 40).max(1),
+        corpus_tokens: (steps as usize * llama.batch * llama.seq).max(200_000) / 2,
+        val_tokens: 40_000,
+        seed: 7,
+        ..TrainConfig::default()
+    };
+
+    // --- GaLore (rank = hidden/4, randomized SVD, α=0.25) ---------------
+    let galore_cfg = TrainConfig {
+        run_name: format!("e2e-galore-{preset}"),
+        optimizer: "galore".into(),
+        lr: args.f32_or("galore-lr", 0.02),
+        galore_rank: 0, // auto: hidden/4
+        galore_update_freq: (steps / 4).max(25),
+        galore_alpha: 0.25,
+        ..base.clone()
+    };
+    let galore = coordinator::train(galore_cfg)?;
+
+    // --- 8-bit Adam baseline (Dettmers et al. 2022) ---------------------
+    let baseline_cfg = TrainConfig {
+        run_name: format!("e2e-adam8bit-{preset}"),
+        optimizer: "adam8bit".into(),
+        lr: args.f32_or("baseline-lr", 0.01),
+        ..base
+    };
+    let baseline = coordinator::train(baseline_cfg)?;
+
+    // --- Fig. 3 miniature: overlaid validation curves -------------------
+    let g_pts: Vec<(u64, f64)> = galore
+        .metrics
+        .of_tag("val")
+        .map(|p| (p.tokens, p.loss))
+        .collect();
+    let b_pts: Vec<(u64, f64)> = baseline
+        .metrics
+        .of_tag("val")
+        .map(|p| (p.tokens, p.loss))
+        .collect();
+    println!("\n=== validation loss vs tokens (Fig. 3 shape) ===");
+    println!("{}", ascii_chart(&[("galore", g_pts), ("adam8bit", b_pts)], 72, 16));
+    let g_final = galore.metrics.tail_mean_loss("val", 3).unwrap_or(f64::NAN);
+    let b_final = baseline.metrics.tail_mean_loss("val", 3).unwrap_or(f64::NAN);
+    println!(
+        "final val loss: galore {:.4} (ppl {:.2})  vs  adam8bit {:.4} (ppl {:.2})  gap {:+.4}",
+        g_final,
+        g_final.exp(),
+        b_final,
+        b_final.exp(),
+        g_final - b_final
+    );
+
+    // --- Tables 3–7 miniature: downstream suite on both -----------------
+    println!("\n=== downstream suite: GaLore ===");
+    let g_res = coordinator::eval_params(&galore.cfg, &galore.params, questions)?;
+    println!("\n=== downstream suite: Adam8bit baseline ===");
+    let b_res = coordinator::eval_params(&baseline.cfg, &baseline.params, questions)?;
+    println!("\n=== Fig. 4 shape: per-category comparison ===");
+    println!("{:<24} {:>8} {:>9} {:>7}", "category", "galore", "baseline", "chance");
+    let mut g_avg = 0.0;
+    let mut b_avg = 0.0;
+    for (g, b) in g_res.iter().zip(&b_res) {
+        println!(
+            "{:<24} {:>8.3} {:>9.3} {:>7.3}",
+            g.category.name(),
+            g.accuracy,
+            b.accuracy,
+            g.chance
+        );
+        g_avg += g.accuracy;
+        b_avg += b.accuracy;
+    }
+    println!(
+        "{:<24} {:>8.3} {:>9.3}",
+        "AVERAGE",
+        g_avg / g_res.len() as f64,
+        b_avg / b_res.len() as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,159 @@
+"""AOT pipeline: lower L2/L1 jax functions to HLO-text artifacts + manifest.
+
+HLO *text* is the interchange format (not serialized HloModuleProto): jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts (under --out-dir, default ../artifacts):
+  model_<preset>.hlo.txt          fwd_bwd: (params..., tokens, targets) -> (loss, grads...)
+  forward_<preset>.hlo.txt        forward: (params..., tokens) -> (logits,)
+  galore_update_<d>x<n>x<r>.hlo.txt   fused Pallas update kernel, per layer shape
+  manifest_<preset>.json          parameter names/shapes, io spec, kernel index
+
+Usage:
+  python -m compile.aot --preset llama-nano [--out-dir ../artifacts]
+         [--no-pallas] [--kernels] [--alpha 0.25]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+from compile.kernels.galore_update import galore_adam_update
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg, use_pallas: bool):
+    specs = model_lib.param_specs(cfg)
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    fwd_bwd = model_lib.make_fwd_bwd(cfg, use_pallas)
+    lowered = jax.jit(fwd_bwd).lower(*args, tok, tok)
+    return to_hlo_text(lowered)
+
+
+def lower_forward(cfg, use_pallas: bool):
+    specs = model_lib.param_specs(cfg)
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    fwd = model_lib.make_forward(cfg, use_pallas)
+    lowered = jax.jit(fwd).lower(*args, tok)
+    return to_hlo_text(lowered)
+
+
+def galore_kernel_shapes(cfg, rank: int):
+    """Distinct (dim, n, rank) shapes of the fused update kernel across the
+    model's GaLore-eligible (2-d) parameters. Convention matches Alg. 1's
+    min-side projection: dim = min(rows, cols) (the projected side, P is
+    (dim, r)), n = max(rows, cols). Tall parameters are handled by the Rust
+    engine transposing G in/out — identical math, one kernel per shape."""
+    shapes = set()
+    for name, shape in model_lib.param_specs(cfg):
+        if len(shape) == 2 and min(shape) > rank:
+            shapes.add((min(shape), max(shape), rank))
+    return sorted(shapes)
+
+
+def lower_galore_update(dim: int, n: int, rank: int, alpha: float):
+    p = jax.ShapeDtypeStruct((dim, rank), jnp.float32)
+    r = jax.ShapeDtypeStruct((rank, n), jnp.float32)
+    m = jax.ShapeDtypeStruct((rank, n), jnp.float32)
+    v = jax.ShapeDtypeStruct((rank, n), jnp.float32)
+    step = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def fn(p, r, m, v, step):
+        return galore_adam_update(p, r, m, v, step, alpha=alpha)
+
+    lowered = jax.jit(fn).lower(p, r, m, v, step)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="llama-nano")
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use jnp reference ops instead of Pallas kernels "
+                         "inside the model (identical numerics)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also lower standalone GaLore update kernels for "
+                         "each eligible layer shape")
+    ap.add_argument("--rank", type=int, default=0,
+                    help="GaLore rank for kernel lowering (default h/4)")
+    ap.add_argument("--alpha", type=float, default=1.0,
+                    help="scale baked into the update kernel; the Rust "
+                         "engine applies the configured GaLore alpha on top, "
+                         "so 1.0 keeps the artifact alpha-agnostic")
+    args = ap.parse_args()
+
+    cfg = model_lib.PRESETS[args.preset]
+    os.makedirs(args.out_dir, exist_ok=True)
+    use_pallas = not args.no_pallas
+
+    manifest = {
+        "preset": cfg.name,
+        "hidden": cfg.hidden,
+        "intermediate": cfg.intermediate,
+        "heads": cfg.heads,
+        "layers": cfg.layers,
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "n_params": model_lib.n_params(cfg),
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in model_lib.param_specs(cfg)
+        ],
+        "use_pallas": use_pallas,
+        "artifacts": {},
+        "kernels": [],
+    }
+
+    path = os.path.join(args.out_dir, f"model_{cfg.name}.hlo.txt")
+    text = lower_model(cfg, use_pallas)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"]["fwd_bwd"] = os.path.basename(path)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    path = os.path.join(args.out_dir, f"forward_{cfg.name}.hlo.txt")
+    text = lower_forward(cfg, use_pallas)
+    with open(path, "w") as f:
+        f.write(text)
+    manifest["artifacts"]["forward"] = os.path.basename(path)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    if args.kernels:
+        rank = args.rank or max(1, cfg.hidden // 4)
+        for dim, n, r in galore_kernel_shapes(cfg, rank):
+            kpath = os.path.join(
+                args.out_dir, f"galore_update_{dim}x{n}x{r}.hlo.txt"
+            )
+            text = lower_galore_update(dim, n, r, args.alpha)
+            with open(kpath, "w") as f:
+                f.write(text)
+            manifest["kernels"].append(
+                {"dim": dim, "n": n, "rank": r, "alpha": args.alpha,
+                 "file": os.path.basename(kpath)}
+            )
+            print(f"wrote {kpath} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, f"manifest_{cfg.name}.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Pallas kernel: GaLore gradient projection R = Pᵀ G (§3).
+
+Hardware adaptation (DESIGN.md §2): the paper runs this as a cuBLAS GEMM on
+H100 tensor cores. On TPU the same contraction targets the MXU systolic
+array; the BlockSpec schedule below streams (bm × bn) tiles of G and
+(bm × br) tiles of P through VMEM while accumulating the (br × bn) output
+tile across the m-dimension grid axis — the HBM↔VMEM pipeline a CUDA kernel
+would express with threadblocks + shared memory.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical numerics
+(see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped tiles. 128 matches the systolic array edge; smaller shapes are
+# handled by clamping to the actual dimension (grid of 1).
+DEFAULT_BLOCK = 128
+
+
+def _project_kernel(p_ref, g_ref, out_ref, *, m_total: int, bm: int):
+    """One (br × bn) output tile; grid axis 2 walks m-blocks (accumulate).
+
+    The m axis is the contraction: its final partial tile is padded by the
+    runtime (with NaN in interpret mode), so pad rows are masked to zero
+    before the dot — on real TPU the same mask makes the pad lanes inert.
+    """
+    mb = pl.program_id(2)
+
+    @pl.when(mb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    valid = m_total - mb * bm  # rows of this tile that are in-bounds
+    rows = jax.lax.broadcasted_iota(jnp.int32, p_ref.shape, 0)
+    p = jnp.where(rows < valid, p_ref[...], 0.0)
+    rows_g = jax.lax.broadcasted_iota(jnp.int32, g_ref.shape, 0)
+    g = jnp.where(rows_g < valid, g_ref[...], 0.0)
+    # fp32 accumulate on the MXU: (br, bm) x (bm, bn).
+    out_ref[...] += jnp.dot(p.T, g, preferred_element_type=jnp.float32).astype(
+        out_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_r"))
+def galore_project(p, g, block_m: int = DEFAULT_BLOCK,
+                   block_n: int = DEFAULT_BLOCK, block_r: int = DEFAULT_BLOCK):
+    """R = Pᵀ G with P: (m, r), G: (m, n) → (r, n)."""
+    m, r = p.shape
+    m2, n = g.shape
+    assert m == m2, f"shape mismatch: P {p.shape} vs G {g.shape}"
+    bm, bn, br = min(block_m, m), min(block_n, n), min(block_r, r)
+    grid = (pl.cdiv(r, br), pl.cdiv(n, bn), pl.cdiv(m, bm))
+    return pl.pallas_call(
+        functools.partial(_project_kernel, m_total=m, bm=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, br), lambda i, j, k: (k, i)),  # P tile
+            pl.BlockSpec((bm, bn), lambda i, j, k: (k, j)),  # G tile
+        ],
+        out_specs=pl.BlockSpec((br, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=True,
+    )(p, g)
+
+
+def _project_right_kernel(g_ref, p_ref, out_ref, *, k_total: int, bk: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    valid = k_total - kb * bk  # contraction-axis mask (see _project_kernel)
+    cols_g = jax.lax.broadcasted_iota(jnp.int32, g_ref.shape, 1)
+    g = jnp.where(cols_g < valid, g_ref[...], 0.0)
+    rows_p = jax.lax.broadcasted_iota(jnp.int32, p_ref.shape, 0)
+    p = jnp.where(rows_p < valid, p_ref[...], 0.0)
+    out_ref[...] += jnp.dot(g, p, preferred_element_type=jnp.float32).astype(
+        out_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_r"))
+def galore_project_right(g, p, block_m: int = DEFAULT_BLOCK,
+                         block_n: int = DEFAULT_BLOCK,
+                         block_r: int = DEFAULT_BLOCK):
+    """R = G P with G: (m, n), P: (n, r) → (m, r) (tall-parameter side)."""
+    m, n = g.shape
+    n2, r = p.shape
+    assert n == n2, f"shape mismatch: G {g.shape} vs P {p.shape}"
+    bm, bn, br = min(block_m, m), min(block_n, n), min(block_r, r)
+    grid = (pl.cdiv(m, bm), pl.cdiv(r, br), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        functools.partial(_project_right_kernel, k_total=n, bk=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, k)),  # G tile
+            pl.BlockSpec((bn, br), lambda i, j, k: (k, j)),  # P tile
+        ],
+        out_specs=pl.BlockSpec((bm, br), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, r), jnp.float32),
+        interpret=True,
+    )(g, p)

@@ -1,0 +1,92 @@
+"""Pallas kernel: fused low-rank Adam moment update + back-projection.
+
+This is the per-step GaLore hot-spot after projection (§3, Alg. 1 body):
+
+    M' = β₁M + (1−β₁)R          (rank × n, elementwise — VPU)
+    V' = β₂V + (1−β₂)R²
+    N  = (M'/bc₁) / (√(V'/bc₂) + ε)
+    ΔW = α · P N                 (m × n, contraction — MXU)
+
+Fusing the moment update with the reprojection means R, M, V stream through
+VMEM exactly once per step and N never round-trips to HBM — the same
+fusion FSDP's per-layer hook achieves at the framework level (Fig. 2).
+
+Grid: 1-D over column blocks of n. Each step loads (rank × bn) tiles of
+R/M/V plus the whole P (m × rank — small, r ≪ m), computes the moment tile,
+and emits the (m × bn) tile of ΔW. VMEM footprint per step:
+rank·bn·3 + m·rank + m·bn floats.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+
+
+def _update_kernel(step_ref, p_ref, r_ref, m_ref, v_ref,
+                   new_m_ref, new_v_ref, delta_ref, *,
+                   beta1: float, beta2: float, eps: float, alpha: float):
+    step = step_ref[0]
+    r = r_ref[...]
+    new_m = beta1 * m_ref[...] + (1.0 - beta1) * r
+    new_v = beta2 * v_ref[...] + (1.0 - beta2) * r * r
+    bc1 = 1.0 - beta1 ** (step + 1.0)
+    bc2 = 1.0 - beta2 ** (step + 1.0)
+    n_hat = (new_m / bc1) / (jnp.sqrt(new_v / bc2) + eps)
+    new_m_ref[...] = new_m
+    new_v_ref[...] = new_v
+    delta_ref[...] = alpha * jnp.dot(
+        p_ref[...], n_hat, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("beta1", "beta2", "eps", "alpha", "block_n"),
+)
+def galore_adam_update(p, r, m, v, step, beta1: float = 0.9,
+                       beta2: float = 0.999, eps: float = 1e-8,
+                       alpha: float = 0.25, block_n: int = DEFAULT_BLOCK_N):
+    """Fused GaLore/Adam update.
+
+    Args:
+      p: (dim, rank) projector (orthonormal columns).
+      r: (rank, n) projected gradient.
+      m, v: (rank, n) Adam moments.
+      step: scalar f32, 0-based step (bias correction).
+    Returns:
+      (new_m, new_v, delta) with delta = α·P·N of shape (dim, n).
+    """
+    dim, rank = p.shape
+    rank2, n = r.shape
+    assert rank == rank2 and m.shape == r.shape and v.shape == r.shape
+    bn = min(block_n, n)
+    grid = (pl.cdiv(n, bn),)
+    step_arr = jnp.asarray(step, dtype=jnp.float32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(
+            _update_kernel, beta1=beta1, beta2=beta2, eps=eps, alpha=alpha
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda j: (0,)),           # step scalar
+            pl.BlockSpec((dim, rank), lambda j: (0, 0)),  # P (whole)
+            pl.BlockSpec((rank, bn), lambda j: (0, j)),   # R tile
+            pl.BlockSpec((rank, bn), lambda j: (0, j)),   # M tile
+            pl.BlockSpec((rank, bn), lambda j: (0, j)),   # V tile
+        ],
+        out_specs=[
+            pl.BlockSpec((rank, bn), lambda j: (0, j)),
+            pl.BlockSpec((rank, bn), lambda j: (0, j)),
+            pl.BlockSpec((dim, bn), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rank, n), jnp.float32),
+            jax.ShapeDtypeStruct((rank, n), jnp.float32),
+            jax.ShapeDtypeStruct((dim, n), jnp.float32),
+        ],
+        interpret=True,
+    )(step_arr, p, r, m, v)

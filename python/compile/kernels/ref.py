@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between kernel and oracle across shape/dtype sweeps. The
+oracles are also used directly by model.py when ``use_pallas=False`` (for
+fast lowering of large presets — identical numerics, no interpret-mode
+overhead).
+"""
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, weight, eps: float = 1e-5):
+    """RMSNorm over the last axis: x * w / rms(x)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * weight
+
+
+def galore_project_ref(p, g):
+    """R = Pᵀ G.  P: (m, r), G: (m, n) → R: (r, n). §3 projection."""
+    return p.T @ g
+
+
+def galore_project_right_ref(g, p):
+    """R = G P.  G: (m, n), P: (n, r) → R: (m, r). Tall-parameter side."""
+    return g @ p
+
+
+def galore_adam_update_ref(p, r, m, v, step, beta1=0.9, beta2=0.999,
+                           eps=1e-8, alpha=0.25):
+    """Fused low-rank Adam update + back-projection (§3, Alg. 1 body).
+
+    Inputs:  P (m, rank) projector, R (rank, n) projected gradient,
+             M, V (rank, n) moments, step (0-based, scalar f32).
+    Returns: (new_m, new_v, delta) where delta = alpha * P @ N is the
+             full-space update direction (caller applies W -= lr * delta).
+    """
+    new_m = beta1 * m + (1.0 - beta1) * r
+    new_v = beta2 * v + (1.0 - beta2) * jnp.square(r)
+    bc1 = 1.0 - beta1 ** (step + 1.0)
+    bc2 = 1.0 - beta2 ** (step + 1.0)
+    n_hat = (new_m / bc1) / (jnp.sqrt(new_v / bc2) + eps)
+    delta = alpha * (p @ n_hat)
+    return new_m, new_v, delta

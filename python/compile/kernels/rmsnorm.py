@@ -1,0 +1,107 @@
+"""Pallas kernel: fused RMSNorm (used twice per transformer block).
+
+A single VMEM pass per row-block: square-reduce, rsqrt, scale — vs the
+unfused jnp version's three HBM round-trips. Grid is 1-D over row blocks;
+the hidden dimension stays resident in VMEM (hidden ≤ 4096 ⇒ ≤ 16 KiB/row
+in f32, comfortably within the ~16 MiB VMEM budget at our block sizes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(var + eps)) * w_ref[...]
+
+
+def _rmsnorm_bwd_kernel(x_ref, w_ref, g_ref, dx_ref, dw_ref, *, eps: float):
+    """Hand-derived VJP, one row-block per grid step.
+
+    y_i = w_i · x_i · inv, inv = rsqrt(mean(x²)+eps):
+      dx_j = inv·w_j·g_j − (inv³·x_j/H)·Σ_i g_i w_i x_i
+      dw_i = Σ_rows g_i · x_i · inv            (accumulated across blocks)
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]
+    w = w_ref[...]
+    g = g_ref[...]
+    hidden = x.shape[-1]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    inv = 1.0 / jnp.sqrt(var + eps)
+    gwx = jnp.sum(g * w * x, axis=-1, keepdims=True)
+    dx_ref[...] = inv * w * g - (inv ** 3) * x * gwx / hidden
+
+    @pl.when(i == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+
+    dw_ref[...] += jnp.sum(g * x * inv, axis=0)
+
+
+def _rmsnorm_raw(x, weight, eps: float, block_rows: int):
+    rows, hidden = x.shape
+    assert weight.shape == (hidden,)
+    br = min(block_rows, rows)
+    grid = (pl.cdiv(rows, br),)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), jnp.float32),
+        interpret=True,
+    )(x, weight)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def rmsnorm(x, weight, eps: float = 1e-5,
+            block_rows: int = DEFAULT_BLOCK_ROWS):
+    """RMSNorm over the last axis of a 2-d input (rows, hidden).
+
+    Differentiable: forward and backward are both Pallas kernels, so the
+    fused norm lowers into the fwd_bwd artifact end to end.
+    """
+    return _rmsnorm_raw(x, weight, eps, block_rows)
+
+
+def _rmsnorm_fwd(x, weight, eps, block_rows):
+    return _rmsnorm_raw(x, weight, eps, block_rows), (x, weight)
+
+
+def _rmsnorm_bwd(eps, block_rows, residuals, g):
+    x, weight = residuals
+    rows, hidden = x.shape
+    br = min(block_rows, rows)
+    grid = (pl.cdiv(rows, br),)
+    dx, dw = pl.pallas_call(
+        functools.partial(_rmsnorm_bwd_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+            pl.BlockSpec((br, hidden), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, hidden), jnp.float32),
+            jax.ShapeDtypeStruct((hidden,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, weight, g)
+    return dx, dw
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)

@@ -1,0 +1,201 @@
+"""L2: Llama-family transformer in JAX (build-time only).
+
+Architecture follows Table 2 / the Llama reference: RMSNorm (pre-norm),
+rotary position embeddings, causal multi-head attention, SwiGLU MLP,
+untied LM head. The fused RMSNorm Pallas kernel from L1 lowers into the
+same HLO as the rest of the model (``use_pallas=True``).
+
+The lowered artifact is ``fwd_bwd``: (params..., tokens, targets) →
+(loss, grads...) — the Rust coordinator owns parameters, optimizer and the
+training loop; this graph is the only compute it delegates to XLA.
+"""
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.rmsnorm import rmsnorm as rmsnorm_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    hidden: int
+    intermediate: int
+    heads: int
+    layers: int
+    vocab: int
+    seq: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+
+# Presets (DESIGN.md §6). llama-7b matches Table 2; llama3-8b matches the
+# Table 1 memory rows. Large presets exist for shape math / the memory
+# model — only nano..100m are meant to execute on CPU.
+PRESETS: Dict[str, ModelCfg] = {
+    cfg.name: cfg
+    for cfg in [
+        ModelCfg("llama-nano", 64, 176, 4, 2, 256, 64, 4),
+        ModelCfg("llama-micro", 128, 352, 4, 4, 512, 64, 4),
+        ModelCfg("llama-mini", 256, 688, 8, 6, 2048, 128, 4),
+        ModelCfg("llama-100m", 640, 1712, 10, 10, 8192, 256, 4),
+        ModelCfg("llama-1b", 2048, 5504, 16, 24, 32000, 1024, 1),
+        ModelCfg("llama-7b", 4096, 11008, 32, 32, 32000, 1024, 1),
+        ModelCfg("llama3-8b", 4096, 14336, 32, 32, 128256, 2048, 1),
+    ]
+}
+
+
+def param_specs(cfg: ModelCfg) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the ABI between aot.py and the Rust
+    coordinator (mirrored in rust/src/model/llama.rs; checked by the
+    manifest test)."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed.weight", (cfg.vocab, cfg.hidden)),
+    ]
+    for i in range(cfg.layers):
+        p = f"layers.{i}."
+        specs += [
+            (p + "attn_norm.weight", (cfg.hidden,)),
+            (p + "attn.wq", (cfg.hidden, cfg.hidden)),
+            (p + "attn.wk", (cfg.hidden, cfg.hidden)),
+            (p + "attn.wv", (cfg.hidden, cfg.hidden)),
+            (p + "attn.wo", (cfg.hidden, cfg.hidden)),
+            (p + "mlp_norm.weight", (cfg.hidden,)),
+            (p + "mlp.w_gate", (cfg.hidden, cfg.intermediate)),
+            (p + "mlp.w_up", (cfg.hidden, cfg.intermediate)),
+            (p + "mlp.w_down", (cfg.intermediate, cfg.hidden)),
+        ]
+    specs += [
+        ("final_norm.weight", (cfg.hidden,)),
+        ("lm_head.weight", (cfg.hidden, cfg.vocab)),
+    ]
+    return specs
+
+
+def n_params(cfg: ModelCfg) -> int:
+    return sum(math.prod(s) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelCfg, key) -> List[jnp.ndarray]:
+    """Scaled-normal init (0.02 for embeddings/projections, 1 for norms),
+    matching the Llama reference."""
+    out = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm.weight"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif "w_down" in name or "attn.wo" in name:
+            # residual-branch outputs get the depth-scaled init
+            std = 0.02 / math.sqrt(2 * cfg.layers)
+            out.append(std * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            out.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return out
+
+
+def _rope_tables(seq: int, head_dim: int):
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    angles = jnp.outer(t, freqs)  # (seq, half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def _apply_rope(x, cos, sin):
+    """x: (batch, heads, seq, head_dim). Rotate pairs (even, odd)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _norm(x2d, weight, use_pallas: bool):
+    if use_pallas:
+        return rmsnorm_pallas(x2d, weight)
+    return ref.rmsnorm_ref(x2d, weight)
+
+
+def forward(params: List[jnp.ndarray], tokens, cfg: ModelCfg,
+            use_pallas: bool = True):
+    """tokens: (batch, seq) int32 → logits (batch, seq, vocab)."""
+    specs = param_specs(cfg)
+    named = dict(zip([n for n, _ in specs], params))
+    b, s = tokens.shape
+    h = named["embed.weight"][tokens]  # (b, s, hidden)
+    cos, sin = _rope_tables(s, cfg.head_dim)
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    for i in range(cfg.layers):
+        p = f"layers.{i}."
+        # --- attention block ---
+        x = _norm(h.reshape(b * s, cfg.hidden), named[p + "attn_norm.weight"],
+                  use_pallas).reshape(b, s, cfg.hidden)
+        q = (x @ named[p + "attn.wq"]).reshape(b, s, cfg.heads, cfg.head_dim)
+        k = (x @ named[p + "attn.wk"]).reshape(b, s, cfg.heads, cfg.head_dim)
+        v = (x @ named[p + "attn.wv"]).reshape(b, s, cfg.heads, cfg.head_dim)
+        q = _apply_rope(q.transpose(0, 2, 1, 3), cos, sin)
+        k = _apply_rope(k.transpose(0, 2, 1, 3), cos, sin)
+        v = v.transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(cfg.head_dim)
+        scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, cfg.hidden)
+        h = h + attn @ named[p + "attn.wo"]
+        # --- MLP block (SwiGLU) ---
+        x = _norm(h.reshape(b * s, cfg.hidden), named[p + "mlp_norm.weight"],
+                  use_pallas).reshape(b, s, cfg.hidden)
+        gate = jax.nn.silu(x @ named[p + "mlp.w_gate"])
+        up = x @ named[p + "mlp.w_up"]
+        h = h + (gate * up) @ named[p + "mlp.w_down"]
+
+    x = _norm(h.reshape(b * s, cfg.hidden), named["final_norm.weight"],
+              use_pallas).reshape(b, s, cfg.hidden)
+    return x @ named["lm_head.weight"]
+
+
+def loss_fn(params: List[jnp.ndarray], tokens, targets, cfg: ModelCfg,
+            use_pallas: bool = True):
+    """Mean cross-entropy next-token loss. targets: (batch, seq) int32."""
+    logits = forward(params, tokens, cfg, use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def make_fwd_bwd(cfg: ModelCfg, use_pallas: bool = True):
+    """(params..., tokens, targets) → (loss, grad_0, ..., grad_{P-1})."""
+    n = len(param_specs(cfg))
+
+    def fwd_bwd(*args):
+        params = list(args[:n])
+        tokens, targets = args[n], args[n + 1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(ps, tokens, targets, cfg, use_pallas)
+        )(params)
+        return (loss, *grads)
+
+    return fwd_bwd
+
+
+def make_forward(cfg: ModelCfg, use_pallas: bool = True):
+    """(params..., tokens) → (logits,) — the eval/serving graph."""
+    n = len(param_specs(cfg))
+
+    def fwd(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        return (forward(params, tokens, cfg, use_pallas),)
+
+    return fwd

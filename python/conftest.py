@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `from compile import ...` work whether pytest runs from python/ or
+# the repo root (the Makefile's final-log command uses the root).
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,72 @@
+"""AOT pipeline: lowered HLO text is well-formed and parameterized right."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model as model_lib
+from compile.model import PRESETS
+
+
+def entry_param_count(text: str) -> int:
+    """Parameters of the ENTRY computation only (nested computations —
+    fusions, reducers — declare their own)."""
+    entry = text[text.index("ENTRY "):]
+    body = entry[: entry.index("\n}")]
+    return body.count(" parameter(")
+
+
+def test_hlo_text_lowering_nano():
+    cfg = PRESETS["llama-nano"]
+    text = aot.lower_model(cfg, use_pallas=False)
+    assert text.startswith("HloModule")
+    # One parameter per model weight + tokens + targets.
+    n_inputs = len(model_lib.param_specs(cfg)) + 2
+    assert entry_param_count(text) == n_inputs, entry_param_count(text)
+    # Output tuple: loss + one grad per param.
+    assert "ROOT" in text
+
+
+def test_forward_lowering_nano():
+    cfg = PRESETS["llama-nano"]
+    text = aot.lower_forward(cfg, use_pallas=False)
+    assert text.startswith("HloModule")
+    n_inputs = len(model_lib.param_specs(cfg)) + 1
+    assert entry_param_count(text) == n_inputs
+
+
+def test_galore_kernel_shapes_cover_2d_params():
+    cfg = PRESETS["llama-nano"]
+    shapes = aot.galore_kernel_shapes(cfg, rank=16)
+    # every eligible 2-d param (rows, cols) must map to (min, max, 16)
+    for name, shape in model_lib.param_specs(cfg):
+        if len(shape) == 2 and min(shape) > 16:
+            assert (min(shape), max(shape), 16) in shapes, (name, shape)
+    # and the convention is always min-first
+    assert all(d <= n for d, n, _ in shapes)
+
+
+def test_update_kernel_lowering():
+    text = aot.lower_galore_update(64, 48, 8, alpha=0.25)
+    assert text.startswith("HloModule")
+    assert entry_param_count(text) == 5  # p, r, m, v, step
+
+
+@pytest.mark.slow
+def test_cli_end_to_end(tmp_path):
+    env = dict(os.environ)
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--preset", "llama-nano",
+         "--out-dir", str(tmp_path), "--no-pallas"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    manifest = json.loads((tmp_path / "manifest_llama-nano.json").read_text())
+    assert manifest["preset"] == "llama-nano"
+    assert manifest["n_params"] == model_lib.n_params(PRESETS["llama-nano"])
+    assert (tmp_path / manifest["artifacts"]["fwd_bwd"]).exists()
+    assert (tmp_path / manifest["artifacts"]["forward"]).exists()

@@ -1,0 +1,137 @@
+"""L2 correctness: model shapes, gradient sanity, pallas/ref parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile.model import PRESETS, ModelCfg
+
+CFG = PRESETS["llama-nano"]
+
+
+def tiny_batch(cfg: ModelCfg, key=0):
+    k = jax.random.PRNGKey(key)
+    toks = jax.random.randint(k, (cfg.batch, cfg.seq), 0, cfg.vocab, jnp.int32)
+    tgts = jnp.roll(toks, -1, axis=1)
+    return toks, tgts
+
+
+def test_param_specs_shapes_and_count():
+    specs = model_lib.param_specs(CFG)
+    names = [n for n, _ in specs]
+    assert names[0] == "embed.weight"
+    assert names[-1] == "lm_head.weight"
+    assert len([n for n in names if "attn.wq" in n]) == CFG.layers
+    # 2 + 9 per layer
+    assert len(specs) == 2 + 9 * CFG.layers + 1  # +1 final_norm
+    total = model_lib.n_params(CFG)
+    manual = sum(int(np.prod(s)) for _, s in specs)
+    assert total == manual
+
+
+def test_7b_param_count_matches_table2():
+    # Table 2: hidden 4096, intermediate 11008, 32 heads, 32 layers → ~6.7B.
+    cfg = PRESETS["llama-7b"]
+    assert cfg.hidden == 4096
+    assert cfg.intermediate == 11008
+    assert cfg.heads == 32 and cfg.layers == 32
+    n = model_lib.n_params(cfg)
+    assert 6.4e9 < n < 7.1e9, n
+
+
+def test_forward_shapes_and_finiteness():
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(1))
+    toks, _ = tiny_batch(CFG)
+    logits = model_lib.forward(params, toks, CFG, use_pallas=False)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(2))
+    toks, tgts = tiny_batch(CFG)
+    loss = model_lib.loss_fn(params, toks, tgts, CFG, use_pallas=False)
+    expect = np.log(CFG.vocab)
+    assert abs(float(loss) - expect) < 0.5, (float(loss), expect)
+
+
+def test_pallas_and_ref_model_agree():
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(3))
+    toks, tgts = tiny_batch(CFG)
+    l_ref = model_lib.loss_fn(params, toks, tgts, CFG, use_pallas=False)
+    l_pal = model_lib.loss_fn(params, toks, tgts, CFG, use_pallas=True)
+    np.testing.assert_allclose(float(l_ref), float(l_pal), rtol=1e-5)
+
+
+def test_fwd_bwd_outputs_loss_plus_grads():
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(4))
+    toks, tgts = tiny_batch(CFG)
+    fwd_bwd = model_lib.make_fwd_bwd(CFG, use_pallas=False)
+    out = fwd_bwd(*params, toks, tgts)
+    assert len(out) == 1 + len(params)
+    loss, grads = out[0], out[1:]
+    assert loss.shape == ()
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert bool(jnp.all(jnp.isfinite(g)))
+    # Gradient should be non-trivial on every 2-d parameter.
+    for (name, _), g in zip(model_lib.param_specs(CFG), grads):
+        if g.ndim == 2:
+            assert float(jnp.abs(g).max()) > 0, name
+
+
+def test_gradients_match_pallas_vs_ref():
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(5))
+    toks, tgts = tiny_batch(CFG)
+    g_ref = jax.grad(lambda ps: model_lib.loss_fn(ps, toks, tgts, CFG, False))(params)
+    g_pal = jax.grad(lambda ps: model_lib.loss_fn(ps, toks, tgts, CFG, True))(params)
+    for a, b in zip(g_ref, g_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-5)
+
+
+def test_few_adam_steps_reduce_loss():
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(6))
+    toks, tgts = tiny_batch(CFG)
+    loss_grad = jax.jit(
+        jax.value_and_grad(
+            lambda ps: model_lib.loss_fn(ps, toks, tgts, CFG, use_pallas=False)
+        )
+    )
+    l0, _ = loss_grad(params)
+    lr = 1e-2
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    for t in range(20):
+        loss, grads = loss_grad(params)
+        m = [0.9 * mi + 0.1 * gi for mi, gi in zip(m, grads)]
+        v = [0.999 * vi + 0.001 * gi * gi for vi, gi in zip(v, grads)]
+        bc1 = 1 - 0.9 ** (t + 1)
+        bc2 = 1 - 0.999 ** (t + 1)
+        params = [
+            p - lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + 1e-8)
+            for p, mi, vi in zip(params, m, v)
+        ]
+    l1, _ = loss_grad(params)
+    assert float(l1) < float(l0) - 0.5, (float(l0), float(l1))
+
+
+def test_causality():
+    # Changing a future token must not affect earlier logits.
+    params = model_lib.init_params(CFG, jax.random.PRNGKey(7))
+    toks, _ = tiny_batch(CFG)
+    logits_a = model_lib.forward(params, toks, CFG, use_pallas=False)
+    toks_b = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+    logits_b = model_lib.forward(params, toks_b, CFG, use_pallas=False)
+    np.testing.assert_allclose(
+        logits_a[:, :-1, :], logits_b[:, :-1, :], rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("preset", ["llama-nano", "llama-micro"])
+def test_presets_construct(preset):
+    cfg = PRESETS[preset]
+    assert cfg.hidden % cfg.heads == 0
+    specs = model_lib.param_specs(cfg)
+    assert all(all(d > 0 for d in s) for _, s in specs)

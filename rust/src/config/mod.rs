@@ -1,0 +1,303 @@
+//! Configuration system: TOML files (configs/*.toml) + CLI overrides.
+
+use crate::dist::OptimizerSpec;
+use crate::optim::{AdamCfg, GaLoreCfg, MomentHandling, ProjectionKind};
+use crate::util::cli::Args;
+use crate::util::toml::TomlDoc;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// How the model's fwd/bwd and GaLore updates are executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// GaLore math in Rust (tensor/linalg substrate).
+    Native,
+    /// GaLore fused update via the Pallas kernel artifacts over PJRT.
+    Pjrt,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParallelMode {
+    Single,
+    Fsdp,
+    Ddp,
+}
+
+/// The full training configuration (Megatron-style single source of truth).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub artifacts_dir: PathBuf,
+    pub out_dir: PathBuf,
+    pub run_name: String,
+
+    pub optimizer: String,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub steps: u64,
+    pub warmup_frac: f64,
+    pub lr_floor_frac: f32,
+
+    pub galore_rank: usize, // 0 = hidden/4
+    pub galore_update_freq: u64,
+    pub galore_alpha: f32,
+    pub galore_projection: String,
+    pub galore_moments: String,
+
+    pub parallel: ParallelMode,
+    pub world: usize,
+    pub engine: Engine,
+
+    pub seed: u64,
+    pub corpus_tokens: usize,
+    pub val_tokens: usize,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub checkpoint_every: u64,
+    pub log_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "llama-nano".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("runs"),
+            run_name: "run".into(),
+            optimizer: "galore".into(),
+            lr: 0.01,
+            weight_decay: 0.0,
+            steps: 200,
+            warmup_frac: 0.1,
+            lr_floor_frac: 0.1,
+            galore_rank: 0,
+            galore_update_freq: 50,
+            galore_alpha: 0.25,
+            galore_projection: "rand_svd".into(),
+            galore_moments: "keep".into(),
+            parallel: ParallelMode::Single,
+            world: 1,
+            engine: Engine::Native,
+            seed: 42,
+            corpus_tokens: 200_000,
+            val_tokens: 20_000,
+            eval_every: 50,
+            eval_batches: 8,
+            checkpoint_every: 0,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_toml(path: &str) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let doc = TomlDoc::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        let mut c = TrainConfig::default();
+        c.preset = doc.str_or("", "preset", &c.preset);
+        c.run_name = doc.str_or("", "run_name", &c.run_name);
+        c.artifacts_dir = PathBuf::from(doc.str_or(
+            "",
+            "artifacts_dir",
+            c.artifacts_dir.to_str().unwrap(),
+        ));
+        c.out_dir = PathBuf::from(doc.str_or("", "out_dir", c.out_dir.to_str().unwrap()));
+        c.optimizer = doc.str_or("optimizer", "name", &c.optimizer);
+        c.lr = doc.f64_or("optimizer", "lr", c.lr as f64) as f32;
+        c.weight_decay =
+            doc.f64_or("optimizer", "weight_decay", c.weight_decay as f64) as f32;
+        c.steps = doc.i64_or("train", "steps", c.steps as i64) as u64;
+        c.warmup_frac = doc.f64_or("train", "warmup_frac", c.warmup_frac);
+        c.lr_floor_frac =
+            doc.f64_or("train", "lr_floor_frac", c.lr_floor_frac as f64) as f32;
+        c.galore_rank = doc.i64_or("galore", "rank", c.galore_rank as i64) as usize;
+        c.galore_update_freq =
+            doc.i64_or("galore", "update_freq", c.galore_update_freq as i64) as u64;
+        c.galore_alpha = doc.f64_or("galore", "alpha", c.galore_alpha as f64) as f32;
+        c.galore_projection = doc.str_or("galore", "projection", &c.galore_projection);
+        c.galore_moments = doc.str_or("galore", "moments", &c.galore_moments);
+        c.parallel = match doc.str_or("parallel", "mode", "single").as_str() {
+            "single" => ParallelMode::Single,
+            "fsdp" => ParallelMode::Fsdp,
+            "ddp" => ParallelMode::Ddp,
+            other => bail!("unknown parallel.mode {other:?}"),
+        };
+        c.world = doc.i64_or("parallel", "world", c.world as i64) as usize;
+        c.engine = match doc.str_or("train", "engine", "native").as_str() {
+            "native" => Engine::Native,
+            "pjrt" => Engine::Pjrt,
+            other => bail!("unknown engine {other:?}"),
+        };
+        c.seed = doc.i64_or("train", "seed", c.seed as i64) as u64;
+        c.corpus_tokens =
+            doc.i64_or("data", "corpus_tokens", c.corpus_tokens as i64) as usize;
+        c.val_tokens = doc.i64_or("data", "val_tokens", c.val_tokens as i64) as usize;
+        c.eval_every = doc.i64_or("train", "eval_every", c.eval_every as i64) as u64;
+        c.eval_batches =
+            doc.i64_or("train", "eval_batches", c.eval_batches as i64) as usize;
+        c.checkpoint_every =
+            doc.i64_or("train", "checkpoint_every", c.checkpoint_every as i64) as u64;
+        c.log_every = doc.i64_or("train", "log_every", c.log_every as i64) as u64;
+        Ok(c)
+    }
+
+    /// CLI flags override file values (`--steps`, `--optimizer`, …).
+    pub fn apply_cli(&mut self, args: &Args) {
+        self.preset = args.str_or("preset", &self.preset);
+        self.run_name = args.str_or("run-name", &self.run_name);
+        if let Some(d) = args.get("artifacts-dir") {
+            self.artifacts_dir = PathBuf::from(d);
+        }
+        if let Some(d) = args.get("out-dir") {
+            self.out_dir = PathBuf::from(d);
+        }
+        self.optimizer = args.str_or("optimizer", &self.optimizer);
+        self.lr = args.f32_or("lr", self.lr);
+        self.steps = args.u64_or("steps", self.steps);
+        self.galore_rank = args.usize_or("rank", self.galore_rank);
+        self.galore_update_freq = args.u64_or("update-freq", self.galore_update_freq);
+        self.galore_alpha = args.f32_or("alpha", self.galore_alpha);
+        self.galore_projection = args.str_or("projection", &self.galore_projection);
+        self.world = args.usize_or("world", self.world);
+        if let Some(mode) = args.get("parallel") {
+            self.parallel = match mode {
+                "single" => ParallelMode::Single,
+                "fsdp" => ParallelMode::Fsdp,
+                "ddp" => ParallelMode::Ddp,
+                _ => self.parallel,
+            };
+        }
+        if let Some(engine) = args.get("engine") {
+            self.engine = match engine {
+                "pjrt" => Engine::Pjrt,
+                _ => Engine::Native,
+            };
+        }
+        self.seed = args.u64_or("seed", self.seed);
+        self.eval_every = args.u64_or("eval-every", self.eval_every);
+        self.corpus_tokens = args.usize_or("corpus-tokens", self.corpus_tokens);
+        self.log_every = args.u64_or("log-every", self.log_every);
+    }
+
+    pub fn galore_cfg(&self, hidden: usize) -> Result<GaLoreCfg> {
+        let rank = if self.galore_rank == 0 {
+            (hidden / 4).max(1)
+        } else {
+            self.galore_rank
+        };
+        let projection = ProjectionKind::parse(&self.galore_projection)
+            .with_context(|| format!("unknown projection {:?}", self.galore_projection))?;
+        let moments = match self.galore_moments.as_str() {
+            "keep" => MomentHandling::Keep,
+            "reset" => MomentHandling::Reset,
+            "project" => MomentHandling::Project,
+            other => bail!("unknown moment handling {other:?}"),
+        };
+        Ok(GaLoreCfg {
+            rank,
+            update_freq: self.galore_update_freq,
+            alpha: self.galore_alpha,
+            projection,
+            moments,
+            min_dim: 2,
+            external_subspace: false,
+        })
+    }
+
+    pub fn adam_cfg(&self) -> AdamCfg {
+        AdamCfg {
+            weight_decay: self.weight_decay,
+            ..AdamCfg::default()
+        }
+    }
+
+    pub fn optimizer_spec(&self, hidden: usize) -> Result<OptimizerSpec> {
+        Ok(match self.optimizer.as_str() {
+            "adamw" => OptimizerSpec::AdamW(self.adam_cfg()),
+            "adam8bit" => OptimizerSpec::Adam8bit(self.adam_cfg()),
+            "adafactor" => OptimizerSpec::Adafactor { eps: 1e-30 },
+            "sgdm" => OptimizerSpec::SgdM { momentum: 0.9 },
+            "galore" | "qgalore" => OptimizerSpec::GaLore {
+                galore: self.galore_cfg(hidden)?,
+                adam: self.adam_cfg(),
+            },
+            other => bail!("unknown optimizer {other:?}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+preset = "llama-mini"
+run_name = "fig3"
+
+[train]
+steps = 500
+engine = "native"
+seed = 7
+
+[optimizer]
+name = "galore"
+lr = 0.005
+
+[galore]
+rank = 64
+update_freq = 100
+alpha = 0.125
+projection = "rand_svd"
+
+[parallel]
+mode = "fsdp"
+world = 4
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let path = std::env::temp_dir().join("galore2_cfg_test.toml");
+        std::fs::write(&path, SAMPLE).unwrap();
+        let c = TrainConfig::from_toml(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.preset, "llama-mini");
+        assert_eq!(c.steps, 500);
+        assert_eq!(c.galore_rank, 64);
+        assert!((c.galore_alpha - 0.125).abs() < 1e-6);
+        assert_eq!(c.parallel, ParallelMode::Fsdp);
+        assert_eq!(c.world, 4);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cli_overrides_file() {
+        let mut c = TrainConfig::default();
+        let args = Args::parse(
+            "train --steps 99 --optimizer adam8bit --rank 32 --parallel ddp"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_cli(&args);
+        assert_eq!(c.steps, 99);
+        assert_eq!(c.optimizer, "adam8bit");
+        assert_eq!(c.galore_rank, 32);
+        assert_eq!(c.parallel, ParallelMode::Ddp);
+    }
+
+    #[test]
+    fn galore_rank_auto_is_quarter_hidden() {
+        let c = TrainConfig::default();
+        assert_eq!(c.galore_cfg(4096).unwrap().rank, 1024);
+        let spec = c.optimizer_spec(256).unwrap();
+        assert_eq!(spec.name(), "galore");
+    }
+
+    #[test]
+    fn rejects_unknown_optimizer() {
+        let mut c = TrainConfig::default();
+        c.optimizer = "turbo".into();
+        assert!(c.optimizer_spec(64).is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Coordinator: the leader process behind every CLI subcommand.
+//!
+//! Owns run directories, wires trainer + eval harness + memory model
+//! together, and prints the human-readable reports. `main.rs` is a thin
+//! argument-parsing shell over these entry points so examples and
+//! integration tests can drive the same code paths programmatically.
+
+use crate::config::TrainConfig;
+use crate::data::{Corpus, CorpusCfg};
+use crate::eval::{CategoryResult, EvalHarness};
+use crate::memory::{self, MemoryCfg, OptimKind, Parallelism, Precision};
+use crate::metrics::ascii_chart;
+use crate::model::LlamaCfg;
+use crate::runtime::{Manifest, Runtime};
+use crate::tensor::Matrix;
+use crate::train::Trainer;
+use crate::util::human_bytes;
+use anyhow::{Context, Result};
+
+/// Train per config; writes metrics CSV into the run dir and returns the
+/// trainer for further inspection.
+pub fn train(cfg: TrainConfig) -> Result<Trainer> {
+    let mut trainer = Trainer::new(cfg)?;
+    println!(
+        "run={} preset={} optimizer={} engine={:?} parallel={:?} world={} steps={}",
+        trainer.cfg.run_name,
+        trainer.cfg.preset,
+        trainer.cfg.optimizer,
+        trainer.cfg.engine,
+        trainer.cfg.parallel,
+        trainer.cfg.world,
+        trainer.cfg.steps
+    );
+    let outcome = trainer.run()?;
+    println!(
+        "done: steps={} tokens={} final_train_loss={:.4} final_val_loss={:.4} ppl={:.2} wall={:.1}s",
+        outcome.steps,
+        outcome.tokens,
+        outcome.final_train_loss,
+        outcome.final_val_loss,
+        outcome.final_val_loss.exp(),
+        outcome.wall_secs
+    );
+    let csv_path = trainer
+        .cfg
+        .out_dir
+        .join(&trainer.cfg.run_name)
+        .join("metrics.csv");
+    trainer.metrics.write_csv(&csv_path)?;
+    println!("metrics → {}", csv_path.display());
+    let train_pts: Vec<(u64, f64)> = trainer
+        .metrics
+        .of_tag("train")
+        .map(|p| (p.step, p.loss))
+        .collect();
+    let val_pts: Vec<(u64, f64)> = trainer
+        .metrics
+        .of_tag("val")
+        .map(|p| (p.step, p.loss))
+        .collect();
+    if !train_pts.is_empty() {
+        println!(
+            "{}",
+            ascii_chart(&[("train", train_pts), ("val", val_pts)], 72, 14)
+        );
+    }
+    if let Some(reports) = trainer.fsdp_memory() {
+        for (rank, r) in reports.iter().enumerate() {
+            println!(
+                "rank {rank}: shard={} optim={} transient≤{} traffic={} elems",
+                human_bytes(r.param_shard_bytes as u64),
+                human_bytes(r.optimizer_bytes as u64),
+                human_bytes(r.peak_transient_bytes as u64),
+                r.traffic_elems
+            );
+        }
+    }
+    Ok(trainer)
+}
+
+/// Run the downstream suite (Tables 3–7) on a parameter set.
+pub fn eval_params(
+    cfg: &TrainConfig,
+    params: &[Matrix],
+    per_category: usize,
+) -> Result<Vec<CategoryResult>> {
+    let llama = LlamaCfg::preset(&cfg.preset).context("unknown preset")?;
+    let manifest = Manifest::load(
+        cfg.artifacts_dir
+            .join(format!("manifest_{}.json", cfg.preset)),
+    )?;
+    let rt = Runtime::cpu()?;
+    let forward = rt.load(cfg.artifacts_dir.join(&manifest.artifacts["forward"]))?;
+    let corpus = Corpus::new(CorpusCfg {
+        vocab: llama.vocab,
+        branching: 8,
+        order: 1,
+        seed: cfg.seed ^ 0xc0de,
+    });
+    let harness = EvalHarness::new(forward, manifest, corpus);
+    let results = harness.run_suite(params, per_category, cfg.seed)?;
+    for r in &results {
+        println!(
+            "{:<24} acc={:.3} (chance {:.3}, n={})",
+            r.category.name(),
+            r.accuracy,
+            r.chance,
+            r.n
+        );
+    }
+    Ok(results)
+}
+
+/// Print the analytic per-GPU memory table for a preset (Table 1 / §1).
+pub fn memory_report(preset: &str, seq: usize, world: usize) -> Result<()> {
+    let cfg = LlamaCfg::preset(preset).context("unknown preset")?;
+    println!(
+        "Memory model — {} ({} params), seq={}, batch=1, {} GPU(s) FSDP",
+        cfg.name,
+        crate::util::human_count(cfg.n_params() as u64),
+        seq,
+        world
+    );
+    println!(
+        "{:<28} {:>10} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "configuration", "params", "master", "grads", "optim", "activ", "TOTAL"
+    );
+    let rank = cfg.default_rank();
+    let rows: Vec<(&str, OptimKind, bool)> = vec![
+        ("AdamW + FSDP", OptimKind::AdamW, false),
+        ("Adam8bit + FSDP", OptimKind::Adam8bit, false),
+        ("GaLore + FSDP", OptimKind::GaLore { rank }, true),
+        ("GaLore8bit + FSDP", OptimKind::GaLore8bit { rank }, true),
+        ("LoRA + FSDP", OptimKind::Lora { rank }, false),
+    ];
+    for (name, optim, per_layer) in rows {
+        let est = memory::estimate(
+            &cfg,
+            &MemoryCfg {
+                optim,
+                parallelism: Parallelism::Fsdp { world },
+                precision: Precision::mixed_bf16(),
+                seq,
+                batch: 1,
+                per_layer_update: per_layer,
+                activation_factor: 0.3,
+            },
+        );
+        println!(
+            "{:<28} {:>10} {:>10} {:>10} {:>10} {:>10} {:>12}",
+            name,
+            human_bytes(est.params),
+            human_bytes(est.master_weights),
+            human_bytes(est.grads),
+            human_bytes(est.optimizer),
+            human_bytes(est.activations),
+            format!("{:.2} GiB", est.total_gib()),
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelMode;
+
+    fn artifacts_ready() -> bool {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest_llama-nano.json")
+            .exists()
+    }
+
+    fn quick_cfg(optimizer: &str, steps: u64) -> TrainConfig {
+        TrainConfig {
+            preset: "llama-nano".into(),
+            artifacts_dir: std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("artifacts"),
+            out_dir: std::env::temp_dir().join("galore2_coord_test"),
+            run_name: format!("t_{optimizer}_{}", std::process::id()),
+            optimizer: optimizer.into(),
+            steps,
+            lr: 0.01,
+            galore_rank: 16,
+            galore_update_freq: 20,
+            eval_every: 0,
+            eval_batches: 2,
+            log_every: 5,
+            corpus_tokens: 20_000,
+            val_tokens: 4_000,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn trains_nano_galore_loss_decreases() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts missing");
+            return;
+        }
+        let mut cfg = quick_cfg("galore", 100);
+        cfg.lr = 0.1; // α=0.25 ⇒ effective projected lr 0.025
+        let mut trainer = Trainer::new(cfg).unwrap();
+        let first = trainer.train_step(0).unwrap();
+        let mut last = first;
+        for t in 1..100 {
+            last = trainer.train_step(t).unwrap();
+        }
+        assert!(
+            last < first - 0.5,
+            "no learning: first {first} last {last}"
+        );
+    }
+
+    #[test]
+    fn fsdp_mode_trains() {
+        if !artifacts_ready() {
+            return;
+        }
+        let mut cfg = quick_cfg("galore", 10);
+        cfg.parallel = ParallelMode::Fsdp;
+        cfg.world = 2;
+        let mut trainer = Trainer::new(cfg).unwrap();
+        let first = trainer.train_step(0).unwrap();
+        let mut last = first;
+        for t in 1..10 {
+            last = trainer.train_step(t).unwrap();
+        }
+        assert!(last < first, "no learning under FSDP: {first} -> {last}");
+        assert!(trainer.fsdp_memory().is_some());
+    }
+
+    #[test]
+    fn memory_report_runs() {
+        memory_report("llama3-8b", 2048, 2).unwrap();
+    }
+}

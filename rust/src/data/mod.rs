@@ -1,0 +1,15 @@
+//! Data pipeline: synthetic corpus (C4 stand-in), tokenizer, packed loader.
+//!
+//! The corpus is an order-2 Markov process with Zipf-distributed "topic"
+//! structure (DESIGN.md §3 item 2): skewed unigram frequencies + strong
+//! local transition structure give a loss landscape where a language model
+//! meaningfully improves over the unigram entropy floor, and where the
+//! downstream eval harness can pose tasks with known ground truth.
+
+mod corpus;
+mod loader;
+mod tokenizer;
+
+pub use corpus::{Corpus, CorpusCfg};
+pub use loader::{Batch, DataLoader, Split};
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,142 @@
+//! Byte-pair-free byte tokenizer with a greedy merge vocabulary.
+//!
+//! Used by the quickstart example to train on real text snippets: bytes are
+//! base tokens (0..256); the most frequent adjacent pairs in a training
+//! sample become merge tokens until the target vocab is filled — a small
+//! BPE, enough to exercise the text→tokens→model path end to end.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct ByteTokenizer {
+    /// merges[i] = (left, right) producing token 256 + i.
+    merges: Vec<(u32, u32)>,
+    vocab: usize,
+}
+
+impl ByteTokenizer {
+    /// Byte-only tokenizer (vocab 256).
+    pub fn bytes_only() -> ByteTokenizer {
+        ByteTokenizer {
+            merges: Vec::new(),
+            vocab: 256,
+        }
+    }
+
+    /// Learn merges from `text` until `vocab` tokens exist.
+    pub fn train(text: &str, vocab: usize) -> ByteTokenizer {
+        assert!(vocab >= 256, "vocab must cover raw bytes");
+        let mut toks: Vec<u32> = text.bytes().map(u32::from).collect();
+        let mut merges = Vec::new();
+        while 256 + merges.len() < vocab {
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in toks.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // Deterministic tie-break: highest count, then lowest pair.
+            let best = counts
+                .into_iter()
+                .max_by_key(|&((a, b), c)| (c, std::cmp::Reverse((a, b))));
+            let Some(((a, b), count)) = best else { break };
+            if count < 2 {
+                break;
+            }
+            let new_id = 256 + merges.len() as u32;
+            merges.push((a, b));
+            toks = Self::apply_merge(&toks, a, b, new_id);
+        }
+        ByteTokenizer {
+            merges,
+            vocab,
+        }
+    }
+
+    fn apply_merge(toks: &[u32], a: u32, b: u32, id: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(toks.len());
+        let mut i = 0;
+        while i < toks.len() {
+            if i + 1 < toks.len() && toks[i] == a && toks[i + 1] == b {
+                out.push(id);
+                i += 2;
+            } else {
+                out.push(toks[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut toks: Vec<u32> = text.bytes().map(u32::from).collect();
+        for (i, &(a, b)) in self.merges.iter().enumerate() {
+            toks = Self::apply_merge(&toks, a, b, 256 + i as u32);
+        }
+        toks
+    }
+
+    pub fn decode(&self, toks: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &t in toks {
+            self.expand(t, &mut bytes);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    fn expand(&self, tok: u32, out: &mut Vec<u8>) {
+        if tok < 256 {
+            out.push(tok as u8);
+        } else {
+            let (a, b) = self.merges[(tok - 256) as usize];
+            self.expand(a, out);
+            self.expand(b, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the quick brown fox jumps over the lazy dog. \
+                          the quick brown fox jumps again and again.";
+
+    #[test]
+    fn bytes_only_roundtrip() {
+        let tk = ByteTokenizer::bytes_only();
+        let toks = tk.encode(SAMPLE);
+        assert_eq!(toks.len(), SAMPLE.len());
+        assert_eq!(tk.decode(&toks), SAMPLE);
+    }
+
+    #[test]
+    fn bpe_roundtrip_and_compression() {
+        let tk = ByteTokenizer::train(SAMPLE, 300);
+        let toks = tk.encode(SAMPLE);
+        assert!(toks.len() < SAMPLE.len(), "no compression");
+        assert_eq!(tk.decode(&toks), SAMPLE);
+    }
+
+    #[test]
+    fn encode_decode_unseen_text() {
+        let tk = ByteTokenizer::train(SAMPLE, 280);
+        let unseen = "a totally different sentence — with unicode: héllo";
+        assert_eq!(tk.decode(&tk.encode(unseen)), unseen);
+    }
+
+    #[test]
+    fn tokens_below_vocab() {
+        let tk = ByteTokenizer::train(SAMPLE, 270);
+        assert!(tk.encode(SAMPLE).iter().all(|&t| (t as usize) < 270));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = ByteTokenizer::train(SAMPLE, 280);
+        let b = ByteTokenizer::train(SAMPLE, 280);
+        assert_eq!(a.encode(SAMPLE), b.encode(SAMPLE));
+    }
+}

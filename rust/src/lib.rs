@@ -1,0 +1,33 @@
+//! # GaLore 2 — Gradient Low-Rank Projection at scale
+//!
+//! A Rust + JAX + Pallas reproduction of *GaLore 2: Large-Scale LLM
+//! Pre-Training by Gradient Low-Rank Projection* (Su et al., 2025).
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — training coordinator: FSDP-style sharded runtime,
+//!   the GaLore optimizer family, fast randomized SVD subspace updates,
+//!   data pipeline, memory model, downstream eval harness, CLI launcher.
+//! * **L2 (python/compile/model.py)** — JAX Llama fwd/bwd, AOT-lowered to
+//!   HLO text artifacts, never imported at runtime.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the GaLore
+//!   hot-spot (projection + fused low-rank Adam update), lowered into the
+//!   same artifacts and also loadable as standalone executables.
+
+pub mod bench;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dist;
+pub mod eval;
+pub mod linalg;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod train;
+pub mod util;

@@ -1,0 +1,175 @@
+//! Cyclic Jacobi eigendecomposition for symmetric matrices.
+//!
+//! Used by [`super::svd`] on the Gram matrix A·Aᵀ. Jacobi is slower than
+//! tridiagonal QR asymptotically but is simple, famously accurate for small
+//! eigenvalues, and deterministic — exactly what the "expensive baseline"
+//! role in the paper's §4.1.2 comparison needs.
+
+use crate::tensor::Matrix;
+
+/// Eigendecomposition of symmetric `a`: returns (eigenvalues ascending,
+/// eigenvectors as columns of the returned matrix), a = V diag(λ) Vᵀ.
+pub fn jacobi_eigh(a: &Matrix) -> (Vec<f32>, Matrix) {
+    assert_eq!(a.rows, a.cols, "jacobi_eigh needs a square matrix");
+    let n = a.rows;
+    // Work in f64: the Gram matrix squares the condition number, so f32
+    // accumulation loses the small singular values GaLore's tail analysis
+    // cares about.
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm for convergence test.
+        let mut off = 0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-11 * frob(&m, n).max(1e-300) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                // Rotation angle annihilating (p,q).
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,θ)ᵀ M J(p,q,θ) in place.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract and sort ascending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let evals: Vec<f32> = pairs.iter().map(|&(l, _)| l as f32).collect();
+    let mut evecs = Matrix::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            *evecs.at_mut(r, new_col) = v[r * n + old_col] as f32;
+        }
+    }
+    (evals, evecs)
+}
+
+fn frob(m: &[f64], n: usize) -> f64 {
+    let mut s = 0f64;
+    for i in 0..n * n {
+        s += m[i] * m[i];
+    }
+    s.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Pcg64;
+
+    fn random_symmetric(n: usize, rng: &mut Pcg64) -> Matrix {
+        let a = Matrix::randn(n, n, 1.0, rng);
+        let at = a.transpose();
+        let mut s = a.clone();
+        s.add_assign(&at);
+        s.scale(0.5);
+        s
+    }
+
+    #[test]
+    fn reconstructs_symmetric() {
+        let mut rng = Pcg64::new(1, 0);
+        let a = random_symmetric(9, &mut rng);
+        let (evals, v) = jacobi_eigh(&a);
+        // rebuild V diag(λ) Vᵀ
+        let mut vd = v.clone();
+        for r in 0..vd.rows {
+            for c in 0..vd.cols {
+                *vd.at_mut(r, c) *= evals[c];
+            }
+        }
+        let rec = vd.matmul_a_bt(&v);
+        prop::assert_close(&rec.data, &a.data, 1e-4, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Pcg64::new(2, 0);
+        let a = random_symmetric(12, &mut rng);
+        let (_, v) = jacobi_eigh(&a);
+        assert!(v.orthonormality_defect() < 1e-4);
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, &l) in [4.0f32, -1.0, 2.5, 0.0].iter().enumerate() {
+            *a.at_mut(i, i) = l;
+        }
+        let (evals, _) = jacobi_eigh(&a);
+        let expect = [-1.0, 0.0, 2.5, 4.0];
+        for (got, want) in evals.iter().zip(expect) {
+            assert!((got - want).abs() < 1e-6, "{evals:?}");
+        }
+    }
+
+    #[test]
+    fn gram_matrix_psd_eigenvalues() {
+        prop::check("gram eigenvalues nonneg", 15, |g| {
+            let (m, n) = (g.usize_in(2, 10), g.usize_in(2, 10));
+            let a = Matrix::from_vec(m, n, g.matrix(m, n));
+            let gram = a.matmul_a_bt(&a);
+            let (evals, _) = jacobi_eigh(&gram);
+            for &l in &evals {
+                if l < -1e-2 {
+                    return Err(format!("negative eigenvalue {l}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Pcg64::new(3, 0);
+        let a = random_symmetric(8, &mut rng);
+        let trace: f32 = (0..8).map(|i| a.at(i, i)).sum();
+        let (evals, _) = jacobi_eigh(&a);
+        let sum: f32 = evals.iter().sum();
+        assert!((trace - sum).abs() < 1e-4, "trace {trace} vs λ-sum {sum}");
+    }
+}

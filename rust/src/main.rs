@@ -1,0 +1,156 @@
+//! galore2 — launcher CLI.
+//!
+//! Subcommands:
+//!   train    train a model (config file + flag overrides)
+//!   eval     run the downstream suite on a checkpoint
+//!   memory   print the analytic per-GPU memory table (Table 1 / §1)
+//!   svd      time full vs randomized SVD (§4.1.2's 15× claim)
+//!   presets  list model presets
+//!
+//! Examples:
+//!   galore2 train --config configs/nano-galore.toml --steps 100
+//!   galore2 train --preset llama-nano --optimizer adam8bit --steps 50
+//!   galore2 memory --preset llama3-8b --seq 2048 --world 2
+//!   galore2 eval --config configs/nano-galore.toml --checkpoint runs/x.ckpt
+
+use anyhow::{bail, Context, Result};
+use galore2::checkpoint::Checkpoint;
+use galore2::config::TrainConfig;
+use galore2::coordinator;
+use galore2::linalg::{randomized_svd, svd, RandSvdOpts};
+use galore2::model::LlamaCfg;
+use galore2::tensor::Matrix;
+use galore2::util::cli::Args;
+use galore2::util::rng::Pcg64;
+use galore2::util::Timer;
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "memory" => cmd_memory(&args),
+        "svd" => cmd_svd(&args),
+        "presets" => {
+            for name in LlamaCfg::preset_names() {
+                let c = LlamaCfg::preset(name).unwrap();
+                println!(
+                    "{:<12} hidden={:<5} interm={:<6} heads={:<3} layers={:<3} vocab={:<7} ≈{} params",
+                    name,
+                    c.hidden,
+                    c.intermediate,
+                    c.heads,
+                    c.layers,
+                    c.vocab,
+                    galore2::util::human_count(c.n_params() as u64)
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }?;
+    let unused = args.unused();
+    if !unused.is_empty() {
+        eprintln!("warning: unrecognized flags: {unused:?}");
+    }
+    Ok(())
+}
+
+const HELP: &str = "galore2 — GaLore 2 pre-training framework
+USAGE: galore2 <train|eval|memory|svd|presets> [flags]
+  train   --config FILE | --preset P --optimizer O --steps N --lr X
+          --rank R --update-freq T --alpha A --projection KIND
+          --parallel single|fsdp --world N --engine native|pjrt
+          [--save-final] [--eval-downstream]
+  eval    --config FILE --checkpoint CKPT [--questions N]
+  memory  --preset P [--seq N] [--world N]
+  svd     [--m N] [--n N] [--rank R] [--iters K]
+  presets";
+
+fn load_cfg(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        TrainConfig::from_toml(path)?
+    } else {
+        TrainConfig::default()
+    };
+    cfg.apply_cli(args);
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let save_final = args.has("save-final");
+    let eval_downstream = args.has("eval-downstream");
+    let questions = args.usize_or("questions", 40);
+    let cfg = load_cfg(args)?;
+    let trainer = coordinator::train(cfg)?;
+    if save_final {
+        trainer.save_checkpoint(trainer.cfg.steps)?;
+        println!(
+            "checkpoint → {}",
+            trainer.checkpoint_path(trainer.cfg.steps).display()
+        );
+    }
+    if eval_downstream {
+        coordinator::eval_params(&trainer.cfg, &trainer.params, questions)?;
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let ckpt_path = args
+        .get("checkpoint")
+        .context("--checkpoint required for eval")?
+        .to_string();
+    let cfg = load_cfg(args)?;
+    let ckpt = Checkpoint::load(&ckpt_path)?;
+    println!(
+        "loaded checkpoint step={} ({} params)",
+        ckpt.step,
+        ckpt.params.len()
+    );
+    let n = args.usize_or("questions", 40);
+    coordinator::eval_params(&cfg, &ckpt.params, n)?;
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> Result<()> {
+    let preset = args.str_or("preset", "llama3-8b");
+    let seq = args.usize_or("seq", 2048);
+    let world = args.usize_or("world", 2);
+    coordinator::memory_report(&preset, seq, world)?;
+    Ok(())
+}
+
+/// §4.1.2: time full SVD vs randomized SVD on a gradient-sized matrix.
+fn cmd_svd(args: &Args) -> Result<()> {
+    let m = args.usize_or("m", 512);
+    let n = args.usize_or("n", 2048);
+    let rank = args.usize_or("rank", m / 4);
+    let iters = args.usize_or("iters", 3);
+    if rank == 0 || rank > m.min(n) {
+        bail!("rank must be in 1..=min(m,n)");
+    }
+    let mut rng = Pcg64::new(7, 0);
+    let g = Matrix::randn(m, n, 1.0, &mut rng);
+    let timer = Timer::start();
+    for _ in 0..iters {
+        let _ = svd(&g);
+    }
+    let full_s = timer.elapsed_secs() / iters as f64;
+    let timer = Timer::start();
+    for _ in 0..iters {
+        let _ = randomized_svd(&g, rank, RandSvdOpts::default(), &mut rng);
+    }
+    let rand_s = timer.elapsed_secs() / iters as f64;
+    println!(
+        "{m}x{n} rank {rank}: full SVD {:.3}s, randomized {:.3}s → {:.1}x speedup",
+        full_s,
+        rand_s,
+        full_s / rand_s
+    );
+    Ok(())
+}

@@ -1,0 +1,227 @@
+//! Training metrics: loss curves, throughput, CSV/JSON emission.
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// One logged training/validation point.
+#[derive(Clone, Debug)]
+pub struct MetricPoint {
+    pub step: u64,
+    pub tokens: u64,
+    pub loss: f64,
+    pub lr: f64,
+    pub wall_secs: f64,
+    pub tag: String,
+}
+
+/// Accumulates metric points; writes CSV and JSON-lines.
+#[derive(Default)]
+pub struct Metrics {
+    pub points: Vec<MetricPoint>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn log(&mut self, tag: &str, step: u64, tokens: u64, loss: f64, lr: f64, wall: f64) {
+        self.points.push(MetricPoint {
+            step,
+            tokens,
+            loss,
+            lr,
+            wall_secs: wall,
+            tag: tag.to_string(),
+        });
+    }
+
+    pub fn of_tag<'a>(&'a self, tag: &'a str) -> impl Iterator<Item = &'a MetricPoint> {
+        self.points.iter().filter(move |p| p.tag == tag)
+    }
+
+    pub fn last_loss(&self, tag: &str) -> Option<f64> {
+        self.of_tag(tag).last().map(|p| p.loss)
+    }
+
+    /// Mean loss of the final `k` points of a tag (noise-robust endpoint
+    /// for the Fig. 3 comparison).
+    pub fn tail_mean_loss(&self, tag: &str, k: usize) -> Option<f64> {
+        let pts: Vec<f64> = self.of_tag(tag).map(|p| p.loss).collect();
+        if pts.is_empty() {
+            return None;
+        }
+        let tail = &pts[pts.len().saturating_sub(k)..];
+        Some(tail.iter().sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Exponential moving average of a tag's losses.
+    pub fn ema(&self, tag: &str, beta: f64) -> Vec<(u64, f64)> {
+        let mut out = Vec::new();
+        let mut acc: Option<f64> = None;
+        for p in self.of_tag(tag) {
+            acc = Some(match acc {
+                None => p.loss,
+                Some(a) => beta * a + (1.0 - beta) * p.loss,
+            });
+            out.push((p.step, acc.unwrap()));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("tag,step,tokens,loss,lr,wall_secs\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                p.tag, p.step, p.tokens, p.loss, p.lr, p.wall_secs
+            ));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    let mut j = Json::obj();
+                    j.set("tag", Json::str(p.tag.clone()))
+                        .set("step", Json::num(p.step as f64))
+                        .set("tokens", Json::num(p.tokens as f64))
+                        .set("loss", Json::num(p.loss))
+                        .set("lr", Json::num(p.lr))
+                        .set("wall_secs", Json::num(p.wall_secs));
+                    j
+                })
+                .collect(),
+        )
+    }
+
+    /// Perplexity of the latest validation loss.
+    pub fn last_ppl(&self, tag: &str) -> Option<f64> {
+        self.last_loss(tag).map(f64::exp)
+    }
+}
+
+/// Render an ASCII loss-curve chart (for terminal reports / EXPERIMENTS.md).
+pub fn ascii_chart(series: &[(&str, Vec<(u64, f64)>)], width: usize, height: usize) -> String {
+    let all: Vec<(u64, f64)> = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().copied())
+        .collect();
+    if all.is_empty() {
+        return String::new();
+    }
+    let (x_min, x_max) = all
+        .iter()
+        .fold((u64::MAX, 0u64), |(lo, hi), &(x, _)| (lo.min(x), hi.max(x)));
+    let (y_min, y_max) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &(_, y)| {
+        (lo.min(y), hi.max(y))
+    });
+    let y_span = (y_max - y_min).max(1e-9);
+    let x_span = (x_max - x_min).max(1) as f64;
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', '+', 'o', 'x', '#'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts {
+            let col = (((x - x_min) as f64 / x_span) * (width - 1) as f64) as usize;
+            let row = (((y_max - y) / y_span) * (height - 1) as f64) as usize;
+            grid[row][col] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{y_max:>8.4} ┐\n"));
+    for row in grid {
+        out.push_str("         │");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!("{y_min:>8.4} └{}\n", "─".repeat(width)));
+    out.push_str(&format!(
+        "          {:<10} … {:>10}   legend: {}\n",
+        x_min,
+        x_max,
+        series
+            .iter()
+            .enumerate()
+            .map(|(i, (name, _))| format!("{}={}", marks[i % marks.len()], name))
+            .collect::<Vec<_>>()
+            .join("  ")
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Metrics {
+        let mut m = Metrics::new();
+        for t in 0..10 {
+            m.log("train", t, t * 100, 5.0 - 0.3 * t as f64, 0.01, 0.1);
+        }
+        m.log("val", 9, 900, 3.0, 0.01, 0.5);
+        m
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let m = sample();
+        let csv = m.to_csv();
+        assert_eq!(csv.lines().count(), 1 + 11);
+        assert!(csv.lines().nth(1).unwrap().starts_with("train,0,0,5,"));
+    }
+
+    #[test]
+    fn tag_filters() {
+        let m = sample();
+        assert_eq!(m.of_tag("train").count(), 10);
+        assert_eq!(m.last_loss("val"), Some(3.0));
+        assert!((m.last_ppl("val").unwrap() - 3f64.exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tail_mean() {
+        let m = sample();
+        let tail = m.tail_mean_loss("train", 2).unwrap();
+        let expect = (5.0 - 0.3 * 8.0 + 5.0 - 0.3 * 9.0) / 2.0;
+        assert!((tail - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_smooths_monotonically_decreasing() {
+        let m = sample();
+        let ema = m.ema("train", 0.9);
+        assert_eq!(ema.len(), 10);
+        assert!(ema.windows(2).all(|w| w[1].1 <= w[0].1));
+        // EMA lags the raw series.
+        assert!(ema.last().unwrap().1 > m.last_loss("train").unwrap());
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let m = sample();
+        let j = m.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 11);
+    }
+
+    #[test]
+    fn chart_renders() {
+        let m = sample();
+        let pts: Vec<(u64, f64)> = m.of_tag("train").map(|p| (p.step, p.loss)).collect();
+        let chart = ascii_chart(&[("train", pts)], 40, 8);
+        assert!(chart.contains('*'));
+        assert!(chart.lines().count() >= 8);
+    }
+}

@@ -1,0 +1,173 @@
+//! 8-bit Adam (Dettmers et al. 2022) — the paper's 500B-token baseline.
+//!
+//! Moment tensors are stored in the block-wise dynamic 8-bit code from
+//! `crate::quant`; each step dequantizes a block, applies the Adam
+//! recurrence in fp32, and re-quantizes. This quarters optimizer memory
+//! versus fp32 Adam while tracking it closely — exactly the trade the
+//! paper's baseline makes (state: 2·mn bytes instead of 8·mn).
+
+use super::{ser, AdamCfg, Optimizer};
+use crate::quant::Quantized8;
+use crate::tensor::Matrix;
+use std::collections::BTreeMap;
+
+struct State {
+    m: Quantized8,
+    v: Quantized8,
+}
+
+pub struct Adam8bit {
+    cfg: AdamCfg,
+    states: BTreeMap<usize, State>,
+    t: u64,
+}
+
+impl Adam8bit {
+    pub fn new(cfg: AdamCfg) -> Adam8bit {
+        Adam8bit {
+            cfg,
+            states: BTreeMap::new(),
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for Adam8bit {
+    fn begin_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn step_param(&mut self, idx: usize, param: &mut Matrix, grad: &Matrix, lr: f32) {
+        assert_eq!(param.shape(), grad.shape());
+        let n = param.numel();
+        let st = self.states.entry(idx).or_insert_with(|| State {
+            m: Quantized8::quantize(&vec![0.0; n]),
+            v: Quantized8::quantize(&vec![0.0; n]),
+        });
+        // Dequantize → fp32 Adam recurrence → requantize.
+        let mut m = st.m.dequantize();
+        let mut v = st.v.dequantize();
+        // v is stored via its sqrt-friendly positive values; recurrences as usual.
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32 + 1);
+        let bc2 = 1.0 - b2.powi(self.t as i32 + 1);
+        let wd = self.cfg.weight_decay;
+        for i in 0..n {
+            let g = grad.data[i];
+            m[i] = b1 * m[i] + (1.0 - b1) * g;
+            v[i] = (b2 * v[i] + (1.0 - b2) * g * g).max(0.0);
+            let m_hat = m[i] / bc1;
+            let v_hat = v[i] / bc2;
+            if wd > 0.0 {
+                param.data[i] -= lr * wd * param.data[i];
+            }
+            param.data[i] -= lr * m_hat / (v_hat.sqrt() + self.cfg.eps);
+        }
+        st.m = Quantized8::quantize(&m);
+        st.v = Quantized8::quantize(&v);
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.states
+            .values()
+            .map(|s| s.m.nbytes() + s.v.nbytes())
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "adam8bit"
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        // Serialize dequantized moments: simple and checkpoint-compatible
+        // across quantizer versions (state re-quantizes on import).
+        let mut out = Vec::new();
+        ser::push_u64(&mut out, self.t);
+        ser::push_u64(&mut out, self.states.len() as u64);
+        for (&idx, st) in &self.states {
+            ser::push_u64(&mut out, idx as u64);
+            ser::push_f32s(&mut out, &st.m.dequantize());
+            ser::push_f32s(&mut out, &st.v.dequantize());
+        }
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = ser::Reader::new(bytes);
+        self.t = r.u64()?;
+        let n = r.u64()? as usize;
+        self.states.clear();
+        for _ in 0..n {
+            let idx = r.u64()? as usize;
+            let m = r.f32s()?;
+            let v = r.f32s()?;
+            self.states.insert(
+                idx,
+                State {
+                    m: Quantized8::quantize(&m),
+                    v: Quantized8::quantize(&v),
+                },
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::AdamW;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn tracks_fp32_adam_closely() {
+        // On a smooth trajectory the 8-bit state should stay within a few
+        // percent of fp32 Adam (the design point of Dettmers et al.).
+        let mut rng = Pcg64::new(1, 0);
+        let target = Matrix::randn(8, 32, 1.0, &mut rng);
+        let mut w8 = Matrix::zeros(8, 32);
+        let mut w32 = Matrix::zeros(8, 32);
+        let mut o8 = Adam8bit::new(AdamCfg::default());
+        let mut o32 = AdamW::new(AdamCfg::default());
+        for t in 0..150 {
+            let g8 = w8.sub(&target);
+            let g32 = w32.sub(&target);
+            o8.begin_step(t);
+            o8.step_param(0, &mut w8, &g8, 0.05);
+            o32.begin_step(t);
+            o32.step_param(0, &mut w32, &g32, 0.05);
+        }
+        let drift = w8.sub(&w32).frobenius_norm() / target.frobenius_norm();
+        assert!(drift < 0.05, "8-bit drifted {drift} from fp32 Adam");
+    }
+
+    #[test]
+    fn state_is_quarter_of_fp32() {
+        let mut o8 = Adam8bit::new(AdamCfg::default());
+        let mut o32 = AdamW::new(AdamCfg::default());
+        let mut p = Matrix::zeros(32, 32); // multiple of block size
+        let g = Matrix::from_vec(32, 32, vec![0.1; 1024]);
+        o8.begin_step(0);
+        o8.step_param(0, &mut p.clone(), &g, 0.1);
+        o32.begin_step(0);
+        o32.step_param(0, &mut p, &g, 0.1);
+        let ratio = o32.state_bytes() as f64 / o8.state_bytes() as f64;
+        assert!(ratio > 3.5 && ratio < 4.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn second_moment_never_negative() {
+        let mut opt = Adam8bit::new(AdamCfg::default());
+        let mut p = Matrix::zeros(4, 64);
+        let mut rng = Pcg64::new(2, 0);
+        for t in 0..50 {
+            let g = Matrix::randn(4, 64, 1.0, &mut rng);
+            opt.begin_step(t);
+            opt.step_param(0, &mut p, &g, 0.01);
+        }
+        let v = opt.states[&0].v.dequantize();
+        assert!(v.iter().all(|&x| x >= 0.0));
+        assert!(p.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,196 @@
+//! AdamW — the full-rank, full-precision baseline.
+//!
+//! This is the optimizer GaLore's memory equation in §3 is written against:
+//! 2·mn fp32 state per m×n parameter (first + second moments).
+
+use super::{ser, Optimizer};
+use crate::tensor::Matrix;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AdamCfg {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Decoupled weight decay (AdamW); 0 disables.
+    pub weight_decay: f32,
+}
+
+impl Default for AdamCfg {
+    fn default() -> Self {
+        AdamCfg {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+        }
+    }
+}
+
+struct State {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+pub struct AdamW {
+    cfg: AdamCfg,
+    states: BTreeMap<usize, State>,
+    t: u64,
+}
+
+impl AdamW {
+    pub fn new(cfg: AdamCfg) -> AdamW {
+        AdamW {
+            cfg,
+            states: BTreeMap::new(),
+            t: 0,
+        }
+    }
+
+    /// The normalized update direction N = M̂/(√V̂ + ε) *without* applying it
+    /// — GaLore reuses Adam as its inner optimizer on projected gradients.
+    pub(crate) fn update_direction(
+        cfg: &AdamCfg,
+        m: &mut [f32],
+        v: &mut [f32],
+        grad: &[f32],
+        t: u64,
+    ) -> Vec<f32> {
+        debug_assert_eq!(m.len(), grad.len());
+        let b1 = cfg.beta1;
+        let b2 = cfg.beta2;
+        // Bias correction uses the 1-based step count.
+        let bc1 = 1.0 - b1.powi(t as i32 + 1);
+        let bc2 = 1.0 - b2.powi(t as i32 + 1);
+        let mut out = vec![0f32; grad.len()];
+        for i in 0..grad.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * grad[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * grad[i] * grad[i];
+            let m_hat = m[i] / bc1;
+            let v_hat = v[i] / bc2;
+            out[i] = m_hat / (v_hat.sqrt() + cfg.eps);
+        }
+        out
+    }
+}
+
+impl Optimizer for AdamW {
+    fn begin_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn step_param(&mut self, idx: usize, param: &mut Matrix, grad: &Matrix, lr: f32) {
+        assert_eq!(param.shape(), grad.shape());
+        let n = param.numel();
+        let st = self.states.entry(idx).or_insert_with(|| State {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+        });
+        assert_eq!(st.m.len(), n, "param {idx} changed shape");
+        let dir = Self::update_direction(&self.cfg, &mut st.m, &mut st.v, &grad.data, self.t);
+        let wd = self.cfg.weight_decay;
+        for i in 0..n {
+            if wd > 0.0 {
+                param.data[i] -= lr * wd * param.data[i];
+            }
+            param.data[i] -= lr * dir[i];
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.states.values().map(|s| (s.m.len() + s.v.len()) * 4).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        ser::push_u64(&mut out, self.t);
+        ser::push_u64(&mut out, self.states.len() as u64);
+        for (&idx, st) in &self.states {
+            ser::push_u64(&mut out, idx as u64);
+            ser::push_f32s(&mut out, &st.m);
+            ser::push_f32s(&mut out, &st.v);
+        }
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = ser::Reader::new(bytes);
+        self.t = r.u64()?;
+        let n = r.u64()? as usize;
+        self.states.clear();
+        for _ in 0..n {
+            let idx = r.u64()? as usize;
+            let m = r.f32s()?;
+            let v = r.f32s()?;
+            self.states.insert(idx, State { m, v });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_is_signed_unit_direction() {
+        // At t=0 with zero state, m̂ = g, v̂ = g² ⇒ update = sign(g) (ε aside).
+        let mut opt = AdamW::new(AdamCfg::default());
+        let mut p = Matrix::zeros(1, 3);
+        let g = Matrix::from_vec(1, 3, vec![0.5, -2.0, 0.0]);
+        opt.begin_step(0);
+        opt.step_param(0, &mut p, &g, 0.1);
+        assert!((p.data[0] + 0.1).abs() < 1e-3);
+        assert!((p.data[1] - 0.1).abs() < 1e-3);
+        assert_eq!(p.data[2], 0.0);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let cfg = AdamCfg {
+            weight_decay: 0.1,
+            ..AdamCfg::default()
+        };
+        let mut opt = AdamW::new(cfg);
+        let mut p = Matrix::from_vec(1, 2, vec![1.0, -1.0]);
+        let g = Matrix::zeros(1, 2);
+        opt.begin_step(0);
+        opt.step_param(0, &mut p, &g, 0.5);
+        assert!((p.data[0] - 0.95).abs() < 1e-6);
+        assert!((p.data[1] + 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn state_bytes_counts_two_moments() {
+        let mut opt = AdamW::new(AdamCfg::default());
+        let mut p = Matrix::zeros(8, 4);
+        let g = Matrix::from_vec(8, 4, vec![1.0; 32]);
+        opt.begin_step(0);
+        opt.step_param(0, &mut p, &g, 0.1);
+        assert_eq!(opt.state_bytes(), 2 * 32 * 4);
+    }
+
+    #[test]
+    fn export_import_roundtrip_preserves_trajectory() {
+        let mut a = AdamW::new(AdamCfg::default());
+        let mut pa = Matrix::zeros(4, 4);
+        let g = Matrix::from_vec(4, 4, (0..16).map(|x| x as f32 / 8.0).collect());
+        for t in 0..5 {
+            a.begin_step(t);
+            a.step_param(0, &mut pa, &g, 0.1);
+        }
+        let blob = a.export_state();
+        let mut b = AdamW::new(AdamCfg::default());
+        b.import_state(&blob).unwrap();
+        let mut pb = pa.clone();
+        a.begin_step(5);
+        a.step_param(0, &mut pa, &g, 0.1);
+        b.begin_step(5);
+        b.step_param(0, &mut pb, &g, 0.1);
+        assert_eq!(pa.data, pb.data);
+    }
+}

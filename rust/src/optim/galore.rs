@@ -1,0 +1,611 @@
+//! GaLore: Gradient Low-Rank Projection (§3, Algorithm 1).
+//!
+//! For each 2-d parameter W (m×n), the gradient G is projected to a rank-r
+//! subspace R = PᵀG (or GP for tall W), the inner Adam runs entirely on R
+//! (moments M, V are r×n instead of m×n), and the normalized update N is
+//! projected back and applied with scale α:
+//!
+//! ```text
+//! W ← W − η · α · P N
+//! ```
+//!
+//! The projector P refreshes every `update_freq` steps from the current
+//! gradient's spectrum (§4.1); GaLore 2 uses fast randomized SVD for the
+//! refresh. Non-matrix parameters (biases, norms) and matrices whose rank
+//! would not shrink fall back to full-rank Adam, matching the reference
+//! implementation's `galore_params` split.
+
+use super::adamw::AdamW;
+use super::projector::{ProjectionKind, Projector};
+use super::{ser, AdamCfg, Optimizer};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+/// What happens to the low-rank Adam moments when the subspace changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MomentHandling {
+    /// Keep moments as-is (original GaLore; moments silently reinterpret in
+    /// the new basis — works because consecutive subspaces overlap heavily).
+    Keep,
+    /// Zero the moments at each refresh (conservative).
+    Reset,
+    /// Rotate the first moment into the new basis: M ← (P_newᵀ P_old) M
+    /// (the LDAdam-style calibration the paper cites; V is kept).
+    Project,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GaLoreCfg {
+    pub rank: usize,
+    /// Subspace refresh period T (paper uses 200–500).
+    pub update_freq: u64,
+    /// Scale factor α applied to the back-projected update (paper: 0.125
+    /// at 7B scale; acts as a fractional learning rate).
+    pub alpha: f32,
+    pub projection: ProjectionKind,
+    pub moments: MomentHandling,
+    /// Parameters smaller than this on either side skip projection.
+    pub min_dim: usize,
+    /// FSDP mode (§4.3): the subspace is owned by the coordinator — the
+    /// leader computes the SVD on the *full* (un-sharded) gradient and
+    /// replicates P to workers via [`GaLore::preset_projector`]. When set,
+    /// `step_param` never computes an SVD itself (gradients it sees are
+    /// shards, whose spectrum would be wrong).
+    pub external_subspace: bool,
+}
+
+impl Default for GaLoreCfg {
+    fn default() -> Self {
+        GaLoreCfg {
+            rank: 128,
+            update_freq: 200,
+            alpha: 0.25,
+            projection: ProjectionKind::RandSvd,
+            moments: MomentHandling::Keep,
+            min_dim: 2,
+            external_subspace: false,
+        }
+    }
+}
+
+enum ParamState {
+    /// Low-rank path: projector + low-rank Adam moments.
+    LowRank {
+        projector: Projector,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        /// Step at which P was last refreshed (drives `t % T == 0`).
+        last_refresh: u64,
+    },
+    /// Full-rank fallback (1-d / small params).
+    Full { m: Vec<f32>, v: Vec<f32> },
+}
+
+pub struct GaLore {
+    pub cfg: GaLoreCfg,
+    adam: AdamCfg,
+    states: BTreeMap<usize, ParamState>,
+    rng: Pcg64,
+    t: u64,
+    /// Count of SVD/refresh operations (exposed for the E6/E7 benches).
+    refreshes: u64,
+}
+
+impl GaLore {
+    pub fn new(cfg: GaLoreCfg, adam: AdamCfg, seed: u64) -> GaLore {
+        GaLore {
+            cfg,
+            adam,
+            states: BTreeMap::new(),
+            rng: Pcg64::new(seed, 0x6a10),
+            t: 0,
+            refreshes: 0,
+        }
+    }
+
+    fn uses_projection(&self, shape: (usize, usize)) -> bool {
+        let (m, n) = shape;
+        m >= self.cfg.min_dim && n >= self.cfg.min_dim && self.cfg.rank < m.min(n)
+            || (m >= self.cfg.min_dim && n >= self.cfg.min_dim && self.cfg.rank == m.min(n))
+    }
+
+    pub fn refresh_count(&self) -> u64 {
+        self.refreshes
+    }
+
+    /// Export the projector of a parameter (leader-side SVD replication).
+    pub fn export_projector(&self, idx: usize) -> Option<Matrix> {
+        match self.states.get(&idx) {
+            Some(ParamState::LowRank { projector, .. }) => Some(projector.export_p()),
+            _ => None,
+        }
+    }
+
+    /// Install a replicated projector (worker-side; §4.3).
+    pub fn install_projector(&mut self, idx: usize, p: Matrix) {
+        if let Some(ParamState::LowRank {
+            projector,
+            last_refresh,
+            ..
+        }) = self.states.get_mut(&idx)
+        {
+            projector.install_p(p);
+            *last_refresh = self.t;
+        }
+    }
+
+    /// Whether step `t` is a subspace-refresh step.
+    pub fn is_refresh_step(&self, t: u64) -> bool {
+        t % self.cfg.update_freq == 0
+    }
+
+    /// Install a complete projector for a parameter (FSDP external-subspace
+    /// mode). `side` must be derived from the FULL parameter shape; moments
+    /// are (re)created lazily at the next `step_param` to match the local
+    /// shard. Existing moments are kept when shapes still match
+    /// (MomentHandling::Keep semantics).
+    pub fn preset_projector(&mut self, idx: usize, projector: Projector) {
+        match self.states.get_mut(&idx) {
+            Some(ParamState::LowRank {
+                projector: p,
+                last_refresh,
+                ..
+            }) => {
+                *p = projector;
+                *last_refresh = self.t;
+            }
+            _ => {
+                self.states.insert(
+                    idx,
+                    ParamState::LowRank {
+                        projector,
+                        m: Vec::new(), // sized on first gradient
+                        v: Vec::new(),
+                        last_refresh: self.t,
+                    },
+                );
+            }
+        }
+        self.refreshes += 1;
+    }
+
+    /// Whether parameter `idx` currently has a low-rank state.
+    pub fn has_projector(&self, idx: usize) -> bool {
+        matches!(self.states.get(&idx), Some(ParamState::LowRank { .. }))
+    }
+}
+
+impl Optimizer for GaLore {
+    fn begin_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn step_param(&mut self, idx: usize, param: &mut Matrix, grad: &Matrix, lr: f32) {
+        assert_eq!(param.shape(), grad.shape());
+        let (pm, pn) = param.shape();
+        let project = self.uses_projection((pm, pn));
+
+        if self.cfg.external_subspace && project && !self.states.contains_key(&idx) {
+            panic!(
+                "GaLore external-subspace mode: parameter {idx} has no projector; \
+                 the FSDP coordinator must preset_projector() before the first step"
+            );
+        }
+        let state = self.states.entry(idx).or_insert_with(|| {
+            if project {
+                let projector = Projector::from_gradient(
+                    grad,
+                    self.cfg.rank,
+                    self.cfg.projection,
+                    &mut self.rng,
+                );
+                self.refreshes += 1;
+                let (lm, ln) = projector.low_rank_shape(pm, pn);
+                ParamState::LowRank {
+                    projector,
+                    m: vec![0.0; lm * ln],
+                    v: vec![0.0; lm * ln],
+                    last_refresh: self.t,
+                }
+            } else {
+                ParamState::Full {
+                    m: vec![0.0; pm * pn],
+                    v: vec![0.0; pm * pn],
+                }
+            }
+        });
+
+        match state {
+            ParamState::Full { m, v } => {
+                let dir = AdamW::update_direction(&self.adam, m, v, &grad.data, self.t);
+                for i in 0..param.numel() {
+                    param.data[i] -= lr * dir[i];
+                }
+            }
+            ParamState::LowRank {
+                projector,
+                m,
+                v,
+                last_refresh,
+            } => {
+                // Subspace refresh every T steps (Alg. 1's `t mod T == 0`).
+                // In external-subspace (FSDP) mode the coordinator drives
+                // refreshes through preset_projector instead.
+                if !self.cfg.external_subspace
+                    && self.t % self.cfg.update_freq == 0
+                    && self.t != *last_refresh
+                {
+                    match self.cfg.moments {
+                        MomentHandling::Keep => projector.refresh(grad, &mut self.rng),
+                        MomentHandling::Reset => {
+                            projector.refresh(grad, &mut self.rng);
+                            m.iter_mut().for_each(|x| *x = 0.0);
+                            v.iter_mut().for_each(|x| *x = 0.0);
+                        }
+                        MomentHandling::Project => {
+                            let p_old = projector.export_p();
+                            projector.refresh(grad, &mut self.rng);
+                            let p_new = projector.export_p();
+                            // Rotation in the low-rank index: C = P_newᵀ P_old (r×r).
+                            let c = p_new.matmul_at_b(&p_old);
+                            let (lm, ln) = projector.low_rank_shape(pm, pn);
+                            let m_mat = Matrix::from_vec(lm, ln, m.clone());
+                            let rotated = match projector.side {
+                                super::ProjectorSide::Left => c.matmul(&m_mat),
+                                super::ProjectorSide::Right => m_mat.matmul_a_bt(&c),
+                            };
+                            m.copy_from_slice(&rotated.data);
+                        }
+                    }
+                    *last_refresh = self.t;
+                    self.refreshes += 1;
+                }
+
+                // Lazy moment sizing: after preset_projector the local
+                // shard's shape is unknown until the first gradient arrives.
+                if m.is_empty() {
+                    let (lm, ln) = projector.low_rank_shape(pm, pn);
+                    *m = vec![0.0; lm * ln];
+                    *v = vec![0.0; lm * ln];
+                }
+                // R = project(G); Adam in low-rank space; N back-projected.
+                let r = projector.project(grad);
+                let dir = AdamW::update_direction(&self.adam, m, v, &r.data, self.t);
+                let n_mat = Matrix::from_vec(r.rows, r.cols, dir);
+                let full = projector.project_back(&n_mat);
+                let alpha = self.cfg.alpha;
+                if self.adam.weight_decay > 0.0 {
+                    let wd = self.adam.weight_decay;
+                    for i in 0..param.numel() {
+                        param.data[i] -= lr * wd * param.data[i];
+                    }
+                }
+                for i in 0..param.numel() {
+                    param.data[i] -= lr * alpha * full.data[i];
+                }
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.states
+            .values()
+            .map(|s| match s {
+                ParamState::Full { m, v } => (m.len() + v.len()) * 4,
+                ParamState::LowRank {
+                    projector, m, v, ..
+                } => projector.nbytes() + (m.len() + v.len()) * 4,
+            })
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "galore"
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        // Serializes moments + P; refresh schedule state is reconstructed
+        // from the step counter on resume.
+        let mut out = Vec::new();
+        ser::push_u64(&mut out, self.t);
+        ser::push_u64(&mut out, self.refreshes);
+        ser::push_u64(&mut out, self.states.len() as u64);
+        for (&idx, st) in &self.states {
+            ser::push_u64(&mut out, idx as u64);
+            match st {
+                ParamState::Full { m, v } => {
+                    ser::push_u64(&mut out, 0);
+                    ser::push_f32s(&mut out, m);
+                    ser::push_f32s(&mut out, v);
+                }
+                ParamState::LowRank {
+                    projector,
+                    m,
+                    v,
+                    last_refresh,
+                } => {
+                    ser::push_u64(&mut out, 1);
+                    ser::push_u64(&mut out, *last_refresh);
+                    ser::push_u64(
+                        &mut out,
+                        match projector.side {
+                            super::ProjectorSide::Left => 0,
+                            super::ProjectorSide::Right => 1,
+                        },
+                    );
+                    let p = projector.export_p();
+                    ser::push_u64(&mut out, p.rows as u64);
+                    ser::push_u64(&mut out, p.cols as u64);
+                    ser::push_f32s(&mut out, &p.data);
+                    ser::push_f32s(&mut out, m);
+                    ser::push_f32s(&mut out, v);
+                }
+            }
+        }
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = ser::Reader::new(bytes);
+        self.t = r.u64()?;
+        self.refreshes = r.u64()?;
+        let n = r.u64()? as usize;
+        // Projector kind comes from cfg; P and its side are stored.
+        self.states.clear();
+        for _ in 0..n {
+            let idx = r.u64()? as usize;
+            let tag = r.u64()?;
+            if tag == 0 {
+                let m = r.f32s()?;
+                let v = r.f32s()?;
+                self.states.insert(idx, ParamState::Full { m, v });
+            } else {
+                let last_refresh = r.u64()?;
+                let side = match r.u64()? {
+                    0 => super::ProjectorSide::Left,
+                    _ => super::ProjectorSide::Right,
+                };
+                let rows = r.u64()? as usize;
+                let cols = r.u64()? as usize;
+                let p = Matrix::from_vec(rows, cols, r.f32s()?);
+                let m = r.f32s()?;
+                let v = r.f32s()?;
+                self.states.insert(
+                    idx,
+                    ParamState::LowRank {
+                        projector: Projector::from_parts(p, side, self.cfg.projection),
+                        m,
+                        v,
+                        last_refresh,
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn decaying_gradient(m: usize, n: usize, rng: &mut Pcg64) -> Matrix {
+        let mut acc = Matrix::zeros(m, n);
+        for k in 0..m.min(n) {
+            let u = Matrix::randn(m, 1, 1.0, rng);
+            let v = Matrix::randn(1, n, 1.0, rng);
+            let mut outer = u.matmul(&v);
+            outer.scale(0.5f32.powi(k as i32));
+            acc.add_assign(&outer);
+        }
+        acc
+    }
+
+    #[test]
+    fn identity_projector_galore_is_exactly_adam() {
+        // With P = I (full rank, identity basis), α = 1, no refresh, the
+        // GaLore update degenerates to plain Adam step-for-step. (Note a
+        // *rotated* full-rank basis does NOT reproduce Adam exactly — Adam
+        // is elementwise and not rotation-equivariant; this is why the
+        // paper treats α as a fractional learning rate rather than claiming
+        // equivalence.)
+        let mut rng = Pcg64::new(1, 0);
+        let target = Matrix::randn(8, 16, 1.0, &mut rng);
+        let cfg = GaLoreCfg {
+            rank: 8,
+            update_freq: 10_000,
+            alpha: 1.0,
+            projection: ProjectionKind::FullSvd,
+            ..GaLoreCfg::default()
+        };
+        let mut galore = GaLore::new(cfg, AdamCfg::default(), 3);
+        let mut adam = crate::optim::AdamW::new(AdamCfg::default());
+        let mut wg = Matrix::zeros(8, 16);
+        let mut wa = Matrix::zeros(8, 16);
+        // Step 0 with a zero gradient creates the state (moments stay 0,
+        // params unmoved), then force P = I.
+        let zero = Matrix::zeros(8, 16);
+        galore.begin_step(0);
+        galore.step_param(0, &mut wg, &zero, 0.05);
+        galore.install_projector(0, Matrix::eye(8));
+        adam.begin_step(0);
+        adam.step_param(0, &mut wa, &zero, 0.05);
+        for t in 1..50 {
+            let gg = wg.sub(&target);
+            let ga = wa.sub(&target);
+            galore.begin_step(t);
+            galore.step_param(0, &mut wg, &gg, 0.05);
+            adam.begin_step(t);
+            adam.step_param(0, &mut wa, &ga, 0.05);
+        }
+        let drift = wg.sub(&wa).frobenius_norm() / target.frobenius_norm();
+        assert!(drift < 1e-5, "identity-P GaLore drifted {drift} from Adam");
+    }
+
+    #[test]
+    fn memory_saving_matches_paper_equation() {
+        // §3: GaLore state = mr (projector) + 2nr (moments) for m ≤ n,
+        // vs Adam's 2mn.
+        let (m, n, r) = (64, 256, 16);
+        let mut rng = Pcg64::new(2, 0);
+        let g = decaying_gradient(m, n, &mut rng);
+        let cfg = GaLoreCfg {
+            rank: r,
+            ..GaLoreCfg::default()
+        };
+        let mut opt = GaLore::new(cfg, AdamCfg::default(), 5);
+        let mut p = Matrix::zeros(m, n);
+        opt.begin_step(0);
+        opt.step_param(0, &mut p, &g, 0.01);
+        let expect = (m * r + 2 * n * r) * 4;
+        assert_eq!(opt.state_bytes(), expect);
+        let adam_bytes = 2 * m * n * 4;
+        assert!(opt.state_bytes() * 3 < adam_bytes);
+    }
+
+    #[test]
+    fn subspace_refresh_happens_on_schedule() {
+        let mut rng = Pcg64::new(3, 0);
+        let cfg = GaLoreCfg {
+            rank: 4,
+            update_freq: 10,
+            ..GaLoreCfg::default()
+        };
+        let mut opt = GaLore::new(cfg, AdamCfg::default(), 9);
+        let mut p = Matrix::zeros(8, 24);
+        for t in 0..35 {
+            let g = decaying_gradient(8, 24, &mut rng);
+            opt.begin_step(t);
+            opt.step_param(0, &mut p, &g, 0.01);
+        }
+        // refreshes: initial (t=0) + t=10,20,30 ⇒ 4
+        assert_eq!(opt.refresh_count(), 4);
+    }
+
+    #[test]
+    fn small_params_fall_back_to_full_adam() {
+        let cfg = GaLoreCfg {
+            rank: 4,
+            min_dim: 2,
+            ..GaLoreCfg::default()
+        };
+        let mut opt = GaLore::new(cfg, AdamCfg::default(), 1);
+        // 1×n bias-like parameter
+        let mut p = Matrix::zeros(1, 16);
+        let g = Matrix::from_vec(1, 16, vec![1.0; 16]);
+        opt.begin_step(0);
+        opt.step_param(0, &mut p, &g, 0.1);
+        // full-rank state: 2 * 16 floats
+        assert_eq!(opt.state_bytes(), 2 * 16 * 4);
+        assert!(p.max_abs() > 0.0);
+    }
+
+    #[test]
+    fn alpha_scales_update() {
+        let mut rng = Pcg64::new(4, 0);
+        let g = decaying_gradient(8, 24, &mut rng);
+        let mut run = |alpha: f32| {
+            let cfg = GaLoreCfg {
+                rank: 4,
+                alpha,
+                projection: ProjectionKind::FullSvd,
+                ..GaLoreCfg::default()
+            };
+            let mut opt = GaLore::new(cfg, AdamCfg::default(), 7);
+            let mut p = Matrix::zeros(8, 24);
+            opt.begin_step(0);
+            opt.step_param(0, &mut p, &g, 0.1);
+            p
+        };
+        let p1 = run(1.0);
+        let p2 = run(0.5);
+        for (a, b) in p1.data.iter().zip(&p2.data) {
+            assert!((a - 2.0 * b).abs() < 1e-5, "{a} vs 2*{b}");
+        }
+    }
+
+    #[test]
+    fn converges_on_low_rank_quadratic() {
+        // Target offset is low-rank ⇒ GaLore with matching rank converges.
+        let mut rng = Pcg64::new(5, 0);
+        let u = Matrix::randn(16, 3, 1.0, &mut rng);
+        let v = Matrix::randn(3, 32, 1.0, &mut rng);
+        let target = u.matmul(&v);
+        let cfg = GaLoreCfg {
+            rank: 3,
+            update_freq: 25,
+            alpha: 1.0,
+            ..GaLoreCfg::default()
+        };
+        let mut opt = GaLore::new(cfg, AdamCfg::default(), 2);
+        let mut w = Matrix::zeros(16, 32);
+        for t in 0..300 {
+            let g = w.sub(&target);
+            opt.begin_step(t);
+            opt.step_param(0, &mut w, &g, 0.05);
+        }
+        let rel = w.sub(&target).frobenius_norm() / target.frobenius_norm();
+        assert!(rel < 0.05, "rel residual {rel}");
+    }
+
+    #[test]
+    fn moment_handling_variants_all_converge() {
+        let mut rng = Pcg64::new(6, 0);
+        let target = decaying_gradient(12, 24, &mut rng);
+        for moments in [
+            MomentHandling::Keep,
+            MomentHandling::Reset,
+            MomentHandling::Project,
+        ] {
+            let cfg = GaLoreCfg {
+                rank: 6,
+                update_freq: 20,
+                alpha: 1.0,
+                moments,
+                ..GaLoreCfg::default()
+            };
+            let mut opt = GaLore::new(cfg, AdamCfg::default(), 8);
+            let mut w = Matrix::zeros(12, 24);
+            for t in 0..250 {
+                let g = w.sub(&target);
+                opt.begin_step(t);
+                opt.step_param(0, &mut w, &g, 0.05);
+            }
+            let rel = w.sub(&target).frobenius_norm() / target.frobenius_norm();
+            assert!(rel < 0.25, "{moments:?} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn export_import_resumes_identically() {
+        let mut rng = Pcg64::new(7, 0);
+        let target = decaying_gradient(8, 20, &mut rng);
+        let cfg = GaLoreCfg {
+            rank: 4,
+            update_freq: 1000, // no refresh inside the test window
+            ..GaLoreCfg::default()
+        };
+        let mut a = GaLore::new(cfg, AdamCfg::default(), 11);
+        let mut wa = Matrix::zeros(8, 20);
+        for t in 0..10 {
+            let g = wa.sub(&target);
+            a.begin_step(t);
+            a.step_param(0, &mut wa, &g, 0.05);
+        }
+        let blob = a.export_state();
+        let mut b = GaLore::new(cfg, AdamCfg::default(), 99); // different seed
+        b.import_state(&blob).unwrap();
+        let mut wb = wa.clone();
+        for t in 10..15 {
+            let ga = wa.sub(&target);
+            a.begin_step(t);
+            a.step_param(0, &mut wa, &ga, 0.05);
+            let gb = wb.sub(&target);
+            b.begin_step(t);
+            b.step_param(0, &mut wb, &gb, 0.05);
+        }
+        prop::assert_close(&wa.data, &wb.data, 1e-6, 1e-5).unwrap();
+    }
+}

@@ -1,0 +1,133 @@
+//! Learning-rate schedules.
+//!
+//! §5: "learning rate warmup over the initial 10% of training steps and
+//! cosine annealing ... reducing it to 10% of its initial value."
+
+/// A learning-rate schedule mapping step → lr.
+#[derive(Clone, Copy, Debug)]
+pub enum Schedule {
+    Constant {
+        lr: f32,
+    },
+    /// Linear warmup to `peak` over `warmup` steps, then cosine decay to
+    /// `peak * floor_frac` at `total` steps (the paper's schedule with
+    /// warmup = 0.1·total, floor_frac = 0.1).
+    WarmupCosine {
+        peak: f32,
+        warmup: u64,
+        total: u64,
+        floor_frac: f32,
+    },
+    /// Linear warmup then inverse-sqrt decay (Adafactor-style comparator).
+    WarmupInvSqrt {
+        peak: f32,
+        warmup: u64,
+    },
+}
+
+impl Schedule {
+    /// The paper's schedule for a run of `total` steps at `peak` lr.
+    pub fn paper_default(peak: f32, total: u64) -> Schedule {
+        Schedule::WarmupCosine {
+            peak,
+            warmup: (total / 10).max(1),
+            total,
+            floor_frac: 0.1,
+        }
+    }
+
+    pub fn lr(&self, step: u64) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::WarmupCosine {
+                peak,
+                warmup,
+                total,
+                floor_frac,
+            } => {
+                if step < warmup {
+                    peak * (step + 1) as f32 / warmup as f32
+                } else {
+                    let floor = peak * floor_frac;
+                    let progress = (step - warmup) as f32
+                        / (total.saturating_sub(warmup)).max(1) as f32;
+                    let progress = progress.min(1.0);
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+                    floor + (peak - floor) * cos
+                }
+            }
+            Schedule::WarmupInvSqrt { peak, warmup } => {
+                if step < warmup {
+                    peak * (step + 1) as f32 / warmup as f32
+                } else {
+                    peak * ((warmup.max(1) as f32) / (step + 1) as f32).sqrt()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::WarmupCosine {
+            peak: 1.0,
+            warmup: 10,
+            total: 100,
+            floor_frac: 0.1,
+        };
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = Schedule::paper_default(0.01, 1000);
+        assert!((s.lr(999) - 0.001).abs() < 1e-4, "end lr {}", s.lr(999));
+        // Monotone decreasing after warmup.
+        let mut prev = s.lr(100);
+        for t in (100..1000).step_by(50) {
+            let cur = s.lr(t);
+            assert!(cur <= prev + 1e-7);
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn beyond_total_clamps_at_floor() {
+        let s = Schedule::paper_default(0.01, 100);
+        assert!((s.lr(5000) - 0.001).abs() < 1e-5);
+    }
+
+    #[test]
+    fn midpoint_is_mean_of_peak_and_floor() {
+        let s = Schedule::WarmupCosine {
+            peak: 1.0,
+            warmup: 0,
+            total: 100,
+            floor_frac: 0.0,
+        };
+        assert!((s.lr(50) - 0.5).abs() < 0.02, "mid lr {}", s.lr(50));
+    }
+
+    #[test]
+    fn inv_sqrt_decays() {
+        let s = Schedule::WarmupInvSqrt {
+            peak: 1.0,
+            warmup: 100,
+        };
+        assert!((s.lr(99) - 1.0).abs() < 1e-6);
+        assert!((s.lr(399) - 0.5).abs() < 1e-2);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 0.123 };
+        assert_eq!(s.lr(0), 0.123);
+        assert_eq!(s.lr(1_000_000), 0.123);
+    }
+}

@@ -1,0 +1,414 @@
+//! Gradient subspace projectors (§3, §4.1).
+//!
+//! A projector holds P ∈ ℝ^{d×r} with orthonormal columns and maps gradients
+//! between full and low-rank space:
+//!   * wide parameters (m ≤ n): P spans the top row-space directions, taken
+//!     from the left singular vectors U of G — R = Pᵀ G ∈ ℝ^{r×n};
+//!   * tall parameters (m > n): P comes from the right singular vectors V —
+//!     R = G P ∈ ℝ^{m×r}.
+//!
+//! [`ProjectionKind`] enumerates the refresh strategies compared in Fig. 1:
+//! exact SVD, fast randomized SVD (§4.1.2, the GaLore 2 default), 8/4-bit
+//! quantized storage of the SVD projector (Q-GaLore), and a random
+//! orthonormal projector (the degradation case).
+
+use crate::linalg::{qr_q_only, randomized_svd, svd, RandSvdOpts};
+use crate::quant::{LinearQ4, LinearQ8};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionKind {
+    /// Exact truncated SVD of the gradient (original GaLore).
+    FullSvd,
+    /// Halko randomized SVD (GaLore 2 default).
+    RandSvd,
+    /// Randomized SVD, then store P in linear 8-bit blocks (Q-GaLore).
+    Quant8,
+    /// Randomized SVD, then store P in linear 4-bit blocks (Q-GaLore-int4).
+    Quant4,
+    /// Random orthonormal basis, never spectrum-matched (ablation; Fig. 1
+    /// shows this degrades significantly).
+    Random,
+}
+
+impl ProjectionKind {
+    pub fn parse(s: &str) -> Option<ProjectionKind> {
+        Some(match s {
+            "svd" | "full_svd" => ProjectionKind::FullSvd,
+            "rand_svd" | "randomized" => ProjectionKind::RandSvd,
+            "q8" | "quant8" => ProjectionKind::Quant8,
+            "q4" | "quant4" => ProjectionKind::Quant4,
+            "random" => ProjectionKind::Random,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProjectionKind::FullSvd => "svd",
+            ProjectionKind::RandSvd => "rand_svd",
+            ProjectionKind::Quant8 => "q8",
+            ProjectionKind::Quant4 => "q4",
+            ProjectionKind::Random => "random",
+        }
+    }
+}
+
+/// Which side of the gradient the projector multiplies (Alg. 1's m ≤ n
+/// branch selects Left).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectorSide {
+    /// P from left singular vectors; R = Pᵀ G (r×n). For m ≤ n.
+    Left,
+    /// P from right singular vectors; R = G P (m×r). For m > n.
+    Right,
+}
+
+/// Storage for P — fp32 or quantized (Q-GaLore).
+#[derive(Clone, Debug)]
+enum Stored {
+    F32(Matrix),
+    Q8 { q: LinearQ8, rows: usize, cols: usize },
+    Q4 { q: LinearQ4, rows: usize, cols: usize },
+}
+
+impl Stored {
+    fn materialize(&self) -> Matrix {
+        match self {
+            Stored::F32(m) => m.clone(),
+            Stored::Q8 { q, rows, cols } => Matrix::from_vec(*rows, *cols, q.dequantize()),
+            Stored::Q4 { q, rows, cols } => Matrix::from_vec(*rows, *cols, q.dequantize()),
+        }
+    }
+
+    fn nbytes(&self) -> usize {
+        match self {
+            Stored::F32(m) => m.numel() * 4,
+            Stored::Q8 { q, .. } => q.nbytes(),
+            Stored::Q4 { q, .. } => q.nbytes(),
+        }
+    }
+}
+
+/// A gradient subspace projector for one parameter.
+pub struct Projector {
+    pub kind: ProjectionKind,
+    pub side: ProjectorSide,
+    pub rank: usize,
+    stored: Stored,
+    /// Dequantized cache of P (dropped + rebuilt on refresh). Quantized
+    /// kinds pay the storage win in `stored`; the cache models Q-GaLore's
+    /// on-the-fly dequantization into the matmul.
+    cache: Option<Matrix>,
+    refresh_count: u64,
+}
+
+impl Projector {
+    /// Build a projector for a parameter of shape (m, n) from its current
+    /// gradient. Side selection follows Alg. 1: left if m ≤ n else right.
+    pub fn from_gradient(
+        grad: &Matrix,
+        rank: usize,
+        kind: ProjectionKind,
+        rng: &mut Pcg64,
+    ) -> Projector {
+        let (m, n) = grad.shape();
+        let side = if m <= n {
+            ProjectorSide::Left
+        } else {
+            ProjectorSide::Right
+        };
+        let mut p = Projector {
+            kind,
+            side,
+            rank: rank.min(m.min(n)),
+            stored: Stored::F32(Matrix::zeros(0, 0)),
+            cache: None,
+            refresh_count: 0,
+        };
+        p.refresh(grad, rng);
+        p
+    }
+
+    /// Build a projector from an explicit P and side — used by the FSDP
+    /// engine when installing a leader-computed, replicated subspace on a
+    /// worker whose local *shard* has a different aspect ratio than the
+    /// full parameter (side must come from the full shape).
+    pub fn from_parts(p: Matrix, side: ProjectorSide, kind: ProjectionKind) -> Projector {
+        let rank = p.cols;
+        let mut out = Projector {
+            kind,
+            side,
+            rank,
+            stored: Stored::F32(Matrix::zeros(0, 0)),
+            cache: None,
+            refresh_count: 0,
+        };
+        out.install_p(p);
+        out
+    }
+
+    /// Recompute P to match the current gradient spectrum (every T steps).
+    pub fn refresh(&mut self, grad: &Matrix, rng: &mut Pcg64) {
+        let (m, n) = grad.shape();
+        let d = match self.side {
+            ProjectorSide::Left => m,
+            ProjectorSide::Right => n,
+        };
+        let r = self.rank.min(m.min(n));
+        let p: Matrix = match self.kind {
+            ProjectionKind::Random => {
+                // Orthonormalized Gaussian — matches the "random projection"
+                // ablation: a valid isometry with no spectrum knowledge.
+                let g = Matrix::randn(d, r, 1.0, rng);
+                qr_q_only(&g)
+            }
+            ProjectionKind::FullSvd => {
+                let s = svd(grad);
+                match self.side {
+                    ProjectorSide::Left => s.u.first_cols(r),
+                    ProjectorSide::Right => s.vt.transpose().first_cols(r),
+                }
+            }
+            ProjectionKind::RandSvd | ProjectionKind::Quant8 | ProjectionKind::Quant4 => {
+                let s = randomized_svd(grad, r, RandSvdOpts::default(), rng);
+                match self.side {
+                    ProjectorSide::Left => s.u.first_cols(r),
+                    ProjectorSide::Right => s.vt.transpose().first_cols(r),
+                }
+            }
+        };
+        self.stored = match self.kind {
+            ProjectionKind::Quant8 => Stored::Q8 {
+                q: LinearQ8::quantize(&p.data),
+                rows: p.rows,
+                cols: p.cols,
+            },
+            ProjectionKind::Quant4 => Stored::Q4 {
+                q: LinearQ4::quantize(&p.data),
+                rows: p.rows,
+                cols: p.cols,
+            },
+            _ => Stored::F32(p),
+        };
+        self.cache = None;
+        self.refresh_count += 1;
+    }
+
+    fn p(&mut self) -> &Matrix {
+        if self.cache.is_none() {
+            self.cache = Some(self.stored.materialize());
+        }
+        self.cache.as_ref().unwrap()
+    }
+
+    /// Project a full gradient into the low-rank space:
+    /// Left: R = Pᵀ G (r×n);  Right: R = G P (m×r).
+    pub fn project(&mut self, grad: &Matrix) -> Matrix {
+        let side = self.side;
+        let p = self.p();
+        match side {
+            ProjectorSide::Left => p.matmul_at_b(grad),
+            ProjectorSide::Right => grad.matmul(p),
+        }
+    }
+
+    /// Map a low-rank update back to full space:
+    /// Left: G̃ = P N;  Right: G̃ = N Pᵀ.
+    pub fn project_back(&mut self, low: &Matrix) -> Matrix {
+        let side = self.side;
+        let p = self.p();
+        match side {
+            ProjectorSide::Left => p.matmul(low),
+            ProjectorSide::Right => low.matmul_a_bt(p),
+        }
+    }
+
+    /// Shape of the low-rank gradient for a (m, n) parameter.
+    pub fn low_rank_shape(&self, m: usize, n: usize) -> (usize, usize) {
+        match self.side {
+            ProjectorSide::Left => (self.rank.min(m), n),
+            ProjectorSide::Right => (m, self.rank.min(n)),
+        }
+    }
+
+    /// Bytes used to *store* P (the memory model's mr term; quantized kinds
+    /// shrink it).
+    pub fn nbytes(&self) -> usize {
+        self.stored.nbytes()
+    }
+
+    pub fn refresh_count(&self) -> u64 {
+        self.refresh_count
+    }
+
+    /// Export P for SVD-replication across FSDP workers (§4.3: the leader
+    /// computes the SVD once and broadcasts the result).
+    pub fn export_p(&self) -> Matrix {
+        self.stored.materialize()
+    }
+
+    /// Install a replicated P (on non-leader workers).
+    pub fn install_p(&mut self, p: Matrix) {
+        self.stored = match self.kind {
+            ProjectionKind::Quant8 => Stored::Q8 {
+                q: LinearQ8::quantize(&p.data),
+                rows: p.rows,
+                cols: p.cols,
+            },
+            ProjectionKind::Quant4 => Stored::Q4 {
+                q: LinearQ4::quantize(&p.data),
+                rows: p.rows,
+                cols: p.cols,
+            },
+            _ => Stored::F32(p),
+        };
+        self.cache = None;
+        self.refresh_count += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn low_rank_grad(m: usize, n: usize, r: usize, rng: &mut Pcg64) -> Matrix {
+        let a = Matrix::randn(m, r, 1.0, rng);
+        let b = Matrix::randn(r, n, 1.0, rng);
+        a.matmul(&b)
+    }
+
+    #[test]
+    fn side_selection_follows_shape() {
+        let mut rng = Pcg64::new(1, 0);
+        let wide = Matrix::randn(8, 20, 1.0, &mut rng);
+        let tall = Matrix::randn(20, 8, 1.0, &mut rng);
+        let p1 = Projector::from_gradient(&wide, 4, ProjectionKind::RandSvd, &mut rng);
+        let p2 = Projector::from_gradient(&tall, 4, ProjectionKind::RandSvd, &mut rng);
+        assert_eq!(p1.side, ProjectorSide::Left);
+        assert_eq!(p2.side, ProjectorSide::Right);
+    }
+
+    #[test]
+    fn project_shapes() {
+        let mut rng = Pcg64::new(2, 0);
+        let g = Matrix::randn(8, 20, 1.0, &mut rng);
+        let mut p = Projector::from_gradient(&g, 4, ProjectionKind::RandSvd, &mut rng);
+        let r = p.project(&g);
+        assert_eq!(r.shape(), (4, 20));
+        let back = p.project_back(&r);
+        assert_eq!(back.shape(), (8, 20));
+    }
+
+    #[test]
+    fn svd_projector_preserves_low_rank_gradient() {
+        // If rank(G) ≤ r, projection then back-projection must be lossless.
+        prop::check("P Pᵀ G == G for low-rank G", 15, |g| {
+            let m = g.usize_in(4, 16);
+            let n = g.usize_in(4, 16);
+            let r = g.usize_in(1, m.min(n) / 2 + 1);
+            let mut rng = Pcg64::new(77, 3);
+            let grad = low_rank_grad(m, n, r, &mut rng);
+            for kind in [ProjectionKind::FullSvd, ProjectionKind::RandSvd] {
+                let mut p = Projector::from_gradient(&grad, r, kind, &mut rng);
+                let rec = {
+                    let low = p.project(&grad);
+                    p.project_back(&low)
+                };
+                let rel = grad.sub(&rec).frobenius_norm() / grad.frobenius_norm().max(1e-9);
+                if rel > 2e-2 {
+                    return Err(format!(
+                        "{} lossy on rank-{r} {m}x{n} grad: rel {rel}",
+                        kind.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_projector_is_worse_than_svd() {
+        // The Fig. 1 premise: spectrum-matched projection captures more
+        // gradient energy than a random isometry.
+        let mut rng = Pcg64::new(3, 0);
+        // Gradient with decaying spectrum (realistic per the paper).
+        let g = {
+            let mut acc = Matrix::zeros(16, 48);
+            for k in 0..16 {
+                let u = Matrix::randn(16, 1, 1.0, &mut rng);
+                let v = Matrix::randn(1, 48, 1.0, &mut rng);
+                let mut outer = u.matmul(&v);
+                outer.scale(0.6f32.powi(k));
+                acc.add_assign(&outer);
+            }
+            acc
+        };
+        let capture = |p: &mut Projector| {
+            let low = p.project(&g);
+            let rec = p.project_back(&low);
+            1.0 - g.sub(&rec).frobenius_norm() / g.frobenius_norm()
+        };
+        let mut svd_p = Projector::from_gradient(&g, 4, ProjectionKind::FullSvd, &mut rng);
+        let mut rnd_p = Projector::from_gradient(&g, 4, ProjectionKind::Random, &mut rng);
+        let c_svd = capture(&mut svd_p);
+        let c_rnd = capture(&mut rnd_p);
+        assert!(
+            c_svd > c_rnd + 0.1,
+            "svd capture {c_svd} vs random {c_rnd}"
+        );
+    }
+
+    #[test]
+    fn quantized_projector_close_to_fp32() {
+        let mut rng = Pcg64::new(4, 0);
+        let g = low_rank_grad(12, 30, 4, &mut rng);
+        let mut fp = Projector::from_gradient(&g, 4, ProjectionKind::RandSvd, &mut rng);
+        let mut q8 = Projector::from_gradient(&g, 4, ProjectionKind::Quant8, &mut rng);
+        let r_fp = fp.project(&g);
+        let r_q8 = q8.project(&g);
+        let rel = r_fp.sub(&r_q8).frobenius_norm() / r_fp.frobenius_norm();
+        assert!(rel < 0.05, "q8 projection rel err {rel}");
+        // and q8 stores P in ~1/4 the bytes
+        assert!(q8.nbytes() * 3 < fp.nbytes());
+    }
+
+    #[test]
+    fn memory_accounting_per_kind() {
+        let mut rng = Pcg64::new(5, 0);
+        let g = Matrix::randn(256, 512, 1.0, &mut rng);
+        let fp = Projector::from_gradient(&g, 64, ProjectionKind::RandSvd, &mut rng);
+        assert_eq!(fp.nbytes(), 256 * 64 * 4); // d×r fp32
+        let q4 = Projector::from_gradient(&g, 64, ProjectionKind::Quant4, &mut rng);
+        assert!(q4.nbytes() < 256 * 64 / 2 + 1024);
+    }
+
+    #[test]
+    fn replication_roundtrip() {
+        let mut rng = Pcg64::new(6, 0);
+        let g = Matrix::randn(10, 24, 1.0, &mut rng);
+        let mut leader = Projector::from_gradient(&g, 4, ProjectionKind::RandSvd, &mut rng);
+        let mut worker = Projector::from_gradient(&g, 4, ProjectionKind::Random, &mut rng);
+        worker.install_p(leader.export_p());
+        let a = leader.project(&g);
+        let b = worker.project(&g);
+        prop::assert_close(&a.data, &b.data, 1e-6, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn projector_columns_orthonormal_all_kinds() {
+        let mut rng = Pcg64::new(7, 0);
+        let g = Matrix::randn(20, 40, 1.0, &mut rng);
+        for kind in [
+            ProjectionKind::FullSvd,
+            ProjectionKind::RandSvd,
+            ProjectionKind::Random,
+        ] {
+            let p = Projector::from_gradient(&g, 8, kind, &mut rng);
+            let defect = p.export_p().orthonormality_defect();
+            assert!(defect < 1e-3, "{} defect {defect}", kind.name());
+        }
+    }
+}

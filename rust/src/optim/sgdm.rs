@@ -1,0 +1,100 @@
+//! SGD with momentum — sanity baseline and the cheapest point on the
+//! memory/quality trade-off curve (mn state).
+
+use super::{ser, Optimizer};
+use crate::tensor::Matrix;
+use std::collections::BTreeMap;
+
+pub struct SgdM {
+    momentum: f32,
+    velocity: BTreeMap<usize, Vec<f32>>,
+    t: u64,
+}
+
+impl SgdM {
+    pub fn new(momentum: f32) -> SgdM {
+        SgdM {
+            momentum,
+            velocity: BTreeMap::new(),
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for SgdM {
+    fn begin_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    fn step_param(&mut self, idx: usize, param: &mut Matrix, grad: &Matrix, lr: f32) {
+        assert_eq!(param.shape(), grad.shape());
+        let n = param.numel();
+        let v = self.velocity.entry(idx).or_insert_with(|| vec![0.0; n]);
+        for i in 0..n {
+            v[i] = self.momentum * v[i] + grad.data[i];
+            param.data[i] -= lr * v[i];
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.velocity.values().map(|v| v.len() * 4).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "sgdm"
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        ser::push_u64(&mut out, self.t);
+        ser::push_u64(&mut out, self.velocity.len() as u64);
+        for (&idx, v) in &self.velocity {
+            ser::push_u64(&mut out, idx as u64);
+            ser::push_f32s(&mut out, v);
+        }
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = ser::Reader::new(bytes);
+        self.t = r.u64()?;
+        let n = r.u64()? as usize;
+        self.velocity.clear();
+        for _ in 0..n {
+            let idx = r.u64()? as usize;
+            self.velocity.insert(idx, r.f32s()?);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_momentum_is_plain_sgd() {
+        let mut opt = SgdM::new(0.0);
+        let mut p = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let g = Matrix::from_vec(1, 2, vec![0.5, -0.5]);
+        opt.begin_step(0);
+        opt.step_param(0, &mut p, &g, 0.1);
+        assert!((p.data[0] - 0.95).abs() < 1e-7);
+        assert!((p.data[1] - 2.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = SgdM::new(0.9);
+        let mut p = Matrix::zeros(1, 1);
+        let g = Matrix::from_vec(1, 1, vec![1.0]);
+        opt.begin_step(0);
+        opt.step_param(0, &mut p, &g, 1.0);
+        let first = -p.data[0]; // = 1
+        opt.begin_step(1);
+        opt.step_param(0, &mut p, &g, 1.0);
+        let second = -p.data[0] - first; // = 1.9
+        assert!((first - 1.0).abs() < 1e-6);
+        assert!((second - 1.9).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,345 @@
+//! Block-wise quantization substrate.
+//!
+//! Two consumers:
+//!   * the 8-bit Adam baseline (Dettmers et al. 2022) — the optimizer the
+//!     paper's 500B-token run compares against — quantizes moment tensors
+//!     block-wise with a *dynamic* (non-uniform) code;
+//!   * Q-GaLore (§4.2) stores the projection matrix in 8- or 4-bit linear
+//!     codes.
+//!
+//! Both use absmax block scaling: each block of 256 values is normalized by
+//! its max magnitude and indexed into a code table.
+
+/// Block size shared by all quantizers (bitsandbytes uses 256).
+pub const BLOCK: usize = 256;
+
+/// The dynamic 8-bit code of Dettmers et al.: a sign bit, 3 exponent-ish
+/// bits and remaining precision bits, covering ~7 decades. We generate it
+/// as the sorted set of ±(lin/2^e) values, matching the reference layout
+/// closely enough for optimizer-state use.
+fn dynamic_code() -> &'static [f32; 256] {
+    use once_cell::sync::OnceCell;
+    static CODE: OnceCell<[f32; 256]> = OnceCell::new();
+    CODE.get_or_init(|| {
+        let mut vals: Vec<f32> = Vec::with_capacity(256);
+        // 7 exponent levels × 16 mantissa steps × 2 signs = 224, plus a
+        // linear fill near 1.0 and exact zero. Sorted and deduped to 256.
+        for e in 0..7 {
+            let scale = 10f32.powi(-(e as i32));
+            for m in 1..=16 {
+                let v = scale * (m as f32) / 16.0;
+                vals.push(v);
+                vals.push(-v);
+            }
+        }
+        for m in 1..=16 {
+            vals.push(0.9 + 0.1 * (m as f32) / 16.0);
+            vals.push(-(0.9 + 0.1 * (m as f32) / 16.0));
+        }
+        vals.push(0.0);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        // Pad/trim to exactly 256 by inserting midpoints of largest gaps.
+        while vals.len() < 256 {
+            let mut worst = 0;
+            let mut gap = 0f32;
+            for i in 0..vals.len() - 1 {
+                let g = vals[i + 1] - vals[i];
+                if g > gap {
+                    gap = g;
+                    worst = i;
+                }
+            }
+            vals.insert(worst + 1, vals[worst] + gap / 2.0);
+        }
+        vals.truncate(256);
+        let mut arr = [0f32; 256];
+        arr.copy_from_slice(&vals);
+        arr
+    })
+}
+
+/// Binary-search the nearest code index for `x` in a sorted code table.
+fn nearest_code(code: &[f32], x: f32) -> u8 {
+    let mut lo = 0usize;
+    let mut hi = code.len() - 1;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if code[mid] < x {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    // lo is the first index with code >= x; compare with neighbor.
+    if lo > 0 && (x - code[lo - 1]).abs() <= (code[lo] - x).abs() {
+        (lo - 1) as u8
+    } else {
+        lo as u8
+    }
+}
+
+/// A block-wise quantized f32 vector (8-bit dynamic code).
+#[derive(Clone, Debug, Default)]
+pub struct Quantized8 {
+    pub codes: Vec<u8>,
+    pub scales: Vec<f32>, // one absmax per block
+    pub len: usize,
+}
+
+impl Quantized8 {
+    pub fn quantize(xs: &[f32]) -> Quantized8 {
+        let code = dynamic_code();
+        let mut codes = Vec::with_capacity(xs.len());
+        let mut scales = Vec::with_capacity(xs.len().div_ceil(BLOCK));
+        for block in xs.chunks(BLOCK) {
+            let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let scale = if absmax > 0.0 { absmax } else { 1.0 };
+            scales.push(scale);
+            for &x in block {
+                codes.push(nearest_code(code, x / scale));
+            }
+        }
+        Quantized8 {
+            codes,
+            scales,
+            len: xs.len(),
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let code = dynamic_code();
+        let mut out = Vec::with_capacity(self.len);
+        for (bi, block) in self.codes.chunks(BLOCK).enumerate() {
+            let scale = self.scales[bi];
+            for &c in block {
+                out.push(code[c as usize] * scale);
+            }
+        }
+        out
+    }
+
+    /// Dequantize a single element.
+    pub fn get(&self, i: usize) -> f32 {
+        dynamic_code()[self.codes[i] as usize] * self.scales[i / BLOCK]
+    }
+
+    /// Storage bytes (codes + scales), the number the memory model charges.
+    pub fn nbytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4
+    }
+}
+
+/// Linear (uniform) signed 8-bit block quantizer — Q-GaLore's projector
+/// format (projection matrices are near-Gaussian, where a uniform code is
+/// fine and decode is a single multiply).
+#[derive(Clone, Debug, Default)]
+pub struct LinearQ8 {
+    pub codes: Vec<i8>,
+    pub scales: Vec<f32>,
+    pub len: usize,
+}
+
+impl LinearQ8 {
+    pub fn quantize(xs: &[f32]) -> LinearQ8 {
+        let mut codes = Vec::with_capacity(xs.len());
+        let mut scales = Vec::with_capacity(xs.len().div_ceil(BLOCK));
+        for block in xs.chunks(BLOCK) {
+            let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+            scales.push(scale);
+            for &x in block {
+                codes.push((x / scale).round().clamp(-127.0, 127.0) as i8);
+            }
+        }
+        LinearQ8 {
+            codes,
+            scales,
+            len: xs.len(),
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len);
+        for (bi, block) in self.codes.chunks(BLOCK).enumerate() {
+            let scale = self.scales[bi];
+            for &c in block {
+                out.push(c as f32 * scale);
+            }
+        }
+        out
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4
+    }
+}
+
+/// Linear signed 4-bit block quantizer (two codes per byte) — Q-GaLore's
+/// most aggressive projector format; Figure 1's "q4" series.
+#[derive(Clone, Debug, Default)]
+pub struct LinearQ4 {
+    pub packed: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub len: usize,
+}
+
+impl LinearQ4 {
+    pub fn quantize(xs: &[f32]) -> LinearQ4 {
+        let mut nibbles: Vec<u8> = Vec::with_capacity(xs.len());
+        let mut scales = Vec::with_capacity(xs.len().div_ceil(BLOCK));
+        for block in xs.chunks(BLOCK) {
+            let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            let scale = if absmax > 0.0 { absmax / 7.0 } else { 1.0 };
+            scales.push(scale);
+            for &x in block {
+                let q = (x / scale).round().clamp(-7.0, 7.0) as i8;
+                nibbles.push((q + 8) as u8); // bias to 1..15 (0 unused)
+            }
+        }
+        let mut packed = Vec::with_capacity(nibbles.len().div_ceil(2));
+        for pair in nibbles.chunks(2) {
+            let lo = pair[0];
+            let hi = if pair.len() > 1 { pair[1] } else { 8 };
+            packed.push(lo | (hi << 4));
+        }
+        LinearQ4 {
+            packed,
+            scales,
+            len: xs.len(),
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len);
+        for i in 0..self.len {
+            let byte = self.packed[i / 2];
+            let nib = if i % 2 == 0 { byte & 0xf } else { byte >> 4 };
+            let q = nib as i8 - 8;
+            out.push(q as f32 * self.scales[i / BLOCK]);
+        }
+        out
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn dynamic_code_table_well_formed() {
+        let code = dynamic_code();
+        assert_eq!(code.len(), 256);
+        for w in code.windows(2) {
+            assert!(w[1] > w[0], "not strictly increasing");
+        }
+        assert!(code.contains(&0.0));
+        assert!((code[255] - 1.0).abs() < 1e-6);
+        assert!((code[0] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn q8_roundtrip_error_bounded() {
+        prop::check("q8 roundtrip bounded", 30, |g| {
+            let n = g.usize_in(1, 1000);
+            let xs = g.vec_f32(n);
+            let q = Quantized8::quantize(&xs);
+            let back = q.dequantize();
+            for (bi, block) in xs.chunks(BLOCK).enumerate() {
+                let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                for (i, &x) in block.iter().enumerate() {
+                    let y = back[bi * BLOCK + i];
+                    // dynamic code is dense near 0; worst-case gap ~0.06·absmax
+                    if (x - y).abs() > 0.07 * absmax + 1e-7 {
+                        return Err(format!("block {bi} elem {i}: {x} vs {y} absmax {absmax}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn q8_small_values_high_precision() {
+        // Near zero the dynamic code gives much better than 1/255 resolution.
+        let xs: Vec<f32> = vec![1.0, 0.001, -0.0005, 0.00001, 0.0];
+        let q = Quantized8::quantize(&xs);
+        let back = q.dequantize();
+        assert!((back[1] - 0.001).abs() < 0.0005, "{back:?}");
+        assert_eq!(back[4], 0.0);
+    }
+
+    #[test]
+    fn linear_q8_roundtrip() {
+        prop::check("linear q8 bounded", 30, |g| {
+            let n = g.usize_in(1, 600);
+            let xs = g.vec_f32(n);
+            let q = LinearQ8::quantize(&xs);
+            let back = q.dequantize();
+            for (bi, block) in xs.chunks(BLOCK).enumerate() {
+                let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                let tol = absmax / 127.0 * 0.5 + 1e-7;
+                for (i, &x) in block.iter().enumerate() {
+                    if (x - back[bi * BLOCK + i]).abs() > tol {
+                        return Err(format!("exceeds half-step: {x}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn linear_q4_roundtrip() {
+        prop::check("linear q4 bounded", 30, |g| {
+            let n = g.usize_in(1, 600);
+            let xs = g.vec_f32(n);
+            let q = LinearQ4::quantize(&xs);
+            let back = q.dequantize();
+            assert_eq!(back.len(), n);
+            for (bi, block) in xs.chunks(BLOCK).enumerate() {
+                let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+                let tol = absmax / 7.0 * 0.5 + 1e-7;
+                for (i, &x) in block.iter().enumerate() {
+                    if (x - back[bi * BLOCK + i]).abs() > tol {
+                        return Err(format!("exceeds half-step: {x} tol {tol}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn storage_sizes() {
+        let xs = vec![0.5f32; 1000];
+        assert_eq!(Quantized8::quantize(&xs).nbytes(), 1000 + 4 * 4);
+        assert_eq!(LinearQ8::quantize(&xs).nbytes(), 1000 + 4 * 4);
+        assert_eq!(LinearQ4::quantize(&xs).nbytes(), 500 + 4 * 4);
+    }
+
+    #[test]
+    fn zero_vector_roundtrips() {
+        let xs = vec![0f32; 300];
+        assert_eq!(Quantized8::quantize(&xs).dequantize(), xs);
+        assert_eq!(LinearQ8::quantize(&xs).dequantize(), xs);
+        assert_eq!(LinearQ4::quantize(&xs).dequantize(), xs);
+    }
+
+    #[test]
+    fn get_matches_dequantize() {
+        let mut g = crate::util::rng::Pcg64::new(1, 0);
+        let mut xs = vec![0f32; 700];
+        g.fill_normal(&mut xs, 2.0);
+        let q = Quantized8::quantize(&xs);
+        let all = q.dequantize();
+        for i in [0, 1, 255, 256, 257, 699] {
+            assert_eq!(q.get(i), all[i]);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Artifact manifest: the ABI contract emitted by python/compile/aot.py.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// As a (rows, cols) matrix shape; 1-d params are (1, n).
+    pub fn matrix_shape(&self) -> (usize, usize) {
+        match self.shape.len() {
+            1 => (1, self.shape[0]),
+            2 => (self.shape[0], self.shape[1]),
+            _ => panic!("unsupported param rank for {}", self.name),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct KernelEntry {
+    pub dim: usize,
+    pub n: usize,
+    pub rank: usize,
+    pub alpha: f32,
+    pub file: String,
+}
+
+/// Parsed manifest_<preset>.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, String>,
+    pub kernels: Vec<KernelEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading manifest {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let get_usize = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let params = j
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| {
+                let name = p
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("param missing name"))?
+                    .to_string();
+                let shape = p
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("param missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect();
+                Ok(ParamSpec { name, shape })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("artifacts") {
+            for (k, v) in map {
+                if let Some(s) = v.as_str() {
+                    artifacts.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        let mut kernels = Vec::new();
+        if let Some(arr) = j.get("kernels").and_then(|v| v.as_arr()) {
+            for k in arr {
+                kernels.push(KernelEntry {
+                    dim: k.get("dim").and_then(|v| v.as_usize()).unwrap_or(0),
+                    n: k.get("n").and_then(|v| v.as_usize()).unwrap_or(0),
+                    rank: k.get("rank").and_then(|v| v.as_usize()).unwrap_or(0),
+                    alpha: k.get("alpha").and_then(|v| v.as_f64()).unwrap_or(0.25) as f32,
+                    file: k
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                });
+            }
+        }
+        Ok(Manifest {
+            preset: j
+                .get("preset")
+                .and_then(|v| v.as_str())
+                .unwrap_or("?")
+                .to_string(),
+            hidden: get_usize("hidden")?,
+            intermediate: get_usize("intermediate")?,
+            heads: get_usize("heads")?,
+            layers: get_usize("layers")?,
+            vocab: get_usize("vocab")?,
+            seq: get_usize("seq")?,
+            batch: get_usize("batch")?,
+            n_params: get_usize("n_params")?,
+            params,
+            artifacts,
+            kernels,
+        })
+    }
+
+    /// Find the fused-update kernel artifact for a (dim, n, rank) shape.
+    pub fn kernel_for(&self, dim: usize, n: usize, rank: usize) -> Option<&KernelEntry> {
+        self.kernels
+            .iter()
+            .find(|k| k.dim == dim && k.n == n && k.rank == rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "preset": "llama-nano", "hidden": 64, "intermediate": 176,
+      "heads": 4, "layers": 2, "vocab": 256, "seq": 64, "batch": 4,
+      "n_params": 123,
+      "params": [
+        {"name": "embed.weight", "shape": [256, 64]},
+        {"name": "final_norm.weight", "shape": [64]}
+      ],
+      "artifacts": {"fwd_bwd": "model_llama-nano.hlo.txt"},
+      "kernels": [
+        {"dim": 64, "n": 176, "rank": 16, "alpha": 0.25,
+         "file": "galore_update_64x176x16.hlo.txt"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "llama-nano");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].matrix_shape(), (256, 64));
+        assert_eq!(m.params[1].matrix_shape(), (1, 64));
+        assert_eq!(m.artifacts["fwd_bwd"], "model_llama-nano.hlo.txt");
+        let k = m.kernel_for(64, 176, 16).unwrap();
+        assert_eq!(k.file, "galore_update_64x176x16.hlo.txt");
+        assert!(m.kernel_for(1, 2, 3).is_none());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn real_manifest_matches_rust_model_abi() {
+        // If artifacts exist, the python-emitted manifest must agree with
+        // rust/src/model/llama.rs param_specs byte for byte.
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest_llama-nano.json");
+        if !path.exists() {
+            return;
+        }
+        let m = Manifest::load(path).unwrap();
+        let cfg = crate::model::LlamaCfg::preset("llama-nano").unwrap();
+        let specs = cfg.param_specs();
+        assert_eq!(m.params.len(), specs.len());
+        for (a, b) in m.params.iter().zip(&specs) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.shape, b.shape);
+        }
+        assert_eq!(m.n_params, cfg.n_params());
+    }
+}

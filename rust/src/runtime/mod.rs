@@ -1,0 +1,276 @@
+//! PJRT runtime: load AOT artifacts and execute them from the hot path.
+//!
+//! Python is build-time only; the coordinator talks to XLA through this
+//! module. Artifacts are HLO *text* (see python/compile/aot.py for why),
+//! parsed + compiled once per process and cached by path.
+//!
+//! `Runtime` wraps the PJRT CPU client; `Executable::run` moves host
+//! tensors (f32 matrices / i32 token grids) in as literals and returns
+//! every tuple element as an f32 vector.
+
+mod manifest;
+
+pub use manifest::{KernelEntry, Manifest, ParamSpec};
+
+use crate::tensor::Matrix;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A host-side input tensor.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    /// Row-major f32 with explicit dims (e.g. `[rows, cols]` or `[n]`).
+    F32(Vec<f32>, Vec<i64>),
+    /// Row-major i32 (token grids).
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl HostTensor {
+    pub fn from_matrix(m: &Matrix) -> HostTensor {
+        HostTensor::F32(m.data.clone(), vec![m.rows as i64, m.cols as i64])
+    }
+
+    /// 1-d f32 (norm weights lower as rank-1 in the model ABI).
+    pub fn from_vec1(v: &[f32]) -> HostTensor {
+        HostTensor::F32(v.to_vec(), vec![v.len() as i64])
+    }
+
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::F32(vec![x], vec![])
+    }
+
+    pub fn tokens(data: &[i32], batch: usize, seq: usize) -> HostTensor {
+        assert_eq!(data.len(), batch * seq);
+        HostTensor::I32(data.to_vec(), vec![batch as i64, seq as i64])
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::I32(d, _) => d.len(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            HostTensor::F32(data, dims) => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(dims)?
+                }
+            }
+            HostTensor::I32(data, dims) => xla::Literal::vec1(data).reshape(dims)?,
+        })
+    }
+}
+
+/// Process-wide PJRT client (the "device").
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by canonical path).
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<std::sync::Arc<Executable>> {
+        let canonical = path
+            .as_ref()
+            .canonicalize()
+            .with_context(|| format!("artifact not found: {:?}", path.as_ref()))?;
+        if let Some(hit) = self.cache.lock().unwrap().get(&canonical) {
+            return Ok(hit.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            canonical.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", canonical))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {:?}", canonical))?;
+        let arc = std::sync::Arc::new(Executable {
+            exe,
+            path: canonical.clone(),
+        });
+        self.cache.lock().unwrap().insert(canonical, arc.clone());
+        Ok(arc)
+    }
+}
+
+/// A compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl Executable {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Execute with the given inputs; returns each output-tuple element as
+    /// a flat f32 vector (all our artifact outputs are f32).
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True, so outputs are one tuple.
+        let elems = result.to_tuple()?;
+        elems
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                lit.to_vec::<f32>()
+                    .with_context(|| format!("output {i} of {:?} not f32", self.path))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn nano_available() -> bool {
+        artifacts_dir().join("model_llama-nano.hlo.txt").exists()
+    }
+
+    #[test]
+    fn executes_nano_fwd_bwd_artifact() {
+        if !nano_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let manifest =
+            Manifest::load(artifacts_dir().join("manifest_llama-nano.json")).unwrap();
+        let exe = rt
+            .load(artifacts_dir().join(&manifest.artifacts["fwd_bwd"]))
+            .unwrap();
+        let mut rng = crate::util::rng::Pcg64::new(1, 0);
+        let mut inputs: Vec<HostTensor> = manifest
+            .params
+            .iter()
+            .map(|p| {
+                let numel: usize = p.shape.iter().product();
+                if p.shape.len() == 1 {
+                    // norm weights start at 1
+                    HostTensor::F32(vec![1.0; numel], vec![numel as i64])
+                } else {
+                    let mut data = vec![0f32; numel];
+                    rng.fill_normal(&mut data, 0.02);
+                    HostTensor::F32(data, p.shape.iter().map(|&d| d as i64).collect())
+                }
+            })
+            .collect();
+        let toks: Vec<i32> = (0..manifest.batch * manifest.seq)
+            .map(|i| (i % manifest.vocab) as i32)
+            .collect();
+        inputs.push(HostTensor::tokens(&toks, manifest.batch, manifest.seq));
+        inputs.push(HostTensor::tokens(&toks, manifest.batch, manifest.seq));
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1 + manifest.params.len());
+        let loss = out[0][0];
+        // Untrained model ⇒ loss ≈ ln(vocab).
+        let expect = (manifest.vocab as f32).ln();
+        assert!(
+            (loss - expect).abs() < 1.0,
+            "loss {loss} vs ln(vocab) {expect}"
+        );
+        // Gradients shaped like parameters, finite, non-trivial.
+        for (i, p) in manifest.params.iter().enumerate() {
+            let g = &out[i + 1];
+            assert_eq!(g.len(), p.shape.iter().product::<usize>(), "{}", p.name);
+            assert!(g.iter().all(|x| x.is_finite()), "{} has non-finite", p.name);
+        }
+    }
+
+    #[test]
+    fn executable_cache_dedups() {
+        if !nano_available() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let p = artifacts_dir().join("model_llama-nano.hlo.txt");
+        let a = rt.load(&p).unwrap();
+        let b = rt.load(&p).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn galore_update_kernel_matches_native() {
+        // The Pallas kernel artifact must agree with the Rust-native GaLore
+        // math — the cross-layer correctness link (L1 ⇄ L3).
+        if !artifacts_dir()
+            .join("galore_update_64x176x16.hlo.txt")
+            .exists()
+        {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt
+            .load(artifacts_dir().join("galore_update_64x176x16.hlo.txt"))
+            .unwrap();
+        let (dim, n, r) = (64usize, 176usize, 16usize);
+        let mut rng = crate::util::rng::Pcg64::new(2, 0);
+        let p = Matrix::randn(dim, r, 1.0, &mut rng);
+        let rr = Matrix::randn(r, n, 1.0, &mut rng);
+        let m = Matrix::randn(r, n, 0.1, &mut rng);
+        let mut v = Matrix::randn(r, n, 0.1, &mut rng);
+        for x in v.data.iter_mut() {
+            *x = x.abs();
+        }
+        let t = 7.0f32;
+        let out = exe
+            .run(&[
+                HostTensor::from_matrix(&p),
+                HostTensor::from_matrix(&rr),
+                HostTensor::from_matrix(&m),
+                HostTensor::from_matrix(&v),
+                HostTensor::scalar_f32(t),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        // Native recompute (alpha baked to 1.0 in the artifact; the Rust
+        // engine applies the configured alpha outside the kernel).
+        let (b1, b2, eps, alpha) = (0.9f32, 0.999f32, 1e-8f32, 1.0f32);
+        let mut new_m = vec![0f32; r * n];
+        let mut new_v = vec![0f32; r * n];
+        let mut n_hat = Matrix::zeros(r, n);
+        let bc1 = 1.0 - b1.powf(t + 1.0);
+        let bc2 = 1.0 - b2.powf(t + 1.0);
+        for i in 0..r * n {
+            new_m[i] = b1 * m.data[i] + (1.0 - b1) * rr.data[i];
+            new_v[i] = b2 * v.data[i] + (1.0 - b2) * rr.data[i] * rr.data[i];
+            n_hat.data[i] = (new_m[i] / bc1) / ((new_v[i] / bc2).sqrt() + eps);
+        }
+        let mut delta = p.matmul(&n_hat);
+        delta.scale(alpha);
+        crate::testing::prop::assert_close(&out[0], &new_m, 1e-5, 1e-4).unwrap();
+        crate::testing::prop::assert_close(&out[1], &new_v, 1e-5, 1e-4).unwrap();
+        crate::testing::prop::assert_close(&out[2], &delta.data, 1e-4, 1e-3).unwrap();
+    }
+}

@@ -1,0 +1,244 @@
+//! Blocked single-threaded GEMM kernels.
+//!
+//! The GaLore projection (R = PᵀG) and reprojection (G̃ = P·N) are BLAS-3
+//! calls on every layer every step — the L3 native-engine hot path. The
+//! kernels here use cache blocking + an 8-wide inner loop the compiler can
+//! vectorize; the §Perf pass tunes the block sizes (see EXPERIMENTS.md).
+//!
+//! Three variants avoid materializing transposes:
+//!   matmul      C = A · B
+//!   matmul_at_b C = Aᵀ · B   (projection: P is m×r stored row-major, G m×n)
+//!   matmul_a_bt C = A · Bᵀ
+
+use super::Matrix;
+
+/// Tuning parameters for the blocked GEMM. Defaults were selected by the
+/// perf sweep in `benches/throughput.rs` (see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulPlan {
+    pub mc: usize, // rows of A per block
+    pub kc: usize, // shared dim per block
+    pub nc: usize, // cols of B per block
+}
+
+impl Default for MatmulPlan {
+    fn default() -> Self {
+        MatmulPlan {
+            mc: 64,
+            kc: 256,
+            nc: 256,
+        }
+    }
+}
+
+/// C = A (m×k) · B (k×n).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_with_plan(a, b, MatmulPlan::default())
+}
+
+pub fn matmul_with_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch: {}x{} · {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    // i-k-j loop order: the inner j loop streams contiguous rows of B and C,
+    // which auto-vectorizes well; blocking keeps the B panel in cache.
+    for kk in (0..k).step_by(plan.kc) {
+        let k_end = (kk + plan.kc).min(k);
+        for ii in (0..m).step_by(plan.mc) {
+            let i_end = (ii + plan.mc).min(m);
+            for jj in (0..n).step_by(plan.nc) {
+                let j_end = (jj + plan.nc).min(n);
+                for i in ii..i_end {
+                    let a_row = &a.data[i * k..(i + 1) * k];
+                    let c_row = &mut c.data[i * n + jj..i * n + j_end];
+                    for p in kk..k_end {
+                        let av = a_row[p];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let b_row = &b.data[p * n + jj..p * n + j_end];
+                        axpy(c_row, b_row, av);
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ (k×m → m taken as a.cols) · B. A is k×m row-major; result is m×n.
+/// This is the GaLore projection: R = Pᵀ G with P (m×r) ⇒ call with a=P, b=G.
+pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        a.rows, b.rows,
+        "matmul_at_b shape mismatch: ({}x{})ᵀ · {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    // For each shared index p, rank-1 update C += a_row_pᵀ ⊗ b_row_p.
+    // Both a and b rows are contiguous; the inner loop over j vectorizes.
+    const KC: usize = 128;
+    for pp in (0..k).step_by(KC) {
+        let p_end = (pp + KC).min(k);
+        for p in pp..p_end {
+            let a_row = &a.data[p * m..(p + 1) * m];
+            let b_row = &b.data[p * n..(p + 1) * n];
+            for i in 0..m {
+                let av = a_row[i];
+                if av == 0.0 {
+                    continue;
+                }
+                axpy(&mut c.data[i * n..(i + 1) * n], b_row, av);
+            }
+        }
+    }
+    c
+}
+
+/// C = A (m×k) · Bᵀ with B (n×k). Result m×n. Dot-product formulation —
+/// both operands stream contiguously.
+pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(
+        a.cols, b.cols,
+        "matmul_a_bt shape mismatch: {}x{} · ({}x{})ᵀ",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let a_row = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let b_row = &b.data[j * k..(j + 1) * k];
+            c.data[i * n + j] = dot(a_row, b_row);
+        }
+    }
+    c
+}
+
+/// y += alpha * x, unrolled 8-wide.
+#[inline]
+fn axpy(y: &mut [f32], x: &[f32], alpha: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = y.len();
+    let chunks = n / 8;
+    // Safety-free manual unroll over exact chunks; the remainder is scalar.
+    for c in 0..chunks {
+        let base = c * 8;
+        let ys = &mut y[base..base + 8];
+        let xs = &x[base..base + 8];
+        ys[0] += alpha * xs[0];
+        ys[1] += alpha * xs[1];
+        ys[2] += alpha * xs[2];
+        ys[3] += alpha * xs[3];
+        ys[4] += alpha * xs[4];
+        ys[5] += alpha * xs[5];
+        ys[6] += alpha * xs[6];
+        ys[7] += alpha * xs[7];
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Dot product with 4 independent accumulators (breaks the add dependency
+/// chain so the CPU can pipeline).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+    use crate::util::rng::Pcg64;
+
+    /// Textbook triple loop as oracle.
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0f32;
+                for p in 0..a.cols {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_on_random_shapes() {
+        prop::check("blocked matmul == naive", 40, |g| {
+            let (m, k, n) = (g.usize_in(1, 40), g.usize_in(1, 40), g.usize_in(1, 40));
+            let a = Matrix::from_vec(m, k, g.matrix(m, k));
+            let b = Matrix::from_vec(k, n, g.matrix(k, n));
+            let fast = matmul(&a, &b);
+            let slow = naive(&a, &b);
+            prop::assert_close(&fast.data, &slow.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn blocking_boundaries_exact() {
+        // Shapes straddling every block boundary.
+        let mut rng = Pcg64::new(8, 0);
+        for &(m, k, n) in &[(63, 255, 255), (64, 256, 256), (65, 257, 257), (1, 1, 1)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let fast = matmul(&a, &b);
+            let slow = naive(&a, &b);
+            prop::assert_close(&fast.data, &slow.data, 1e-3, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn custom_plan_same_result() {
+        let mut rng = Pcg64::new(9, 0);
+        let a = Matrix::randn(30, 70, 1.0, &mut rng);
+        let b = Matrix::randn(70, 50, 1.0, &mut rng);
+        let base = matmul(&a, &b);
+        for &(mc, kc, nc) in &[(8, 8, 8), (16, 64, 32), (128, 512, 512)] {
+            let alt = matmul_with_plan(&a, &b, MatmulPlan { mc, kc, nc });
+            prop::assert_close(&base.data, &alt.data, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        prop::check("dot == naive", 50, |g| {
+            let n = g.usize_in(0, 67);
+            let a = g.matrix(n.max(1), 1);
+            let b = g.matrix(n.max(1), 1);
+            let a = &a[..n];
+            let b = &b[..n];
+            let naive: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+            let fast = dot(a, b);
+            if (fast - naive).abs() > 1e-3 + 1e-3 * naive.abs() {
+                return Err(format!("dot mismatch {fast} vs {naive} (n={n})"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,391 @@
+//! Dense tensor substrate.
+//!
+//! All optimizer and linalg math in the coordinator runs on these types.
+//! [`Matrix`] is a row-major dense f32 matrix with a blocked matmul tuned in
+//! the §Perf pass; [`Tensor`] is an N-d array used by Tensor-GaLore's mode-k
+//! unfoldings. f32 matches the paper's optimizer-state precision (moments are
+//! fp32 even in mixed-precision training).
+
+mod matmul;
+
+pub use matmul::{dot, matmul, matmul_a_bt, matmul_at_b, matmul_with_plan, MatmulPlan};
+
+use crate::util::rng::Pcg64;
+use std::fmt;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 36 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg64) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A · B.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        matmul(self, other)
+    }
+
+    /// C = Aᵀ · B without materializing Aᵀ.
+    pub fn matmul_at_b(&self, other: &Matrix) -> Matrix {
+        matmul_at_b(self, other)
+    }
+
+    /// C = A · Bᵀ without materializing Bᵀ.
+    pub fn matmul_a_bt(&self, other: &Matrix) -> Matrix {
+        matmul_a_bt(self, other)
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += s * other (axpy).
+    pub fn add_scaled(&mut self, other: &Matrix, s: f32) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        // Accumulate in f64: Frobenius norms of big gradients overflow f32
+        // precision surprisingly fast.
+        self.data
+            .iter()
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Extract columns [0, k) as a new rows×k matrix.
+    pub fn first_cols(&self, k: usize) -> Matrix {
+        assert!(k <= self.cols);
+        let mut out = Matrix::zeros(self.rows, k);
+        for r in 0..self.rows {
+            out.row_mut(r)
+                .copy_from_slice(&self.row(r)[..k]);
+        }
+        out
+    }
+
+    /// Column c as a Vec.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    /// ‖AᵀA − I‖∞ — orthonormality defect of the columns.
+    pub fn orthonormality_defect(&self) -> f32 {
+        let gram = self.matmul_at_b(self);
+        let mut worst = 0f32;
+        for i in 0..gram.rows {
+            for j in 0..gram.cols {
+                let target = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((gram.at(i, j) - target).abs());
+            }
+        }
+        worst
+    }
+}
+
+/// N-dimensional dense f32 tensor (row-major / C order). Used by
+/// Tensor-GaLore for mode-k unfolding of >2-d parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Mode-k unfolding: tensor → matrix of shape (shape[k], numel/shape[k]).
+    /// Follows the Kolda & Bader convention (columns ordered by cycling the
+    /// remaining modes with earlier modes varying fastest).
+    pub fn unfold(&self, mode: usize) -> Matrix {
+        assert!(mode < self.ndim());
+        let n_k = self.shape[mode];
+        let other: usize = self.numel() / n_k;
+        let mut out = Matrix::zeros(n_k, other);
+
+        // strides in row-major layout
+        let mut strides = vec![1usize; self.ndim()];
+        for d in (0..self.ndim() - 1).rev() {
+            strides[d] = strides[d + 1] * self.shape[d + 1];
+        }
+        // Enumerate all elements; compute unfolded column index.
+        let mut idx = vec![0usize; self.ndim()];
+        for (flat, &v) in self.data.iter().enumerate() {
+            // decompose flat -> multi-index (row-major)
+            let mut rem = flat;
+            for d in 0..self.ndim() {
+                idx[d] = rem / strides[d];
+                rem %= strides[d];
+            }
+            let row = idx[mode];
+            // Column index mixes the remaining modes; the last-listed mode
+            // varies fastest (consistent with `fold` below).
+            let mut col = 0usize;
+            let mut mult = 1usize;
+            for d in (0..self.ndim()).rev() {
+                if d == mode {
+                    continue;
+                }
+                col += idx[d] * mult;
+                mult *= self.shape[d];
+            }
+            out.data[row * other + col] = v;
+        }
+        out
+    }
+
+    /// Inverse of [`unfold`]: rebuild a tensor of `shape` from its mode-k
+    /// unfolding.
+    pub fn fold(mat: &Matrix, mode: usize, shape: &[usize]) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        let ndim = shape.len();
+        let mut strides = vec![1usize; ndim];
+        for d in (0..ndim - 1).rev() {
+            strides[d] = strides[d + 1] * shape[d + 1];
+        }
+        let other: usize = t.numel() / shape[mode];
+        assert_eq!(mat.shape(), (shape[mode], other), "fold shape mismatch");
+        let mut idx = vec![0usize; ndim];
+        for flat in 0..t.numel() {
+            let mut rem = flat;
+            for d in 0..ndim {
+                idx[d] = rem / strides[d];
+                rem %= strides[d];
+            }
+            let row = idx[mode];
+            let mut col = 0usize;
+            let mut mult = 1usize;
+            for d in (0..ndim).rev() {
+                if d == mode {
+                    continue;
+                }
+                col += idx[d] * mult;
+                mult *= shape[d];
+            }
+            t.data[flat] = mat.data[row * other + col];
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::new(1, 0);
+        let m = Matrix::randn(13, 29, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn eye_is_matmul_identity() {
+        let mut rng = Pcg64::new(2, 0);
+        let m = Matrix::randn(7, 7, 1.0, &mut rng);
+        let p = m.matmul(&Matrix::eye(7));
+        prop::assert_close(&p.data, &m.data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let mut rng = Pcg64::new(3, 0);
+        let a = Matrix::randn(11, 5, 1.0, &mut rng);
+        let b = Matrix::randn(11, 9, 1.0, &mut rng);
+        let fast = a.matmul_at_b(&b);
+        let slow = a.transpose().matmul(&b);
+        prop::assert_close(&fast.data, &slow.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        let mut rng = Pcg64::new(4, 0);
+        let a = Matrix::randn(6, 8, 1.0, &mut rng);
+        let b = Matrix::randn(10, 8, 1.0, &mut rng);
+        let fast = a.matmul_a_bt(&b);
+        let slow = a.matmul(&b.transpose());
+        prop::assert_close(&fast.data, &slow.data, 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn frobenius_matches_manual() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((m.frobenius_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unfold_fold_roundtrip_all_modes() {
+        prop::check("unfold/fold roundtrip", 30, |g| {
+            let shape = vec![g.usize_in(1, 5), g.usize_in(1, 5), g.usize_in(1, 5)];
+            let data = g.matrix(shape.iter().product::<usize>(), 1);
+            let t = Tensor::from_vec(&shape, data);
+            for mode in 0..3 {
+                let unf = t.unfold(mode);
+                let back = Tensor::fold(&unf, mode, &shape);
+                if back != t {
+                    return Err(format!("mode {mode} roundtrip failed for {shape:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unfold_known_case() {
+        // 2x2x2 tensor, values 0..8 in row-major order.
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        // mode-0 unfolding: rows indexed by i, columns by (j,k) with k fastest.
+        let u0 = t.unfold(0);
+        assert_eq!(u0.shape(), (2, 4));
+        assert_eq!(u0.row(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(u0.row(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn first_cols_extracts() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let f = m.first_cols(2);
+        assert_eq!(f.data, vec![1., 2., 4., 5.]);
+    }
+
+    #[test]
+    fn orthonormality_defect_of_identity_is_zero() {
+        assert!(Matrix::eye(5).orthonormality_defect() < 1e-7);
+        let mut rng = Pcg64::new(5, 0);
+        let m = Matrix::randn(5, 5, 1.0, &mut rng);
+        assert!(m.orthonormality_defect() > 0.1);
+    }
+}

@@ -1,0 +1,191 @@
+//! Property-based testing helper (proptest substitute for the offline build).
+//!
+//! Usage:
+//! ```ignore
+//! use galore2::testing::prop;
+//! prop::check("matmul associates with identity", 100, |g| {
+//!     let n = g.usize_in(1, 8);
+//!     // ... build case from g, return Ok(()) or Err(description)
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the harness re-runs the failing case seed and panics with the
+//! seed so the case can be replayed deterministically with
+//! `PROP_SEED=<seed> cargo test <name>`.
+
+pub mod prop {
+    use crate::util::rng::Pcg64;
+
+    /// Case generator handed to property closures.
+    pub struct Gen {
+        rng: Pcg64,
+        /// Log of drawn values, printed on failure for diagnosis.
+        pub trace: Vec<String>,
+    }
+
+    impl Gen {
+        pub fn new(seed: u64) -> Gen {
+            Gen {
+                rng: Pcg64::new(seed, 0xfeed),
+                trace: Vec::new(),
+            }
+        }
+
+        pub fn rng(&mut self) -> &mut Pcg64 {
+            &mut self.rng
+        }
+
+        pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+            assert!(lo <= hi);
+            let v = lo + self.rng.next_below((hi - lo + 1) as u64) as usize;
+            self.trace.push(format!("usize[{lo},{hi}]={v}"));
+            v
+        }
+
+        pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+            let v = lo + (hi - lo) * self.rng.next_f32();
+            self.trace.push(format!("f32[{lo},{hi}]={v}"));
+            v
+        }
+
+        pub fn bool(&mut self) -> bool {
+            let v = self.rng.next_u64() & 1 == 1;
+            self.trace.push(format!("bool={v}"));
+            v
+        }
+
+        /// A vector of finite f32s, magnitudes spanning several decades so
+        /// numeric edge cases get exercised.
+        pub fn vec_f32(&mut self, len: usize) -> Vec<f32> {
+            let mut v = vec![0f32; len];
+            for x in v.iter_mut() {
+                let mag = 10f32.powf(self.rng.next_f32() * 6.0 - 3.0); // 1e-3 .. 1e3
+                let sign = if self.rng.next_u64() & 1 == 1 { 1.0 } else { -1.0 };
+                *x = sign * mag * self.rng.next_f32();
+            }
+            self.trace.push(format!("vec_f32(len={len})"));
+            v
+        }
+
+        /// Normal matrix entries (well-conditioned with high probability).
+        pub fn matrix(&mut self, rows: usize, cols: usize) -> Vec<f32> {
+            let mut v = vec![0f32; rows * cols];
+            self.rng.fill_normal(&mut v, 1.0);
+            self.trace.push(format!("matrix({rows}x{cols})"));
+            v
+        }
+
+        pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+            let i = self.rng.next_below(items.len() as u64) as usize;
+            self.trace.push(format!("choose#{i}"));
+            &items[i]
+        }
+    }
+
+    /// Run `cases` random cases of `property`. Panics with the failing seed
+    /// and the generator trace on the first failure.
+    pub fn check<F>(name: &str, cases: u64, mut property: F)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        // Replay mode: a single pinned seed.
+        if let Ok(seed_str) = std::env::var("PROP_SEED") {
+            let seed: u64 = seed_str.parse().expect("PROP_SEED must be u64");
+            let mut g = Gen::new(seed);
+            if let Err(msg) = property(&mut g) {
+                panic!("property `{name}` failed (replay seed {seed}): {msg}\ntrace: {:?}", g.trace);
+            }
+            return;
+        }
+        // Deterministic per-property seed stream: hash of the name.
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        for case in 0..cases {
+            let seed = h.wrapping_add(case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            let mut g = Gen::new(seed);
+            if let Err(msg) = property(&mut g) {
+                panic!(
+                    "property `{name}` failed on case {case}/{cases}: {msg}\n\
+                     replay with: PROP_SEED={seed}\ntrace: {:?}",
+                    g.trace
+                );
+            }
+        }
+    }
+
+    /// Assert two slices are elementwise close (abs OR rel tolerance).
+    pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+        if a.len() != b.len() {
+            return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+        }
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let diff = (x - y).abs();
+            let tol = atol + rtol * x.abs().max(y.abs());
+            if !(diff <= tol) {
+                return Err(format!(
+                    "mismatch at [{i}]: {x} vs {y} (diff {diff:.3e} > tol {tol:.3e})"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Max absolute difference between slices.
+    pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::prop;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop::check("trivially true", 50, |g| {
+            let _ = g.usize_in(0, 10);
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with: PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        prop::check("always fails", 10, |g| {
+            let n = g.usize_in(1, 5);
+            Err(format!("boom n={n}"))
+        });
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(prop::assert_close(&[1.0, 2.0], &[1.0, 2.0001], 1e-6, 1e-3).is_ok());
+        assert!(prop::assert_close(&[1.0], &[1.1], 1e-6, 1e-3).is_err());
+        assert!(prop::assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        let mut first: Vec<usize> = Vec::new();
+        prop::check("det", 5, |g| {
+            first.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        prop::check("det", 5, |g| {
+            second.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

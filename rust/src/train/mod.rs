@@ -1,0 +1,7 @@
+//! Training loop: the coordinator's per-step orchestration.
+
+mod pjrt_galore;
+mod trainer;
+
+pub use pjrt_galore::PjrtGaLore;
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,316 @@
+//! GaLore optimizer whose fused update runs the L1 Pallas kernel via PJRT.
+//!
+//! The three-layer story on the *optimizer* hot path: the subspace refresh
+//! (randomized SVD) stays in Rust, but the per-step work — low-rank Adam
+//! moment update + α·P·N reprojection — executes the
+//! `galore_update_<d>x<n>x<r>.hlo.txt` artifact lowered from
+//! python/compile/kernels/galore_update.py. Numerically interchangeable
+//! with the native engine (tested in rust/tests/); the `--engine pjrt`
+//! flag switches between them.
+//!
+//! Kernel orientation: artifacts are lowered for (dim=min(m,n), n=max(m,n))
+//! per Alg. 1's min-side projection; tall parameters are handled by
+//! transposing the gradient in and the delta out.
+
+use crate::linalg::{randomized_svd, RandSvdOpts};
+use crate::optim::{AdamCfg, GaLoreCfg, Optimizer};
+use crate::runtime::{Executable, HostTensor, Manifest, Runtime};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+struct ParamState {
+    /// P (dim × rank), dim = min side of the parameter.
+    p: Matrix,
+    m: Matrix,
+    v: Matrix,
+    /// Parameter is stored (rows, cols); kernel runs on the (dim, n) view —
+    /// transposed when rows > cols.
+    transposed: bool,
+    exe: Arc<Executable>,
+    last_refresh: u64,
+}
+
+pub struct PjrtGaLore {
+    cfg: GaLoreCfg,
+    adam: AdamCfg,
+    rt: Arc<Runtime>,
+    artifacts_dir: PathBuf,
+    manifest: Manifest,
+    states: BTreeMap<usize, ParamState>,
+    /// Full-rank fallback for ineligible params (runs natively; the model's
+    /// norm vectors are noise-level cost).
+    fallback: crate::optim::AdamW,
+    rng: Pcg64,
+    t: u64,
+}
+
+impl PjrtGaLore {
+    pub fn new(
+        cfg: GaLoreCfg,
+        adam: AdamCfg,
+        rt: Arc<Runtime>,
+        artifacts_dir: PathBuf,
+        manifest: Manifest,
+        seed: u64,
+    ) -> PjrtGaLore {
+        PjrtGaLore {
+            cfg,
+            adam,
+            rt,
+            artifacts_dir,
+            manifest,
+            states: BTreeMap::new(),
+            fallback: crate::optim::AdamW::new(adam),
+            // Same stream constant as the native GaLore so both engines
+            // draw identical randomized-SVD sketches from the same seed
+            // (the engine-parity test relies on it).
+            rng: Pcg64::new(seed, 0x6a10),
+            t: 0,
+        }
+    }
+
+    fn eligible(&self, rows: usize, cols: usize) -> bool {
+        rows.min(cols) > self.cfg.rank && rows >= 2 && cols >= 2
+    }
+
+    /// Compute P from the gradient's min-side singular vectors.
+    fn compute_p(&mut self, grad_view: &Matrix) -> Matrix {
+        // grad_view is already (dim, n) with dim ≤ n ⇒ left side.
+        let svd = randomized_svd(
+            grad_view,
+            self.cfg.rank,
+            RandSvdOpts::default(),
+            &mut self.rng,
+        );
+        svd.u.first_cols(self.cfg.rank)
+    }
+
+    fn load_kernel(&self, dim: usize, n: usize) -> Result<Arc<Executable>> {
+        let entry = self
+            .manifest
+            .kernel_for(dim, n, self.cfg.rank)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no galore_update kernel artifact for ({dim},{n},{}) — \
+                     run `make artifacts` with --kernels",
+                    self.cfg.rank
+                )
+            })?;
+        self.rt.load(self.artifacts_dir.join(&entry.file))
+    }
+}
+
+impl Optimizer for PjrtGaLore {
+    fn begin_step(&mut self, t: u64) {
+        self.t = t;
+        self.fallback.begin_step(t);
+    }
+
+    fn step_param(&mut self, idx: usize, param: &mut Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = param.shape();
+        if !self.eligible(rows, cols) {
+            self.fallback.step_param(idx, param, grad, lr);
+            return;
+        }
+        let transposed = rows > cols;
+        let grad_view = if transposed { grad.transpose() } else { grad.clone() };
+        let (dim, n) = grad_view.shape();
+
+        if !self.states.contains_key(&idx) {
+            let p = self.compute_p(&grad_view);
+            let exe = self.load_kernel(dim, n).expect("kernel artifact");
+            self.states.insert(
+                idx,
+                ParamState {
+                    p,
+                    m: Matrix::zeros(self.cfg.rank, n),
+                    v: Matrix::zeros(self.cfg.rank, n),
+                    transposed,
+                    exe,
+                    last_refresh: self.t,
+                },
+            );
+        } else if self.t % self.cfg.update_freq == 0
+            && self.states[&idx].last_refresh != self.t
+        {
+            let p = self.compute_p(&grad_view);
+            let st = self.states.get_mut(&idx).unwrap();
+            st.p = p;
+            st.last_refresh = self.t;
+        }
+
+        let st = self.states.get_mut(&idx).unwrap();
+        debug_assert_eq!(st.transposed, transposed);
+        // R = Pᵀ G (native BLAS3 — cheap relative to the fused kernel).
+        let r = st.p.matmul_at_b(&grad_view);
+        // Fused Adam + reproject on the device.
+        let out = st
+            .exe
+            .run(&[
+                HostTensor::from_matrix(&st.p),
+                HostTensor::from_matrix(&r),
+                HostTensor::from_matrix(&st.m),
+                HostTensor::from_matrix(&st.v),
+                HostTensor::scalar_f32(self.t as f32),
+            ])
+            .expect("galore_update kernel execution");
+        st.m.data.copy_from_slice(&out[0]);
+        st.v.data.copy_from_slice(&out[1]);
+        // delta (dim, n), alpha applied host-side (artifact bakes α=1).
+        let scale = lr * self.cfg.alpha;
+        if self.adam.weight_decay > 0.0 {
+            let wd = self.adam.weight_decay;
+            for x in param.data.iter_mut() {
+                *x -= lr * wd * *x;
+            }
+        }
+        if transposed {
+            // delta is (dim=cols, n=rows): apply transposed.
+            for r_i in 0..rows {
+                for c_i in 0..cols {
+                    param.data[r_i * cols + c_i] -= scale * out[2][c_i * rows + r_i];
+                }
+            }
+        } else {
+            for (w, d) in param.data.iter_mut().zip(&out[2]) {
+                *w -= scale * d;
+            }
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.fallback.state_bytes()
+            + self
+                .states
+                .values()
+                .map(|s| (s.p.numel() + s.m.numel() + s.v.numel()) * 4)
+                .sum::<usize>()
+    }
+
+    fn name(&self) -> &'static str {
+        "galore-pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{GaLore, ProjectionKind};
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn setup() -> Option<(Arc<Runtime>, Manifest)> {
+        let mp = artifacts_dir().join("manifest_llama-nano.json");
+        if !mp.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        let manifest = Manifest::load(mp).unwrap();
+        if manifest.kernels.is_empty() {
+            return None;
+        }
+        Some((Arc::new(Runtime::cpu().unwrap()), manifest))
+    }
+
+    #[test]
+    fn pjrt_engine_matches_native_engine() {
+        // Same trajectory as the native GaLore when both use the same P.
+        // We pin the subspace by using a rank-r target and FullSvd-free
+        // determinism: feed identical gradients and compare updates.
+        let Some((rt, manifest)) = setup() else { return };
+        let cfg = GaLoreCfg {
+            rank: 16,
+            update_freq: 1_000_000, // refresh only at init
+            alpha: 0.25,
+            projection: ProjectionKind::RandSvd,
+            ..GaLoreCfg::default()
+        };
+        let adam = AdamCfg::default();
+        let mut pjrt = PjrtGaLore::new(
+            cfg,
+            adam,
+            rt,
+            artifacts_dir(),
+            manifest,
+            7,
+        );
+        let mut native = GaLore::new(cfg, adam, 7); // same seed ⇒ same rand-SVD
+        let mut rng = Pcg64::new(3, 0);
+        let target = Matrix::randn(64, 176, 0.5, &mut rng);
+        let mut wp = Matrix::zeros(64, 176);
+        let mut wn = Matrix::zeros(64, 176);
+        for t in 0..10 {
+            let gp = wp.sub(&target);
+            let gn = wn.sub(&target);
+            pjrt.begin_step(t);
+            pjrt.step_param(0, &mut wp, &gp, 0.05);
+            native.begin_step(t);
+            native.step_param(0, &mut wn, &gn, 0.05);
+        }
+        let diff = crate::testing::prop::max_abs_diff(&wp.data, &wn.data);
+        assert!(diff < 1e-4, "pjrt vs native drift {diff}");
+    }
+
+    #[test]
+    fn transposed_param_handled() {
+        let Some((rt, manifest)) = setup() else { return };
+        let cfg = GaLoreCfg {
+            rank: 16,
+            update_freq: 1_000_000,
+            alpha: 1.0,
+            ..GaLoreCfg::default()
+        };
+        let mut opt = PjrtGaLore::new(
+            cfg,
+            AdamCfg::default(),
+            rt,
+            artifacts_dir(),
+            manifest,
+            9,
+        );
+        let mut rng = Pcg64::new(4, 0);
+        // 176×64 (tall) — kernel exists only as (64, 176, 16). Rank-16
+        // target keeps the optimum inside the projected subspace.
+        let a = Matrix::randn(176, 16, 0.5, &mut rng);
+        let b = Matrix::randn(16, 64, 0.5, &mut rng);
+        let target = a.matmul(&b);
+        let mut w = Matrix::zeros(176, 64);
+        let before = target.frobenius_norm();
+        for t in 0..100 {
+            let g = w.sub(&target);
+            opt.begin_step(t);
+            opt.step_param(0, &mut w, &g, 0.1);
+        }
+        let after = w.sub(&target).frobenius_norm();
+        assert!(after < before * 0.2, "{before} -> {after}");
+    }
+
+    #[test]
+    fn small_params_use_fallback() {
+        let Some((rt, manifest)) = setup() else { return };
+        let cfg = GaLoreCfg {
+            rank: 16,
+            ..GaLoreCfg::default()
+        };
+        let mut opt = PjrtGaLore::new(
+            cfg,
+            AdamCfg::default(),
+            rt,
+            artifacts_dir(),
+            manifest,
+            1,
+        );
+        let mut p = Matrix::zeros(1, 64);
+        let g = Matrix::from_vec(1, 64, vec![1.0; 64]);
+        opt.begin_step(0);
+        opt.step_param(0, &mut p, &g, 0.1);
+        assert!(p.max_abs() > 0.0);
+        assert_eq!(opt.state_bytes(), 2 * 64 * 4); // fallback adam moments
+    }
+}

@@ -1,0 +1,390 @@
+//! The trainer: config → artifacts → data → step loop → metrics.
+//!
+//! Per step (single-process):
+//!   1. draw a packed batch,
+//!   2. execute the fwd_bwd artifact (loss + per-param grads),
+//!   3. run the optimizer (native GaLore / PJRT-kernel GaLore / baselines),
+//!   4. log; periodically sweep validation and checkpoint.
+//!
+//! Under FSDP/DDP the gradients of each rank's microbatch are computed via
+//! the same artifact, then handed to the distributed engine whose worker
+//! threads own shards + optimizer state (rust/src/dist/).
+
+use crate::checkpoint::Checkpoint;
+use crate::config::{Engine, ParallelMode, TrainConfig};
+use crate::data::{Batch, Corpus, CorpusCfg, DataLoader};
+use crate::dist::FsdpCluster;
+use crate::dist::ParamMeta;
+use crate::metrics::Metrics;
+use crate::model::LlamaCfg;
+use crate::optim::lr::Schedule;
+use crate::optim::Optimizer;
+use crate::runtime::{Executable, HostTensor, Manifest, Runtime};
+use crate::tensor::Matrix;
+use crate::train::PjrtGaLore;
+use crate::util::Timer;
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+enum Mode {
+    Single {
+        opt: Box<dyn Optimizer>,
+    },
+    Fsdp {
+        cluster: FsdpCluster,
+    },
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub llama: LlamaCfg,
+    pub manifest: Manifest,
+    rt: Arc<Runtime>,
+    fwd_bwd: Arc<Executable>,
+    pub loader: DataLoader,
+    pub schedule: Schedule,
+    pub metrics: Metrics,
+    /// Full parameters as seen by the compute device.
+    pub params: Vec<Matrix>,
+    mode: Mode,
+    pub tokens_seen: u64,
+    start_step: u64,
+    wall: Timer,
+}
+
+/// Summary of a finished run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub final_train_loss: f64,
+    pub final_val_loss: f64,
+    pub tokens: u64,
+    pub steps: u64,
+    pub wall_secs: f64,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        let llama = LlamaCfg::preset(&cfg.preset)
+            .with_context(|| format!("unknown preset {:?}", cfg.preset))?;
+        let manifest = Manifest::load(
+            cfg.artifacts_dir
+                .join(format!("manifest_{}.json", cfg.preset)),
+        )
+        .with_context(|| {
+            format!(
+                "manifest for {} missing — run `make artifacts PRESET={}`",
+                cfg.preset, cfg.preset
+            )
+        })?;
+        let rt = Arc::new(Runtime::cpu()?);
+        let fwd_bwd = rt.load(
+            cfg.artifacts_dir
+                .join(&manifest.artifacts["fwd_bwd"]),
+        )?;
+
+        let corpus = Corpus::new(CorpusCfg {
+            vocab: llama.vocab,
+            branching: 8,
+            order: 1,
+            seed: cfg.seed ^ 0xc0de,
+        });
+        let loader = DataLoader::new(
+            &corpus,
+            cfg.corpus_tokens,
+            cfg.val_tokens,
+            llama.batch,
+            llama.seq,
+            cfg.seed,
+        );
+
+        let params = crate::model::init_params(&llama, cfg.seed);
+        let schedule = Schedule::WarmupCosine {
+            peak: cfg.lr,
+            warmup: ((cfg.steps as f64 * cfg.warmup_frac) as u64).max(1),
+            total: cfg.steps,
+            floor_frac: cfg.lr_floor_frac,
+        };
+
+        let mode = match cfg.parallel {
+            ParallelMode::Single => {
+                let opt: Box<dyn Optimizer> = match (cfg.engine, cfg.optimizer.as_str()) {
+                    (Engine::Pjrt, "galore") => Box::new(PjrtGaLore::new(
+                        cfg.galore_cfg(llama.hidden)?,
+                        cfg.adam_cfg(),
+                        rt.clone(),
+                        cfg.artifacts_dir.clone(),
+                        manifest.clone(),
+                        cfg.seed,
+                    )),
+                    (Engine::Pjrt, other) => {
+                        bail!("engine=pjrt only applies to galore (got {other})")
+                    }
+                    (Engine::Native, "galore") => Box::new(crate::optim::GaLore::new(
+                        cfg.galore_cfg(llama.hidden)?,
+                        cfg.adam_cfg(),
+                        cfg.seed,
+                    )),
+                    (Engine::Native, "qgalore") => {
+                        let mut g = cfg.galore_cfg(llama.hidden)?;
+                        g.projection = crate::optim::ProjectionKind::Quant8;
+                        Box::new(crate::optim::QGaLore::new(
+                            crate::optim::QGaLoreCfg {
+                                galore: g,
+                                similarity_threshold: 0.9,
+                            },
+                            cfg.adam_cfg(),
+                            cfg.seed,
+                        ))
+                    }
+                    (Engine::Native, "adamw") => {
+                        Box::new(crate::optim::AdamW::new(cfg.adam_cfg()))
+                    }
+                    (Engine::Native, "adam8bit") => {
+                        Box::new(crate::optim::Adam8bit::new(cfg.adam_cfg()))
+                    }
+                    (Engine::Native, "adafactor") => {
+                        Box::new(crate::optim::Adafactor::new(1e-30))
+                    }
+                    (Engine::Native, "sgdm") => Box::new(crate::optim::SgdM::new(0.9)),
+                    (Engine::Native, other) => bail!("unknown optimizer {other:?}"),
+                };
+                Mode::Single { opt }
+            }
+            ParallelMode::Fsdp => {
+                let metas: Vec<ParamMeta> = manifest
+                    .params
+                    .iter()
+                    .map(|p| {
+                        let (rows, cols) = p.matrix_shape();
+                        ParamMeta {
+                            name: p.name.clone(),
+                            rows,
+                            cols,
+                        }
+                    })
+                    .collect();
+                let cluster = FsdpCluster::new(
+                    cfg.world.max(1),
+                    metas,
+                    cfg.optimizer_spec(llama.hidden)?,
+                    cfg.seed,
+                );
+                cluster.init_params(&params);
+                Mode::Fsdp { cluster }
+            }
+            ParallelMode::Ddp => bail!(
+                "ddp mode is exposed through dist::run_ddp (see \
+                 benches/table1_fsdp_memory.rs); the trainer uses single or fsdp"
+            ),
+        };
+
+        Ok(Trainer {
+            cfg,
+            llama,
+            manifest,
+            rt,
+            fwd_bwd,
+            loader,
+            schedule,
+            metrics: Metrics::new(),
+            params,
+            mode,
+            tokens_seen: 0,
+            start_step: 0,
+            wall: Timer::start(),
+        })
+    }
+
+    /// Inputs for one execution: params (in ABI shapes) + tokens + targets.
+    fn build_inputs(&self, batch: &Batch) -> Vec<HostTensor> {
+        let mut inputs: Vec<HostTensor> = self
+            .manifest
+            .params
+            .iter()
+            .zip(&self.params)
+            .map(|(spec, m)| {
+                if spec.shape.len() == 1 {
+                    HostTensor::from_vec1(&m.data)
+                } else {
+                    HostTensor::from_matrix(m)
+                }
+            })
+            .collect();
+        inputs.push(HostTensor::tokens(&batch.tokens, batch.batch, batch.seq));
+        inputs.push(HostTensor::tokens(&batch.targets, batch.batch, batch.seq));
+        inputs
+    }
+
+    /// Execute fwd_bwd on a batch: (loss, grads as matrices).
+    fn compute_grads(&self, batch: &Batch) -> Result<(f32, Vec<Matrix>)> {
+        let out = self.fwd_bwd.run(&self.build_inputs(batch))?;
+        let loss = out[0][0];
+        let grads = self
+            .manifest
+            .params
+            .iter()
+            .zip(out.into_iter().skip(1))
+            .map(|(spec, data)| {
+                let (r, c) = spec.matrix_shape();
+                Matrix::from_vec(r, c, data)
+            })
+            .collect();
+        Ok((loss, grads))
+    }
+
+    /// One optimizer step; returns the training loss of this step's batch.
+    pub fn train_step(&mut self, t: u64) -> Result<f32> {
+        let lr = self.schedule.lr(t);
+        let loss = match self.cfg.parallel {
+            ParallelMode::Single => {
+                let batch = self.loader.train_batch_at(t, 0);
+                self.tokens_seen += (batch.batch * batch.seq) as u64;
+                let (loss, grads) = self.compute_grads(&batch)?;
+                let Mode::Single { opt } = &mut self.mode else {
+                    unreachable!()
+                };
+                opt.begin_step(t);
+                for (idx, grad) in grads.into_iter().enumerate() {
+                    opt.step_param(idx, &mut self.params[idx], &grad, lr);
+                    // grad dropped here — per-layer update semantics.
+                }
+                loss
+            }
+            _ => {
+                // Each rank computes gradients on its own microbatch.
+                let world = self.cfg.world.max(1);
+                let batches = self.loader.train_microbatches_at(t, world);
+                self.tokens_seen +=
+                    (world * self.loader.tokens_per_batch()) as u64;
+                let mut losses = Vec::with_capacity(world);
+                let mut per_rank = Vec::with_capacity(world);
+                for b in &batches {
+                    let (l, g) = self.compute_grads(b)?;
+                    losses.push(l);
+                    per_rank.push(g);
+                }
+                let Mode::Fsdp { cluster } = &mut self.mode else {
+                    unreachable!()
+                };
+                cluster.step(t, per_rank, lr);
+                self.params = cluster.gather_params();
+                losses.iter().sum::<f32>() / world as f32
+            }
+        };
+        Ok(loss)
+    }
+
+    /// Mean validation loss over `batches` deterministic windows.
+    pub fn validate(&mut self, batches: usize) -> Result<f64> {
+        self.loader.reset_val();
+        let mut total = 0f64;
+        for _ in 0..batches.max(1) {
+            let batch = self.loader.next_val();
+            let (loss, _) = self.compute_grads(&batch)?;
+            total += loss as f64;
+        }
+        Ok(total / batches.max(1) as f64)
+    }
+
+    /// Full training run with logging / eval / checkpoints.
+    pub fn run(&mut self) -> Result<TrainOutcome> {
+        let steps = self.cfg.steps;
+        let mut last_train = f64::NAN;
+        for t in self.start_step..steps {
+            let loss = self.train_step(t)? as f64;
+            last_train = loss;
+            if t % self.cfg.log_every == 0 || t + 1 == steps {
+                self.metrics.log(
+                    "train",
+                    t,
+                    self.tokens_seen,
+                    loss,
+                    self.schedule.lr(t) as f64,
+                    self.wall.elapsed_secs(),
+                );
+            }
+            if self.cfg.eval_every > 0
+                && (t % self.cfg.eval_every == 0 || t + 1 == steps)
+            {
+                let val = self.validate(self.cfg.eval_batches)?;
+                self.metrics.log(
+                    "val",
+                    t,
+                    self.tokens_seen,
+                    val,
+                    self.schedule.lr(t) as f64,
+                    self.wall.elapsed_secs(),
+                );
+            }
+            if self.cfg.checkpoint_every > 0
+                && t > 0
+                && t % self.cfg.checkpoint_every == 0
+            {
+                self.save_checkpoint(t)?;
+            }
+        }
+        let final_val = self.validate(self.cfg.eval_batches)?;
+        Ok(TrainOutcome {
+            final_train_loss: last_train,
+            final_val_loss: final_val,
+            tokens: self.tokens_seen,
+            steps,
+            wall_secs: self.wall.elapsed_secs(),
+        })
+    }
+
+    pub fn checkpoint_path(&self, step: u64) -> std::path::PathBuf {
+        self.cfg
+            .out_dir
+            .join(&self.cfg.run_name)
+            .join(format!("step_{step}.ckpt"))
+    }
+
+    pub fn save_checkpoint(&self, step: u64) -> Result<()> {
+        let opt_state = match &self.mode {
+            Mode::Single { opt } => opt.export_state(),
+            Mode::Fsdp { cluster } => cluster.export_rank0_optimizer(),
+        };
+        Checkpoint {
+            step,
+            names: self
+                .manifest
+                .params
+                .iter()
+                .map(|p| p.name.clone())
+                .collect(),
+            params: self.params.clone(),
+            opt_state,
+        }
+        .save(self.checkpoint_path(step))?;
+        Ok(())
+    }
+
+    /// Resume parameters + optimizer state from a checkpoint (single mode).
+    pub fn resume(&mut self, path: &std::path::Path) -> Result<u64> {
+        let ckpt = Checkpoint::load(path)?;
+        anyhow::ensure!(
+            ckpt.params.len() == self.params.len(),
+            "checkpoint param count mismatch"
+        );
+        self.params = ckpt.params;
+        if let Mode::Single { opt } = &mut self.mode {
+            opt.import_state(&ckpt.opt_state)
+                .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
+        }
+        self.start_step = ckpt.step;
+        Ok(ckpt.step)
+    }
+
+    /// Per-GPU memory reports when running FSDP.
+    pub fn fsdp_memory(&self) -> Option<Vec<crate::dist::MemoryReport>> {
+        match &self.mode {
+            Mode::Fsdp { cluster } => Some(cluster.memory_reports()),
+            _ => None,
+        }
+    }
+
+    pub fn runtime(&self) -> Arc<Runtime> {
+        self.rt.clone()
+    }
+}

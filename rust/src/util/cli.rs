@@ -1,0 +1,182 @@
+//! Command-line argument parsing.
+//!
+//! Offline build: no clap, so the launcher uses this small flag parser.
+//! Syntax: `galore2 <subcommand> [--flag value] [--flag=value] [--switch]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Flags consumed via accessors; used by `check_unused`.
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminator: remaining tokens are positional.
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(body.to_string(), v);
+                } else {
+                    args.switches.push(body.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.mark(key);
+        if self.switches.iter().any(|s| s == key) {
+            return true;
+        }
+        match self.flags.get(key).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) | None => default,
+        }
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            Some(s) => s.parse::<T>().unwrap_or_else(|_| {
+                eprintln!("warning: cannot parse --{key} {s:?}; using default");
+                default
+            }),
+            None => default,
+        }
+    }
+
+    /// Return flags the program never queried — typo detection for users.
+    pub fn unused(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --config configs/mini.toml --steps 100 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("config", ""), "configs/mini.toml");
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --rank=128 --alpha=0.25");
+        assert_eq!(a.usize_or("rank", 0), 128);
+        assert!((a.f32_or("alpha", 0.0) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bool_flags() {
+        let a = parse("x --fsdp true --debug --trace=false");
+        assert!(a.bool_or("fsdp", false));
+        assert!(a.bool_or("debug", false));
+        assert!(!a.bool_or("trace", true));
+        assert!(a.bool_or("absent", true));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("eval ckpt1 ckpt2 --suite all");
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.positional, vec!["ckpt1", "ckpt2"]);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse("run -- --not-a-flag");
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn unused_detection() {
+        let a = parse("train --steps 5 --typo 3");
+        let _ = a.usize_or("steps", 0);
+        assert_eq!(a.unused(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    fn defaults_on_parse_failure() {
+        let a = parse("x --steps abc");
+        assert_eq!(a.usize_or("steps", 7), 7);
+    }
+}

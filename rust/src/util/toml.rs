@@ -1,0 +1,240 @@
+//! TOML-subset parser for configuration files.
+//!
+//! Supports the subset used by `configs/*.toml`: top-level and `[section]`
+//! tables, string / integer / float / boolean / string-array values, and
+//! `#` comments. Nested tables beyond one level and inline tables are not
+//! needed and rejected explicitly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    StrArr(Vec<String>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed TOML document: `section -> key -> value`. Top-level keys live in
+/// the "" section.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(input: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        doc.sections.entry(current.clone()).or_default();
+
+        for (lineno, raw) in input.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    return Err(format!("line {}: bad section name {name:?}", lineno + 1));
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .get_mut(&current)
+                .unwrap()
+                .insert(key.to_string(), val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|m| m.get(key))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let end = inner.rfind('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .and_then(|x| x.strip_suffix(']'))
+            .ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match parse_value(part)? {
+                TomlValue::Str(x) => items.push(x),
+                other => return Err(format!("only string arrays supported, got {other:?}")),
+            }
+        }
+        return Ok(TomlValue::StrArr(items));
+    }
+    if s.starts_with('{') {
+        return Err("inline tables not supported".into());
+    }
+    let clean = s.replace('_', "");
+    if !clean.contains('.') && !clean.contains('e') && !clean.contains('E') {
+        if let Ok(x) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(x));
+        }
+    }
+    clean
+        .parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a config
+name = "llama-mini"   # trailing comment
+steps = 1_000
+lr = 2.5e-3
+use_fsdp = true
+
+[galore]
+rank = 64
+alpha = 0.125
+projection = "rand_svd"
+tags = ["a", "b"]
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.str_or("", "name", "?"), "llama-mini");
+        assert_eq!(doc.i64_or("", "steps", 0), 1000);
+        assert!((doc.f64_or("", "lr", 0.0) - 2.5e-3).abs() < 1e-12);
+        assert!(doc.bool_or("", "use_fsdp", false));
+        assert_eq!(doc.i64_or("galore", "rank", 0), 64);
+        assert_eq!(doc.str_or("galore", "projection", "?"), "rand_svd");
+        assert_eq!(
+            doc.get("galore", "tags").unwrap(),
+            &TomlValue::StrArr(vec!["a".into(), "b".into()])
+        );
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0\n").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(3));
+        assert_eq!(doc.get("", "b").unwrap().as_i64(), None);
+        assert_eq!(doc.get("", "b").unwrap().as_f64(), Some(3.0));
+        // ints coerce to f64 on request
+        assert_eq!(doc.get("", "a").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("x = \"a#b\"\n").unwrap();
+        assert_eq!(doc.str_or("", "x", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_reported_with_line() {
+        let err = TomlDoc::parse("ok = 1\nbroken\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("x = {a=1}\n").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.i64_or("nope", "k", 7), 7);
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration: the native-Rust and PJRT-Pallas GaLore engines are
+//! numerically interchangeable on the real model workload, and the
+//! property-level invariants hold across the optimizer stack.
+
+use galore2::config::{Engine, TrainConfig};
+use galore2::testing::prop;
+use galore2::train::Trainer;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn ready() -> bool {
+    artifacts_dir().join("manifest_llama-nano.json").exists()
+}
+
+fn cfg(engine: Engine, run: &str) -> TrainConfig {
+    TrainConfig {
+        preset: "llama-nano".into(),
+        artifacts_dir: artifacts_dir(),
+        out_dir: std::env::temp_dir().join("galore2_it"),
+        run_name: format!("{run}_{}", std::process::id()),
+        optimizer: "galore".into(),
+        engine,
+        lr: 0.02,
+        steps: 15,
+        galore_rank: 16,
+        galore_update_freq: 10,
+        galore_alpha: 0.25,
+        eval_every: 0,
+        log_every: 100,
+        corpus_tokens: 50_000,
+        val_tokens: 8_000,
+        seed: 42,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn native_and_pjrt_engines_agree_on_model_training() {
+    if !ready() {
+        eprintln!("skipping: run make artifacts");
+        return;
+    }
+    let mut native = Trainer::new(cfg(Engine::Native, "eng_native")).unwrap();
+    let mut pjrt = Trainer::new(cfg(Engine::Pjrt, "eng_pjrt")).unwrap();
+    for t in 0..15 {
+        let ln = native.train_step(t).unwrap();
+        let lp = pjrt.train_step(t).unwrap();
+        assert!(
+            (ln - lp).abs() < 5e-3,
+            "step {t}: native loss {ln} vs pjrt loss {lp}"
+        );
+    }
+    // Parameters should match closely (same seeds ⇒ same rand-SVD sketches;
+    // kernel vs native Adam math agrees to fp32 round-off).
+    let mut worst = 0f32;
+    for (a, b) in native.params.iter().zip(&pjrt.params) {
+        worst = worst.max(prop::max_abs_diff(&a.data, &b.data));
+    }
+    assert!(worst < 5e-3, "param drift between engines: {worst}");
+}
+
+#[test]
+fn prop_projection_roundtrip_energy_never_increases() {
+    // ‖P Pᵀ G‖ ≤ ‖G‖ for any orthonormal P (projection is non-expansive) —
+    // checked over random shapes and all projection kinds.
+    use galore2::optim::{ProjectionKind, Projector};
+    use galore2::tensor::Matrix;
+    use galore2::util::rng::Pcg64;
+    prop::check("projection non-expansive", 40, |g| {
+        let m = g.usize_in(2, 24);
+        let n = g.usize_in(2, 24);
+        let r = g.usize_in(1, m.min(n));
+        let grad = Matrix::from_vec(m, n, g.matrix(m, n));
+        let kind = *g.choose(&[
+            ProjectionKind::FullSvd,
+            ProjectionKind::RandSvd,
+            ProjectionKind::Random,
+        ]);
+        let mut rng = Pcg64::new(11, 5);
+        let mut p = Projector::from_gradient(&grad, r, kind, &mut rng);
+        let low = p.project(&grad);
+        let back = p.project_back(&low);
+        let ratio = back.frobenius_norm() / grad.frobenius_norm().max(1e-9);
+        if ratio > 1.01 {
+            return Err(format!(
+                "projection expanded energy: ratio {ratio} ({kind:?}, {m}x{n} r{r})"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_galore_step_is_bounded() {
+    // Adam-normalized GaLore updates are bounded by lr·α per element in
+    // the projected basis ⇒ ‖ΔW‖∞ ≤ lr·α·‖P‖₁-ish; we check the practical
+    // bound ‖ΔW‖∞ ≤ lr·α·√r · c for random gradients.
+    use galore2::optim::{AdamCfg, GaLore, GaLoreCfg, Optimizer};
+    use galore2::tensor::Matrix;
+    prop::check("galore update bounded", 25, |g| {
+        let m = g.usize_in(4, 20);
+        let n = g.usize_in(4, 20);
+        let r = g.usize_in(1, m.min(n) - 1);
+        let lr = 0.01f32;
+        let alpha = g.f32_in(0.05, 1.0);
+        let cfg = GaLoreCfg {
+            rank: r,
+            update_freq: 1000,
+            alpha,
+            ..GaLoreCfg::default()
+        };
+        let mut opt = GaLore::new(cfg, AdamCfg::default(), 9);
+        let mut w = Matrix::zeros(m, n);
+        let grad = Matrix::from_vec(m, n, g.matrix(m, n));
+        opt.begin_step(0);
+        opt.step_param(0, &mut w, &grad, lr);
+        let bound = lr * alpha * (r as f32).sqrt() * 1.3 + 1e-5;
+        if w.max_abs() > bound {
+            return Err(format!(
+                "update {} exceeds bound {bound} (m{m} n{n} r{r} α{alpha})",
+                w.max_abs()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_projector_degrades_gracefully() {
+    // q8 projection of the gradient stays within a few percent of fp32;
+    // q4 within ~15% — the quantitative backdrop of Fig. 1.
+    use galore2::optim::{ProjectionKind, Projector};
+    use galore2::tensor::Matrix;
+    use galore2::util::rng::Pcg64;
+    prop::check("quantized projector error bands", 20, |g| {
+        let m = g.usize_in(8, 24);
+        let n = g.usize_in(8, 32);
+        let r = g.usize_in(2, m.min(n) / 2);
+        let grad = Matrix::from_vec(m, n, g.matrix(m, n));
+        let mut rng = Pcg64::new(13, 1);
+        let mut fp = Projector::from_gradient(&grad, r, ProjectionKind::RandSvd, &mut rng);
+        let base = fp.project(&grad);
+        for (kind, tol) in [(ProjectionKind::Quant8, 0.05), (ProjectionKind::Quant4, 0.30)] {
+            let mut q = Projector::from_gradient(&grad, r, kind, &mut Pcg64::new(13, 1));
+            let got = q.project(&grad);
+            let rel = got.sub(&base).frobenius_norm() / base.frobenius_norm().max(1e-9);
+            if rel > tol {
+                return Err(format!("{kind:?} rel err {rel} > {tol}"));
+            }
+        }
+        Ok(())
+    });
+}
