@@ -5,8 +5,11 @@
 //!      GaLore-pjrt on a llama-micro-shaped layer set;
 //!   2. GEMM plan sweep for the native projection kernels (feeds the
 //!      MatmulPlan defaults);
-//!   3. collectives throughput (all-reduce / reduce-scatter / all-gather);
-//!   4. full train-step wall time per optimizer (artifact execution +
+//!   3. parallel GEMM scaling on the paper's 1024-rank projection +
+//!      reprojection shapes (1, 2, 4 threads vs serial) — summarized into
+//!      BENCH_throughput.json for EXPERIMENTS.md §Perf;
+//!   4. collectives throughput (all-reduce / reduce-scatter / all-gather);
+//!   5. full train-step wall time per optimizer (artifact execution +
 //!      optimizer) — the headline table in EXPERIMENTS.md §Perf.
 
 use galore2::bench::Bench;
@@ -15,8 +18,9 @@ use galore2::dist::Comm;
 use galore2::optim::{
     Adam8bit, AdamCfg, AdamW, GaLore, GaLoreCfg, Optimizer, ProjectionKind,
 };
-use galore2::tensor::{matmul_with_plan, Matrix, MatmulPlan};
+use galore2::tensor::{matmul_at_b_with_plan, matmul_with_plan, Matrix, MatmulPlan};
 use galore2::train::Trainer;
+use galore2::util::json::Json;
 use galore2::util::rng::Pcg64;
 
 fn layer_set() -> Vec<(Matrix, Matrix)> {
@@ -44,6 +48,31 @@ fn bench_optimizer(b: &mut Bench, name: &str, opt: &mut dyn Optimizer) {
         }
         t += 1;
     });
+}
+
+fn mean_of(b: &Bench, name: &str) -> Option<f64> {
+    b.results().iter().find(|r| r.name == name).map(|r| r.mean_ns)
+}
+
+/// Write every recorded result (all sections run so far) plus the headline
+/// projection+reprojection speedup to BENCH_throughput.json.
+fn write_report(b: &Bench, speedup_4t: Option<f64>, hidden: usize, rank: usize) -> anyhow::Result<()> {
+    let mut report = Json::obj();
+    report.set(
+        "results",
+        Json::arr(b.results().iter().map(|r| r.to_json()).collect()),
+    );
+    if let Some(speedup) = speedup_4t {
+        report
+            .set("projpair_speedup_4t", Json::num(speedup))
+            .set(
+                "projpair_shapes",
+                Json::str(format!("{hidden}x{rank} / {hidden}x{hidden}")),
+            );
+    }
+    std::fs::write("BENCH_throughput.json", report.to_pretty())?;
+    println!("machine-readable report -> BENCH_throughput.json");
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -93,11 +122,62 @@ fn main() -> anyhow::Result<()> {
         b.run_with_throughput(
             &format!("gemm_mc{mc}_kc{kc}_nc{nc}"),
             Some((flops, "flop")),
-            || matmul_with_plan(&a, &c, MatmulPlan { mc, kc, nc }),
+            || {
+                matmul_with_plan(
+                    &a,
+                    &c,
+                    MatmulPlan {
+                        mc,
+                        kc,
+                        nc,
+                        threads: 1, // block-size sweep measures the serial kernel
+                    },
+                )
+            },
         );
     }
 
-    println!("\n== 3. collectives (world 4, 1 MiB payloads) ==");
+    println!("\n== 3. parallel GEMM scaling (1024-class projection shapes) ==");
+    // The paper's quarter-rank setting at hidden 1024: P is 1024x256.
+    //   projection    R = Pᵀ·G   (1024x256)ᵀ · (1024x1024) -> 256x1024
+    //   reprojection  G̃ = P·N    (1024x256)  · (256x1024)  -> 1024x1024
+    let (hidden, rank) = (1024usize, 256usize);
+    let mut rng2 = Pcg64::new(3, 0);
+    let p = Matrix::randn(hidden, rank, 1.0, &mut rng2);
+    let g = Matrix::randn(hidden, hidden, 1.0, &mut rng2);
+    let nlow = Matrix::randn(rank, hidden, 1.0, &mut rng2);
+    let pair_flops = 2.0 * (hidden * rank * hidden) as f64 * 2.0; // proj + reproj
+    let thread_counts = [1usize, 2, 4];
+    for &threads in &thread_counts {
+        b.run_with_throughput(
+            &format!("gemm_projpair_{hidden}r{rank}_t{threads}"),
+            Some((pair_flops, "flop")),
+            || {
+                let plan = MatmulPlan::with_threads(threads);
+                let r = matmul_at_b_with_plan(&p, &g, plan); // projection
+                let back = matmul_with_plan(&p, &nlow, plan); // reprojection
+                (r, back)
+            },
+        );
+    }
+
+    // Headline figure for the acceptance criterion, computed once and
+    // printed immediately (write_report reuses it in both exit paths).
+    let speedup_4t = match (
+        mean_of(&b, &format!("gemm_projpair_{hidden}r{rank}_t1")),
+        mean_of(&b, &format!("gemm_projpair_{hidden}r{rank}_t4")),
+    ) {
+        (Some(t1), Some(t4)) => Some(t1 / t4),
+        _ => None,
+    };
+    if let Some(speedup) = speedup_4t {
+        println!(
+            "\nprojection+reprojection speedup @4 threads: {speedup:.2}x \
+             (acceptance target >= 2x)"
+        );
+    }
+
+    println!("\n== 4. collectives (world 4, 1 MiB payloads) ==");
     let elems = 256 * 1024usize;
     for op in ["all_reduce", "reduce_scatter", "all_gather"] {
         let bytes = (elems * 4) as f64;
@@ -128,7 +208,13 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    println!("\n== 4. full train step (llama-nano, artifact + optimizer) ==");
+    println!("\n== 5. full train step (llama-nano, artifact + optimizer) ==");
+    if !artifacts.join("manifest_llama-nano.json").exists() {
+        println!("skipped: artifacts missing — run `make artifacts PRESET=llama-nano`");
+        b.summarize_vs_baseline();
+        write_report(&b, speedup_4t, hidden, rank)?;
+        return Ok(());
+    }
     let steps = if quick { 10 } else { 30 };
     for optimizer in ["adamw", "adam8bit", "galore"] {
         let cfg = TrainConfig {
@@ -160,5 +246,6 @@ fn main() -> anyhow::Result<()> {
         );
     }
     b.summarize_vs_baseline();
+    write_report(&b, speedup_4t, hidden, rank)?;
     Ok(())
 }

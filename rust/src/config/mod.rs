@@ -46,6 +46,9 @@ pub struct TrainConfig {
 
     pub parallel: ParallelMode,
     pub world: usize,
+    /// Worker threads for the GEMM/SVD hot path; 0 = auto
+    /// (`GALORE2_THREADS` or the hardware parallelism).
+    pub threads: usize,
     pub engine: Engine,
 
     pub seed: u64,
@@ -77,6 +80,7 @@ impl Default for TrainConfig {
             galore_moments: "keep".into(),
             parallel: ParallelMode::Single,
             world: 1,
+            threads: 0,
             engine: Engine::Native,
             seed: 42,
             corpus_tokens: 200_000,
@@ -125,6 +129,10 @@ impl TrainConfig {
             other => bail!("unknown parallel.mode {other:?}"),
         };
         c.world = doc.i64_or("parallel", "world", c.world as i64) as usize;
+        // Clamp: a negative value would wrap to a huge usize thread count.
+        c.threads = doc
+            .i64_or("parallel", "threads", c.threads as i64)
+            .max(0) as usize;
         c.engine = match doc.str_or("train", "engine", "native").as_str() {
             "native" => Engine::Native,
             "pjrt" => Engine::Pjrt,
@@ -161,6 +169,7 @@ impl TrainConfig {
         self.galore_alpha = args.f32_or("alpha", self.galore_alpha);
         self.galore_projection = args.str_or("projection", &self.galore_projection);
         self.world = args.usize_or("world", self.world);
+        self.threads = args.usize_or("threads", self.threads);
         if let Some(mode) = args.get("parallel") {
             self.parallel = match mode {
                 "single" => ParallelMode::Single,
@@ -219,10 +228,19 @@ impl TrainConfig {
             "adam8bit" => OptimizerSpec::Adam8bit(self.adam_cfg()),
             "adafactor" => OptimizerSpec::Adafactor { eps: 1e-30 },
             "sgdm" => OptimizerSpec::SgdM { momentum: 0.9 },
-            "galore" | "qgalore" => OptimizerSpec::GaLore {
-                galore: self.galore_cfg(hidden)?,
-                adam: self.adam_cfg(),
-            },
+            // qgalore under FSDP keeps the quantized projector storage
+            // (the memory-relevant part); the similarity-gated lazy
+            // refresh stays a single-process feature for now.
+            "galore" | "qgalore" => {
+                let mut galore = self.galore_cfg(hidden)?;
+                if self.optimizer == "qgalore" {
+                    galore.projection = ProjectionKind::Quant8;
+                }
+                OptimizerSpec::GaLore {
+                    galore,
+                    adam: self.adam_cfg(),
+                }
+            }
             other => bail!("unknown optimizer {other:?}"),
         })
     }
@@ -254,6 +272,7 @@ projection = "rand_svd"
 [parallel]
 mode = "fsdp"
 world = 4
+threads = 2
 "#;
 
     #[test]
@@ -267,6 +286,7 @@ world = 4
         assert!((c.galore_alpha - 0.125).abs() < 1e-6);
         assert_eq!(c.parallel, ParallelMode::Fsdp);
         assert_eq!(c.world, 4);
+        assert_eq!(c.threads, 2);
         std::fs::remove_file(path).ok();
     }
 

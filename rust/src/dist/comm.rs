@@ -1,0 +1,321 @@
+//! In-process collectives for the threaded FSDP/DDP runtime.
+//!
+//! One [`Comm`] handle per worker thread, all sharing a slot table + a
+//! reusable barrier. Every collective is two barrier waves:
+//!
+//!   1. each rank deposits its contribution into its own slot,
+//!   2. (barrier) every rank computes its result from the slot table,
+//!   3. (barrier) slots may be overwritten by the next collective.
+//!
+//! Reductions combine rank contributions in a **fixed binary-tree order**
+//! ((r0+r1)+(r2+r3))+…, so the result is bitwise identical on every rank
+//! and independent of thread scheduling — the determinism contract stated
+//! in `util/rng.rs`. Per-rank traffic counters model ring-collective costs
+//! (all-reduce 2·(w−1)/w·n, reduce-scatter/all-gather (w−1)/w·n) for the
+//! Table 1 byte accounting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, RwLock};
+
+struct Shared {
+    world: usize,
+    /// RwLock, not Mutex: the barrier waves already separate the write
+    /// phase (each rank deposits its own slot) from the read phase, so
+    /// ranks compute their reductions concurrently under read locks.
+    slots: RwLock<Vec<Vec<f32>>>,
+    barrier: Barrier,
+    /// Elements moved per rank (ring-collective cost model).
+    traffic: Vec<AtomicU64>,
+}
+
+/// A worker's handle onto the collective group. Cheap to move into its
+/// owning thread; all handles of a world share state via `Arc`.
+pub struct Comm {
+    rank: usize,
+    shared: Arc<Shared>,
+}
+
+impl Comm {
+    /// Create a world of `world` connected handles, one per rank.
+    pub fn create_world(world: usize) -> Vec<Comm> {
+        assert!(world >= 1, "world size must be >= 1");
+        let shared = Arc::new(Shared {
+            world,
+            slots: RwLock::new(vec![Vec::new(); world]),
+            barrier: Barrier::new(world),
+            traffic: (0..world).map(|_| AtomicU64::new(0)).collect(),
+        });
+        (0..world)
+            .map(|rank| Comm {
+                rank,
+                shared: shared.clone(),
+            })
+            .collect()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.shared.world
+    }
+
+    /// Elements this rank has moved through collectives so far.
+    pub fn traffic_elems(&self) -> u64 {
+        self.shared.traffic[self.rank].load(Ordering::Relaxed)
+    }
+
+    fn add_traffic(&self, elems: u64) {
+        self.shared.traffic[self.rank].fetch_add(elems, Ordering::Relaxed);
+    }
+
+    fn deposit(&self, data: Vec<f32>) {
+        self.shared.slots.write().unwrap()[self.rank] = data;
+        self.shared.barrier.wait();
+    }
+
+    /// Second barrier wave: after this, slots may be overwritten.
+    fn release(&self) {
+        self.shared.barrier.wait();
+    }
+
+    /// Elementwise sum of every rank's `data` in fixed tree order; all
+    /// ranks receive the identical full-length result.
+    pub fn all_reduce_sum(&self, data: Vec<f32>) -> Vec<f32> {
+        let n = data.len();
+        let w = self.shared.world;
+        self.deposit(data);
+        let result = {
+            let slots = self.shared.slots.read().unwrap();
+            debug_assert!(slots.iter().all(|s| s.len() == n), "ragged all_reduce");
+            tree_sum(&slots, 0, n)
+        };
+        self.release();
+        self.add_traffic((2 * (w - 1) * n / w.max(1)) as u64);
+        result
+    }
+
+    /// Sum across ranks, then return only this rank's shard. `offsets` has
+    /// world+1 entries (element boundaries); rank r receives
+    /// `[offsets[r], offsets[r+1])` of the reduced vector.
+    pub fn reduce_scatter_sum(&self, data: Vec<f32>, offsets: &[usize]) -> Vec<f32> {
+        let n = data.len();
+        let w = self.shared.world;
+        assert_eq!(offsets.len(), w + 1, "offsets must have world+1 entries");
+        assert_eq!(offsets[w], n, "offsets must cover the full vector");
+        let (lo, hi) = (offsets[self.rank], offsets[self.rank + 1]);
+        self.deposit(data);
+        let result = {
+            let slots = self.shared.slots.read().unwrap();
+            tree_sum(&slots, lo, hi)
+        };
+        self.release();
+        self.add_traffic(((w - 1) * n / w.max(1)) as u64);
+        result
+    }
+
+    /// Concatenate every rank's shard in rank order; all ranks receive the
+    /// identical concatenation. Shards may have different lengths.
+    pub fn all_gather(&self, shard: Vec<f32>) -> Vec<f32> {
+        let own = shard.len();
+        self.deposit(shard);
+        let result = {
+            let slots = self.shared.slots.read().unwrap();
+            let total: usize = slots.iter().map(|s| s.len()).sum();
+            let mut out = Vec::with_capacity(total);
+            for s in slots.iter() {
+                out.extend_from_slice(s);
+            }
+            out
+        };
+        self.release();
+        self.add_traffic((result.len() - own) as u64);
+        result
+    }
+
+    /// Replicate `root`'s vector to every rank. Exactly the root must pass
+    /// `Some(data)`; every rank (including the root) receives a copy.
+    pub fn broadcast(&self, root: usize, data: Option<Vec<f32>>) -> Vec<f32> {
+        assert!(root < self.shared.world);
+        assert_eq!(
+            data.is_some(),
+            self.rank == root,
+            "broadcast: exactly the root provides data"
+        );
+        self.deposit(data.unwrap_or_default());
+        let result = {
+            let slots = self.shared.slots.read().unwrap();
+            slots[root].clone()
+        };
+        self.release();
+        if self.rank != root {
+            self.add_traffic(result.len() as u64);
+        }
+        result
+    }
+
+    /// Pure synchronization point (used between training phases).
+    pub fn barrier(&self) {
+        self.shared.barrier.wait();
+    }
+}
+
+/// Sum `slots[r][e0..e1]` over ranks r with a fixed stride-doubling tree:
+/// pass 1 combines (0,1), (2,3), …; pass 2 combines (0,2), (4,6), …; and
+/// so on. Every caller runs the identical FP operation sequence, so the
+/// reduction is associativity-safe: bitwise reproducible regardless of
+/// which thread finishes first.
+fn tree_sum(slots: &[Vec<f32>], e0: usize, e1: usize) -> Vec<f32> {
+    let mut bufs: Vec<Vec<f32>> = slots.iter().map(|s| s[e0..e1].to_vec()).collect();
+    let mut stride = 1;
+    while stride < bufs.len() {
+        let mut i = 0;
+        while i + stride < bufs.len() {
+            let (head, tail) = bufs.split_at_mut(i + stride);
+            let dst = &mut head[i];
+            let src = &tail[0];
+            for (x, y) in dst.iter_mut().zip(src.iter()) {
+                *x += *y;
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    bufs.swap_remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run `f(comm)` on every rank of a fresh world, collecting results in
+    /// rank order.
+    fn run_world<T: Send>(world: usize, f: impl Fn(Comm) -> T + Sync) -> Vec<T> {
+        let comms = Comm::create_world(world);
+        let f = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = comms
+                .into_iter()
+                .map(|c| s.spawn(move || f(c)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        let out = run_world(4, |c| {
+            let data = vec![(c.rank() + 1) as f32; 8];
+            c.all_reduce_sum(data)
+        });
+        // 1+2+3+4 = 10 on every rank.
+        for r in &out {
+            assert_eq!(r, &vec![10.0f32; 8]);
+        }
+    }
+
+    #[test]
+    fn all_reduce_repeatable_and_rank_identical() {
+        // Irregular magnitudes so a different summation order would show.
+        let gen = |rank: usize, i: usize| {
+            ((rank * 37 + i) as f32).sin() * 1e3f32.powi((rank % 3) as i32 - 1)
+        };
+        let run = || {
+            run_world(4, |c| {
+                let data: Vec<f32> = (0..64).map(|i| gen(c.rank(), i)).collect();
+                c.all_reduce_sum(data)
+            })
+        };
+        let a = run();
+        let b = run();
+        for r in 1..4 {
+            assert_eq!(a[0], a[r], "ranks disagree");
+        }
+        assert_eq!(a[0], b[0], "not reproducible across runs");
+    }
+
+    #[test]
+    fn reduce_scatter_returns_own_summed_shard() {
+        let out = run_world(4, |c| {
+            let data: Vec<f32> = (0..8).map(|i| (i + c.rank() * 8) as f32).collect();
+            let offsets: Vec<usize> = (0..=4).map(|i| i * 2).collect();
+            c.reduce_scatter_sum(data, &offsets)
+        });
+        // Column sums: sum_r (i + 8r) = 4i + 48 for element i.
+        for (rank, shard) in out.iter().enumerate() {
+            let expect: Vec<f32> = (rank * 2..rank * 2 + 2).map(|i| (4 * i + 48) as f32).collect();
+            assert_eq!(shard, &expect);
+        }
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let out = run_world(3, |c| {
+            // Ragged shards: rank r contributes r+1 copies of r.
+            let shard = vec![c.rank() as f32; c.rank() + 1];
+            c.all_gather(shard)
+        });
+        let expect = vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0];
+        for r in &out {
+            assert_eq!(r, &expect);
+        }
+    }
+
+    #[test]
+    fn broadcast_replicates_root() {
+        let out = run_world(4, |c| {
+            let data = if c.rank() == 2 {
+                Some(vec![7.0, 8.0, 9.0])
+            } else {
+                None
+            };
+            c.broadcast(2, data)
+        });
+        for r in &out {
+            assert_eq!(r, &vec![7.0, 8.0, 9.0]);
+        }
+    }
+
+    #[test]
+    fn collectives_compose_over_multiple_rounds() {
+        // Reuse the same world for a sequence of collectives (barrier
+        // generations must line up).
+        let out = run_world(2, |c| {
+            let a = c.all_reduce_sum(vec![1.0; 4]);
+            let g = c.all_gather(vec![c.rank() as f32]);
+            let b = c.broadcast(0, if c.rank() == 0 { Some(a.clone()) } else { None });
+            (a, g, b)
+        });
+        for (a, g, b) in &out {
+            assert_eq!(a, &vec![2.0; 4]);
+            assert_eq!(g, &vec![0.0, 1.0]);
+            assert_eq!(b, &vec![2.0; 4]);
+        }
+    }
+
+    #[test]
+    fn traffic_counters_follow_ring_model() {
+        let out = run_world(4, |c| {
+            let _ = c.all_reduce_sum(vec![0.0; 100]);
+            c.traffic_elems()
+        });
+        // 2·(4−1)/4·100 = 150 elements per rank.
+        for t in out {
+            assert_eq!(t, 150);
+        }
+    }
+
+    #[test]
+    fn world_of_one_is_identity() {
+        let out = run_world(1, |c| {
+            let a = c.all_reduce_sum(vec![3.0, 4.0]);
+            let s = c.reduce_scatter_sum(vec![5.0, 6.0], &[0, 2]);
+            let g = c.all_gather(vec![7.0]);
+            (a, s, g)
+        });
+        assert_eq!(out[0].0, vec![3.0, 4.0]);
+        assert_eq!(out[0].1, vec![5.0, 6.0]);
+        assert_eq!(out[0].2, vec![7.0]);
+    }
+}

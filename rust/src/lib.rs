@@ -25,6 +25,7 @@ pub mod memory;
 pub mod metrics;
 pub mod model;
 pub mod optim;
+pub mod parallel;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

@@ -92,11 +92,15 @@ pub fn svd(a: &Matrix) -> Svd {
         // SVD of Aᵀ then swap factors: A = U S Vᵀ ⇔ Aᵀ = V S Uᵀ.
         let at = a.transpose();
         let svd_t = svd(&at);
-        let out = Svd {
+        let mut out = Svd {
             u: svd_t.vt.transpose(),
             s: svd_t.s,
             vt: svd_t.u.transpose(),
         };
+        // The recursive call normalized signs against *its* U (our V); the
+        // §4.1.3 convention is dominant-entry-of-U, so re-apply on the
+        // swapped factors or tall and wide inputs silently disagree.
+        fix_signs(&mut out);
         out
     }
 }
@@ -229,19 +233,51 @@ mod tests {
 
     #[test]
     fn fix_signs_dominant_positive_and_reconstruction_kept() {
-        let mut rng = Pcg64::new(5, 0);
-        let a = Matrix::randn(6, 9, 1.0, &mut rng);
-        let s = svd(&a); // fix_signs applied inside
-        for c in 0..s.s.len() {
-            let col = s.u.col(c);
-            let dom = col
+        // Both aspect ratios: the tall path swaps factors after the
+        // recursive wide SVD and must re-apply the §4.1.3 convention
+        // (regression: it used to return without fix_signs).
+        for (rows, cols, seed) in [(6usize, 9usize, 5u64), (9, 6, 6), (20, 7, 7)] {
+            let mut rng = Pcg64::new(seed, 0);
+            let a = Matrix::randn(rows, cols, 1.0, &mut rng);
+            let s = svd(&a); // fix_signs applied inside
+            for c in 0..s.s.len() {
+                let col = s.u.col(c);
+                let dom = col
+                    .iter()
+                    .cloned()
+                    .max_by(|a, b| a.abs().partial_cmp(&b.abs()).unwrap())
+                    .unwrap();
+                assert!(
+                    dom >= 0.0,
+                    "{rows}x{cols}: column {c} dominant sign negative"
+                );
+            }
+            reconstruct_close(&a, &s, 1e-3);
+        }
+    }
+
+    #[test]
+    fn tall_and_wide_svd_share_the_sign_convention() {
+        // svd(A) and svd(Aᵀ) describe the same factorization with U and V
+        // swapped; under the dominant-entry-of-U convention the tall U must
+        // match the wide V up to the convention's own tie behaviour — check
+        // via reconstruction and per-column dominant signs on both.
+        let mut rng = Pcg64::new(8, 0);
+        let a = Matrix::randn(14, 5, 1.0, &mut rng);
+        let tall = svd(&a);
+        let wide = svd(&a.transpose());
+        for c in 0..tall.s.len() {
+            assert!((tall.s[c] - wide.s[c]).abs() < 1e-3 * tall.s[0]);
+            let dom_tall = tall
+                .u
+                .col(c)
                 .iter()
                 .cloned()
-                .max_by(|a, b| a.abs().partial_cmp(&b.abs()).unwrap())
+                .max_by(|x, y| x.abs().partial_cmp(&y.abs()).unwrap())
                 .unwrap();
-            assert!(dom >= 0.0, "column {c} dominant sign negative");
+            assert!(dom_tall >= 0.0, "tall column {c} violates convention");
         }
-        reconstruct_close(&a, &s, 1e-3);
+        reconstruct_close(&a, &tall, 1e-3);
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //!
 //! `p` is oversampling (default 8), `q` power iterations (default 1, enough
 //! for the sharply-decaying gradient spectra GaLore exploits).
+//!
+//! The tall-matrix products (A·Ω, A·Qz, Aᵀ·Q) dominate the refresh cost at
+//! gradient scale; they run through the multi-threaded GEMM kernels
+//! (`tensor::matmul`), which fan row-panels across the scoped worker pool
+//! above the size cutover while staying bitwise identical to serial — so
+//! `deterministic_given_rng_state` holds for every thread count.
 
 use super::{fix_signs, qr_q_only, svd, Svd};
 use crate::tensor::Matrix;
@@ -75,14 +81,18 @@ pub fn randomized_svd(a: &Matrix, rank: usize, opts: RandSvdOpts, rng: &mut Pcg6
         fix_signs(&mut out);
         out
     } else {
-        // Tall matrix: factor Aᵀ (wide) and swap.
+        // Tall matrix: factor Aᵀ (wide) and swap. Re-apply the §4.1.3
+        // dominant-entry-of-U convention on the swapped factors so tall
+        // and wide inputs agree (same fix as `linalg::svd`).
         let at = a.transpose();
         let s_t = randomized_svd(&at, rank, opts, rng);
-        Svd {
+        let mut out = Svd {
             u: s_t.vt.transpose(),
             s: s_t.s,
             vt: s_t.u.transpose(),
-        }
+        };
+        fix_signs(&mut out);
+        out
     }
 }
 

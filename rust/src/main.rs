@@ -64,8 +64,8 @@ const HELP: &str = "galore2 — GaLore 2 pre-training framework
 USAGE: galore2 <train|eval|memory|svd|presets> [flags]
   train   --config FILE | --preset P --optimizer O --steps N --lr X
           --rank R --update-freq T --alpha A --projection KIND
-          --parallel single|fsdp --world N --engine native|pjrt
-          [--save-final] [--eval-downstream]
+          --parallel single|fsdp --world N --threads N
+          --engine native|pjrt [--save-final] [--eval-downstream]
   eval    --config FILE --checkpoint CKPT [--questions N]
   memory  --preset P [--seq N] [--world N]
   svd     [--m N] [--n N] [--rank R] [--iters K]

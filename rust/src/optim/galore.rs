@@ -69,6 +69,40 @@ impl Default for GaLoreCfg {
     }
 }
 
+impl GaLoreCfg {
+    /// Whether an (m, n) parameter is projected under this config. The
+    /// single source of truth for the optimizer AND the FSDP coordinator
+    /// (which must decide on the *full* shape before sharding).
+    pub fn projects(&self, m: usize, n: usize) -> bool {
+        m >= self.min_dim && n >= self.min_dim && self.rank <= m.min(n)
+    }
+}
+
+/// Rotate a first moment into a new basis (MomentHandling::Project):
+/// C = P_newᵀ·P_old (r×r), then Left: M ← C·M, Right: M ← M·Cᵀ. Shared by
+/// the single-process refresh and the FSDP preset path so the two can
+/// never drift. No-op when the moment is lazily unsized or shapes
+/// disagree (rank changed between refreshes).
+fn rotate_moment(
+    m: &mut [f32],
+    p_old: &Matrix,
+    p_new: &Matrix,
+    side: super::ProjectorSide,
+    lm: usize,
+    ln: usize,
+) {
+    if m.is_empty() || lm * ln != m.len() || p_old.shape() != p_new.shape() {
+        return;
+    }
+    let c = p_new.matmul_at_b(p_old); // r×r
+    let m_mat = Matrix::from_vec(lm, ln, m.to_vec());
+    let rotated = match side {
+        super::ProjectorSide::Left => c.matmul(&m_mat),
+        super::ProjectorSide::Right => m_mat.matmul_a_bt(&c),
+    };
+    m.copy_from_slice(&rotated.data);
+}
+
 enum ParamState {
     /// Low-rank path: projector + low-rank Adam moments.
     LowRank {
@@ -105,9 +139,7 @@ impl GaLore {
     }
 
     fn uses_projection(&self, shape: (usize, usize)) -> bool {
-        let (m, n) = shape;
-        m >= self.cfg.min_dim && n >= self.cfg.min_dim && self.cfg.rank < m.min(n)
-            || (m >= self.cfg.min_dim && n >= self.cfg.min_dim && self.cfg.rank == m.min(n))
+        self.cfg.projects(shape.0, shape.1)
     }
 
     pub fn refresh_count(&self) -> u64 {
@@ -143,15 +175,45 @@ impl GaLore {
     /// Install a complete projector for a parameter (FSDP external-subspace
     /// mode). `side` must be derived from the FULL parameter shape; moments
     /// are (re)created lazily at the next `step_param` to match the local
-    /// shard. Existing moments are kept when shapes still match
-    /// (MomentHandling::Keep semantics).
+    /// shard. Existing moments follow `cfg.moments`, mirroring the
+    /// single-process refresh: Keep leaves them, Reset zeroes them, Project
+    /// rotates M into the new basis via C = P_newᵀ P_old.
     pub fn preset_projector(&mut self, idx: usize, projector: Projector) {
         match self.states.get_mut(&idx) {
             Some(ParamState::LowRank {
                 projector: p,
+                m,
+                v,
                 last_refresh,
-                ..
             }) => {
+                match self.cfg.moments {
+                    MomentHandling::Keep => {}
+                    MomentHandling::Reset => {
+                        m.iter_mut().for_each(|x| *x = 0.0);
+                        v.iter_mut().for_each(|x| *x = 0.0);
+                    }
+                    MomentHandling::Project => {
+                        // Recover the moment's low-rank shape from its
+                        // length + the projector geometry (the shard's full
+                        // shape is unknown here); lazily-unsized moments
+                        // and rank changes are skipped inside the helper.
+                        let r = projector.rank;
+                        if r > 0 && m.len() % r == 0 {
+                            let (lm, ln) = match projector.side {
+                                super::ProjectorSide::Left => (r, m.len() / r),
+                                super::ProjectorSide::Right => (m.len() / r, r),
+                            };
+                            rotate_moment(
+                                m,
+                                &p.export_p(),
+                                &projector.export_p(),
+                                projector.side,
+                                lm,
+                                ln,
+                            );
+                        }
+                    }
+                }
                 *p = projector;
                 *last_refresh = self.t;
             }
@@ -246,16 +308,15 @@ impl Optimizer for GaLore {
                         MomentHandling::Project => {
                             let p_old = projector.export_p();
                             projector.refresh(grad, &mut self.rng);
-                            let p_new = projector.export_p();
-                            // Rotation in the low-rank index: C = P_newᵀ P_old (r×r).
-                            let c = p_new.matmul_at_b(&p_old);
                             let (lm, ln) = projector.low_rank_shape(pm, pn);
-                            let m_mat = Matrix::from_vec(lm, ln, m.clone());
-                            let rotated = match projector.side {
-                                super::ProjectorSide::Left => c.matmul(&m_mat),
-                                super::ProjectorSide::Right => m_mat.matmul_a_bt(&c),
-                            };
-                            m.copy_from_slice(&rotated.data);
+                            rotate_moment(
+                                m,
+                                &p_old,
+                                &projector.export_p(),
+                                projector.side,
+                                lm,
+                                ln,
+                            );
                         }
                     }
                     *last_refresh = self.t;
@@ -575,6 +636,45 @@ mod tests {
             }
             let rel = w.sub(&target).frobenius_norm() / target.frobenius_norm();
             assert!(rel < 0.25, "{moments:?} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn preset_projector_honours_moment_handling() {
+        // FSDP refresh path: preset_projector must apply cfg.moments like
+        // the single-process refresh does (regression: it always kept).
+        let mut rng = Pcg64::new(8, 1);
+        let g = decaying_gradient(8, 24, &mut rng);
+        for moments in [MomentHandling::Keep, MomentHandling::Reset] {
+            let cfg = GaLoreCfg {
+                rank: 4,
+                update_freq: 1000,
+                moments,
+                external_subspace: true,
+                ..GaLoreCfg::default()
+            };
+            let mut opt = GaLore::new(cfg, AdamCfg::default(), 3);
+            opt.begin_step(0);
+            let p0 = Projector::from_gradient(&g, 4, ProjectionKind::RandSvd, &mut rng);
+            opt.preset_projector(0, p0);
+            let mut w = Matrix::zeros(8, 24);
+            opt.step_param(0, &mut w, &g, 0.05);
+            let bytes_before = opt.export_state();
+            let p1 = Projector::from_gradient(&g, 4, ProjectionKind::RandSvd, &mut rng);
+            opt.begin_step(1);
+            opt.preset_projector(0, p1);
+            let bytes_after = opt.export_state();
+            let kept = bytes_before.len() == bytes_after.len();
+            assert!(kept, "state layout must be stable across refreshes");
+            match moments {
+                MomentHandling::Reset => {
+                    // After reset, a fresh step behaves like step-0 Adam.
+                    let mut w2 = Matrix::zeros(8, 24);
+                    opt.step_param(0, &mut w2, &Matrix::zeros(8, 24), 0.05);
+                    assert!(w2.max_abs() < 1e-6, "moments not reset");
+                }
+                _ => {}
+            }
         }
     }
 

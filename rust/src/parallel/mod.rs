@@ -1,0 +1,190 @@
+//! Scoped worker pool for the compute hot path (std-only, no rayon).
+//!
+//! The GEMM kernels, the randomized-SVD range finder and the FSDP engine
+//! all fan work out through this module. Work units are *disjoint* `&mut`
+//! slices of the output buffer, so parallel execution is data-race-free by
+//! construction and — because every unit computes exactly what the serial
+//! kernel would — results are **bitwise identical** for any thread count
+//! (the determinism contract stated in `util/rng.rs`).
+//!
+//! Thread-count resolution (first match wins):
+//!   1. an explicit per-call request (`MatmulPlan::threads` > 0),
+//!   2. a process-wide override via [`set_default_threads`]
+//!      (`[parallel] threads` in the config / `--threads` on the CLI),
+//!   3. the `GALORE2_THREADS` environment variable,
+//!   4. `std::thread::available_parallelism()`.
+//!
+//! Threads are spawned with `std::thread::scope`, so borrowing inputs from
+//! the caller's stack needs no `Arc`s; spawn overhead (~tens of µs) is
+//! amortized by the serial-fallback size thresholds at the call sites.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide thread-count override; 0 means "not set".
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// How many sibling compute threads share the machine with this one.
+    /// Distributed workers set this to the world size so nested kernels
+    /// split the core budget instead of oversubscribing it world-fold.
+    static THREAD_SHARE: Cell<usize> = const { Cell::new(1) };
+}
+
+/// Declare that the *current thread* is one of `siblings` concurrent
+/// compute threads (e.g. an FSDP worker in a world of that size). Auto
+/// thread resolution on this thread divides the hardware budget
+/// accordingly; explicit per-call requests are unaffected.
+pub fn set_thread_share(siblings: usize) {
+    THREAD_SHARE.with(|c| c.set(siblings.max(1)));
+}
+
+/// Hardware parallelism (1 if the query fails).
+pub fn available() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Set the process-wide default worker count. 0 restores auto-detection.
+pub fn set_default_threads(n: usize) {
+    DEFAULT_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The default worker count: override > `GALORE2_THREADS` > hardware,
+/// divided by this thread's [`set_thread_share`] (so a world of FSDP
+/// workers collectively uses one machine's worth of threads).
+pub fn default_threads() -> usize {
+    let base = {
+        let forced = DEFAULT_THREADS.load(Ordering::Relaxed);
+        if forced > 0 {
+            forced
+        } else {
+            std::env::var("GALORE2_THREADS")
+                .ok()
+                .and_then(|s| s.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(available)
+        }
+    };
+    let share = THREAD_SHARE.with(|c| c.get()).max(1);
+    (base / share).max(1)
+}
+
+/// Resolve a per-call request: 0 means "use the default".
+pub fn resolve(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        default_threads()
+    }
+}
+
+/// Run `f(chunk_index, chunk)` over consecutive disjoint `chunk_len`-sized
+/// chunks of `data` (the last chunk may be short), using up to `threads`
+/// scoped OS threads. Chunks are handed out through a shared queue so
+/// uneven chunks still balance; since every chunk is an independent pure
+/// function of its index, scheduling order cannot affect the result.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "par_chunks_mut: chunk_len must be > 0");
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let workers = threads.max(1).min(n_chunks);
+    if workers <= 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let queue = Mutex::new(data.chunks_mut(chunk_len).enumerate());
+    let queue = &queue;
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(move || loop {
+                // Hold the lock only for the hand-off, not the work.
+                let next = queue.lock().unwrap().next();
+                match next {
+                    Some((i, chunk)) => f(i, chunk),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_every_element_exactly_once() {
+        let mut data = vec![0u32; 1003]; // deliberately not a chunk multiple
+        par_chunks_mut(&mut data, 64, 4, |_, chunk| {
+            for x in chunk.iter_mut() {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn chunk_indices_are_consecutive() {
+        let mut data = vec![0usize; 300];
+        par_chunks_mut(&mut data, 100, 3, |i, chunk| {
+            for x in chunk.iter_mut() {
+                *x = i;
+            }
+        });
+        assert_eq!(data[0], 0);
+        assert_eq!(data[150], 1);
+        assert_eq!(data[299], 2);
+    }
+
+    #[test]
+    fn more_threads_than_chunks_is_fine() {
+        let mut data = vec![0u8; 10];
+        par_chunks_mut(&mut data, 7, 16, |_, chunk| {
+            for x in chunk.iter_mut() {
+                *x = 9;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 9));
+    }
+
+    #[test]
+    fn empty_input_is_a_noop() {
+        let mut data: Vec<u8> = Vec::new();
+        par_chunks_mut(&mut data, 8, 4, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn resolution_order_and_thread_share() {
+        // One test (not several) because the process-wide override is
+        // shared state — concurrent test threads would race on it.
+        assert_eq!(resolve(3), 3);
+        set_default_threads(2);
+        assert_eq!(resolve(0), 2);
+        // Thread share divides the budget, but only on the thread that
+        // declared it — run on a fresh OS thread so nothing leaks out.
+        std::thread::spawn(|| {
+            set_default_threads(8);
+            set_thread_share(4);
+            assert_eq!(resolve(0), 2);
+            set_thread_share(100); // over-subscribed world still gets 1
+            assert_eq!(resolve(0), 1);
+            assert_eq!(resolve(6), 6, "explicit requests bypass the share");
+        })
+        .join()
+        .unwrap();
+        set_default_threads(0);
+        assert!(resolve(0) >= 1);
+    }
+}

@@ -9,8 +9,13 @@
 //! every tuple element as an f32 vector.
 
 mod manifest;
+mod xla_stub;
 
 pub use manifest::{KernelEntry, Manifest, ParamSpec};
+
+// Dependency-light build: the `xla` name resolves to the in-repo stub. Link
+// the real xla-rs crate by swapping this alias (see xla_stub.rs docs).
+use xla_stub as xla;
 
 use crate::tensor::Matrix;
 use anyhow::{Context, Result};

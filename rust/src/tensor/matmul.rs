@@ -1,9 +1,14 @@
-//! Blocked single-threaded GEMM kernels.
+//! Blocked, multi-threaded GEMM kernels.
 //!
 //! The GaLore projection (R = PᵀG) and reprojection (G̃ = P·N) are BLAS-3
 //! calls on every layer every step — the L3 native-engine hot path. The
 //! kernels here use cache blocking + an 8-wide inner loop the compiler can
-//! vectorize; the §Perf pass tunes the block sizes (see EXPERIMENTS.md).
+//! vectorize, and partition disjoint row-panels of C across the scoped
+//! worker pool (`crate::parallel`). Each thread writes its own `&mut`
+//! panel and accumulates every output element in exactly the serial order,
+//! so parallel results are **bitwise identical** to the single-threaded
+//! kernels for any thread count. Block sizes and the parallel cutover are
+//! tuned by `benches/throughput.rs` (see EXPERIMENTS.md §Perf).
 //!
 //! Three variants avoid materializing transposes:
 //!   matmul      C = A · B
@@ -11,14 +16,22 @@
 //!   matmul_a_bt C = A · Bᵀ
 
 use super::Matrix;
+use crate::parallel;
 
-/// Tuning parameters for the blocked GEMM. Defaults were selected by the
-/// perf sweep in `benches/throughput.rs` (see EXPERIMENTS.md §Perf).
+/// Below this many FLOPs (2·m·k·n) the kernels stay serial: thread spawn
+/// costs ~tens of µs, which only amortizes on matrices at least this big.
+const PAR_MIN_FLOPS: f64 = 4.0e6;
+
+/// Tuning parameters for the blocked GEMM. Block defaults were selected by
+/// the perf sweep in `benches/throughput.rs` (see EXPERIMENTS.md §Perf).
 #[derive(Clone, Copy, Debug)]
 pub struct MatmulPlan {
     pub mc: usize, // rows of A per block
     pub kc: usize, // shared dim per block
     pub nc: usize, // cols of B per block
+    /// Worker threads for row-panel parallelism; 0 = use the process
+    /// default (`parallel::default_threads()`).
+    pub threads: usize,
 }
 
 impl Default for MatmulPlan {
@@ -27,8 +40,42 @@ impl Default for MatmulPlan {
             mc: 64,
             kc: 256,
             nc: 256,
+            threads: 0,
         }
     }
+}
+
+impl MatmulPlan {
+    /// A plan pinned to one thread (serial reference execution).
+    pub fn serial() -> MatmulPlan {
+        MatmulPlan {
+            threads: 1,
+            ..MatmulPlan::default()
+        }
+    }
+
+    /// A plan pinned to an explicit thread count.
+    pub fn with_threads(threads: usize) -> MatmulPlan {
+        MatmulPlan {
+            threads,
+            ..MatmulPlan::default()
+        }
+    }
+
+    /// Threads to use for an (m, k, n) product: serial below the FLOP
+    /// threshold, otherwise the resolved request capped by row count.
+    fn threads_for(&self, m: usize, k: usize, n: usize) -> usize {
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        if flops < PAR_MIN_FLOPS {
+            return 1;
+        }
+        parallel::resolve(self.threads).min(m).max(1)
+    }
+}
+
+/// Rows per parallel panel for an m-row output across `threads` workers.
+fn panel_rows(m: usize, threads: usize) -> usize {
+    ((m + threads - 1) / threads).max(1)
 }
 
 /// C = A (m×k) · B (k×n).
@@ -44,22 +91,47 @@ pub fn matmul_with_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
     );
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = Matrix::zeros(m, n);
+    if c.data.is_empty() {
+        return c;
+    }
+    let threads = plan.threads_for(m, k, n);
+    if threads <= 1 {
+        mm_panel(a, b, plan, 0, m, &mut c.data);
+    } else {
+        let rows = panel_rows(m, threads);
+        parallel::par_chunks_mut(&mut c.data, rows * n, threads, |ci, panel| {
+            mm_panel(a, b, plan, ci * rows, panel.len() / n, panel);
+        });
+    }
+    c
+}
+
+/// The blocked kernel for C's rows [row0, row0+rows), writing into the
+/// caller-provided panel (local row 0 = global row `row0`). The serial
+/// path calls this once with the full range; the parallel path calls it
+/// per disjoint panel. Per output element the accumulation order over the
+/// shared dim is identical either way (kk blocks ascending, p ascending),
+/// which is what makes thread count invisible in the bits.
+fn mm_panel(a: &Matrix, b: &Matrix, plan: MatmulPlan, row0: usize, rows: usize, c: &mut [f32]) {
+    let (k, n) = (a.cols, b.cols);
+    debug_assert_eq!(c.len(), rows * n);
     // i-k-j loop order: the inner j loop streams contiguous rows of B and C,
     // which auto-vectorizes well; blocking keeps the B panel in cache.
     for kk in (0..k).step_by(plan.kc) {
         let k_end = (kk + plan.kc).min(k);
-        for ii in (0..m).step_by(plan.mc) {
-            let i_end = (ii + plan.mc).min(m);
+        for ii in (0..rows).step_by(plan.mc) {
+            let i_end = (ii + plan.mc).min(rows);
             for jj in (0..n).step_by(plan.nc) {
                 let j_end = (jj + plan.nc).min(n);
                 for i in ii..i_end {
-                    let a_row = &a.data[i * k..(i + 1) * k];
-                    let c_row = &mut c.data[i * n + jj..i * n + j_end];
+                    let gi = row0 + i;
+                    let a_row = &a.data[gi * k..(gi + 1) * k];
+                    let c_row = &mut c[i * n + jj..i * n + j_end];
                     for p in kk..k_end {
+                        // NOTE: no `av == 0.0` skip — 0·NaN and 0·Inf must
+                        // propagate NaN (IEEE 754), and the old fast-path
+                        // silently dropped them (see the regression test).
                         let av = a_row[p];
-                        if av == 0.0 {
-                            continue;
-                        }
                         let b_row = &b.data[p * n + jj..p * n + j_end];
                         axpy(c_row, b_row, av);
                     }
@@ -67,12 +139,15 @@ pub fn matmul_with_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
             }
         }
     }
-    c
 }
 
 /// C = Aᵀ (k×m → m taken as a.cols) · B. A is k×m row-major; result is m×n.
 /// This is the GaLore projection: R = Pᵀ G with P (m×r) ⇒ call with a=P, b=G.
 pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_at_b_with_plan(a, b, MatmulPlan::default())
+}
+
+pub fn matmul_at_b_with_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
     assert_eq!(
         a.rows, b.rows,
         "matmul_at_b shape mismatch: ({}x{})ᵀ · {}x{}",
@@ -80,6 +155,28 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
     );
     let (k, m, n) = (a.rows, a.cols, b.cols);
     let mut c = Matrix::zeros(m, n);
+    if c.data.is_empty() {
+        return c;
+    }
+    let threads = plan.threads_for(m, k, n);
+    if threads <= 1 {
+        atb_panel(a, b, 0, m, &mut c.data);
+    } else {
+        let rows = panel_rows(m, threads);
+        parallel::par_chunks_mut(&mut c.data, rows * n, threads, |ci, panel| {
+            atb_panel(a, b, ci * rows, panel.len() / n, panel);
+        });
+    }
+    c
+}
+
+/// Aᵀ·B kernel for C's rows [row0, row0+rows) — C rows index A's *columns*,
+/// so each panel reads all of A and B but owns a disjoint output slice.
+/// Accumulation over the shared index p is ascending exactly as in the
+/// serial kernel, preserving bitwise identity.
+fn atb_panel(a: &Matrix, b: &Matrix, row0: usize, rows: usize, c: &mut [f32]) {
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    debug_assert_eq!(c.len(), rows * n);
     // For each shared index p, rank-1 update C += a_row_pᵀ ⊗ b_row_p.
     // Both a and b rows are contiguous; the inner loop over j vectorizes.
     const KC: usize = 128;
@@ -88,21 +185,22 @@ pub fn matmul_at_b(a: &Matrix, b: &Matrix) -> Matrix {
         for p in pp..p_end {
             let a_row = &a.data[p * m..(p + 1) * m];
             let b_row = &b.data[p * n..(p + 1) * n];
-            for i in 0..m {
-                let av = a_row[i];
-                if av == 0.0 {
-                    continue;
-                }
-                axpy(&mut c.data[i * n..(i + 1) * n], b_row, av);
+            for i in 0..rows {
+                // No zero skip — NaN/Inf in B's row must propagate.
+                let av = a_row[row0 + i];
+                axpy(&mut c[i * n..(i + 1) * n], b_row, av);
             }
         }
     }
-    c
 }
 
 /// C = A (m×k) · Bᵀ with B (n×k). Result m×n. Dot-product formulation —
 /// both operands stream contiguously.
 pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_a_bt_with_plan(a, b, MatmulPlan::default())
+}
+
+pub fn matmul_a_bt_with_plan(a: &Matrix, b: &Matrix, plan: MatmulPlan) -> Matrix {
     assert_eq!(
         a.cols, b.cols,
         "matmul_a_bt shape mismatch: {}x{} · ({}x{})ᵀ",
@@ -110,14 +208,32 @@ pub fn matmul_a_bt(a: &Matrix, b: &Matrix) -> Matrix {
     );
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut c = Matrix::zeros(m, n);
-    for i in 0..m {
-        let a_row = &a.data[i * k..(i + 1) * k];
-        for j in 0..n {
-            let b_row = &b.data[j * k..(j + 1) * k];
-            c.data[i * n + j] = dot(a_row, b_row);
-        }
+    if c.data.is_empty() {
+        return c;
+    }
+    let threads = plan.threads_for(m, k, n);
+    if threads <= 1 {
+        abt_panel(a, b, 0, m, &mut c.data);
+    } else {
+        let rows = panel_rows(m, threads);
+        parallel::par_chunks_mut(&mut c.data, rows * n, threads, |ci, panel| {
+            abt_panel(a, b, ci * rows, panel.len() / n, panel);
+        });
     }
     c
+}
+
+fn abt_panel(a: &Matrix, b: &Matrix, row0: usize, rows: usize, c: &mut [f32]) {
+    let (k, n) = (a.cols, b.rows);
+    debug_assert_eq!(c.len(), rows * n);
+    for i in 0..rows {
+        let gi = row0 + i;
+        let a_row = &a.data[gi * k..(gi + 1) * k];
+        for j in 0..n {
+            let b_row = &b.data[j * k..(j + 1) * k];
+            c[i * n + j] = dot(a_row, b_row);
+        }
+    }
 }
 
 /// y += alpha * x, unrolled 8-wide.
@@ -220,8 +336,76 @@ mod tests {
         let b = Matrix::randn(70, 50, 1.0, &mut rng);
         let base = matmul(&a, &b);
         for &(mc, kc, nc) in &[(8, 8, 8), (16, 64, 32), (128, 512, 512)] {
-            let alt = matmul_with_plan(&a, &b, MatmulPlan { mc, kc, nc });
+            let plan = MatmulPlan {
+                mc,
+                kc,
+                nc,
+                ..MatmulPlan::default()
+            };
+            let alt = matmul_with_plan(&a, &b, plan);
             prop::assert_close(&base.data, &alt.data, 1e-4, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn zero_times_nan_propagates() {
+        // Regression: the old `av == 0.0 { continue }` fast path dropped
+        // NaN/Inf contributions from B (0·NaN must be NaN per IEEE 754).
+        let a = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        let b = Matrix::from_vec(2, 2, vec![f32::NAN, f32::INFINITY, 1.0, 2.0]);
+        let c = matmul(&a, &b);
+        assert!(c.at(0, 0).is_nan(), "0·NaN lost: {:?}", c.data);
+        assert!(c.at(0, 1).is_nan(), "0·Inf lost: {:?}", c.data);
+
+        // Same property for the Aᵀ·B projection kernel: a = P (2×1) with a
+        // zero entry, b rows containing NaN.
+        let p = Matrix::from_vec(2, 1, vec![0.0, 1.0]);
+        let g = Matrix::from_vec(2, 2, vec![f32::NAN, 1.0, 2.0, 3.0]);
+        let r = matmul_at_b(&p, &g);
+        assert!(r.at(0, 0).is_nan(), "Aᵀ·B 0·NaN lost: {:?}", r.data);
+    }
+
+    #[test]
+    fn parallel_bitwise_identical_to_serial() {
+        // Above the FLOP cutover so the threaded path actually engages:
+        // 2·193·161·201 ≈ 12.5 MFLOP.
+        let mut rng = Pcg64::new(10, 0);
+        let a = Matrix::randn(193, 161, 1.0, &mut rng);
+        let b = Matrix::randn(161, 201, 1.0, &mut rng);
+        let serial = matmul_with_plan(&a, &b, MatmulPlan::serial());
+        for threads in [2, 3, 4, 8] {
+            let par = matmul_with_plan(&a, &b, MatmulPlan::with_threads(threads));
+            assert_eq!(
+                serial.data, par.data,
+                "matmul not bitwise stable at {threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_at_b_and_a_bt_bitwise_identical_to_serial() {
+        let mut rng = Pcg64::new(11, 0);
+        // Aᵀ·B: A is k×m (projection layout), result 180×210.
+        let a = Matrix::randn(150, 180, 1.0, &mut rng);
+        let b = Matrix::randn(150, 210, 1.0, &mut rng);
+        let serial = matmul_at_b_with_plan(&a, &b, MatmulPlan::serial());
+        for threads in [2, 4, 7] {
+            let par = matmul_at_b_with_plan(&a, &b, MatmulPlan::with_threads(threads));
+            assert_eq!(
+                serial.data, par.data,
+                "matmul_at_b not bitwise stable at {threads} threads"
+            );
+        }
+        // A·Bᵀ: both 170×190-ish.
+        let a2 = Matrix::randn(170, 190, 1.0, &mut rng);
+        let b2 = Matrix::randn(165, 190, 1.0, &mut rng);
+        let serial2 = matmul_a_bt_with_plan(&a2, &b2, MatmulPlan::serial());
+        for threads in [2, 4] {
+            let par2 = matmul_a_bt_with_plan(&a2, &b2, MatmulPlan::with_threads(threads));
+            assert_eq!(
+                serial2.data, par2.data,
+                "matmul_a_bt not bitwise stable at {threads} threads"
+            );
         }
     }
 

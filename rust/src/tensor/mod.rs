@@ -8,7 +8,10 @@
 
 mod matmul;
 
-pub use matmul::{dot, matmul, matmul_a_bt, matmul_at_b, matmul_with_plan, MatmulPlan};
+pub use matmul::{
+    dot, matmul, matmul_a_bt, matmul_a_bt_with_plan, matmul_at_b, matmul_at_b_with_plan,
+    matmul_with_plan, MatmulPlan,
+};
 
 use crate::util::rng::Pcg64;
 use std::fmt;

@@ -9,6 +9,13 @@
 //! Under FSDP/DDP the gradients of each rank's microbatch are computed via
 //! the same artifact, then handed to the distributed engine whose worker
 //! threads own shards + optimizer state (rust/src/dist/).
+//!
+//! Parallel execution: `cfg.threads` sets the process-wide worker-pool
+//! default (`crate::parallel`), so the per-layer optimizer stepping below
+//! fans its projection/reprojection GEMMs and SVD refreshes across cores;
+//! under FSDP the per-layer loop itself additionally runs concurrently
+//! across the cluster's worker threads. Both layers of parallelism are
+//! bitwise deterministic (fixed-tree reductions, panel-local kernels).
 
 use crate::checkpoint::Checkpoint;
 use crate::config::{Engine, ParallelMode, TrainConfig};
@@ -64,6 +71,8 @@ pub struct TrainOutcome {
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        // Pin the compute pool before any kernel runs; 0 keeps auto-detect.
+        crate::parallel::set_default_threads(cfg.threads);
         let llama = LlamaCfg::preset(&cfg.preset)
             .with_context(|| format!("unknown preset {:?}", cfg.preset))?;
         let manifest = Manifest::load(

@@ -1,0 +1,167 @@
+//! Integration: thread-count invariance of the parallel substrate.
+//!
+//! The contract (util/rng.rs): distributed + multi-threaded runs are
+//! bit-reproducible regardless of thread scheduling. These tests pin it
+//! end-to-end — parallel GEMM kernels, the randomized-SVD refresh, and a
+//! full FSDP training run must produce identical bits at 1, 2 and 4
+//! worker threads.
+
+use galore2::dist::{FsdpCluster, OptimizerSpec, ParamMeta};
+use galore2::linalg::{randomized_svd, RandSvdOpts};
+use galore2::optim::{AdamCfg, GaLoreCfg};
+use galore2::parallel;
+use galore2::tensor::{
+    matmul_a_bt_with_plan, matmul_at_b_with_plan, matmul_with_plan, Matrix, MatmulPlan,
+};
+use galore2::util::rng::Pcg64;
+use std::sync::Mutex;
+
+/// Serializes tests that mutate the process-wide thread default. (The
+/// kernels are thread-count invariant, so a race would not change results —
+/// holding the lock just keeps failure attribution clean.)
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn gemm_kernels_bitwise_identical_across_thread_counts() {
+    // Sizes above the parallel cutover (2·m·k·n ≥ 4e6 FLOP).
+    let mut rng = Pcg64::new(21, 0);
+    let a = Matrix::randn(320, 256, 1.0, &mut rng);
+    let b = Matrix::randn(256, 288, 1.0, &mut rng);
+    let serial = matmul_with_plan(&a, &b, MatmulPlan::serial());
+    let p = Matrix::randn(256, 192, 1.0, &mut rng); // projection layout (k×m)
+    let g = Matrix::randn(256, 300, 1.0, &mut rng);
+    let serial_atb = matmul_at_b_with_plan(&p, &g, MatmulPlan::serial());
+    let x = Matrix::randn(260, 240, 1.0, &mut rng);
+    let y = Matrix::randn(250, 240, 1.0, &mut rng);
+    let serial_abt = matmul_a_bt_with_plan(&x, &y, MatmulPlan::serial());
+    for threads in [1usize, 2, 4] {
+        let plan = MatmulPlan::with_threads(threads);
+        assert_eq!(
+            matmul_with_plan(&a, &b, plan).data,
+            serial.data,
+            "matmul differs at {threads} threads"
+        );
+        assert_eq!(
+            matmul_at_b_with_plan(&p, &g, plan).data,
+            serial_atb.data,
+            "matmul_at_b differs at {threads} threads"
+        );
+        assert_eq!(
+            matmul_a_bt_with_plan(&x, &y, plan).data,
+            serial_abt.data,
+            "matmul_a_bt differs at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn randomized_svd_bitwise_identical_across_thread_counts() {
+    let _g = lock();
+    let a = {
+        let mut rng = Pcg64::new(22, 0);
+        // Low-rank-plus-noise, large enough that the sketch products run
+        // through the threaded kernels.
+        let u = Matrix::randn(300, 24, 1.0, &mut rng);
+        let v = Matrix::randn(24, 500, 1.0, &mut rng);
+        u.matmul(&v)
+    };
+    let run = |threads: usize| {
+        parallel::set_default_threads(threads);
+        let out = randomized_svd(&a, 64, RandSvdOpts::default(), &mut Pcg64::new(7, 3));
+        parallel::set_default_threads(0);
+        out
+    };
+    let t1 = run(1);
+    for threads in [2usize, 4] {
+        let tn = run(threads);
+        assert_eq!(t1.u.data, tn.u.data, "U differs at {threads} threads");
+        assert_eq!(t1.s, tn.s, "S differs at {threads} threads");
+        assert_eq!(t1.vt.data, tn.vt.data, "Vᵀ differs at {threads} threads");
+    }
+}
+
+fn cluster_shapes() -> Vec<(usize, usize)> {
+    vec![(256, 384), (384, 256), (64, 64), (1, 128)]
+}
+
+fn cluster_metas() -> Vec<ParamMeta> {
+    cluster_shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, &(r, c))| ParamMeta {
+            name: format!("layer{i}"),
+            rows: r,
+            cols: c,
+        })
+        .collect()
+}
+
+/// A deterministic per-(step, rank) microbatch gradient set.
+fn grads_for(t: u64, rank: usize) -> Vec<Matrix> {
+    let mut rng = Pcg64::new(1000 + t, rank as u64);
+    cluster_shapes()
+        .iter()
+        .map(|&(r, c)| Matrix::randn(r, c, 0.05, &mut rng))
+        .collect()
+}
+
+/// Full FSDP GaLore run at a given worker-pool thread count.
+fn run_fsdp_galore(pool_threads: usize) -> Vec<Matrix> {
+    parallel::set_default_threads(pool_threads);
+    let world = 2;
+    let spec = OptimizerSpec::GaLore {
+        galore: GaLoreCfg {
+            rank: 64,
+            update_freq: 2,
+            alpha: 1.0,
+            ..GaLoreCfg::default()
+        },
+        adam: AdamCfg::default(),
+    };
+    let mut cluster = FsdpCluster::new(world, cluster_metas(), spec, 33);
+    let init: Vec<Matrix> = {
+        let mut rng = Pcg64::new(2, 0);
+        cluster_shapes()
+            .iter()
+            .map(|&(r, c)| Matrix::randn(r, c, 0.1, &mut rng))
+            .collect()
+    };
+    cluster.init_params(&init);
+    for t in 0..4 {
+        let per_rank: Vec<Vec<Matrix>> = (0..world).map(|r| grads_for(t, r)).collect();
+        cluster.step(t, per_rank, 0.02);
+    }
+    let out = cluster.gather_params();
+    parallel::set_default_threads(0);
+    out
+}
+
+#[test]
+fn fsdp_training_bitwise_identical_across_thread_counts() {
+    let _g = lock();
+    // Covers the whole §4.3 path at 1/2/4 pool threads: tree-reduced
+    // gradients, leader randomized SVD, P broadcast, sharded low-rank Adam.
+    let t1 = run_fsdp_galore(1);
+    let t2 = run_fsdp_galore(2);
+    let t4 = run_fsdp_galore(4);
+    for (idx, ((a, b), c)) in t1.iter().zip(&t2).zip(&t4).enumerate() {
+        assert_eq!(a.data, b.data, "param {idx}: 1 vs 2 pool threads differ");
+        assert_eq!(a.data, c.data, "param {idx}: 1 vs 4 pool threads differ");
+        assert!(a.data.iter().all(|x| x.is_finite()), "param {idx} non-finite");
+    }
+}
+
+#[test]
+fn fsdp_run_is_reproducible_across_repeats() {
+    let _g = lock();
+    // Same config, same seed, auto thread count: byte-identical params.
+    let a = run_fsdp_galore(0);
+    let b = run_fsdp_galore(0);
+    for (idx, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.data, y.data, "param {idx}: repeat run diverged");
+    }
+}
