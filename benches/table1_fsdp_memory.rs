@@ -109,14 +109,19 @@ fn main() -> anyhow::Result<()> {
         human_bytes(optimizer_state_bytes(OptimKind::Lora { rank: r }, m, n))
     );
 
-    println!("\n== live FSDP counters (llama-micro, world 4, 10 steps) ==\n");
-    for optimizer in ["adamw", "adam8bit", "galore"] {
+    println!("\n== live FSDP/DDP counters (llama-micro, world 4, 10 steps) ==\n");
+    for (mode, optimizer) in [
+        (ParallelMode::Fsdp, "adamw"),
+        (ParallelMode::Fsdp, "adam8bit"),
+        (ParallelMode::Fsdp, "galore"),
+        (ParallelMode::Ddp, "galore"),
+    ] {
         let cfg = TrainConfig {
             preset: "llama-micro".into(),
-            run_name: format!("bench-t1-{optimizer}"),
+            run_name: format!("bench-t1-{mode:?}-{optimizer}").to_lowercase(),
             out_dir: std::env::temp_dir().join("galore2_bench"),
             optimizer: optimizer.into(),
-            parallel: ParallelMode::Fsdp,
+            parallel: mode,
             world: 4,
             steps: 10,
             lr: 0.01,
@@ -131,15 +136,19 @@ fn main() -> anyhow::Result<()> {
         for t in 0..10 {
             trainer.train_step(t)?;
         }
-        let rep = &trainer.fsdp_memory().unwrap()[0];
+        let rep = &trainer.memory_reports().unwrap()[0];
         println!(
-            "{:<9} rank0: shard {:>10}  optim {:>10}  transient ≤ {:>10}",
+            "{:<4} {:<9} rank0: params {:>10}  optim {:>10}  transient ≤ {:>10}",
+            trainer.engine().name(),
             optimizer,
             human_bytes(rep.param_shard_bytes as u64),
             human_bytes(rep.optimizer_bytes as u64),
             human_bytes(rep.peak_transient_bytes as u64),
         );
     }
-    println!("\nordering check (live): galore optim < adam8bit optim < adamw optim");
+    println!(
+        "\nordering check (live): galore optim < adam8bit optim < adamw optim;\n\
+         the DDP galore row pays full-replica params + replicated moments"
+    );
     Ok(())
 }

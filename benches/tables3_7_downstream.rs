@@ -42,9 +42,9 @@ fn main() -> anyhow::Result<()> {
     })?;
 
     println!("\n-- scoring GaLore checkpoint --");
-    let g = coordinator::eval_params(&galore.cfg, &galore.params, questions)?;
+    let g = coordinator::eval_params(&galore.cfg, galore.params(), questions)?;
     println!("\n-- scoring Adam8bit checkpoint --");
-    let b = coordinator::eval_params(&baseline.cfg, &baseline.params, questions)?;
+    let b = coordinator::eval_params(&baseline.cfg, baseline.params(), questions)?;
 
     println!("\n{:<24} {:>8} {:>9} {:>7}   paper (Tables 3–7)", "category", "galore", "baseline", "chance");
     let paper = [

@@ -77,7 +77,9 @@ fn write_report(b: &Bench, speedup_4t: Option<f64>, hidden: usize, rank: usize) 
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bench::new();
-    let quick = std::env::var("BENCH_QUICK").is_ok();
+    // `cargo bench --bench throughput -- --quick` (CI smoke) or BENCH_QUICK=1.
+    let quick =
+        std::env::var("BENCH_QUICK").is_ok() || std::env::args().any(|a| a == "--quick");
 
     println!("== 1. optimizer step time (4 micro-shaped layers) ==");
     bench_optimizer(&mut b, "adamw", &mut AdamW::new(AdamCfg::default()));

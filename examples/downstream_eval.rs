@@ -27,7 +27,8 @@ fn train_or_load(
     }
     let trainer = coordinator::train(cfg)?;
     let cfg = trainer.cfg.clone();
-    Ok((cfg, trainer.params))
+    let params = trainer.params().to_vec();
+    Ok((cfg, params))
 }
 
 fn main() -> anyhow::Result<()> {

@@ -91,9 +91,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- Tables 3–7 miniature: downstream suite on both -----------------
     println!("\n=== downstream suite: GaLore ===");
-    let g_res = coordinator::eval_params(&galore.cfg, &galore.params, questions)?;
+    let g_res = coordinator::eval_params(&galore.cfg, galore.params(), questions)?;
     println!("\n=== downstream suite: Adam8bit baseline ===");
-    let b_res = coordinator::eval_params(&baseline.cfg, &baseline.params, questions)?;
+    let b_res = coordinator::eval_params(&baseline.cfg, baseline.params(), questions)?;
     println!("\n=== Fig. 4 shape: per-category comparison ===");
     println!("{:<24} {:>8} {:>9} {:>7}", "category", "galore", "baseline", "chance");
     let mut g_avg = 0.0;

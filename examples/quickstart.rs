@@ -2,25 +2,54 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Walks the whole public API surface: config → trainer → metrics →
-//! downstream eval → checkpoint, on the llama-nano preset.
+//! Walks the whole public API surface: config → optimizer spec → train
+//! engine → observer stream → metrics → downstream eval → checkpoint, on
+//! the llama-nano preset.
+//!
+//! The API in one paragraph: `TrainConfig::optimizer_spec` maps config
+//! strings to an `OptimizerSpec` — the single recipe every execution mode
+//! builds its optimizer from (`spec.build(...)`; add new optimizer
+//! variants there, not at call sites). The trainer wraps a `TrainEngine`
+//! (`single` | `fsdp` | `ddp` — same recipe, any mode, per §4.3 of the
+//! paper; switch with `cfg.parallel`), and emits `StepEvent`s that
+//! `Metrics` and any registered `StepObserver` consume.
 
 use galore2::config::TrainConfig;
 use galore2::coordinator;
+use galore2::train::{StepEvent, StepObserver};
 use galore2::util::human_count;
+
+/// A custom observer: tracks the best validation loss seen so far from the
+/// trainer's event stream (no polling of trainer internals).
+struct BestValTracker {
+    best: f64,
+}
+
+impl StepObserver for BestValTracker {
+    fn on_event(&mut self, event: &StepEvent) {
+        if let StepEvent::Val { step, loss, .. } = event {
+            if *loss < self.best {
+                self.best = *loss;
+                println!("  step {step:>6}  new best val loss {loss:.4}");
+            }
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     // 1. Configure. Everything in TrainConfig can also come from a TOML
-    //    file (configs/nano-galore.toml) or CLI flags via the launcher.
+    //    file (configs/nano-galore.toml) or CLI flags via the launcher;
+    //    `--parallel fsdp|ddp --world N` selects a distributed engine with
+    //    no other changes.
     let cfg = TrainConfig {
         preset: "llama-nano".into(),
         run_name: "quickstart".into(),
         optimizer: "galore".into(),
         lr: 0.02,
         steps: 300,
-        galore_rank: 16,       // quarter of hidden (64/4)
+        galore_rank: 16,        // quarter of hidden (64/4)
         galore_update_freq: 50, // subspace refresh period T
-        galore_alpha: 0.25,    // scale factor α
+        galore_alpha: 0.25,     // scale factor α
         eval_every: 50,
         ..TrainConfig::default()
     };
@@ -33,20 +62,27 @@ fn main() -> anyhow::Result<()> {
         llama.hidden
     );
 
-    // 2. Train. The coordinator prints the loss curve and writes
+    // 2. Train, subscribing a custom observer next to the default console
+    //    one. The coordinator prints the loss curve and writes
     //    runs/quickstart/metrics.csv.
-    let trainer = coordinator::train(cfg)?;
+    let trainer = coordinator::train_with(
+        cfg,
+        vec![
+            Box::new(coordinator::ConsoleObserver),
+            Box::new(BestValTracker { best: f64::INFINITY }),
+        ],
+    )?;
 
     // 3. Downstream eval: the five-category suite of §6 (Tables 3–7),
-    //    scored on the trained parameters.
+    //    scored on the trained parameters (trainer.params() is the
+    //    engine's authoritative full view — gathered shards under FSDP).
     println!("\ndownstream suite (40 questions/category):");
-    coordinator::eval_params(&trainer.cfg, &trainer.params, 40)?;
+    coordinator::eval_params(&trainer.cfg, trainer.params(), 40)?;
 
-    // 4. Checkpoint for later `galore2 eval --checkpoint …`.
-    trainer.save_checkpoint(trainer.cfg.steps)?;
-    println!(
-        "\ncheckpoint → {}",
-        trainer.checkpoint_path(trainer.cfg.steps).display()
-    );
+    // 4. Checkpoint for later `galore2 eval --checkpoint …`. Resume goes
+    //    through TrainEngine::import_state, so FSDP runs restore every
+    //    rank's shard-local moments and re-scatter parameters.
+    let path = trainer.save_checkpoint(trainer.cfg.steps)?;
+    println!("\ncheckpoint → {}", path.display());
     Ok(())
 }

@@ -14,7 +14,10 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"GAL2CKPT";
-const VERSION: u32 = 1;
+/// v2: optimizer blobs carry the SVD-stream RNG position (GaLore), the
+/// Q-GaLore lazy-gate state, and — under FSDP — framed per-rank worker
+/// state. v1 blobs would misparse, so the version gate rejects them.
+const VERSION: u32 = 2;
 
 pub struct Checkpoint {
     pub step: u64,

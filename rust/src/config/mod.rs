@@ -1,7 +1,11 @@
 //! Configuration system: TOML files (configs/*.toml) + CLI overrides.
+//!
+//! `TrainConfig::optimizer_spec` is the single mapping from config strings
+//! to [`OptimizerSpec`] — the recipe every execution mode builds its
+//! optimizer from. CLI and TOML agree on accepted values: both bail on an
+//! unknown `parallel.mode` / `--parallel` or `engine` / `--engine`.
 
-use crate::dist::OptimizerSpec;
-use crate::optim::{AdamCfg, GaLoreCfg, MomentHandling, ProjectionKind};
+use crate::optim::{AdamCfg, GaLoreCfg, MomentHandling, OptimizerSpec, ProjectionKind};
 use crate::util::cli::Args;
 use crate::util::toml::TomlDoc;
 use anyhow::{bail, Context, Result};
@@ -16,11 +20,34 @@ pub enum Engine {
     Pjrt,
 }
 
+impl Engine {
+    /// Shared by TOML and CLI parsing so the two can never drift.
+    pub fn parse(s: &str) -> Result<Engine> {
+        Ok(match s {
+            "native" => Engine::Native,
+            "pjrt" => Engine::Pjrt,
+            other => bail!("unknown engine {other:?} (native|pjrt)"),
+        })
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ParallelMode {
     Single,
     Fsdp,
     Ddp,
+}
+
+impl ParallelMode {
+    /// Shared by TOML and CLI parsing so the two can never drift.
+    pub fn parse(s: &str) -> Result<ParallelMode> {
+        Ok(match s {
+            "single" => ParallelMode::Single,
+            "fsdp" => ParallelMode::Fsdp,
+            "ddp" => ParallelMode::Ddp,
+            other => bail!("unknown parallel mode {other:?} (single|fsdp|ddp)"),
+        })
+    }
 }
 
 /// The full training configuration (Megatron-style single source of truth).
@@ -34,6 +61,10 @@ pub struct TrainConfig {
     pub optimizer: String,
     pub lr: f32,
     pub weight_decay: f32,
+    /// Adafactor's variance-floor epsilon (`[optimizer] adafactor_eps`).
+    pub adafactor_eps: f32,
+    /// SGD momentum coefficient (`[optimizer] momentum`).
+    pub sgdm_momentum: f32,
     pub steps: u64,
     pub warmup_frac: f64,
     pub lr_floor_frac: f32,
@@ -43,6 +74,9 @@ pub struct TrainConfig {
     pub galore_alpha: f32,
     pub galore_projection: String,
     pub galore_moments: String,
+    /// Q-GaLore's lazy-refresh cosine threshold
+    /// (`[galore] similarity_threshold`; 1.0 disables laziness).
+    pub galore_similarity: f32,
 
     pub parallel: ParallelMode,
     pub world: usize,
@@ -70,6 +104,8 @@ impl Default for TrainConfig {
             optimizer: "galore".into(),
             lr: 0.01,
             weight_decay: 0.0,
+            adafactor_eps: 1e-30,
+            sgdm_momentum: 0.9,
             steps: 200,
             warmup_frac: 0.1,
             lr_floor_frac: 0.1,
@@ -78,6 +114,7 @@ impl Default for TrainConfig {
             galore_alpha: 0.25,
             galore_projection: "rand_svd".into(),
             galore_moments: "keep".into(),
+            galore_similarity: 0.9,
             parallel: ParallelMode::Single,
             world: 1,
             threads: 0,
@@ -99,60 +136,63 @@ impl TrainConfig {
             .with_context(|| format!("reading config {path}"))?;
         let doc = TomlDoc::parse(&text)
             .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
-        let mut c = TrainConfig::default();
-        c.preset = doc.str_or("", "preset", &c.preset);
-        c.run_name = doc.str_or("", "run_name", &c.run_name);
-        c.artifacts_dir = PathBuf::from(doc.str_or(
-            "",
-            "artifacts_dir",
-            c.artifacts_dir.to_str().unwrap(),
-        ));
-        c.out_dir = PathBuf::from(doc.str_or("", "out_dir", c.out_dir.to_str().unwrap()));
-        c.optimizer = doc.str_or("optimizer", "name", &c.optimizer);
-        c.lr = doc.f64_or("optimizer", "lr", c.lr as f64) as f32;
-        c.weight_decay =
-            doc.f64_or("optimizer", "weight_decay", c.weight_decay as f64) as f32;
-        c.steps = doc.i64_or("train", "steps", c.steps as i64) as u64;
-        c.warmup_frac = doc.f64_or("train", "warmup_frac", c.warmup_frac);
-        c.lr_floor_frac =
-            doc.f64_or("train", "lr_floor_frac", c.lr_floor_frac as f64) as f32;
-        c.galore_rank = doc.i64_or("galore", "rank", c.galore_rank as i64) as usize;
-        c.galore_update_freq =
-            doc.i64_or("galore", "update_freq", c.galore_update_freq as i64) as u64;
-        c.galore_alpha = doc.f64_or("galore", "alpha", c.galore_alpha as f64) as f32;
-        c.galore_projection = doc.str_or("galore", "projection", &c.galore_projection);
-        c.galore_moments = doc.str_or("galore", "moments", &c.galore_moments);
-        c.parallel = match doc.str_or("parallel", "mode", "single").as_str() {
-            "single" => ParallelMode::Single,
-            "fsdp" => ParallelMode::Fsdp,
-            "ddp" => ParallelMode::Ddp,
-            other => bail!("unknown parallel.mode {other:?}"),
-        };
-        c.world = doc.i64_or("parallel", "world", c.world as i64) as usize;
-        // Clamp: a negative value would wrap to a huge usize thread count.
-        c.threads = doc
-            .i64_or("parallel", "threads", c.threads as i64)
-            .max(0) as usize;
-        c.engine = match doc.str_or("train", "engine", "native").as_str() {
-            "native" => Engine::Native,
-            "pjrt" => Engine::Pjrt,
-            other => bail!("unknown engine {other:?}"),
-        };
-        c.seed = doc.i64_or("train", "seed", c.seed as i64) as u64;
-        c.corpus_tokens =
-            doc.i64_or("data", "corpus_tokens", c.corpus_tokens as i64) as usize;
-        c.val_tokens = doc.i64_or("data", "val_tokens", c.val_tokens as i64) as usize;
-        c.eval_every = doc.i64_or("train", "eval_every", c.eval_every as i64) as u64;
-        c.eval_batches =
-            doc.i64_or("train", "eval_batches", c.eval_batches as i64) as usize;
-        c.checkpoint_every =
-            doc.i64_or("train", "checkpoint_every", c.checkpoint_every as i64) as u64;
-        c.log_every = doc.i64_or("train", "log_every", c.log_every as i64) as u64;
-        Ok(c)
+        let d = TrainConfig::default();
+        Ok(TrainConfig {
+            preset: doc.str_or("", "preset", &d.preset),
+            run_name: doc.str_or("", "run_name", &d.run_name),
+            artifacts_dir: PathBuf::from(doc.str_or(
+                "",
+                "artifacts_dir",
+                d.artifacts_dir.to_str().unwrap(),
+            )),
+            out_dir: PathBuf::from(doc.str_or("", "out_dir", d.out_dir.to_str().unwrap())),
+            optimizer: doc.str_or("optimizer", "name", &d.optimizer),
+            lr: doc.f64_or("optimizer", "lr", d.lr as f64) as f32,
+            weight_decay: doc.f64_or("optimizer", "weight_decay", d.weight_decay as f64)
+                as f32,
+            adafactor_eps: doc.f64_or("optimizer", "adafactor_eps", d.adafactor_eps as f64)
+                as f32,
+            sgdm_momentum: doc.f64_or("optimizer", "momentum", d.sgdm_momentum as f64)
+                as f32,
+            steps: doc.i64_or("train", "steps", d.steps as i64) as u64,
+            warmup_frac: doc.f64_or("train", "warmup_frac", d.warmup_frac),
+            lr_floor_frac: doc.f64_or("train", "lr_floor_frac", d.lr_floor_frac as f64)
+                as f32,
+            galore_rank: doc.i64_or("galore", "rank", d.galore_rank as i64) as usize,
+            galore_update_freq: doc
+                .i64_or("galore", "update_freq", d.galore_update_freq as i64)
+                as u64,
+            galore_alpha: doc.f64_or("galore", "alpha", d.galore_alpha as f64) as f32,
+            galore_projection: doc.str_or("galore", "projection", &d.galore_projection),
+            galore_moments: doc.str_or("galore", "moments", &d.galore_moments),
+            galore_similarity: doc.f64_or(
+                "galore",
+                "similarity_threshold",
+                d.galore_similarity as f64,
+            ) as f32,
+            parallel: ParallelMode::parse(&doc.str_or("parallel", "mode", "single"))?,
+            world: doc.i64_or("parallel", "world", d.world as i64) as usize,
+            // Clamp: a negative value would wrap to a huge usize thread count.
+            threads: doc.i64_or("parallel", "threads", d.threads as i64).max(0) as usize,
+            engine: Engine::parse(&doc.str_or("train", "engine", "native"))?,
+            seed: doc.i64_or("train", "seed", d.seed as i64) as u64,
+            corpus_tokens: doc.i64_or("data", "corpus_tokens", d.corpus_tokens as i64)
+                as usize,
+            val_tokens: doc.i64_or("data", "val_tokens", d.val_tokens as i64) as usize,
+            eval_every: doc.i64_or("train", "eval_every", d.eval_every as i64) as u64,
+            eval_batches: doc.i64_or("train", "eval_batches", d.eval_batches as i64)
+                as usize,
+            checkpoint_every: doc
+                .i64_or("train", "checkpoint_every", d.checkpoint_every as i64)
+                as u64,
+            log_every: doc.i64_or("train", "log_every", d.log_every as i64) as u64,
+        })
     }
 
     /// CLI flags override file values (`--steps`, `--optimizer`, …).
-    pub fn apply_cli(&mut self, args: &Args) {
+    /// Unknown `--parallel` / `--engine` values are an error, exactly like
+    /// their TOML counterparts.
+    pub fn apply_cli(&mut self, args: &Args) -> Result<()> {
         self.preset = args.str_or("preset", &self.preset);
         self.run_name = args.str_or("run-name", &self.run_name);
         if let Some(d) = args.get("artifacts-dir") {
@@ -163,31 +203,27 @@ impl TrainConfig {
         }
         self.optimizer = args.str_or("optimizer", &self.optimizer);
         self.lr = args.f32_or("lr", self.lr);
+        self.weight_decay = args.f32_or("weight-decay", self.weight_decay);
         self.steps = args.u64_or("steps", self.steps);
         self.galore_rank = args.usize_or("rank", self.galore_rank);
         self.galore_update_freq = args.u64_or("update-freq", self.galore_update_freq);
         self.galore_alpha = args.f32_or("alpha", self.galore_alpha);
         self.galore_projection = args.str_or("projection", &self.galore_projection);
+        self.galore_moments = args.str_or("moments", &self.galore_moments);
         self.world = args.usize_or("world", self.world);
         self.threads = args.usize_or("threads", self.threads);
         if let Some(mode) = args.get("parallel") {
-            self.parallel = match mode {
-                "single" => ParallelMode::Single,
-                "fsdp" => ParallelMode::Fsdp,
-                "ddp" => ParallelMode::Ddp,
-                _ => self.parallel,
-            };
+            self.parallel = ParallelMode::parse(mode)?;
         }
         if let Some(engine) = args.get("engine") {
-            self.engine = match engine {
-                "pjrt" => Engine::Pjrt,
-                _ => Engine::Native,
-            };
+            self.engine = Engine::parse(engine)?;
         }
         self.seed = args.u64_or("seed", self.seed);
         self.eval_every = args.u64_or("eval-every", self.eval_every);
+        self.eval_batches = args.usize_or("eval-batches", self.eval_batches);
         self.corpus_tokens = args.usize_or("corpus-tokens", self.corpus_tokens);
         self.log_every = args.u64_or("log-every", self.log_every);
+        Ok(())
     }
 
     pub fn galore_cfg(&self, hidden: usize) -> Result<GaLoreCfg> {
@@ -222,25 +258,44 @@ impl TrainConfig {
         }
     }
 
+    /// The single mapping from config strings to the optimizer recipe.
+    /// Execution modes never interpret `cfg.optimizer` / `cfg.engine`
+    /// themselves — they build whatever this spec says via
+    /// [`OptimizerSpec::build`].
     pub fn optimizer_spec(&self, hidden: usize) -> Result<OptimizerSpec> {
+        if self.engine == Engine::Pjrt {
+            if self.optimizer != "galore" {
+                bail!("engine=pjrt only applies to galore (got {})", self.optimizer);
+            }
+            if self.parallel != ParallelMode::Single {
+                bail!("engine=pjrt is single-process only (use --parallel single)");
+            }
+            return Ok(OptimizerSpec::PjrtGaLore {
+                galore: self.galore_cfg(hidden)?,
+                adam: self.adam_cfg(),
+            });
+        }
         Ok(match self.optimizer.as_str() {
             "adamw" => OptimizerSpec::AdamW(self.adam_cfg()),
             "adam8bit" => OptimizerSpec::Adam8bit(self.adam_cfg()),
-            "adafactor" => OptimizerSpec::Adafactor { eps: 1e-30 },
-            "sgdm" => OptimizerSpec::SgdM { momentum: 0.9 },
-            // qgalore under FSDP keeps the quantized projector storage
-            // (the memory-relevant part); the similarity-gated lazy
-            // refresh stays a single-process feature for now.
-            "galore" | "qgalore" => {
-                let mut galore = self.galore_cfg(hidden)?;
-                if self.optimizer == "qgalore" {
-                    galore.projection = ProjectionKind::Quant8;
-                }
-                OptimizerSpec::GaLore {
-                    galore,
-                    adam: self.adam_cfg(),
-                }
-            }
+            "adafactor" => OptimizerSpec::Adafactor {
+                eps: self.adafactor_eps,
+            },
+            "sgdm" => OptimizerSpec::SgdM {
+                momentum: self.sgdm_momentum,
+            },
+            "galore" => OptimizerSpec::GaLore {
+                galore: self.galore_cfg(hidden)?,
+                adam: self.adam_cfg(),
+            },
+            "qgalore" => OptimizerSpec::QGaLore {
+                // The spec normalizes a non-quantized projection kind to
+                // Quant8 (Q-GaLore's invariant) while honouring an
+                // explicit q4 choice.
+                galore: self.galore_cfg(hidden)?,
+                adam: self.adam_cfg(),
+                similarity_threshold: self.galore_similarity,
+            },
             other => bail!("unknown optimizer {other:?}"),
         })
     }
@@ -262,12 +317,15 @@ seed = 7
 [optimizer]
 name = "galore"
 lr = 0.005
+adafactor_eps = 1e-20
+momentum = 0.8
 
 [galore]
 rank = 64
 update_freq = 100
 alpha = 0.125
 projection = "rand_svd"
+similarity_threshold = 0.7
 
 [parallel]
 mode = "fsdp"
@@ -275,15 +333,24 @@ world = 4
 threads = 2
 "#;
 
+    fn write_sample(name: &str, body: &str) -> std::path::PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("galore2_cfg_{name}_{}.toml", std::process::id()));
+        std::fs::write(&path, body).unwrap();
+        path
+    }
+
     #[test]
     fn parses_full_config() {
-        let path = std::env::temp_dir().join("galore2_cfg_test.toml");
-        std::fs::write(&path, SAMPLE).unwrap();
+        let path = write_sample("full", SAMPLE);
         let c = TrainConfig::from_toml(path.to_str().unwrap()).unwrap();
         assert_eq!(c.preset, "llama-mini");
         assert_eq!(c.steps, 500);
         assert_eq!(c.galore_rank, 64);
         assert!((c.galore_alpha - 0.125).abs() < 1e-6);
+        assert!((c.galore_similarity - 0.7).abs() < 1e-6);
+        assert!((c.sgdm_momentum - 0.8).abs() < 1e-6);
+        assert!(c.adafactor_eps > 0.0 && c.adafactor_eps < 1e-19);
         assert_eq!(c.parallel, ParallelMode::Fsdp);
         assert_eq!(c.world, 4);
         assert_eq!(c.threads, 2);
@@ -294,16 +361,38 @@ threads = 2
     fn cli_overrides_file() {
         let mut c = TrainConfig::default();
         let args = Args::parse(
-            "train --steps 99 --optimizer adam8bit --rank 32 --parallel ddp"
+            "train --steps 99 --optimizer adam8bit --rank 32 --parallel ddp \
+             --weight-decay 0.1 --moments reset --eval-batches 3"
                 .split_whitespace()
                 .map(String::from),
         )
         .unwrap();
-        c.apply_cli(&args);
+        c.apply_cli(&args).unwrap();
         assert_eq!(c.steps, 99);
         assert_eq!(c.optimizer, "adam8bit");
         assert_eq!(c.galore_rank, 32);
         assert_eq!(c.parallel, ParallelMode::Ddp);
+        assert!((c.weight_decay - 0.1).abs() < 1e-6);
+        assert_eq!(c.galore_moments, "reset");
+        assert_eq!(c.eval_batches, 3);
+    }
+
+    #[test]
+    fn cli_rejects_unknown_modes_like_toml_does() {
+        // CLI/TOML parity: both fail on unknown parallel/engine values.
+        let mut c = TrainConfig::default();
+        let bad_parallel = Args::parse(
+            "train --parallel mesh".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        assert!(c.apply_cli(&bad_parallel).is_err());
+        let bad_engine =
+            Args::parse("train --engine cuda".split_whitespace().map(String::from))
+                .unwrap();
+        assert!(c.apply_cli(&bad_engine).is_err());
+        let toml_bad = write_sample("badmode", "[parallel]\nmode = \"mesh\"\n");
+        assert!(TrainConfig::from_toml(toml_bad.to_str().unwrap()).is_err());
+        std::fs::remove_file(toml_bad).ok();
     }
 
     #[test]
@@ -315,9 +404,77 @@ threads = 2
     }
 
     #[test]
+    fn optimizer_spec_covers_every_name() {
+        for (name, expect) in [
+            ("adamw", "adamw"),
+            ("adam8bit", "adam8bit"),
+            ("adafactor", "adafactor"),
+            ("sgdm", "sgdm"),
+            ("galore", "galore"),
+            ("qgalore", "qgalore"),
+        ] {
+            let c = TrainConfig {
+                optimizer: name.into(),
+                ..TrainConfig::default()
+            };
+            assert_eq!(c.optimizer_spec(64).unwrap().name(), expect);
+        }
+    }
+
+    #[test]
+    fn lifted_hyperparameters_reach_the_spec() {
+        let c = TrainConfig {
+            optimizer: "adafactor".into(),
+            adafactor_eps: 1e-8,
+            ..TrainConfig::default()
+        };
+        match c.optimizer_spec(64).unwrap() {
+            OptimizerSpec::Adafactor { eps } => assert!((eps - 1e-8).abs() < 1e-12),
+            other => panic!("wrong spec {other:?}"),
+        }
+        let c = TrainConfig {
+            optimizer: "sgdm".into(),
+            sgdm_momentum: 0.75,
+            ..TrainConfig::default()
+        };
+        match c.optimizer_spec(64).unwrap() {
+            OptimizerSpec::SgdM { momentum } => assert!((momentum - 0.75).abs() < 1e-6),
+            other => panic!("wrong spec {other:?}"),
+        }
+        let c = TrainConfig {
+            optimizer: "qgalore".into(),
+            galore_similarity: 0.42,
+            ..TrainConfig::default()
+        };
+        match c.optimizer_spec(64).unwrap() {
+            OptimizerSpec::QGaLore {
+                similarity_threshold,
+                ..
+            } => assert!((similarity_threshold - 0.42).abs() < 1e-6),
+            other => panic!("wrong spec {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pjrt_spec_requires_galore_and_single() {
+        let mut c = TrainConfig {
+            engine: Engine::Pjrt,
+            ..TrainConfig::default()
+        };
+        assert_eq!(c.optimizer_spec(64).unwrap().name(), "galore-pjrt");
+        c.parallel = ParallelMode::Fsdp;
+        assert!(c.optimizer_spec(64).is_err());
+        c.parallel = ParallelMode::Single;
+        c.optimizer = "adamw".into();
+        assert!(c.optimizer_spec(64).is_err());
+    }
+
+    #[test]
     fn rejects_unknown_optimizer() {
-        let mut c = TrainConfig::default();
-        c.optimizer = "turbo".into();
+        let c = TrainConfig {
+            optimizer: "turbo".into(),
+            ..TrainConfig::default()
+        };
         assert!(c.optimizer_spec(64).is_err());
     }
 }

@@ -13,22 +13,54 @@ use crate::metrics::ascii_chart;
 use crate::model::LlamaCfg;
 use crate::runtime::{Manifest, Runtime};
 use crate::tensor::Matrix;
-use crate::train::Trainer;
+use crate::train::{StepEvent, StepObserver, Trainer};
 use crate::util::human_bytes;
 use anyhow::{Context, Result};
+
+/// Prints validation sweeps and checkpoint writes as they happen — the
+/// coordinator consumes the trainer's event stream like any other
+/// subscriber instead of polling trainer internals.
+pub struct ConsoleObserver;
+
+impl StepObserver for ConsoleObserver {
+    fn on_event(&mut self, event: &StepEvent) {
+        match event {
+            StepEvent::Val { step, loss, .. } => {
+                println!("  step {step:>6}  val_loss {loss:.4}  ppl {:.2}", loss.exp());
+            }
+            StepEvent::Checkpoint { step, path } => {
+                println!("  step {step:>6}  checkpoint → {}", path.display());
+            }
+            StepEvent::Train { .. } => {}
+        }
+    }
+}
 
 /// Train per config; writes metrics CSV into the run dir and returns the
 /// trainer for further inspection.
 pub fn train(cfg: TrainConfig) -> Result<Trainer> {
+    train_with(cfg, vec![Box::new(ConsoleObserver)])
+}
+
+/// [`train`] with caller-provided [`StepObserver`]s subscribed before the
+/// run starts (see `examples/quickstart.rs` for a custom observer).
+pub fn train_with(
+    cfg: TrainConfig,
+    observers: Vec<Box<dyn StepObserver>>,
+) -> Result<Trainer> {
     let mut trainer = Trainer::new(cfg)?;
+    for obs in observers {
+        trainer.add_observer(obs);
+    }
+    let exec = format!("{:?}", trainer.cfg.engine).to_lowercase();
     println!(
-        "run={} preset={} optimizer={} engine={:?} parallel={:?} world={} steps={}",
+        "run={} preset={} optimizer={} engine={} parallel={} world={} steps={}",
         trainer.cfg.run_name,
         trainer.cfg.preset,
-        trainer.cfg.optimizer,
-        trainer.cfg.engine,
-        trainer.cfg.parallel,
-        trainer.cfg.world,
+        trainer.engine().optimizer_name(),
+        exec,
+        trainer.engine().name(),
+        trainer.engine().world(),
         trainer.cfg.steps
     );
     let outcome = trainer.run()?;
@@ -64,7 +96,7 @@ pub fn train(cfg: TrainConfig) -> Result<Trainer> {
             ascii_chart(&[("train", train_pts), ("val", val_pts)], 72, 14)
         );
     }
-    if let Some(reports) = trainer.fsdp_memory() {
+    if let Some(reports) = trainer.memory_reports() {
         for (rank, r) in reports.iter().enumerate() {
             println!(
                 "rank {rank}: shard={} optim={} transient≤{} traffic={} elems",
@@ -227,7 +259,7 @@ mod tests {
             last = trainer.train_step(t).unwrap();
         }
         assert!(last < first, "no learning under FSDP: {first} -> {last}");
-        assert!(trainer.fsdp_memory().is_some());
+        assert!(trainer.memory_reports().is_some());
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! whose spectra would be wrong.
 
 use super::comm::Comm;
-use super::{OptimizerSpec, WorkerOpt};
+use super::{BuildTarget, OptimizerSpec, WorkerOpt};
 use crate::optim::{Projector, ProjectorSide};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg64;
@@ -97,6 +97,7 @@ enum Cmd {
     Step { t: u64, lr: f32, grads: Vec<Matrix> },
     Gather,
     ExportOpt,
+    ImportOpt(Vec<u8>),
     Report,
     Shutdown,
 }
@@ -105,6 +106,7 @@ enum Reply {
     StepDone,
     Shards(Vec<Matrix>),
     OptState(Vec<u8>),
+    ImportDone(Result<(), String>),
     Report(MemoryReport),
 }
 
@@ -121,6 +123,11 @@ pub struct FsdpCluster {
 impl FsdpCluster {
     pub fn new(world: usize, metas: Vec<ParamMeta>, spec: OptimizerSpec, seed: u64) -> FsdpCluster {
         assert!(world >= 1, "world size must be >= 1");
+        assert!(
+            spec.distributed_ok(),
+            "{} cannot run on distributed workers",
+            spec.name()
+        );
         let spec_name = spec.name();
         let comms = Comm::create_world(world);
         let mut cmd_tx = Vec::with_capacity(world);
@@ -162,8 +169,18 @@ impl FsdpCluster {
 
     /// Distribute initial full parameters; each worker keeps only its
     /// shards (channel ordering serializes this before any later step).
+    /// Shapes are validated HERE — a worker panicking later would strand
+    /// its peers in a collective.
     pub fn init_params(&self, full: &[Matrix]) {
         assert_eq!(full.len(), self.metas.len(), "param count != meta count");
+        for (p, meta) in full.iter().zip(&self.metas) {
+            assert_eq!(
+                p.shape(),
+                (meta.rows, meta.cols),
+                "{}: param/meta shape mismatch",
+                meta.name
+            );
+        }
         for tx in &self.cmd_tx {
             tx.send(Cmd::Init(full.to_vec())).expect("worker alive");
         }
@@ -221,13 +238,77 @@ impl FsdpCluster {
             .collect()
     }
 
-    /// Serialized optimizer state of rank 0 (checkpointing; shard-local).
+    /// Serialized optimizer state of rank 0 (shard-local; diagnostic use —
+    /// checkpoints go through [`FsdpCluster::export_optimizers`]).
     pub fn export_rank0_optimizer(&self) -> Vec<u8> {
         self.cmd_tx[0].send(Cmd::ExportOpt).expect("worker alive");
         match self.reply_rx[0].recv().expect("worker alive") {
             Reply::OptState(bytes) => bytes,
             _ => unreachable!("protocol error: expected OptState"),
         }
+    }
+
+    /// Serialize EVERY rank's shard-local state (optimizer moments + the
+    /// worker's SVD-stream position) into one framed blob:
+    /// `[world u64] ([len u64][bytes])×world`. Round-trips through
+    /// [`FsdpCluster::import_optimizers`] so FSDP resume restores each
+    /// rank's moments instead of only rank 0's, and the next subspace
+    /// refresh continues the uninterrupted run's sketch stream.
+    pub fn export_optimizers(&self) -> Vec<u8> {
+        for tx in &self.cmd_tx {
+            tx.send(Cmd::ExportOpt).expect("worker alive");
+        }
+        let blobs: Vec<Vec<u8>> = self
+            .reply_rx
+            .iter()
+            .map(|rx| match rx.recv().expect("worker alive") {
+                Reply::OptState(bytes) => bytes,
+                _ => unreachable!("protocol error: expected OptState"),
+            })
+            .collect();
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.world as u64).to_le_bytes());
+        for b in &blobs {
+            out.extend_from_slice(&(b.len() as u64).to_le_bytes());
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    /// Restore per-rank optimizer state from an [`export_optimizers`] blob.
+    /// Fails (without touching worker state) when the blob was written at a
+    /// different world size — shard-local moments do not re-shard.
+    ///
+    /// [`export_optimizers`]: FsdpCluster::export_optimizers
+    pub fn import_optimizers(&self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = crate::optim::ser::Reader::new(bytes);
+        let world = r.u64()? as usize;
+        if world != self.world {
+            return Err(format!(
+                "optimizer state was saved at world={world}, cluster has world={}",
+                self.world
+            ));
+        }
+        let mut blobs = Vec::with_capacity(world);
+        for _ in 0..world {
+            let len = r.u64()? as usize;
+            blobs.push(r.bytes(len)?.to_vec());
+        }
+        for (tx, blob) in self.cmd_tx.iter().zip(blobs) {
+            tx.send(Cmd::ImportOpt(blob)).expect("worker alive");
+        }
+        let mut result = Ok(());
+        for rx in &self.reply_rx {
+            match rx.recv().expect("worker alive") {
+                Reply::ImportDone(r) => {
+                    if result.is_ok() {
+                        result = r;
+                    }
+                }
+                _ => unreachable!("protocol error: expected ImportDone"),
+            }
+        }
+        result
     }
 
     /// Live per-rank byte counters, in rank order.
@@ -322,7 +403,14 @@ impl Worker {
         let galore = spec.galore_cfg();
         // Per-rank optimizer seed (only hygiene — in external-subspace mode
         // workers never draw from their optimizer RNG).
-        let opt = spec.build(seed ^ (rank as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15), true);
+        let opt = spec
+            .build(
+                seed ^ (rank as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                BuildTarget::Worker {
+                    external_subspace: true,
+                },
+            )
+            .expect("spec validated in FsdpCluster::new");
         Worker {
             rank,
             world,
@@ -330,8 +418,11 @@ impl Worker {
             metas,
             galore,
             opt,
-            shards: Vec::new(),
-            svd_rng: Pcg64::new(seed, 0x5bd),
+            // Same stream constant as the single-process GaLore optimizer:
+            // the leader's refresh SVDs then draw the identical sketch
+            // sequence, making FSDP(world=1) trajectories match Single mode
+            // bitwise (tests/engine_parity.rs pins this).
+            svd_rng: Pcg64::new(seed, 0x6a10),
             peak_transient: 0,
         }
     }
@@ -348,7 +439,11 @@ impl Worker {
                     let _ = tx.send(Reply::Shards(self.shards.clone()));
                 }
                 Ok(Cmd::ExportOpt) => {
-                    let _ = tx.send(Reply::OptState(self.opt.export_state()));
+                    let _ = tx.send(Reply::OptState(self.export_opt_state()));
+                }
+                Ok(Cmd::ImportOpt(bytes)) => {
+                    let r = self.import_opt_state(&bytes);
+                    let _ = tx.send(Reply::ImportDone(r));
                 }
                 Ok(Cmd::Report) => {
                     let _ = tx.send(Reply::Report(self.report()));
@@ -356,6 +451,23 @@ impl Worker {
                 Ok(Cmd::Shutdown) | Err(_) => break,
             }
         }
+    }
+
+    /// Worker state blob: `[svd_rng position][optimizer blob]`. The SVD
+    /// stream position rides along so a resumed run's next leader refresh
+    /// draws the sketches the uninterrupted run would have.
+    fn export_opt_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.svd_rng.write_state(&mut out);
+        out.extend_from_slice(&self.opt.export_state());
+        out
+    }
+
+    fn import_opt_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.svd_rng = Pcg64::read_state(bytes)?;
+        self.opt
+            .as_opt()
+            .import_state(&bytes[Pcg64::STATE_BYTES..])
     }
 
     fn init(&mut self, full: Vec<Matrix>) {
@@ -639,6 +751,46 @@ mod tests {
         // full-model AdamW state (2·4 bytes/elem).
         let full_adam: usize = SHAPES.iter().map(|&(r, c)| 2 * r * c * 4).sum();
         assert!(reports[0].optimizer_bytes < full_adam);
+    }
+
+    #[test]
+    fn optimizer_state_roundtrips_across_all_ranks() {
+        // FSDP resume contract: export_optimizers captures every rank's
+        // shard-local moments; a fresh cluster restored from the blob (plus
+        // re-scattered params) continues bitwise identically.
+        let world = 2;
+        let mut cluster = FsdpCluster::new(
+            world,
+            metas(SHAPES),
+            OptimizerSpec::AdamW(AdamCfg::default()),
+            1,
+        );
+        cluster.init_params(&init_set(SHAPES, 7));
+        cluster.step(0, vec![grad_set(SHAPES, 3); world], 0.01);
+        let blob = cluster.export_optimizers();
+        let mut restored = FsdpCluster::new(
+            world,
+            metas(SHAPES),
+            OptimizerSpec::AdamW(AdamCfg::default()),
+            99,
+        );
+        restored.init_params(&cluster.gather_params());
+        restored.import_optimizers(&blob).unwrap();
+        cluster.step(1, vec![grad_set(SHAPES, 4); world], 0.01);
+        restored.step(1, vec![grad_set(SHAPES, 4); world], 0.01);
+        let a = cluster.gather_params();
+        let b = restored.gather_params();
+        for (idx, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.data, y.data, "param {idx}: restored cluster diverged");
+        }
+        // A different world size must be rejected (shards don't re-shard).
+        let other_world = FsdpCluster::new(
+            4,
+            metas(SHAPES),
+            OptimizerSpec::AdamW(AdamCfg::default()),
+            1,
+        );
+        assert!(other_world.import_optimizers(&blob).is_err());
     }
 
     #[test]

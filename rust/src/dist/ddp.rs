@@ -1,25 +1,351 @@
-//! Replicated data-parallel training (the Table 1 "DDP" baseline).
+//! Replicated data-parallel training (the Table 1 "DDP" baseline), now a
+//! first-class trainer mode.
 //!
 //! Every rank holds a FULL parameter replica and FULL optimizer state;
 //! per step each rank computes gradients on its own microbatch, the
 //! gradients are tree-all-reduced (then averaged), and each rank applies
 //! the identical update. Because the reduction order is fixed and the
 //! optimizers are seeded identically, replicas stay **bitwise equal** —
-//! which [`run_ddp`] verifies before returning.
+//! [`DdpCluster::gather_params`] verifies this on every gather.
 //!
 //! Contrast with [`super::FsdpCluster`]: DDP trades w× optimizer-state
 //! replication for one all-reduce per layer; FSDP shards the state and
 //! pays (reduce-)scatter/gather traffic instead.
+//!
+//! [`DdpCluster`] mirrors the FSDP cluster's command protocol (persistent
+//! worker threads behind channels) so the trainer drives both through the
+//! same `TrainEngine` surface; [`run_ddp`] remains as the closure-driven
+//! harness the dist tests use.
 
 use super::comm::Comm;
-use super::{MemoryReport, OptimizerSpec};
+use super::{BuildTarget, MemoryReport, OptimizerSpec, ParamMeta, WorkerOpt};
 use crate::tensor::Matrix;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
 
-/// Run `steps` of synchronous data-parallel training.
+enum Cmd {
+    /// Install the initial full parameters (every worker keeps a replica).
+    Init(Vec<Matrix>),
+    /// One training step: this worker's microbatch gradients (full shapes).
+    Step { t: u64, lr: f32, grads: Vec<Matrix> },
+    Gather,
+    ExportOpt,
+    ImportOpt(Vec<u8>),
+    Report,
+    Shutdown,
+}
+
+enum Reply {
+    StepDone,
+    Replica(Vec<Matrix>),
+    OptState(Vec<u8>),
+    ImportDone(Result<(), String>),
+    Report(MemoryReport),
+}
+
+/// A world of persistent worker threads with replicated state.
+pub struct DdpCluster {
+    world: usize,
+    metas: Vec<ParamMeta>,
+    cmd_tx: Vec<Sender<Cmd>>,
+    reply_rx: Vec<Receiver<Reply>>,
+    handles: Vec<JoinHandle<()>>,
+    spec_name: &'static str,
+}
+
+impl DdpCluster {
+    pub fn new(world: usize, metas: Vec<ParamMeta>, spec: OptimizerSpec, seed: u64) -> DdpCluster {
+        assert!(world >= 1, "world size must be >= 1");
+        assert!(
+            spec.distributed_ok(),
+            "{} cannot run on distributed workers",
+            spec.name()
+        );
+        let spec_name = spec.name();
+        let comms = Comm::create_world(world);
+        let mut cmd_tx = Vec::with_capacity(world);
+        let mut reply_rx = Vec::with_capacity(world);
+        let mut handles = Vec::with_capacity(world);
+        for (rank, comm) in comms.into_iter().enumerate() {
+            let (ctx, crx) = channel::<Cmd>();
+            let (rtx, rrx) = channel::<Reply>();
+            let spec = spec.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ddp-worker-{rank}"))
+                .spawn(move || {
+                    let mut w = Worker::new(rank, world, comm, spec, seed);
+                    w.serve(crx, rtx);
+                })
+                .expect("spawning DDP worker thread");
+            cmd_tx.push(ctx);
+            reply_rx.push(rrx);
+            handles.push(handle);
+        }
+        DdpCluster {
+            world,
+            metas,
+            cmd_tx,
+            reply_rx,
+            handles,
+            spec_name,
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn optimizer_name(&self) -> &'static str {
+        self.spec_name
+    }
+
+    /// Replicate initial full parameters to every worker. Shapes are
+    /// validated HERE — a worker panicking later, mid-collective, would
+    /// strand its peers in a barrier.
+    pub fn init_params(&self, full: &[Matrix]) {
+        assert_eq!(full.len(), self.metas.len(), "param count != meta count");
+        for (p, meta) in full.iter().zip(&self.metas) {
+            assert_eq!(
+                p.shape(),
+                (meta.rows, meta.cols),
+                "{}: param/meta shape mismatch",
+                meta.name
+            );
+        }
+        for tx in &self.cmd_tx {
+            tx.send(Cmd::Init(full.to_vec())).expect("worker alive");
+        }
+    }
+
+    /// One synchronous training step. `per_rank[r]` holds rank r's
+    /// microbatch gradients in full shapes. Blocks until all ranks finish.
+    pub fn step(&mut self, t: u64, per_rank: Vec<Vec<Matrix>>, lr: f32) {
+        assert_eq!(per_rank.len(), self.world, "need one gradient set per rank");
+        // Validate shapes HERE, not in the workers: a worker panicking
+        // between barrier waves would strand its peers in the collective.
+        for (rank, grads) in per_rank.iter().enumerate() {
+            assert_eq!(grads.len(), self.metas.len(), "rank {rank}: grad count");
+            for (g, meta) in grads.iter().zip(&self.metas) {
+                assert_eq!(
+                    g.shape(),
+                    (meta.rows, meta.cols),
+                    "rank {rank}, {}: bad gradient shape",
+                    meta.name
+                );
+            }
+        }
+        for (tx, grads) in self.cmd_tx.iter().zip(per_rank) {
+            tx.send(Cmd::Step { t, lr, grads }).expect("worker alive");
+        }
+        for rx in &self.reply_rx {
+            match rx.recv().expect("worker alive") {
+                Reply::StepDone => {}
+                _ => unreachable!("protocol error: expected StepDone"),
+            }
+        }
+    }
+
+    /// Rank 0's replica WITHOUT the cross-rank equality sweep — the cheap
+    /// per-step read (replicas are identical by construction; use
+    /// [`DdpCluster::gather_params`] where divergence should be caught).
+    pub fn rank0_params(&self) -> Vec<Matrix> {
+        self.cmd_tx[0].send(Cmd::Gather).expect("worker alive");
+        match self.reply_rx[0].recv().expect("worker alive") {
+            Reply::Replica(p) => p,
+            _ => unreachable!("protocol error: expected Replica"),
+        }
+    }
+
+    /// Rank 0's replica — after asserting every rank's replica is bitwise
+    /// identical. A divergence means a non-deterministic reduction or
+    /// optimizer, which would silently corrupt any real DDP run.
+    pub fn gather_params(&self) -> Vec<Matrix> {
+        for tx in &self.cmd_tx {
+            tx.send(Cmd::Gather).expect("worker alive");
+        }
+        let mut per_rank: Vec<Vec<Matrix>> = self
+            .reply_rx
+            .iter()
+            .map(|rx| match rx.recv().expect("worker alive") {
+                Reply::Replica(p) => p,
+                _ => unreachable!("protocol error: expected Replica"),
+            })
+            .collect();
+        for r in 1..per_rank.len() {
+            for (idx, (a, b)) in per_rank[0].iter().zip(&per_rank[r]).enumerate() {
+                assert_eq!(
+                    a.data, b.data,
+                    "DDP replicas diverged on param {idx} (rank 0 vs {r})"
+                );
+            }
+        }
+        per_rank.swap_remove(0)
+    }
+
+    /// Serialized optimizer state (replicas are identical, so rank 0's
+    /// blob represents every rank; same format as single-process state).
+    pub fn export_optimizer(&self) -> Vec<u8> {
+        self.cmd_tx[0].send(Cmd::ExportOpt).expect("worker alive");
+        match self.reply_rx[0].recv().expect("worker alive") {
+            Reply::OptState(bytes) => bytes,
+            _ => unreachable!("protocol error: expected OptState"),
+        }
+    }
+
+    /// Restore optimizer state on every rank from one blob (replicated
+    /// state ⇒ the same bytes restore every replica).
+    pub fn import_optimizer(&self, bytes: &[u8]) -> Result<(), String> {
+        for tx in &self.cmd_tx {
+            tx.send(Cmd::ImportOpt(bytes.to_vec())).expect("worker alive");
+        }
+        let mut result = Ok(());
+        for rx in &self.reply_rx {
+            match rx.recv().expect("worker alive") {
+                Reply::ImportDone(r) => {
+                    if result.is_ok() {
+                        result = r;
+                    }
+                }
+                _ => unreachable!("protocol error: expected ImportDone"),
+            }
+        }
+        result
+    }
+
+    /// Live per-rank byte counters, in rank order.
+    pub fn memory_reports(&self) -> Vec<MemoryReport> {
+        for tx in &self.cmd_tx {
+            tx.send(Cmd::Report).expect("worker alive");
+        }
+        self.reply_rx
+            .iter()
+            .map(|rx| match rx.recv().expect("worker alive") {
+                Reply::Report(r) => r,
+                _ => unreachable!("protocol error: expected Report"),
+            })
+            .collect()
+    }
+}
+
+impl Drop for DdpCluster {
+    fn drop(&mut self) {
+        for tx in &self.cmd_tx {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        if std::thread::panicking() {
+            // A dead worker strands its peers inside a Barrier (std
+            // barriers don't poison); joining them here would turn the
+            // panic into a permanent hang. Leak the threads and let the
+            // panic surface as a diagnostic instead.
+            return;
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One worker thread's state: a full replica + optimizer + comm handle.
+struct Worker {
+    world: usize,
+    rank: usize,
+    comm: Comm,
+    opt: WorkerOpt,
+    params: Vec<Matrix>,
+    peak_transient: usize,
+}
+
+impl Worker {
+    fn new(rank: usize, world: usize, comm: Comm, spec: OptimizerSpec, seed: u64) -> Worker {
+        // One of `world` concurrent compute workers: split the core budget.
+        crate::parallel::set_thread_share(world);
+        // SAME seed on every rank (unlike FSDP's per-rank hygiene XOR):
+        // GaLore's local SVD refreshes draw identical streams, keeping the
+        // replicas in lockstep — and making DDP(world=1) bitwise equal to
+        // Single mode.
+        let opt = spec
+            .build(
+                seed,
+                BuildTarget::Worker {
+                    external_subspace: false,
+                },
+            )
+            .expect("spec validated in DdpCluster::new");
+        Worker {
+            world,
+            rank,
+            comm,
+            opt,
+            params: Vec::new(),
+            peak_transient: 0,
+        }
+    }
+
+    fn serve(&mut self, rx: Receiver<Cmd>, tx: Sender<Reply>) {
+        loop {
+            match rx.recv() {
+                Ok(Cmd::Init(full)) => self.params = full,
+                Ok(Cmd::Step { t, lr, grads }) => {
+                    self.step(t, lr, grads);
+                    let _ = tx.send(Reply::StepDone);
+                }
+                Ok(Cmd::Gather) => {
+                    let _ = tx.send(Reply::Replica(self.params.clone()));
+                }
+                Ok(Cmd::ExportOpt) => {
+                    let _ = tx.send(Reply::OptState(self.opt.export_state()));
+                }
+                Ok(Cmd::ImportOpt(bytes)) => {
+                    let r = self.opt.as_opt().import_state(&bytes);
+                    let _ = tx.send(Reply::ImportDone(r));
+                }
+                Ok(Cmd::Report) => {
+                    let _ = tx.send(Reply::Report(self.report()));
+                }
+                Ok(Cmd::Shutdown) | Err(_) => break,
+            }
+        }
+    }
+
+    fn step(&mut self, t: u64, lr: f32, grads: Vec<Matrix>) {
+        assert_eq!(grads.len(), self.params.len(), "init_params before step");
+        self.opt.as_opt().begin_step(t);
+        let scale = 1.0 / self.world as f32;
+        for (idx, g) in grads.into_iter().enumerate() {
+            let (r, c) = self.params[idx].shape();
+            // Per-layer fused update: the reduced gradient is consumed and
+            // dropped before the next layer's all-reduce (Fig. 2).
+            self.peak_transient = self.peak_transient.max(2 * g.data.len() * 4);
+            let mut avg = self.comm.all_reduce_sum(g.data);
+            for x in avg.iter_mut() {
+                *x *= scale;
+            }
+            let avg = Matrix::from_vec(r, c, avg);
+            self.opt.as_opt().step_param(idx, &mut self.params[idx], &avg, lr);
+        }
+    }
+
+    fn report(&self) -> MemoryReport {
+        MemoryReport {
+            rank: self.rank,
+            // Full replica — the w× redundancy Table 1 charges DDP for.
+            param_shard_bytes: self.params.iter().map(|p| p.numel() * 4).sum(),
+            optimizer_bytes: self.opt.state_bytes(),
+            peak_transient_bytes: self.peak_transient,
+            traffic_elems: self.comm.traffic_elems(),
+        }
+    }
+}
+
+/// Run `steps` of synchronous data-parallel training over a fresh
+/// [`DdpCluster`] (the closure-driven test harness; real training goes
+/// through `train::DdpEngine`).
 ///
 /// `grad_fn(rank, step, params)` returns rank-local microbatch gradients in
-/// parameter order (full shapes). Returns the final parameters (identical
-/// on every rank; rank 0's copy) and per-rank memory/traffic reports.
+/// parameter order (full shapes); it runs on the coordinator thread — the
+/// workers do the reductions and updates. Every step gathers through the
+/// replica-equality assertion. Returns the final parameters (identical on
+/// every rank; verified) and per-rank memory/traffic reports.
 pub fn run_ddp<F>(
     world: usize,
     init: &[Matrix],
@@ -32,66 +358,24 @@ pub fn run_ddp<F>(
 where
     F: Fn(usize, u64, &[Matrix]) -> Vec<Matrix> + Sync,
 {
-    assert!(world >= 1);
-    let comms = Comm::create_world(world);
-    let grad_fn = &grad_fn;
-    let mut results: Vec<(Vec<Matrix>, MemoryReport)> = std::thread::scope(|s| {
-        let handles: Vec<_> = comms
-            .into_iter()
-            .map(|comm| {
-                s.spawn(move || {
-                    let rank = comm.rank();
-                    crate::parallel::set_thread_share(world);
-                    let mut params: Vec<Matrix> = init.to_vec();
-                    // Same seed on every rank: GaLore's local SVD refreshes
-                    // draw identical streams, keeping replicas in lockstep.
-                    let mut opt = spec.build(seed, false);
-                    let scale = 1.0 / world as f32;
-                    let mut peak_transient = 0usize;
-                    for t in 0..steps {
-                        let grads = grad_fn(rank, t, &params);
-                        assert_eq!(grads.len(), params.len());
-                        opt.as_opt().begin_step(t);
-                        for (idx, g) in grads.into_iter().enumerate() {
-                            let (r, c) = params[idx].shape();
-                            assert_eq!(g.shape(), (r, c), "grad {idx} shape");
-                            peak_transient = peak_transient.max(2 * g.data.len() * 4);
-                            let mut avg = comm.all_reduce_sum(g.data);
-                            for x in avg.iter_mut() {
-                                *x *= scale;
-                            }
-                            let g = Matrix::from_vec(r, c, avg);
-                            // Per-layer fused update: the reduced gradient
-                            // is consumed and dropped before the next layer.
-                            opt.as_opt().step_param(idx, &mut params[idx], &g, lr);
-                        }
-                    }
-                    let report = MemoryReport {
-                        rank,
-                        param_shard_bytes: params.iter().map(|p| p.numel() * 4).sum(),
-                        optimizer_bytes: opt.state_bytes(),
-                        peak_transient_bytes: peak_transient,
-                        traffic_elems: comm.traffic_elems(),
-                    };
-                    (params, report)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    // Replicas must have stayed bitwise identical — a divergence here means
-    // a non-deterministic reduction or optimizer, which would silently
-    // corrupt any real DDP run.
-    for r in 1..results.len() {
-        for (idx, (a, b)) in results[0].0.iter().zip(&results[r].0).enumerate() {
-            assert_eq!(
-                a.data, b.data,
-                "DDP replicas diverged on param {idx} (rank 0 vs {r})"
-            );
-        }
+    let metas: Vec<ParamMeta> = init
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ParamMeta {
+            name: format!("p{i}"),
+            rows: p.rows,
+            cols: p.cols,
+        })
+        .collect();
+    let mut cluster = DdpCluster::new(world, metas, spec.clone(), seed);
+    cluster.init_params(init);
+    let mut params = init.to_vec();
+    for t in 0..steps {
+        let per_rank: Vec<Vec<Matrix>> = (0..world).map(|r| grad_fn(r, t, &params)).collect();
+        cluster.step(t, per_rank, lr);
+        params = cluster.gather_params();
     }
-    let reports: Vec<MemoryReport> = results.iter().map(|r| r.1).collect();
-    let params = results.remove(0).0;
+    let reports = cluster.memory_reports();
     (params, reports)
 }
 
@@ -137,8 +421,8 @@ mod tests {
     #[test]
     fn ddp_galore_stays_in_lockstep() {
         // GaLore's randomized refresh is the dangerous part: identical
-        // seeding must keep replica SVDs identical (run_ddp asserts
-        // replica equality internally before returning).
+        // seeding must keep replica SVDs identical (gather_params asserts
+        // replica equality after every step).
         let (target, init) = target_and_init(12, 20);
         let spec = OptimizerSpec::GaLore {
             galore: GaLoreCfg {
@@ -179,5 +463,45 @@ mod tests {
             crate::optim::step_all(&mut opt, t, &mut params, &[g], 0.1);
         }
         assert_eq!(ddp[0].data, params[0].data, "world-1 DDP != serial");
+    }
+
+    #[test]
+    fn ddp_optimizer_state_roundtrips() {
+        // Export after a step, restore into a fresh cluster, evolve both:
+        // trajectories must stay bitwise identical.
+        let (target, init) = target_and_init(6, 9);
+        let grads = |params: &[Matrix]| vec![vec![params[0].sub(&target)]; 2];
+        let mut a = DdpCluster::new(
+            2,
+            vec![ParamMeta {
+                name: "p0".into(),
+                rows: 6,
+                cols: 9,
+            }],
+            OptimizerSpec::AdamW(AdamCfg::default()),
+            7,
+        );
+        a.init_params(&init);
+        let mut pa = init.clone();
+        a.step(0, grads(&pa), 0.05);
+        pa = a.gather_params();
+        let blob = a.export_optimizer();
+        let mut b = DdpCluster::new(
+            2,
+            vec![ParamMeta {
+                name: "p0".into(),
+                rows: 6,
+                cols: 9,
+            }],
+            OptimizerSpec::AdamW(AdamCfg::default()),
+            99,
+        );
+        b.init_params(&pa);
+        b.import_optimizer(&blob).unwrap();
+        a.step(1, grads(&pa), 0.05);
+        b.step(1, grads(&pa), 0.05);
+        let fa = a.gather_params();
+        let fb = b.gather_params();
+        assert_eq!(fa[0].data, fb[0].data, "restored DDP cluster diverged");
     }
 }

@@ -12,11 +12,13 @@
 //!   gradient buffer can be dropped (the per-layer fused update of Fig. 2).
 //!   In GaLore mode the leader computes the randomized SVD on the gathered
 //!   full gradient and broadcasts P (`GaLoreCfg::external_subspace`).
-//! * [`run_ddp`] — the replicated-state data-parallel baseline Table 1
-//!   compares against.
+//! * [`DdpCluster`] — the replicated-state data-parallel baseline Table 1
+//!   compares against, now a first-class trainer mode (`--parallel ddp`);
+//!   [`run_ddp`] remains as the closure-driven harness the tests use.
 //!
-//! [`OptimizerSpec`] is the Send-able recipe from which each worker thread
-//! constructs its own (deliberately non-`Send`) optimizer instance.
+//! Worker threads construct their optimizers from
+//! [`crate::optim::OptimizerSpec`] (re-exported here), the `Send`-able
+//! recipe that is the codebase's single optimizer-construction path.
 
 mod cluster;
 mod comm;
@@ -24,168 +26,6 @@ mod ddp;
 
 pub use cluster::{FsdpCluster, MemoryReport, ParamMeta};
 pub use comm::Comm;
-pub use ddp::run_ddp;
+pub use ddp::{run_ddp, DdpCluster};
 
-use crate::optim::{
-    Adafactor, Adam8bit, AdamCfg, AdamW, GaLore, GaLoreCfg, Optimizer, ProjectionKind, SgdM,
-};
-
-/// Recipe for a worker-local optimizer (constructed *inside* each worker
-/// thread — the `Optimizer` trait is intentionally not `Send`).
-#[derive(Clone, Debug)]
-pub enum OptimizerSpec {
-    AdamW(AdamCfg),
-    Adam8bit(AdamCfg),
-    Adafactor { eps: f32 },
-    SgdM { momentum: f32 },
-    GaLore { galore: GaLoreCfg, adam: AdamCfg },
-}
-
-impl OptimizerSpec {
-    pub fn name(&self) -> &'static str {
-        match self {
-            OptimizerSpec::AdamW(_) => "adamw",
-            OptimizerSpec::Adam8bit(_) => "adam8bit",
-            OptimizerSpec::Adafactor { .. } => "adafactor",
-            OptimizerSpec::SgdM { .. } => "sgdm",
-            // A quantized projector is the Q-GaLore configuration — keep
-            // the distinction visible in logs and Table 1 rows.
-            OptimizerSpec::GaLore { galore, .. } => match galore.projection {
-                ProjectionKind::Quant8 | ProjectionKind::Quant4 => "qgalore",
-                _ => "galore",
-            },
-        }
-    }
-
-    /// The GaLore config, if this spec is a GaLore variant.
-    pub fn galore_cfg(&self) -> Option<GaLoreCfg> {
-        match self {
-            OptimizerSpec::GaLore { galore, .. } => Some(*galore),
-            _ => None,
-        }
-    }
-
-    /// Build the worker-local optimizer. `external_subspace` selects the
-    /// FSDP contract (the engine owns subspace refreshes and installs P via
-    /// [`GaLore::preset_projector`]); DDP workers refresh locally instead,
-    /// seeded identically so replicas stay in lockstep.
-    pub(crate) fn build(&self, seed: u64, external_subspace: bool) -> WorkerOpt {
-        match self {
-            OptimizerSpec::AdamW(cfg) => WorkerOpt::Boxed(Box::new(AdamW::new(*cfg))),
-            OptimizerSpec::Adam8bit(cfg) => WorkerOpt::Boxed(Box::new(Adam8bit::new(*cfg))),
-            OptimizerSpec::Adafactor { eps } => {
-                WorkerOpt::Boxed(Box::new(Adafactor::new(*eps)))
-            }
-            OptimizerSpec::SgdM { momentum } => {
-                WorkerOpt::Boxed(Box::new(SgdM::new(*momentum)))
-            }
-            OptimizerSpec::GaLore { galore, adam } => {
-                let mut g = *galore;
-                g.external_subspace = external_subspace;
-                WorkerOpt::GaLore(GaLore::new(g, *adam, seed))
-            }
-        }
-    }
-}
-
-/// Worker-local optimizer: GaLore is held concretely so the engine can
-/// drive its external subspace; everything else is a trait object.
-pub(crate) enum WorkerOpt {
-    GaLore(GaLore),
-    Boxed(Box<dyn Optimizer>),
-}
-
-impl WorkerOpt {
-    pub(crate) fn as_opt(&mut self) -> &mut dyn Optimizer {
-        match self {
-            WorkerOpt::GaLore(g) => g,
-            WorkerOpt::Boxed(b) => b.as_mut(),
-        }
-    }
-
-    pub(crate) fn state_bytes(&self) -> usize {
-        match self {
-            WorkerOpt::GaLore(g) => g.state_bytes(),
-            WorkerOpt::Boxed(b) => b.state_bytes(),
-        }
-    }
-
-    pub(crate) fn export_state(&self) -> Vec<u8> {
-        match self {
-            WorkerOpt::GaLore(g) => g.export_state(),
-            WorkerOpt::Boxed(b) => b.export_state(),
-        }
-    }
-
-    pub(crate) fn galore_mut(&mut self) -> Option<&mut GaLore> {
-        match self {
-            WorkerOpt::GaLore(g) => Some(g),
-            _ => None,
-        }
-    }
-
-    pub(crate) fn has_projector(&self, idx: usize) -> bool {
-        match self {
-            WorkerOpt::GaLore(g) => g.has_projector(idx),
-            _ => false,
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn spec_names_match_config_strings() {
-        let specs = [
-            OptimizerSpec::AdamW(AdamCfg::default()),
-            OptimizerSpec::Adam8bit(AdamCfg::default()),
-            OptimizerSpec::Adafactor { eps: 1e-30 },
-            OptimizerSpec::SgdM { momentum: 0.9 },
-            OptimizerSpec::GaLore {
-                galore: GaLoreCfg::default(),
-                adam: AdamCfg::default(),
-            },
-        ];
-        let names: Vec<&str> = specs.iter().map(|s| s.name()).collect();
-        assert_eq!(names, ["adamw", "adam8bit", "adafactor", "sgdm", "galore"]);
-        // Quantized projector ⇒ the spec self-identifies as Q-GaLore.
-        let q = OptimizerSpec::GaLore {
-            galore: GaLoreCfg {
-                projection: ProjectionKind::Quant8,
-                ..GaLoreCfg::default()
-            },
-            adam: AdamCfg::default(),
-        };
-        assert_eq!(q.name(), "qgalore");
-    }
-
-    #[test]
-    fn build_honours_external_subspace_flag() {
-        let spec = OptimizerSpec::GaLore {
-            galore: GaLoreCfg::default(),
-            adam: AdamCfg::default(),
-        };
-        let mut fsdp = spec.build(1, true);
-        let g = fsdp.galore_mut().expect("galore spec builds galore");
-        assert!(g.cfg.external_subspace);
-        let mut ddp = spec.build(1, false);
-        assert!(!ddp.galore_mut().unwrap().cfg.external_subspace);
-    }
-
-    #[test]
-    fn projection_predicate_matches_shapes() {
-        // The coordinator and the optimizer share GaLoreCfg::projects, so
-        // the FSDP install decision can never drift from step_param's.
-        let cfg = GaLoreCfg {
-            rank: 16,
-            min_dim: 2,
-            ..GaLoreCfg::default()
-        };
-        assert!(cfg.projects(64, 128));
-        assert!(cfg.projects(16, 128)); // rank == min dim
-        assert!(!cfg.projects(8, 128)); // rank > min dim
-        assert!(!cfg.projects(1, 128)); // bias-like
-    }
-}
+pub use crate::optim::spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};

@@ -63,9 +63,11 @@ fn main() -> Result<()> {
 const HELP: &str = "galore2 — GaLore 2 pre-training framework
 USAGE: galore2 <train|eval|memory|svd|presets> [flags]
   train   --config FILE | --preset P --optimizer O --steps N --lr X
-          --rank R --update-freq T --alpha A --projection KIND
-          --parallel single|fsdp --world N --threads N
-          --engine native|pjrt [--save-final] [--eval-downstream]
+          --weight-decay W --rank R --update-freq T --alpha A
+          --projection KIND --moments keep|reset|project
+          --parallel single|fsdp|ddp --world N --threads N
+          --engine native|pjrt --eval-batches N
+          [--save-final] [--eval-downstream]
   eval    --config FILE --checkpoint CKPT [--questions N]
   memory  --preset P [--seq N] [--world N]
   svd     [--m N] [--n N] [--rank R] [--iters K]
@@ -77,7 +79,7 @@ fn load_cfg(args: &Args) -> Result<TrainConfig> {
     } else {
         TrainConfig::default()
     };
-    cfg.apply_cli(args);
+    cfg.apply_cli(args)?;
     Ok(cfg)
 }
 
@@ -88,14 +90,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_cfg(args)?;
     let trainer = coordinator::train(cfg)?;
     if save_final {
-        trainer.save_checkpoint(trainer.cfg.steps)?;
-        println!(
-            "checkpoint → {}",
-            trainer.checkpoint_path(trainer.cfg.steps).display()
-        );
+        let path = trainer.save_checkpoint(trainer.cfg.steps)?;
+        println!("checkpoint → {}", path.display());
     }
     if eval_downstream {
-        coordinator::eval_params(&trainer.cfg, &trainer.params, questions)?;
+        coordinator::eval_params(&trainer.cfg, trainer.params(), questions)?;
     }
     Ok(())
 }

@@ -113,6 +113,34 @@ impl Metrics {
     }
 }
 
+/// Metrics subscribes to the trainer's event stream like any other
+/// observer — the "train"/"val" curves are a projection of [`StepEvent`]s,
+/// not a side channel into trainer internals.
+///
+/// [`StepEvent`]: crate::train::StepEvent
+impl crate::train::StepObserver for Metrics {
+    fn on_event(&mut self, event: &crate::train::StepEvent) {
+        use crate::train::StepEvent;
+        match event {
+            StepEvent::Train {
+                step,
+                loss,
+                lr,
+                tokens_seen,
+                wall_secs,
+            } => self.log("train", *step, *tokens_seen, *loss, *lr, *wall_secs),
+            StepEvent::Val {
+                step,
+                loss,
+                lr,
+                tokens_seen,
+                wall_secs,
+            } => self.log("val", *step, *tokens_seen, *loss, *lr, *wall_secs),
+            StepEvent::Checkpoint { .. } => {}
+        }
+    }
+}
+
 /// Render an ASCII loss-curve chart (for terminal reports / EXPERIMENTS.md).
 pub fn ascii_chart(series: &[(&str, Vec<(u64, f64)>)], width: usize, height: usize) -> String {
     let all: Vec<(u64, f64)> = series

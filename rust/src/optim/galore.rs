@@ -362,15 +362,24 @@ impl Optimizer for GaLore {
     }
 
     fn name(&self) -> &'static str {
-        "galore"
+        // A quantized projector is the Q-GaLore configuration — keep the
+        // distinction visible in logs and Table 1 rows regardless of which
+        // execution path built this instance.
+        match self.cfg.projection {
+            ProjectionKind::Quant8 | ProjectionKind::Quant4 => "qgalore",
+            _ => "galore",
+        }
     }
 
     fn export_state(&self) -> Vec<u8> {
-        // Serializes moments + P; refresh schedule state is reconstructed
-        // from the step counter on resume.
+        // Serializes moments + P + the SVD-sketch RNG position, so a
+        // resumed run's next subspace refresh draws the same sketches the
+        // uninterrupted run would have (refresh *schedule* state is
+        // reconstructed from the step counter).
         let mut out = Vec::new();
         ser::push_u64(&mut out, self.t);
         ser::push_u64(&mut out, self.refreshes);
+        self.rng.write_state(&mut out);
         ser::push_u64(&mut out, self.states.len() as u64);
         for (&idx, st) in &self.states {
             ser::push_u64(&mut out, idx as u64);
@@ -411,6 +420,7 @@ impl Optimizer for GaLore {
         let mut r = ser::Reader::new(bytes);
         self.t = r.u64()?;
         self.refreshes = r.u64()?;
+        self.rng = Pcg64::read_state(r.bytes(Pcg64::STATE_BYTES)?)?;
         let n = r.u64()? as usize;
         // Projector kind comes from cfg; P and its side are stored.
         self.states.clear();
@@ -684,7 +694,10 @@ mod tests {
         let target = decaying_gradient(8, 20, &mut rng);
         let cfg = GaLoreCfg {
             rank: 4,
-            update_freq: 1000, // no refresh inside the test window
+            // Refreshes at t=0 (creation), 6, and — inside the post-resume
+            // window — t=12: the serialized RNG position must make the
+            // resumed optimizer draw the SAME randomized-SVD sketch there.
+            update_freq: 6,
             ..GaLoreCfg::default()
         };
         let mut a = GaLore::new(cfg, AdamCfg::default(), 11);

@@ -24,6 +24,7 @@ pub mod lr;
 mod projector;
 mod qgalore;
 mod sgdm;
+pub mod spec;
 mod tensor_galore;
 
 pub use adafactor::Adafactor;
@@ -33,6 +34,7 @@ pub use galore::{GaLore, GaLoreCfg, MomentHandling};
 pub use projector::{ProjectionKind, Projector, ProjectorSide};
 pub use qgalore::{QGaLore, QGaLoreCfg};
 pub use sgdm::SgdM;
+pub use spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};
 pub use tensor_galore::TensorGaLore;
 
 use crate::tensor::Matrix;
@@ -44,8 +46,8 @@ use crate::tensor::Matrix;
 /// global step counter (bias correction, subspace schedule); callers must
 /// invoke it exactly once per training step before any `step_param`.
 /// (Not `Send`: distributed engines construct optimizers inside worker
-/// threads from [`crate::dist::OptimizerSpec`], and the PJRT-backed engine
-/// holds non-Send device handles.)
+/// threads from [`OptimizerSpec`], and the PJRT-backed engine holds
+/// non-Send device handles.)
 pub trait Optimizer {
     /// Advance to training step `t` (0-based).
     fn begin_step(&mut self, t: u64);
@@ -120,6 +122,13 @@ pub(crate) mod ser {
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect())
+        }
+        /// Raw byte slice of length `n` (nested optimizer blobs).
+        pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+            let end = self.pos + n;
+            let bytes = self.buf.get(self.pos..end).ok_or("truncated state")?;
+            self.pos = end;
+            Ok(bytes)
         }
         #[allow(dead_code)] // used by tests; kept for state-format debugging
         pub fn done(&self) -> bool {

@@ -12,7 +12,7 @@
 
 use super::galore::{GaLore, GaLoreCfg};
 use super::projector::ProjectionKind;
-use super::{AdamCfg, Optimizer};
+use super::{ser, AdamCfg, Optimizer};
 use crate::tensor::Matrix;
 
 #[derive(Clone, Copy, Debug)]
@@ -144,11 +144,39 @@ impl Optimizer for QGaLore {
     }
 
     fn export_state(&self) -> Vec<u8> {
-        self.inner.export_state()
+        // Inner GaLore blob (length-framed) + the lazy-gate state: without
+        // `last_dir`, a resumed run's similarity gate would re-seed from a
+        // post-resume gradient and take/skip different refreshes than the
+        // uninterrupted run.
+        let mut out = Vec::new();
+        let inner = self.inner.export_state();
+        ser::push_u64(&mut out, inner.len() as u64);
+        out.extend_from_slice(&inner);
+        ser::push_u64(&mut out, self.skipped);
+        ser::push_u64(&mut out, self.taken);
+        ser::push_u64(&mut out, self.last_dir.len() as u64);
+        for (&idx, dir) in &self.last_dir {
+            ser::push_u64(&mut out, idx as u64);
+            ser::push_f32s(&mut out, dir);
+        }
+        out
     }
 
     fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
-        self.inner.import_state(bytes)
+        let mut r = ser::Reader::new(bytes);
+        let inner_len = r.u64()? as usize;
+        let inner = r.bytes(inner_len)?.to_vec();
+        self.inner.import_state(&inner)?;
+        self.skipped = r.u64()?;
+        self.taken = r.u64()?;
+        let n = r.u64()? as usize;
+        self.last_dir.clear();
+        for _ in 0..n {
+            let idx = r.u64()? as usize;
+            let dir = r.f32s()?;
+            self.last_dir.insert(idx, dir);
+        }
+        Ok(())
     }
 }
 
@@ -209,6 +237,43 @@ mod tests {
         let (taken, skipped) = opt.lazy_stats();
         assert!(skipped >= 4, "skipped={skipped} taken={taken}");
         assert_eq!(taken, 0);
+    }
+
+    #[test]
+    fn export_import_resumes_gate_and_trajectory() {
+        // The lazy gate's last_dir and counters ride along in the state
+        // blob: a resumed instance must take/skip the same refreshes and
+        // stay bitwise on the uninterrupted trajectory.
+        let mut rng = Pcg64::new(6, 0);
+        let grad = Matrix::randn(8, 24, 1.0, &mut rng);
+        let cfg = QGaLoreCfg {
+            galore: GaLoreCfg {
+                rank: 4,
+                update_freq: 5,
+                alpha: 1.0,
+                projection: ProjectionKind::Quant8,
+                ..GaLoreCfg::default()
+            },
+            similarity_threshold: 0.5,
+        };
+        let mut a = QGaLore::new(cfg, AdamCfg::default(), 4);
+        let mut wa = Matrix::zeros(8, 24);
+        for t in 0..12 {
+            a.begin_step(t);
+            a.step_param(0, &mut wa, &grad, 1e-6); // tiny lr: grad ~constant
+        }
+        let blob = a.export_state();
+        let mut b = QGaLore::new(cfg, AdamCfg::default(), 77); // other seed
+        b.import_state(&blob).unwrap();
+        let mut wb = wa.clone();
+        for t in 12..26 {
+            a.begin_step(t);
+            a.step_param(0, &mut wa, &grad, 1e-6);
+            b.begin_step(t);
+            b.step_param(0, &mut wb, &grad, 1e-6);
+        }
+        assert_eq!(wa.data, wb.data, "qgalore resume diverged");
+        assert_eq!(a.lazy_stats(), b.lazy_stats(), "gate counters diverged");
     }
 
     #[test]

@@ -1,0 +1,415 @@
+//! [`OptimizerSpec`] — the single source of truth for optimizer
+//! construction.
+//!
+//! Every execution mode (single-process, FSDP, DDP, benches, tests) builds
+//! its optimizer through [`OptimizerSpec::build`]; there is deliberately no
+//! other construction matrix in the codebase. Adding an optimizer variant
+//! (Q-GaLore and Natural-GaLore-style drop-ins) means adding one enum arm
+//! here plus a mapping line in `TrainConfig::optimizer_spec` — not a
+//! three-file hunt.
+//!
+//! The spec is `Send` + `Clone` while the built [`Optimizer`] is
+//! intentionally neither: distributed engines ship the *recipe* to worker
+//! threads, which construct their own instances ([`BuildTarget::Worker`]).
+//! The PJRT-kernel GaLore variant additionally needs runtime handles
+//! ([`PjrtResources`]) and is therefore single-process only.
+
+use super::{
+    Adafactor, Adam8bit, AdamCfg, AdamW, GaLore, GaLoreCfg, Optimizer, ProjectionKind, QGaLore,
+    QGaLoreCfg, SgdM,
+};
+use crate::runtime::{Manifest, Runtime};
+use crate::train::PjrtGaLore;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Runtime resources needed to build the PJRT-kernel GaLore variant
+/// (loads `galore_update_*.hlo` artifacts through the PJRT runtime).
+pub struct PjrtResources {
+    pub rt: Arc<Runtime>,
+    pub artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+/// Where the optimizer instance being built will run.
+#[derive(Clone, Copy)]
+pub enum BuildTarget<'a> {
+    /// The in-process trainer loop. Carries PJRT runtime resources when the
+    /// config selected `engine = "pjrt"`.
+    Single { pjrt: Option<&'a PjrtResources> },
+    /// A distributed worker thread. `external_subspace` selects the FSDP
+    /// contract (§4.3: the leader computes subspaces and installs P via
+    /// [`GaLore::preset_projector`]); DDP workers refresh locally and rely
+    /// on identical seeding across ranks to stay in lockstep.
+    Worker { external_subspace: bool },
+}
+
+/// Recipe for an optimizer: `Send`-able, buildable on any execution path.
+#[derive(Clone, Debug)]
+pub enum OptimizerSpec {
+    AdamW(AdamCfg),
+    Adam8bit(AdamCfg),
+    Adafactor { eps: f32 },
+    SgdM { momentum: f32 },
+    GaLore { galore: GaLoreCfg, adam: AdamCfg },
+    /// Q-GaLore (§4.2): quantized projector storage plus the lazy,
+    /// similarity-gated subspace refresh. Under FSDP the gate is inert
+    /// (the coordinator owns refreshes) but the quantized projector — the
+    /// memory-relevant part — is kept.
+    QGaLore {
+        galore: GaLoreCfg,
+        adam: AdamCfg,
+        /// Cosine-similarity threshold above which a scheduled refresh is
+        /// skipped (1.0 disables laziness).
+        similarity_threshold: f32,
+    },
+    /// GaLore whose fused per-step update runs the Pallas kernel artifacts
+    /// over PJRT. Single-process only (holds non-`Send` device handles).
+    PjrtGaLore { galore: GaLoreCfg, adam: AdamCfg },
+}
+
+/// Force a quantized projector kind (Q-GaLore's invariant) while keeping an
+/// explicit Quant4 choice.
+fn quantized(mut g: GaLoreCfg) -> GaLoreCfg {
+    if !matches!(
+        g.projection,
+        ProjectionKind::Quant8 | ProjectionKind::Quant4
+    ) {
+        g.projection = ProjectionKind::Quant8;
+    }
+    g
+}
+
+impl OptimizerSpec {
+    /// Name the built optimizer will report — used for logs, Table 1 rows,
+    /// and run names. A quantized projector self-identifies as Q-GaLore.
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerSpec::AdamW(_) => "adamw",
+            OptimizerSpec::Adam8bit(_) => "adam8bit",
+            OptimizerSpec::Adafactor { .. } => "adafactor",
+            OptimizerSpec::SgdM { .. } => "sgdm",
+            OptimizerSpec::QGaLore { .. } => "qgalore",
+            OptimizerSpec::PjrtGaLore { .. } => "galore-pjrt",
+            OptimizerSpec::GaLore { galore, .. } => match galore.projection {
+                ProjectionKind::Quant8 | ProjectionKind::Quant4 => "qgalore",
+                _ => "galore",
+            },
+        }
+    }
+
+    /// The GaLore config, if this spec is a GaLore variant. For Q-GaLore
+    /// the returned config carries the (normalized) quantized projection
+    /// kind, matching what [`OptimizerSpec::build`] constructs.
+    pub fn galore_cfg(&self) -> Option<GaLoreCfg> {
+        match self {
+            OptimizerSpec::GaLore { galore, .. }
+            | OptimizerSpec::PjrtGaLore { galore, .. } => Some(*galore),
+            OptimizerSpec::QGaLore { galore, .. } => Some(quantized(*galore)),
+            _ => None,
+        }
+    }
+
+    /// Whether distributed worker threads can build this spec (everything
+    /// except the PJRT variant, which holds non-`Send` device handles).
+    pub fn distributed_ok(&self) -> bool {
+        !matches!(self, OptimizerSpec::PjrtGaLore { .. })
+    }
+
+    /// Build the optimizer for a given execution target. This is the ONE
+    /// optimizer construction path in the codebase.
+    pub fn build(&self, seed: u64, target: BuildTarget) -> Result<WorkerOpt, String> {
+        let external = matches!(
+            target,
+            BuildTarget::Worker {
+                external_subspace: true
+            }
+        );
+        Ok(match self {
+            OptimizerSpec::AdamW(cfg) => WorkerOpt::Boxed(Box::new(AdamW::new(*cfg))),
+            OptimizerSpec::Adam8bit(cfg) => {
+                WorkerOpt::Boxed(Box::new(Adam8bit::new(*cfg)))
+            }
+            OptimizerSpec::Adafactor { eps } => {
+                WorkerOpt::Boxed(Box::new(Adafactor::new(*eps)))
+            }
+            OptimizerSpec::SgdM { momentum } => {
+                WorkerOpt::Boxed(Box::new(SgdM::new(*momentum)))
+            }
+            OptimizerSpec::GaLore { galore, adam } => {
+                let mut g = *galore;
+                g.external_subspace = external;
+                WorkerOpt::GaLore(GaLore::new(g, *adam, seed))
+            }
+            OptimizerSpec::QGaLore {
+                galore,
+                adam,
+                similarity_threshold,
+            } => {
+                let mut g = quantized(*galore);
+                g.external_subspace = external;
+                if external {
+                    // FSDP: the coordinator owns every refresh, so the lazy
+                    // gate never fires — a plain GaLore with the quantized
+                    // projector is the same optimizer, and the engine can
+                    // drive its subspace through `preset_projector`.
+                    WorkerOpt::GaLore(GaLore::new(g, *adam, seed))
+                } else {
+                    WorkerOpt::Boxed(Box::new(QGaLore::new(
+                        QGaLoreCfg {
+                            galore: g,
+                            similarity_threshold: *similarity_threshold,
+                        },
+                        *adam,
+                        seed,
+                    )))
+                }
+            }
+            OptimizerSpec::PjrtGaLore { galore, adam } => match target {
+                BuildTarget::Single { pjrt: Some(res) } => {
+                    WorkerOpt::Boxed(Box::new(PjrtGaLore::new(
+                        *galore,
+                        *adam,
+                        res.rt.clone(),
+                        res.artifacts_dir.clone(),
+                        res.manifest.clone(),
+                        seed,
+                    )))
+                }
+                BuildTarget::Single { pjrt: None } => {
+                    return Err(
+                        "pjrt galore needs PjrtResources (runtime + artifacts)".into()
+                    )
+                }
+                BuildTarget::Worker { .. } => {
+                    return Err(
+                        "engine=pjrt is single-process only (use --parallel single)"
+                            .into(),
+                    )
+                }
+            },
+        })
+    }
+}
+
+/// A built optimizer: GaLore is held concretely so distributed engines can
+/// drive its external subspace; everything else is a trait object.
+pub enum WorkerOpt {
+    GaLore(GaLore),
+    Boxed(Box<dyn Optimizer>),
+}
+
+impl WorkerOpt {
+    pub fn as_opt(&mut self) -> &mut dyn Optimizer {
+        match self {
+            WorkerOpt::GaLore(g) => g,
+            WorkerOpt::Boxed(b) => b.as_mut(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkerOpt::GaLore(g) => g.name(),
+            WorkerOpt::Boxed(b) => b.name(),
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            WorkerOpt::GaLore(g) => g.state_bytes(),
+            WorkerOpt::Boxed(b) => b.state_bytes(),
+        }
+    }
+
+    pub fn export_state(&self) -> Vec<u8> {
+        match self {
+            WorkerOpt::GaLore(g) => g.export_state(),
+            WorkerOpt::Boxed(b) => b.export_state(),
+        }
+    }
+
+    pub(crate) fn galore_mut(&mut self) -> Option<&mut GaLore> {
+        match self {
+            WorkerOpt::GaLore(g) => Some(g),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn has_projector(&self, idx: usize) -> bool {
+        match self {
+            WorkerOpt::GaLore(g) => g.has_projector(idx),
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_worker_specs() -> Vec<OptimizerSpec> {
+        vec![
+            OptimizerSpec::AdamW(AdamCfg::default()),
+            OptimizerSpec::Adam8bit(AdamCfg::default()),
+            OptimizerSpec::Adafactor { eps: 1e-30 },
+            OptimizerSpec::SgdM { momentum: 0.9 },
+            OptimizerSpec::GaLore {
+                galore: GaLoreCfg::default(),
+                adam: AdamCfg::default(),
+            },
+            OptimizerSpec::QGaLore {
+                galore: GaLoreCfg::default(),
+                adam: AdamCfg::default(),
+                similarity_threshold: 0.9,
+            },
+        ]
+    }
+
+    #[test]
+    fn spec_names_match_config_strings() {
+        let names: Vec<&str> = all_worker_specs().iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            ["adamw", "adam8bit", "adafactor", "sgdm", "galore", "qgalore"]
+        );
+        // Quantized projector ⇒ the spec self-identifies as Q-GaLore.
+        let q = OptimizerSpec::GaLore {
+            galore: GaLoreCfg {
+                projection: ProjectionKind::Quant8,
+                ..GaLoreCfg::default()
+            },
+            adam: AdamCfg::default(),
+        };
+        assert_eq!(q.name(), "qgalore");
+    }
+
+    #[test]
+    fn every_spec_builds_same_name_on_every_path() {
+        // The spec-roundtrip contract: single, FSDP-worker and DDP-worker
+        // paths build an optimizer reporting the identical name.
+        for spec in all_worker_specs() {
+            let single = spec
+                .build(1, BuildTarget::Single { pjrt: None })
+                .expect("single build");
+            let fsdp = spec
+                .build(
+                    1,
+                    BuildTarget::Worker {
+                        external_subspace: true,
+                    },
+                )
+                .expect("fsdp build");
+            let ddp = spec
+                .build(
+                    1,
+                    BuildTarget::Worker {
+                        external_subspace: false,
+                    },
+                )
+                .expect("ddp build");
+            assert_eq!(single.name(), spec.name(), "single path name drift");
+            assert_eq!(fsdp.name(), spec.name(), "fsdp path name drift");
+            assert_eq!(ddp.name(), spec.name(), "ddp path name drift");
+        }
+    }
+
+    #[test]
+    fn build_honours_external_subspace_flag() {
+        let spec = OptimizerSpec::GaLore {
+            galore: GaLoreCfg::default(),
+            adam: AdamCfg::default(),
+        };
+        let mut fsdp = spec
+            .build(
+                1,
+                BuildTarget::Worker {
+                    external_subspace: true,
+                },
+            )
+            .unwrap();
+        let g = fsdp.galore_mut().expect("galore spec builds galore");
+        assert!(g.cfg.external_subspace);
+        let mut ddp = spec
+            .build(
+                1,
+                BuildTarget::Worker {
+                    external_subspace: false,
+                },
+            )
+            .unwrap();
+        assert!(!ddp.galore_mut().unwrap().cfg.external_subspace);
+    }
+
+    #[test]
+    fn qgalore_spec_normalizes_projection_and_keeps_gate_off_fsdp() {
+        // An fp32 projection kind is normalized to Quant8 (Q-GaLore's
+        // invariant) on every path, including the galore_cfg() view the
+        // FSDP coordinator uses for its install decisions.
+        let spec = OptimizerSpec::QGaLore {
+            galore: GaLoreCfg {
+                projection: ProjectionKind::RandSvd,
+                ..GaLoreCfg::default()
+            },
+            adam: AdamCfg::default(),
+            similarity_threshold: 0.5,
+        };
+        assert_eq!(
+            spec.galore_cfg().unwrap().projection,
+            ProjectionKind::Quant8
+        );
+        let mut fsdp = spec
+            .build(
+                3,
+                BuildTarget::Worker {
+                    external_subspace: true,
+                },
+            )
+            .unwrap();
+        let g = fsdp.galore_mut().expect("fsdp qgalore is driveable galore");
+        assert_eq!(g.cfg.projection, ProjectionKind::Quant8);
+        assert_eq!(g.name(), "qgalore");
+        let ddp = spec
+            .build(
+                3,
+                BuildTarget::Worker {
+                    external_subspace: false,
+                },
+            )
+            .unwrap();
+        assert_eq!(ddp.name(), "qgalore");
+    }
+
+    #[test]
+    fn pjrt_spec_is_single_process_only() {
+        let spec = OptimizerSpec::PjrtGaLore {
+            galore: GaLoreCfg::default(),
+            adam: AdamCfg::default(),
+        };
+        assert_eq!(spec.name(), "galore-pjrt");
+        assert!(!spec.distributed_ok());
+        assert!(spec
+            .build(
+                1,
+                BuildTarget::Worker {
+                    external_subspace: true
+                }
+            )
+            .is_err());
+        assert!(spec.build(1, BuildTarget::Single { pjrt: None }).is_err());
+    }
+
+    #[test]
+    fn projection_predicate_matches_shapes() {
+        // The coordinator and the optimizer share GaLoreCfg::projects, so
+        // the FSDP install decision can never drift from step_param's.
+        let cfg = GaLoreCfg {
+            rank: 16,
+            min_dim: 2,
+            ..GaLoreCfg::default()
+        };
+        assert!(cfg.projects(64, 128));
+        assert!(cfg.projects(16, 128)); // rank == min dim
+        assert!(!cfg.projects(8, 128)); // rank > min dim
+        assert!(!cfg.projects(1, 128)); // bias-like
+    }
+}

@@ -1,0 +1,375 @@
+//! [`TrainEngine`] — one trait per execution mode.
+//!
+//! The trainer's step loop is mode-agnostic: it computes per-rank
+//! microbatch gradients through the fwd_bwd artifact and hands them to an
+//! engine, which owns the parameters (full or sharded) and the optimizer
+//! state, however it is distributed. Adding an execution mode (e.g. a
+//! shared-memory or TCP `Comm` transport, per ROADMAP) means implementing
+//! this trait — the optimizer construction matrix stays untouched because
+//! every engine builds through [`OptimizerSpec::build`].
+//!
+//! Engines:
+//! * [`SingleEngine`] — in-process optimizer (native or PJRT-kernel).
+//! * [`FsdpEngine`]   — sharded state over [`FsdpCluster`] worker threads.
+//! * [`DdpEngine`]    — replicated state over [`DdpCluster`] worker
+//!   threads; world=1 trajectories are bitwise equal to [`SingleEngine`].
+
+use crate::dist::{DdpCluster, FsdpCluster, MemoryReport, ParamMeta};
+use crate::optim::spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};
+use crate::tensor::Matrix;
+
+/// An execution mode: owns parameters + optimizer state, applies steps.
+pub trait TrainEngine {
+    /// Execution-mode name ("single" | "fsdp" | "ddp").
+    fn name(&self) -> &'static str;
+
+    /// Name of the optimizer the spec built ("galore", "qgalore", …).
+    fn optimizer_name(&self) -> &'static str;
+
+    /// Number of per-rank gradient sets `step` expects.
+    fn world(&self) -> usize;
+
+    /// (Re)install full parameters — initialization and checkpoint resume
+    /// (sharded engines re-scatter into their workers here).
+    fn init_params(&mut self, full: &[Matrix]);
+
+    /// Current full (unsharded) parameters.
+    fn params(&self) -> &[Matrix];
+
+    /// One synchronous optimizer step. `per_rank_grads[r]` holds rank r's
+    /// microbatch gradients in full shapes; `lr` is the scheduled rate.
+    fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32);
+
+    /// Serialized optimizer state (checkpointing); round-trips through
+    /// `import_state` on an engine of the same mode and world size.
+    fn export_state(&self) -> Vec<u8>;
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String>;
+
+    /// Per-rank memory/traffic telemetry (None for single-process).
+    fn memory_reports(&self) -> Option<Vec<MemoryReport>>;
+}
+
+/// Single-process engine: one optimizer instance stepping in place.
+pub struct SingleEngine {
+    opt: WorkerOpt,
+    params: Vec<Matrix>,
+}
+
+impl SingleEngine {
+    pub fn new(
+        spec: &OptimizerSpec,
+        seed: u64,
+        pjrt: Option<&PjrtResources>,
+        params: Vec<Matrix>,
+    ) -> Result<SingleEngine, String> {
+        Ok(SingleEngine {
+            opt: spec.build(seed, BuildTarget::Single { pjrt })?,
+            params,
+        })
+    }
+}
+
+impl TrainEngine for SingleEngine {
+    fn name(&self) -> &'static str {
+        "single"
+    }
+
+    fn optimizer_name(&self) -> &'static str {
+        self.opt.name()
+    }
+
+    fn world(&self) -> usize {
+        1
+    }
+
+    fn init_params(&mut self, full: &[Matrix]) {
+        self.params = full.to_vec();
+    }
+
+    fn params(&self) -> &[Matrix] {
+        &self.params
+    }
+
+    fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32) {
+        assert_eq!(per_rank_grads.len(), 1, "single engine takes one rank");
+        let grads = per_rank_grads.into_iter().next().unwrap();
+        assert_eq!(grads.len(), self.params.len(), "grad/param count");
+        let opt = self.opt.as_opt();
+        opt.begin_step(t);
+        for (idx, grad) in grads.into_iter().enumerate() {
+            opt.step_param(idx, &mut self.params[idx], &grad, lr);
+            // grad dropped here — per-layer update semantics.
+        }
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        self.opt.export_state()
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.opt.as_opt().import_state(bytes)
+    }
+
+    fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
+        None
+    }
+}
+
+/// FSDP engine: sharded parameters + optimizer state across worker
+/// threads; keeps a gathered full-parameter view for the fwd_bwd artifact.
+pub struct FsdpEngine {
+    cluster: FsdpCluster,
+    params: Vec<Matrix>,
+}
+
+impl FsdpEngine {
+    pub fn new(
+        world: usize,
+        metas: Vec<ParamMeta>,
+        spec: OptimizerSpec,
+        seed: u64,
+        init: &[Matrix],
+    ) -> Result<FsdpEngine, String> {
+        if !spec.distributed_ok() {
+            return Err(format!("{} cannot run under fsdp", spec.name()));
+        }
+        let cluster = FsdpCluster::new(world, metas, spec, seed);
+        cluster.init_params(init);
+        Ok(FsdpEngine {
+            cluster,
+            params: init.to_vec(),
+        })
+    }
+}
+
+impl TrainEngine for FsdpEngine {
+    fn name(&self) -> &'static str {
+        "fsdp"
+    }
+
+    fn optimizer_name(&self) -> &'static str {
+        self.cluster.optimizer_name()
+    }
+
+    fn world(&self) -> usize {
+        self.cluster.world()
+    }
+
+    fn init_params(&mut self, full: &[Matrix]) {
+        self.cluster.init_params(full);
+        self.params = full.to_vec();
+    }
+
+    fn params(&self) -> &[Matrix] {
+        &self.params
+    }
+
+    fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32) {
+        self.cluster.step(t, per_rank_grads, lr);
+        self.params = self.cluster.gather_params();
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        self.cluster.export_optimizers()
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.cluster.import_optimizers(bytes)
+    }
+
+    fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
+        Some(self.cluster.memory_reports())
+    }
+}
+
+/// DDP engine: replicated parameters + optimizer state; every gather
+/// verifies the replicas are still bitwise identical.
+pub struct DdpEngine {
+    cluster: DdpCluster,
+    params: Vec<Matrix>,
+}
+
+impl DdpEngine {
+    pub fn new(
+        world: usize,
+        metas: Vec<ParamMeta>,
+        spec: OptimizerSpec,
+        seed: u64,
+        init: &[Matrix],
+    ) -> Result<DdpEngine, String> {
+        if !spec.distributed_ok() {
+            return Err(format!("{} cannot run under ddp", spec.name()));
+        }
+        let cluster = DdpCluster::new(world, metas, spec, seed);
+        cluster.init_params(init);
+        Ok(DdpEngine {
+            cluster,
+            params: init.to_vec(),
+        })
+    }
+}
+
+impl TrainEngine for DdpEngine {
+    fn name(&self) -> &'static str {
+        "ddp"
+    }
+
+    fn optimizer_name(&self) -> &'static str {
+        self.cluster.optimizer_name()
+    }
+
+    fn world(&self) -> usize {
+        self.cluster.world()
+    }
+
+    fn init_params(&mut self, full: &[Matrix]) {
+        self.cluster.init_params(full);
+        self.params = full.to_vec();
+    }
+
+    fn params(&self) -> &[Matrix] {
+        &self.params
+    }
+
+    fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32) {
+        self.cluster.step(t, per_rank_grads, lr);
+        // Cheap per-step view: replicas are identical by construction, so
+        // one rank's copy suffices (full equality is asserted at
+        // checkpoint time and by DdpCluster::gather_params users).
+        self.params = self.cluster.rank0_params();
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        // Checkpoint gate: panic here, not after persisting, if the
+        // replicas have somehow diverged.
+        let _ = self.cluster.gather_params();
+        self.cluster.export_optimizer()
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.cluster.import_optimizer(bytes)
+    }
+
+    fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
+        Some(self.cluster.memory_reports())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::AdamCfg;
+    use crate::util::rng::Pcg64;
+
+    fn setup(shapes: &[(usize, usize)]) -> (Vec<ParamMeta>, Vec<Matrix>, Vec<Matrix>) {
+        let mut rng = Pcg64::new(11, 0);
+        let metas = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(r, c))| ParamMeta {
+                name: format!("p{i}"),
+                rows: r,
+                cols: c,
+            })
+            .collect();
+        let init: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(r, c)| Matrix::randn(r, c, 0.5, &mut rng))
+            .collect();
+        let grads: Vec<Matrix> = shapes
+            .iter()
+            .map(|&(r, c)| Matrix::randn(r, c, 0.1, &mut rng))
+            .collect();
+        (metas, init, grads)
+    }
+
+    #[test]
+    fn all_engines_agree_at_world_one() {
+        // The trait-level statement of the §4.3 claim: one recipe, any
+        // execution mode — world-1 trajectories are identical.
+        let shapes = &[(8, 12), (12, 8), (1, 8)];
+        let (metas, init, grads) = setup(shapes);
+        let spec = OptimizerSpec::AdamW(AdamCfg::default());
+        let mut engines: Vec<Box<dyn TrainEngine>> = vec![
+            Box::new(SingleEngine::new(&spec, 5, None, init.clone()).unwrap()),
+            Box::new(FsdpEngine::new(1, metas.clone(), spec.clone(), 5, &init).unwrap()),
+            Box::new(DdpEngine::new(1, metas, spec.clone(), 5, &init).unwrap()),
+        ];
+        for t in 0..5 {
+            for e in engines.iter_mut() {
+                e.step(t, vec![grads.clone()], 0.05);
+            }
+        }
+        let names: Vec<&str> = engines.iter().map(|e| e.name()).collect();
+        assert_eq!(names, ["single", "fsdp", "ddp"]);
+        for e in &engines {
+            assert_eq!(e.optimizer_name(), "adamw");
+            assert_eq!(e.world(), 1);
+        }
+        let base = engines[0].params().to_vec();
+        for e in &engines[1..] {
+            for (idx, (a, b)) in base.iter().zip(e.params()).enumerate() {
+                assert_eq!(
+                    a.data,
+                    b.data,
+                    "param {idx}: {} diverged from single",
+                    e.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn engine_state_roundtrips_via_trait_surface() {
+        // export_state → fresh engine → init_params + import_state must
+        // resume the exact trajectory, for every engine mode.
+        let shapes = &[(6, 10), (10, 6)];
+        let (metas, init, grads) = setup(shapes);
+        let spec = OptimizerSpec::AdamW(AdamCfg::default());
+        let builders: Vec<Box<dyn Fn() -> Box<dyn TrainEngine>>> = vec![
+            Box::new({
+                let (spec, init) = (spec.clone(), init.clone());
+                move || {
+                    Box::new(SingleEngine::new(&spec, 3, None, init.clone()).unwrap())
+                        as Box<dyn TrainEngine>
+                }
+            }),
+            Box::new({
+                let (spec, metas, init) = (spec.clone(), metas.clone(), init.clone());
+                move || {
+                    Box::new(
+                        FsdpEngine::new(2, metas.clone(), spec.clone(), 3, &init).unwrap(),
+                    ) as Box<dyn TrainEngine>
+                }
+            }),
+            Box::new({
+                let (spec, metas, init) = (spec.clone(), metas.clone(), init.clone());
+                move || {
+                    Box::new(DdpEngine::new(2, metas.clone(), spec.clone(), 3, &init).unwrap())
+                        as Box<dyn TrainEngine>
+                }
+            }),
+        ];
+        for make in builders {
+            let mut a = make();
+            let world = a.world();
+            a.step(0, vec![grads.clone(); world], 0.05);
+            let blob = a.export_state();
+            let snapshot = a.params().to_vec();
+            let mut b = make();
+            b.init_params(&snapshot);
+            b.import_state(&blob).unwrap();
+            a.step(1, vec![grads.clone(); world], 0.05);
+            b.step(1, vec![grads.clone(); world], 0.05);
+            for (idx, (x, y)) in a.params().iter().zip(b.params()).enumerate() {
+                assert_eq!(
+                    x.data,
+                    y.data,
+                    "param {idx}: {} resume diverged",
+                    a.name()
+                );
+            }
+        }
+    }
+}

@@ -1,7 +1,17 @@
 //! Training loop: the coordinator's per-step orchestration.
+//!
+//! * [`Trainer`] — config → artifacts → data → step loop.
+//! * [`TrainEngine`] — the execution-mode abstraction ([`SingleEngine`],
+//!   [`FsdpEngine`], [`DdpEngine`]); one trait per mode, one optimizer
+//!   construction path (`OptimizerSpec::build`) behind all of them.
+//! * [`StepObserver`] / [`StepEvent`] — the trainer's event stream.
 
+mod engine;
+mod observer;
 mod pjrt_galore;
 mod trainer;
 
+pub use engine::{DdpEngine, FsdpEngine, SingleEngine, TrainEngine};
+pub use observer::{StepEvent, StepObserver};
 pub use pjrt_galore::PjrtGaLore;
 pub use trainer::{TrainOutcome, Trainer};

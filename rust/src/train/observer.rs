@@ -1,0 +1,40 @@
+//! Step-event observer API: consumers subscribe to the trainer's event
+//! stream instead of reaching into trainer internals.
+//!
+//! The trainer emits [`StepEvent`]s at its logging cadence (`log_every`
+//! for train points, `eval_every` for validation sweeps, and one event per
+//! checkpoint). [`crate::metrics::Metrics`] is itself an observer — the
+//! loss curves every bench and the coordinator read are built from the
+//! same stream external observers see.
+
+use std::path::PathBuf;
+
+/// One trainer lifecycle event.
+#[derive(Clone, Debug)]
+pub enum StepEvent {
+    /// A training step completed (emitted at the `log_every` cadence and
+    /// on the final step).
+    Train {
+        step: u64,
+        loss: f64,
+        lr: f64,
+        tokens_seen: u64,
+        wall_secs: f64,
+    },
+    /// A validation sweep completed (`eval_every` cadence).
+    Val {
+        step: u64,
+        loss: f64,
+        lr: f64,
+        tokens_seen: u64,
+        wall_secs: f64,
+    },
+    /// A checkpoint was written.
+    Checkpoint { step: u64, path: PathBuf },
+}
+
+/// Subscriber to the trainer's event stream; register with
+/// [`crate::train::Trainer::add_observer`].
+pub trait StepObserver {
+    fn on_event(&mut self, event: &StepEvent);
+}

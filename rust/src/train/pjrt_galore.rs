@@ -194,6 +194,15 @@ impl Optimizer for PjrtGaLore {
     fn name(&self) -> &'static str {
         "galore-pjrt"
     }
+
+    fn import_state(&mut self, _bytes: &[u8]) -> Result<(), String> {
+        // No host snapshot format for the kernel-resident state yet; fail
+        // loudly rather than resuming with silently-reset moments (the
+        // trait default would return Ok and diverge the trajectory).
+        Err("galore-pjrt cannot restore optimizer state yet — resume with \
+             --engine native"
+            .into())
+    }
 }
 
 #[cfg(test)]

@@ -1,46 +1,40 @@
-//! The trainer: config → artifacts → data → step loop → metrics.
+//! The trainer: config → artifacts → data → step loop → events.
 //!
-//! Per step (single-process):
-//!   1. draw a packed batch,
-//!   2. execute the fwd_bwd artifact (loss + per-param grads),
-//!   3. run the optimizer (native GaLore / PJRT-kernel GaLore / baselines),
-//!   4. log; periodically sweep validation and checkpoint.
+//! Per step:
+//!   1. draw one packed microbatch per rank (`engine.world()` of them),
+//!   2. execute the fwd_bwd artifact per microbatch (loss + grads),
+//!   3. hand the per-rank gradients to the [`TrainEngine`], which owns the
+//!      parameters and optimizer state for its execution mode (single
+//!      process, FSDP-sharded, or DDP-replicated — see train/engine.rs),
+//!   4. emit [`StepEvent`]s; periodically sweep validation and checkpoint.
 //!
-//! Under FSDP/DDP the gradients of each rank's microbatch are computed via
-//! the same artifact, then handed to the distributed engine whose worker
-//! threads own shards + optimizer state (rust/src/dist/).
+//! The optimizer itself is always built from `cfg.optimizer_spec()` via
+//! [`crate::optim::OptimizerSpec::build`] — the trainer contains no
+//! optimizer construction logic of its own.
 //!
 //! Parallel execution: `cfg.threads` sets the process-wide worker-pool
-//! default (`crate::parallel`), so the per-layer optimizer stepping below
-//! fans its projection/reprojection GEMMs and SVD refreshes across cores;
-//! under FSDP the per-layer loop itself additionally runs concurrently
+//! default (`crate::parallel`), so per-layer optimizer stepping fans its
+//! projection/reprojection GEMMs and SVD refreshes across cores; under
+//! FSDP/DDP the per-layer loop itself additionally runs concurrently
 //! across the cluster's worker threads. Both layers of parallelism are
 //! bitwise deterministic (fixed-tree reductions, panel-local kernels).
 
 use crate::checkpoint::Checkpoint;
 use crate::config::{Engine, ParallelMode, TrainConfig};
 use crate::data::{Batch, Corpus, CorpusCfg, DataLoader};
-use crate::dist::FsdpCluster;
-use crate::dist::ParamMeta;
+use crate::dist::{MemoryReport, ParamMeta, PjrtResources};
 use crate::metrics::Metrics;
 use crate::model::LlamaCfg;
 use crate::optim::lr::Schedule;
-use crate::optim::Optimizer;
 use crate::runtime::{Executable, HostTensor, Manifest, Runtime};
 use crate::tensor::Matrix;
-use crate::train::PjrtGaLore;
+use crate::train::{
+    DdpEngine, FsdpEngine, SingleEngine, StepEvent, StepObserver, TrainEngine,
+};
 use crate::util::Timer;
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
-
-enum Mode {
-    Single {
-        opt: Box<dyn Optimizer>,
-    },
-    Fsdp {
-        cluster: FsdpCluster,
-    },
-}
 
 pub struct Trainer {
     pub cfg: TrainConfig,
@@ -51,9 +45,8 @@ pub struct Trainer {
     pub loader: DataLoader,
     pub schedule: Schedule,
     pub metrics: Metrics,
-    /// Full parameters as seen by the compute device.
-    pub params: Vec<Matrix>,
-    mode: Mode,
+    engine: Box<dyn TrainEngine>,
+    observers: Vec<Box<dyn StepObserver>>,
     pub tokens_seen: u64,
     start_step: u64,
     wall: Timer,
@@ -114,76 +107,43 @@ impl Trainer {
             floor_frac: cfg.lr_floor_frac,
         };
 
-        let mode = match cfg.parallel {
+        // THE optimizer construction path: every mode builds from the spec.
+        let spec = cfg.optimizer_spec(llama.hidden)?;
+        let metas: Vec<ParamMeta> = manifest
+            .params
+            .iter()
+            .map(|p| {
+                let (rows, cols) = p.matrix_shape();
+                ParamMeta {
+                    name: p.name.clone(),
+                    rows,
+                    cols,
+                }
+            })
+            .collect();
+        let engine: Box<dyn TrainEngine> = match cfg.parallel {
             ParallelMode::Single => {
-                let opt: Box<dyn Optimizer> = match (cfg.engine, cfg.optimizer.as_str()) {
-                    (Engine::Pjrt, "galore") => Box::new(PjrtGaLore::new(
-                        cfg.galore_cfg(llama.hidden)?,
-                        cfg.adam_cfg(),
-                        rt.clone(),
-                        cfg.artifacts_dir.clone(),
-                        manifest.clone(),
-                        cfg.seed,
-                    )),
-                    (Engine::Pjrt, other) => {
-                        bail!("engine=pjrt only applies to galore (got {other})")
-                    }
-                    (Engine::Native, "galore") => Box::new(crate::optim::GaLore::new(
-                        cfg.galore_cfg(llama.hidden)?,
-                        cfg.adam_cfg(),
-                        cfg.seed,
-                    )),
-                    (Engine::Native, "qgalore") => {
-                        let mut g = cfg.galore_cfg(llama.hidden)?;
-                        g.projection = crate::optim::ProjectionKind::Quant8;
-                        Box::new(crate::optim::QGaLore::new(
-                            crate::optim::QGaLoreCfg {
-                                galore: g,
-                                similarity_threshold: 0.9,
-                            },
-                            cfg.adam_cfg(),
-                            cfg.seed,
-                        ))
-                    }
-                    (Engine::Native, "adamw") => {
-                        Box::new(crate::optim::AdamW::new(cfg.adam_cfg()))
-                    }
-                    (Engine::Native, "adam8bit") => {
-                        Box::new(crate::optim::Adam8bit::new(cfg.adam_cfg()))
-                    }
-                    (Engine::Native, "adafactor") => {
-                        Box::new(crate::optim::Adafactor::new(1e-30))
-                    }
-                    (Engine::Native, "sgdm") => Box::new(crate::optim::SgdM::new(0.9)),
-                    (Engine::Native, other) => bail!("unknown optimizer {other:?}"),
-                };
-                Mode::Single { opt }
-            }
-            ParallelMode::Fsdp => {
-                let metas: Vec<ParamMeta> = manifest
-                    .params
-                    .iter()
-                    .map(|p| {
-                        let (rows, cols) = p.matrix_shape();
-                        ParamMeta {
-                            name: p.name.clone(),
-                            rows,
-                            cols,
-                        }
+                let pjrt = if cfg.engine == Engine::Pjrt {
+                    Some(PjrtResources {
+                        rt: rt.clone(),
+                        artifacts_dir: cfg.artifacts_dir.clone(),
+                        manifest: manifest.clone(),
                     })
-                    .collect();
-                let cluster = FsdpCluster::new(
-                    cfg.world.max(1),
-                    metas,
-                    cfg.optimizer_spec(llama.hidden)?,
-                    cfg.seed,
-                );
-                cluster.init_params(&params);
-                Mode::Fsdp { cluster }
+                } else {
+                    None
+                };
+                Box::new(
+                    SingleEngine::new(&spec, cfg.seed, pjrt.as_ref(), params)
+                        .map_err(anyhow::Error::msg)?,
+                )
             }
-            ParallelMode::Ddp => bail!(
-                "ddp mode is exposed through dist::run_ddp (see \
-                 benches/table1_fsdp_memory.rs); the trainer uses single or fsdp"
+            ParallelMode::Fsdp => Box::new(
+                FsdpEngine::new(cfg.world.max(1), metas, spec, cfg.seed, &params)
+                    .map_err(anyhow::Error::msg)?,
+            ),
+            ParallelMode::Ddp => Box::new(
+                DdpEngine::new(cfg.world.max(1), metas, spec, cfg.seed, &params)
+                    .map_err(anyhow::Error::msg)?,
             ),
         };
 
@@ -196,12 +156,35 @@ impl Trainer {
             loader,
             schedule,
             metrics: Metrics::new(),
-            params,
-            mode,
+            engine,
+            observers: Vec::new(),
             tokens_seen: 0,
             start_step: 0,
             wall: Timer::start(),
         })
+    }
+
+    /// Current full parameters (the engine's authoritative view).
+    pub fn params(&self) -> &[Matrix] {
+        self.engine.params()
+    }
+
+    /// The execution engine (mode name, world size, telemetry).
+    pub fn engine(&self) -> &dyn TrainEngine {
+        self.engine.as_ref()
+    }
+
+    /// Subscribe to the trainer's [`StepEvent`] stream. [`Metrics`] is
+    /// always subscribed; external observers see the same events.
+    pub fn add_observer(&mut self, observer: Box<dyn StepObserver>) {
+        self.observers.push(observer);
+    }
+
+    fn emit(&mut self, event: StepEvent) {
+        self.metrics.on_event(&event);
+        for obs in &mut self.observers {
+            obs.on_event(&event);
+        }
     }
 
     /// Inputs for one execution: params (in ABI shapes) + tokens + targets.
@@ -210,7 +193,7 @@ impl Trainer {
             .manifest
             .params
             .iter()
-            .zip(&self.params)
+            .zip(self.engine.params())
             .map(|(spec, m)| {
                 if spec.shape.len() == 1 {
                     HostTensor::from_vec1(&m.data)
@@ -241,46 +224,22 @@ impl Trainer {
         Ok((loss, grads))
     }
 
-    /// One optimizer step; returns the training loss of this step's batch.
+    /// One optimizer step; returns the mean training loss over this step's
+    /// per-rank microbatches (one microbatch for single-process engines).
     pub fn train_step(&mut self, t: u64) -> Result<f32> {
         let lr = self.schedule.lr(t);
-        let loss = match self.cfg.parallel {
-            ParallelMode::Single => {
-                let batch = self.loader.train_batch_at(t, 0);
-                self.tokens_seen += (batch.batch * batch.seq) as u64;
-                let (loss, grads) = self.compute_grads(&batch)?;
-                let Mode::Single { opt } = &mut self.mode else {
-                    unreachable!()
-                };
-                opt.begin_step(t);
-                for (idx, grad) in grads.into_iter().enumerate() {
-                    opt.step_param(idx, &mut self.params[idx], &grad, lr);
-                    // grad dropped here — per-layer update semantics.
-                }
-                loss
-            }
-            _ => {
-                // Each rank computes gradients on its own microbatch.
-                let world = self.cfg.world.max(1);
-                let batches = self.loader.train_microbatches_at(t, world);
-                self.tokens_seen +=
-                    (world * self.loader.tokens_per_batch()) as u64;
-                let mut losses = Vec::with_capacity(world);
-                let mut per_rank = Vec::with_capacity(world);
-                for b in &batches {
-                    let (l, g) = self.compute_grads(b)?;
-                    losses.push(l);
-                    per_rank.push(g);
-                }
-                let Mode::Fsdp { cluster } = &mut self.mode else {
-                    unreachable!()
-                };
-                cluster.step(t, per_rank, lr);
-                self.params = cluster.gather_params();
-                losses.iter().sum::<f32>() / world as f32
-            }
-        };
-        Ok(loss)
+        let world = self.engine.world();
+        let batches = self.loader.train_microbatches_at(t, world);
+        let mut losses = Vec::with_capacity(world);
+        let mut per_rank = Vec::with_capacity(world);
+        for b in &batches {
+            self.tokens_seen += (b.batch * b.seq) as u64;
+            let (l, g) = self.compute_grads(b)?;
+            losses.push(l);
+            per_rank.push(g);
+        }
+        self.engine.step(t, per_rank, lr);
+        Ok(losses.iter().sum::<f32>() / world as f32)
     }
 
     /// Mean validation loss over `batches` deterministic windows.
@@ -295,44 +254,54 @@ impl Trainer {
         Ok(total / batches.max(1) as f64)
     }
 
-    /// Full training run with logging / eval / checkpoints.
+    /// Full training run with event emission / eval / checkpoints.
     pub fn run(&mut self) -> Result<TrainOutcome> {
         let steps = self.cfg.steps;
         let mut last_train = f64::NAN;
+        let mut last_val: Option<(u64, f64)> = None;
         for t in self.start_step..steps {
             let loss = self.train_step(t)? as f64;
             last_train = loss;
             if t % self.cfg.log_every == 0 || t + 1 == steps {
-                self.metrics.log(
-                    "train",
-                    t,
-                    self.tokens_seen,
+                self.emit(StepEvent::Train {
+                    step: t,
                     loss,
-                    self.schedule.lr(t) as f64,
-                    self.wall.elapsed_secs(),
-                );
+                    lr: self.schedule.lr(t) as f64,
+                    tokens_seen: self.tokens_seen,
+                    wall_secs: self.wall.elapsed_secs(),
+                });
             }
             if self.cfg.eval_every > 0
                 && (t % self.cfg.eval_every == 0 || t + 1 == steps)
             {
                 let val = self.validate(self.cfg.eval_batches)?;
-                self.metrics.log(
-                    "val",
-                    t,
-                    self.tokens_seen,
-                    val,
-                    self.schedule.lr(t) as f64,
-                    self.wall.elapsed_secs(),
-                );
+                last_val = Some((t, val));
+                self.emit(StepEvent::Val {
+                    step: t,
+                    loss: val,
+                    lr: self.schedule.lr(t) as f64,
+                    tokens_seen: self.tokens_seen,
+                    wall_secs: self.wall.elapsed_secs(),
+                });
             }
             if self.cfg.checkpoint_every > 0
                 && t > 0
                 && t % self.cfg.checkpoint_every == 0
             {
-                self.save_checkpoint(t)?;
+                // Label = completed-step count = the step a resume runs
+                // next (ckpt.step convention of Trainer::resume); saving
+                // with label t would make the resumed run re-apply step t
+                // to optimizer state that already consumed it.
+                let path = self.save_checkpoint(t + 1)?;
+                self.emit(StepEvent::Checkpoint { step: t + 1, path });
             }
         }
-        let final_val = self.validate(self.cfg.eval_batches)?;
+        // The eval cadence already sweeps validation on the final step;
+        // reuse it rather than paying a second identical sweep.
+        let final_val = match last_val {
+            Some((t, v)) if t + 1 == steps => v,
+            _ => self.validate(self.cfg.eval_batches)?,
+        };
         Ok(TrainOutcome {
             final_train_loss: last_train,
             final_val_loss: final_val,
@@ -342,18 +311,15 @@ impl Trainer {
         })
     }
 
-    pub fn checkpoint_path(&self, step: u64) -> std::path::PathBuf {
+    pub fn checkpoint_path(&self, step: u64) -> PathBuf {
         self.cfg
             .out_dir
             .join(&self.cfg.run_name)
             .join(format!("step_{step}.ckpt"))
     }
 
-    pub fn save_checkpoint(&self, step: u64) -> Result<()> {
-        let opt_state = match &self.mode {
-            Mode::Single { opt } => opt.export_state(),
-            Mode::Fsdp { cluster } => cluster.export_rank0_optimizer(),
-        };
+    pub fn save_checkpoint(&self, step: u64) -> Result<PathBuf> {
+        let path = self.checkpoint_path(step);
         Checkpoint {
             step,
             names: self
@@ -362,35 +328,41 @@ impl Trainer {
                 .iter()
                 .map(|p| p.name.clone())
                 .collect(),
-            params: self.params.clone(),
-            opt_state,
+            params: self.engine.params().to_vec(),
+            opt_state: self.engine.export_state(),
         }
-        .save(self.checkpoint_path(step))?;
-        Ok(())
+        .save(&path)?;
+        Ok(path)
     }
 
-    /// Resume parameters + optimizer state from a checkpoint (single mode).
-    pub fn resume(&mut self, path: &std::path::Path) -> Result<u64> {
+    /// Resume parameters + optimizer state from a checkpoint. Parameters
+    /// are re-installed through the engine (sharded engines re-scatter
+    /// into their workers) and optimizer state flows through
+    /// [`TrainEngine::import_state`] — FSDP restores every rank's
+    /// shard-local moments, not just rank 0's.
+    pub fn resume(&mut self, path: &Path) -> Result<u64> {
         let ckpt = Checkpoint::load(path)?;
         anyhow::ensure!(
-            ckpt.params.len() == self.params.len(),
+            ckpt.params.len() == self.engine.params().len(),
             "checkpoint param count mismatch"
         );
-        self.params = ckpt.params;
-        if let Mode::Single { opt } = &mut self.mode {
-            opt.import_state(&ckpt.opt_state)
-                .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
-        }
+        self.engine.init_params(&ckpt.params);
+        self.engine
+            .import_state(&ckpt.opt_state)
+            .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
         self.start_step = ckpt.step;
+        // Telemetry continuity: each step consumes exactly world×batch×seq
+        // tokens, so the resumed counter picks up where the run left off
+        // (metrics.csv token axes stay comparable across a resume).
+        self.tokens_seen = ckpt.step
+            * self.engine.world() as u64
+            * self.loader.tokens_per_batch() as u64;
         Ok(ckpt.step)
     }
 
-    /// Per-GPU memory reports when running FSDP.
-    pub fn fsdp_memory(&self) -> Option<Vec<crate::dist::MemoryReport>> {
-        match &self.mode {
-            Mode::Fsdp { cluster } => Some(cluster.memory_reports()),
-            _ => None,
-        }
+    /// Per-rank memory/traffic reports (FSDP and DDP engines).
+    pub fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
+        self.engine.memory_reports()
     }
 
     pub fn runtime(&self) -> Arc<Runtime> {

@@ -35,6 +35,41 @@ impl Pcg64 {
         Pcg64::new(s ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15), tag)
     }
 
+    /// Snapshot the generator's exact position (checkpoint serialization —
+    /// resuming a run must continue the stream, not restart it).
+    pub fn state_bits(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator at an exact position captured by
+    /// [`Pcg64::state_bits`].
+    pub fn from_state_bits(state: u128, inc: u128) -> Pcg64 {
+        Pcg64 { state, inc }
+    }
+
+    /// Exact size of a serialized generator position.
+    pub const STATE_BYTES: usize = 32;
+
+    /// Append the generator position as [`Pcg64::STATE_BYTES`]
+    /// little-endian bytes. The single serialization format for every
+    /// state blob that carries an RNG position (GaLore optimizer state,
+    /// FSDP worker state).
+    pub fn write_state(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.state.to_le_bytes());
+        out.extend_from_slice(&self.inc.to_le_bytes());
+    }
+
+    /// Rebuild from bytes written by [`Pcg64::write_state`].
+    pub fn read_state(bytes: &[u8]) -> Result<Pcg64, String> {
+        if bytes.len() < Self::STATE_BYTES {
+            return Err("truncated rng state".into());
+        }
+        Ok(Pcg64 {
+            state: u128::from_le_bytes(bytes[0..16].try_into().unwrap()),
+            inc: u128::from_le_bytes(bytes[16..32].try_into().unwrap()),
+        })
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -147,6 +182,35 @@ mod tests {
         let mut c1 = root.split(1);
         let same = (0..64).filter(|_| c0.next_u64() == c1.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn state_bits_roundtrip_continues_the_stream() {
+        let mut a = Pcg64::new(42, 3);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let (state, inc) = a.state_bits();
+        let mut b = Pcg64::from_state_bits(state, inc);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn serialized_state_roundtrip_continues_the_stream() {
+        let mut a = Pcg64::new(9, 1);
+        for _ in 0..5 {
+            a.next_u64();
+        }
+        let mut buf = Vec::new();
+        a.write_state(&mut buf);
+        assert_eq!(buf.len(), Pcg64::STATE_BYTES);
+        let mut b = Pcg64::read_state(&buf).unwrap();
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        assert!(Pcg64::read_state(&buf[..31]).is_err());
     }
 
     #[test]

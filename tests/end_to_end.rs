@@ -106,7 +106,7 @@ fn fsdp_two_ranks_matches_single_rank_adamw() {
             "step {t}: single {ls} vs fsdp(1) {lf}"
         );
     }
-    for (a, b) in single.params.iter().zip(&fsdp.params) {
+    for (a, b) in single.params().iter().zip(fsdp.params()) {
         let diff = a
             .data
             .iter()
@@ -136,9 +136,37 @@ fn fsdp_galore_world2_learns() {
         outcome.final_val_loss
     );
     // Memory telemetry present and sane.
-    let reports = trainer.fsdp_memory().unwrap();
+    let reports = trainer.memory_reports().unwrap();
     assert_eq!(reports.len(), 2);
     assert!(reports[0].optimizer_bytes > 0);
+}
+
+#[test]
+fn ddp_galore_world2_learns() {
+    // `--parallel ddp` is a first-class trainer mode: full run, learning,
+    // and replicated-state telemetry (every rank reports FULL moments).
+    if !ready() {
+        return;
+    }
+    let mut trainer = Trainer::new({
+        let mut c = cfg("galore", "e2e_ddp2", 120);
+        c.parallel = ParallelMode::Ddp;
+        c.world = 2;
+        c
+    })
+    .unwrap();
+    let outcome = trainer.run().unwrap();
+    assert!(
+        outcome.final_val_loss < 3.5,
+        "DDP GaLore failed to learn: {}",
+        outcome.final_val_loss
+    );
+    let reports = trainer.memory_reports().unwrap();
+    assert_eq!(reports.len(), 2);
+    // Replicated params: every rank holds the full model.
+    let full: usize = trainer.params().iter().map(|p| p.numel() * 4).sum();
+    assert_eq!(reports[0].param_shard_bytes, full);
+    assert_eq!(reports[1].param_shard_bytes, full);
 }
 
 #[test]
@@ -174,6 +202,58 @@ fn checkpoint_resume_reproduces_trajectory() {
 }
 
 #[test]
+fn fsdp_checkpoint_resume_reproduces_trajectory() {
+    // The FSDP resume fix: restoring must re-scatter loaded params into
+    // the cluster's shards AND restore every rank's shard-local moments
+    // (TrainEngine::import_state) — not train from stale shards with
+    // fresh moments.
+    if !ready() {
+        return;
+    }
+    let fsdp_cfg = |run: &str| {
+        let mut c = cfg("galore", run, 40);
+        c.parallel = ParallelMode::Fsdp;
+        c.world = 2;
+        // Refresh at t=25 lands INSIDE the compared window (20..30): the
+        // checkpoint carries each worker's SVD-stream position, so the
+        // resumed leader must draw the same sketch there.
+        c.galore_update_freq = 25;
+        c
+    };
+    let mut a = Trainer::new(fsdp_cfg("e2e_fsdp_ckpt")).unwrap();
+    for t in 0..20 {
+        a.train_step(t).unwrap();
+    }
+    a.save_checkpoint(20).unwrap();
+    let mut losses_a = Vec::new();
+    for t in 20..30 {
+        losses_a.push(a.train_step(t).unwrap());
+    }
+    let mut b = Trainer::new(fsdp_cfg("e2e_fsdp_ckpt")).unwrap();
+    assert_eq!(b.resume(&a.checkpoint_path(20)).unwrap(), 20);
+    let mut losses_b = Vec::new();
+    for t in 20..30 {
+        losses_b.push(b.train_step(t).unwrap());
+    }
+    for (i, (x, y)) in losses_a.iter().zip(&losses_b).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-4,
+            "FSDP resume diverged at step {}: {x} vs {y}",
+            20 + i
+        );
+    }
+    for (a_p, b_p) in a.params().iter().zip(b.params()) {
+        let diff = a_p
+            .data
+            .iter()
+            .zip(&b_p.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(diff < 1e-5, "FSDP resume param drift {diff}");
+    }
+}
+
+#[test]
 fn downstream_improves_with_training() {
     // Trained model beats the untrained one on the cloze categories —
     // the eval harness actually measures learning.
@@ -188,7 +268,7 @@ fn downstream_improves_with_training() {
 
     let mut trainer = Trainer::new(cfg("adam8bit", "e2e_ds_t", 300)).unwrap();
     trainer.run().unwrap();
-    let t = eval_params(&trainer.cfg, &trainer.params, 60).unwrap();
+    let t = eval_params(&trainer.cfg, trainer.params(), 60).unwrap();
 
     let u_avg: f64 = u.iter().map(|r| r.accuracy).sum::<f64>() / u.len() as f64;
     let t_avg: f64 = t.iter().map(|r| r.accuracy).sum::<f64>() / t.len() as f64;

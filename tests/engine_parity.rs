@@ -1,8 +1,11 @@
 //! Integration: the native-Rust and PJRT-Pallas GaLore engines are
-//! numerically interchangeable on the real model workload, and the
+//! numerically interchangeable on the real model workload, execution
+//! modes (Single / FSDP / DDP) agree at world=1, every `OptimizerSpec`
+//! variant builds the same optimizer on every path, and the
 //! property-level invariants hold across the optimizer stack.
 
-use galore2::config::{Engine, TrainConfig};
+use galore2::config::{Engine, ParallelMode, TrainConfig};
+use galore2::optim::{BuildTarget, OptimizerSpec};
 use galore2::testing::prop;
 use galore2::train::Trainer;
 
@@ -55,10 +58,115 @@ fn native_and_pjrt_engines_agree_on_model_training() {
     // Parameters should match closely (same seeds ⇒ same rand-SVD sketches;
     // kernel vs native Adam math agrees to fp32 round-off).
     let mut worst = 0f32;
-    for (a, b) in native.params.iter().zip(&pjrt.params) {
+    for (a, b) in native.params().iter().zip(pjrt.params()) {
         worst = worst.max(prop::max_abs_diff(&a.data, &b.data));
     }
     assert!(worst < 5e-3, "param drift between engines: {worst}");
+}
+
+fn cfg_mode(optimizer: &str, run: &str, parallel: ParallelMode) -> TrainConfig {
+    TrainConfig {
+        optimizer: optimizer.into(),
+        run_name: format!("{run}_{optimizer}_{}", std::process::id()),
+        parallel,
+        world: 1,
+        lr: 0.01,
+        ..cfg(Engine::Native, run)
+    }
+}
+
+#[test]
+fn single_fsdp_ddp_world1_trajectories_match() {
+    // §4.3's claim at the API level: the same OptimizerSpec recipe runs
+    // unchanged on every TrainEngine, and at world=1 the trajectories are
+    // identical — for the full GaLore path (leader SVD + broadcast under
+    // FSDP, local refresh under Single/DDP, same rand-SVD stream) and the
+    // AdamW baseline.
+    if !ready() {
+        eprintln!("skipping: run make artifacts");
+        return;
+    }
+    for optimizer in ["adamw", "galore"] {
+        let mut single =
+            Trainer::new(cfg_mode(optimizer, "tri_single", ParallelMode::Single)).unwrap();
+        let mut fsdp =
+            Trainer::new(cfg_mode(optimizer, "tri_fsdp", ParallelMode::Fsdp)).unwrap();
+        let mut ddp =
+            Trainer::new(cfg_mode(optimizer, "tri_ddp", ParallelMode::Ddp)).unwrap();
+        for t in 0..12 {
+            let ls = single.train_step(t).unwrap();
+            let lf = fsdp.train_step(t).unwrap();
+            let ld = ddp.train_step(t).unwrap();
+            assert!(
+                (ls - lf).abs() < 1e-4,
+                "{optimizer} step {t}: single {ls} vs fsdp(1) {lf}"
+            );
+            assert!(
+                (ls - ld).abs() < 1e-4,
+                "{optimizer} step {t}: single {ls} vs ddp(1) {ld}"
+            );
+        }
+        for (idx, (a, b)) in single.params().iter().zip(fsdp.params()).enumerate() {
+            let diff = prop::max_abs_diff(&a.data, &b.data);
+            assert!(diff < 1e-5, "{optimizer} param {idx}: fsdp drift {diff}");
+        }
+        for (idx, (a, b)) in single.params().iter().zip(ddp.params()).enumerate() {
+            let diff = prop::max_abs_diff(&a.data, &b.data);
+            assert!(diff < 1e-5, "{optimizer} param {idx}: ddp drift {diff}");
+        }
+    }
+}
+
+#[test]
+fn spec_roundtrip_same_name_on_every_build_path() {
+    // No artifacts needed: every optimizer string maps to ONE spec, and
+    // that spec builds an optimizer reporting the same name on the
+    // single-process, FSDP-worker and DDP-worker paths.
+    for optimizer in ["adamw", "adam8bit", "adafactor", "sgdm", "galore", "qgalore"] {
+        let c = TrainConfig {
+            optimizer: optimizer.into(),
+            ..TrainConfig::default()
+        };
+        let spec = c.optimizer_spec(64).unwrap();
+        let single = spec
+            .build(1, BuildTarget::Single { pjrt: None })
+            .expect("single build");
+        let fsdp = spec
+            .build(
+                1,
+                BuildTarget::Worker {
+                    external_subspace: true,
+                },
+            )
+            .expect("fsdp build");
+        let ddp = spec
+            .build(
+                1,
+                BuildTarget::Worker {
+                    external_subspace: false,
+                },
+            )
+            .expect("ddp build");
+        assert_eq!(single.name(), spec.name(), "{optimizer}: single path");
+        assert_eq!(fsdp.name(), spec.name(), "{optimizer}: fsdp path");
+        assert_eq!(ddp.name(), spec.name(), "{optimizer}: ddp path");
+    }
+    // The PJRT variant is single-process only and says so on every other
+    // path (rather than silently building something else).
+    let c = TrainConfig {
+        engine: Engine::Pjrt,
+        ..TrainConfig::default()
+    };
+    let spec = c.optimizer_spec(64).unwrap();
+    assert!(matches!(spec, OptimizerSpec::PjrtGaLore { .. }));
+    assert!(spec
+        .build(
+            1,
+            BuildTarget::Worker {
+                external_subspace: true
+            }
+        )
+        .is_err());
 }
 
 #[test]
