@@ -1,0 +1,1120 @@
+//! The canonical (world-agnostic) optimizer-state form.
+//!
+//! Execution modes serialize optimizer state differently: a single-process
+//! run exports one full-tensor blob, a DDP cluster exports rank 0's
+//! replica, and an FSDP cluster exports one *shard-local* frame per rank.
+//! Before this module, FSDP resume therefore hard-required the same world
+//! size — an elastic restart (resume at a different `--world`, or switch
+//! between `--parallel` modes) was impossible.
+//!
+//! [`CanonicalOptState`] fixes that by normalizing everything to one form
+//! at checkpoint time:
+//!
+//! * **Full** — the single-process blob: full-tensor moments, the
+//!   optimizer's RNG stream position, Q-GaLore's lazy-gate state. FSDP
+//!   exports are *gathered* into this form (per-rank moment shards are
+//!   concatenated along each parameter's shard axis; the leader's
+//!   SVD-stream position becomes the canonical stream), and on import the
+//!   form is *re-sliced* for any target world — including world 1,
+//!   non-power-of-two worlds, and worlds that leave some ranks with empty
+//!   shards.
+//! * **PerRank** — the escape hatch for optimizers whose state cannot be
+//!   re-sliced bit-exactly (block-quantized Adam8bit moments, Adafactor's
+//!   factored accumulators): the raw per-rank frames ride along
+//!   world-locked, and any cross-world import fails loudly instead of
+//!   silently resetting moments.
+//!
+//! The gather/scatter pair is the identity on the canonical form, and for
+//! the re-shardable optimizers (AdamW, SGDM, GaLore, Q-GaLore) the
+//! canonical bytes are *identical* no matter which mode or world exported
+//! them — `tests/resharding.rs` pins both properties.
+
+use crate::dist::{shard_axis, shard_bounds, ParamMeta, ShardAxis};
+use crate::optim::ser::{push_f32s, push_u64, Reader};
+use crate::util::rng::Pcg64;
+
+/// Header identifying a canonical optimizer-state blob (v3 checkpoints).
+/// Legacy (v2) payloads — raw single-process blobs or FSDP `[world]`-framed
+/// blobs — never start with these bytes (they begin with a small
+/// little-endian counter), so [`CanonicalOptState::sniff`] is unambiguous.
+pub const MAGIC: &[u8; 8] = b"GAL2OPT\x01";
+
+const FLAVOR_FULL: u64 = 0;
+const FLAVOR_PER_RANK: u64 = 1;
+
+/// Optimizer names whose state the canonical form can re-slice for an
+/// arbitrary FSDP world.
+pub const RESHARDABLE: &[&str] = &["adamw", "sgdm", "galore", "qgalore"];
+
+/// The payload of a canonical optimizer state.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptPayload {
+    /// World-agnostic full-tensor blob in the single-process format.
+    Full(Vec<u8>),
+    /// World-locked raw per-rank frames (non-re-shardable optimizers).
+    PerRank { frames: Vec<Vec<u8>> },
+}
+
+/// A checkpoint's optimizer state, normalized away from the execution mode
+/// and world size that produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CanonicalOptState {
+    /// Optimizer name (`OptimizerSpec::name`): imports cross-check it so a
+    /// galore checkpoint can never silently feed adamw moments.
+    pub name: String,
+    pub payload: OptPayload,
+}
+
+impl CanonicalOptState {
+    /// Whether `bytes` carry the canonical header (v3) — as opposed to a
+    /// legacy (v2) mode-specific blob.
+    pub fn sniff(bytes: &[u8]) -> bool {
+        bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC
+    }
+
+    /// Wrap a single-process/DDP full-tensor blob already in the
+    /// canonical layout for `name`. Prefer [`CanonicalOptState::from_full`],
+    /// which converts from the exporting optimizer's layout.
+    pub fn full(name: &str, blob: Vec<u8>) -> CanonicalOptState {
+        CanonicalOptState {
+            name: name.to_string(),
+            payload: OptPayload::Full(blob),
+        }
+    }
+
+    /// Wrap a full-tensor blob serialized in `codec` layout (see
+    /// [`OptimizerSpec::state_codec`]) into the canonical layout for
+    /// `name`: "qgalore"-named state is canonically Q-GaLore-framed even
+    /// when the exporting optimizer was a concrete `GaLore` holding the
+    /// raw layout (the quantized-projector GaLore spec, whose name is
+    /// also "qgalore").
+    ///
+    /// [`OptimizerSpec::state_codec`]: crate::optim::OptimizerSpec::state_codec
+    pub fn from_full(name: &str, codec: &str, blob: Vec<u8>) -> CanonicalOptState {
+        let blob = if name == "qgalore" && codec == "galore" {
+            wrap_qgalore(blob)
+        } else {
+            blob
+        };
+        CanonicalOptState::full(name, blob)
+    }
+
+    /// The full-tensor blob converted to the importing optimizer's
+    /// `codec` layout (the lazy-gate state is dropped when a framed
+    /// "qgalore" blob feeds a concrete `GaLore`, mirroring FSDP's inert
+    /// gate).
+    pub fn to_full_for(&self, codec: &str) -> Result<Vec<u8>, String> {
+        let blob = self.to_full()?;
+        if self.name == "qgalore" && codec == "galore" {
+            unwrap_qgalore(&blob)
+        } else {
+            Ok(blob)
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        push_u64(&mut out, self.name.len() as u64);
+        out.extend_from_slice(self.name.as_bytes());
+        match &self.payload {
+            OptPayload::Full(blob) => {
+                push_u64(&mut out, FLAVOR_FULL);
+                push_u64(&mut out, blob.len() as u64);
+                out.extend_from_slice(blob);
+            }
+            OptPayload::PerRank { frames } => {
+                push_u64(&mut out, FLAVOR_PER_RANK);
+                push_u64(&mut out, frames.len() as u64);
+                for f in frames {
+                    push_u64(&mut out, f.len() as u64);
+                    out.extend_from_slice(f);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<CanonicalOptState, String> {
+        if !Self::sniff(bytes) {
+            return Err(
+                "not a canonical optimizer-state blob (missing GAL2OPT header); \
+                 legacy (v2) checkpoints store mode-specific state instead"
+                    .into(),
+            );
+        }
+        let mut r = Reader::new(&bytes[MAGIC.len()..]);
+        let name_len = r.u64()? as usize;
+        let name = String::from_utf8(r.bytes(name_len)?.to_vec())
+            .map_err(|_| "canonical state: optimizer name is not utf-8".to_string())?;
+        let payload = match r.u64()? {
+            FLAVOR_FULL => {
+                let len = r.u64()? as usize;
+                OptPayload::Full(r.bytes(len)?.to_vec())
+            }
+            FLAVOR_PER_RANK => {
+                let world = r.u64()? as usize;
+                // Each frame needs at least its 8-byte length header:
+                // bound the count before allocating, so a corrupt u64
+                // yields an Err instead of a capacity-overflow abort.
+                if world > r.remaining() / 8 {
+                    return Err(format!(
+                        "canonical state: per-rank frame count {world} exceeds blob size"
+                    ));
+                }
+                let mut frames = Vec::with_capacity(world);
+                for _ in 0..world {
+                    let len = r.u64()? as usize;
+                    frames.push(r.bytes(len)?.to_vec());
+                }
+                OptPayload::PerRank { frames }
+            }
+            other => return Err(format!("canonical state: unknown flavor {other}")),
+        };
+        Ok(CanonicalOptState { name, payload })
+    }
+
+    /// Fail unless the checkpoint's optimizer matches the running one.
+    pub fn expect_name(&self, want: &str) -> Result<(), String> {
+        if self.name == want {
+            Ok(())
+        } else {
+            Err(format!(
+                "checkpoint holds {} optimizer state but this run uses {want}; \
+                 restart with --optimizer {} (or retrain)",
+                self.name, self.name
+            ))
+        }
+    }
+
+    /// Gather per-rank FSDP worker frames into the canonical form. For
+    /// re-shardable optimizers (see [`RESHARDABLE`]) the result is the
+    /// world-agnostic [`OptPayload::Full`] blob — byte-identical to what a
+    /// single-process run would export; everything else is kept
+    /// [`OptPayload::PerRank`] (world-locked).
+    pub fn from_fsdp_frames(
+        name: &str,
+        frames: Vec<Vec<u8>>,
+        metas: &[ParamMeta],
+    ) -> Result<CanonicalOptState, String> {
+        let payload = match name {
+            "galore" => OptPayload::Full(gather_galore(&frames, metas)?),
+            "qgalore" => OptPayload::Full(wrap_qgalore(gather_galore(&frames, metas)?)),
+            "adamw" => OptPayload::Full(gather_moments(&frames, metas, 2)?),
+            "sgdm" => OptPayload::Full(gather_moments(&frames, metas, 1)?),
+            _ => OptPayload::PerRank { frames },
+        };
+        Ok(CanonicalOptState {
+            name: name.to_string(),
+            payload,
+        })
+    }
+
+    /// Re-slice the canonical form into per-rank FSDP worker frames for a
+    /// target world. Fails loudly — without touching any worker state —
+    /// when the state cannot be represented at that world.
+    pub fn fsdp_frames(
+        &self,
+        world: usize,
+        metas: &[ParamMeta],
+    ) -> Result<Vec<Vec<u8>>, String> {
+        match &self.payload {
+            OptPayload::PerRank { frames } => {
+                if frames.len() == world {
+                    Ok(frames.clone())
+                } else {
+                    Err(format!(
+                        "{} optimizer state was captured per-rank at world={} and \
+                         cannot be re-sliced to world={world}; resume with --world {} \
+                         or train with a re-shardable optimizer ({})",
+                        self.name,
+                        frames.len(),
+                        frames.len(),
+                        RESHARDABLE.join(", ")
+                    ))
+                }
+            }
+            OptPayload::Full(blob) => match self.name.as_str() {
+                "galore" => scatter_galore(blob, world, metas),
+                "qgalore" => scatter_galore(&unwrap_qgalore(blob)?, world, metas),
+                "adamw" => scatter_moments(blob, world, metas, 2),
+                "sgdm" => scatter_moments(blob, world, metas, 1),
+                other => {
+                    if world == 1 {
+                        // A world of one holds the full state: frame it
+                        // behind a dormant SVD-stream prefix.
+                        let mut frame = dormant_svd_stream();
+                        frame.extend_from_slice(blob);
+                        Ok(vec![frame])
+                    } else {
+                        Err(format!(
+                            "cannot re-shard {other} optimizer state across \
+                             world={world} FSDP ranks; supported: {}",
+                            RESHARDABLE.join(", ")
+                        ))
+                    }
+                }
+            },
+        }
+    }
+
+    /// The full-tensor blob for a single-process or DDP (replicated)
+    /// import.
+    pub fn to_full(&self) -> Result<Vec<u8>, String> {
+        match &self.payload {
+            OptPayload::Full(blob) => Ok(blob.clone()),
+            OptPayload::PerRank { frames } if frames.len() == 1 => {
+                // A world-1 FSDP frame holds the full state behind its
+                // SVD-stream prefix.
+                if frames[0].len() < Pcg64::STATE_BYTES {
+                    return Err("truncated per-rank optimizer frame".into());
+                }
+                Ok(frames[0][Pcg64::STATE_BYTES..].to_vec())
+            }
+            OptPayload::PerRank { frames } => Err(format!(
+                "{} optimizer state is world-locked (captured per-rank at \
+                 world={}); resume with --parallel fsdp --world {} or train \
+                 with a re-shardable optimizer ({})",
+                self.name,
+                frames.len(),
+                frames.len(),
+                RESHARDABLE.join(", ")
+            )),
+        }
+    }
+}
+
+/// A never-drawn SVD-stream position for frames of optimizers that hold no
+/// RNG (AdamW/SGDM under FSDP never compute subspaces).
+fn dormant_svd_stream() -> Vec<u8> {
+    let mut out = Vec::with_capacity(Pcg64::STATE_BYTES);
+    Pcg64::new(0, 0x6a10).write_state(&mut out);
+    out
+}
+
+/// Split an FSDP worker frame into its `[svd_rng][optimizer blob]` parts.
+fn split_frame(frame: &[u8], rank: usize) -> Result<(&[u8], &[u8]), String> {
+    if frame.len() < Pcg64::STATE_BYTES {
+        return Err(format!("rank {rank}: truncated FSDP worker frame"));
+    }
+    Ok(frame.split_at(Pcg64::STATE_BYTES))
+}
+
+/// Slice one shard out of a row-major `rows`×`cols` tensor stored as a flat
+/// vec. Empty inputs stay empty (lazily-unsized GaLore moments).
+fn slice_vec(
+    full: &[f32],
+    rows: usize,
+    cols: usize,
+    axis: ShardAxis,
+    world: usize,
+    rank: usize,
+) -> Vec<f32> {
+    if full.is_empty() {
+        return Vec::new();
+    }
+    match axis {
+        ShardAxis::Rows => {
+            let (lo, hi) = shard_bounds(rows, world, rank);
+            full[lo * cols..hi * cols].to_vec()
+        }
+        ShardAxis::Cols => {
+            let (lo, hi) = shard_bounds(cols, world, rank);
+            let mut out = Vec::with_capacity(rows * (hi - lo));
+            for r in 0..rows {
+                out.extend_from_slice(&full[r * cols + lo..r * cols + hi]);
+            }
+            out
+        }
+    }
+}
+
+/// Concatenate per-rank shards (rank order) back into the full row-major
+/// tensor. All-empty inputs gather to empty (lazily-unsized moments are
+/// unsized on every rank in lockstep).
+fn concat_vecs(
+    parts: &[Vec<f32>],
+    rows: usize,
+    cols: usize,
+    axis: ShardAxis,
+    what: &str,
+) -> Result<Vec<f32>, String> {
+    let world = parts.len();
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    if total == 0 {
+        return Ok(Vec::new());
+    }
+    if total != rows * cols {
+        return Err(format!(
+            "{what}: per-rank moments sum to {total} elements, expected {rows}x{cols}"
+        ));
+    }
+    match axis {
+        ShardAxis::Rows => {
+            let mut out = Vec::with_capacity(rows * cols);
+            for (rank, p) in parts.iter().enumerate() {
+                let (lo, hi) = shard_bounds(rows, world, rank);
+                if p.len() != (hi - lo) * cols {
+                    return Err(format!(
+                        "{what}: rank {rank} holds {} moment elements, expected {}",
+                        p.len(),
+                        (hi - lo) * cols
+                    ));
+                }
+                out.extend_from_slice(p);
+            }
+            Ok(out)
+        }
+        ShardAxis::Cols => {
+            let mut out = vec![0f32; rows * cols];
+            for (rank, p) in parts.iter().enumerate() {
+                let (lo, hi) = shard_bounds(cols, world, rank);
+                let w = hi - lo;
+                if p.len() != rows * w {
+                    return Err(format!(
+                        "{what}: rank {rank} holds {} moment elements, expected {}",
+                        p.len(),
+                        rows * w
+                    ));
+                }
+                for r in 0..rows {
+                    out[r * cols + lo..r * cols + hi]
+                        .copy_from_slice(&p[r * w..(r + 1) * w]);
+                }
+            }
+            Ok(out)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GaLore state codec (format defined by `optim::galore::export_state`)
+// ---------------------------------------------------------------------------
+
+enum GaloreParamState {
+    Full {
+        m: Vec<f32>,
+        v: Vec<f32>,
+    },
+    LowRank {
+        last_refresh: u64,
+        side: u64,
+        p_rows: usize,
+        p_cols: usize,
+        p: Vec<f32>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+    },
+}
+
+struct GaloreBlob {
+    t: u64,
+    refreshes: u64,
+    rng: Vec<u8>,
+    states: Vec<(usize, GaloreParamState)>,
+}
+
+fn parse_galore(bytes: &[u8]) -> Result<GaloreBlob, String> {
+    let mut r = Reader::new(bytes);
+    let t = r.u64()?;
+    let refreshes = r.u64()?;
+    let rng = r.bytes(Pcg64::STATE_BYTES)?.to_vec();
+    let n = r.u64()? as usize;
+    // Every state is at least [idx][tag] = 16 bytes: reject corrupt
+    // counts before allocating.
+    if n > r.remaining() / 16 {
+        return Err(format!("galore state count {n} exceeds blob size"));
+    }
+    let mut states = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = r.u64()? as usize;
+        let tag = r.u64()?;
+        let state = if tag == 0 {
+            GaloreParamState::Full {
+                m: r.f32s()?,
+                v: r.f32s()?,
+            }
+        } else {
+            let last_refresh = r.u64()?;
+            let side = r.u64()?;
+            let p_rows = r.u64()? as usize;
+            let p_cols = r.u64()? as usize;
+            GaloreParamState::LowRank {
+                last_refresh,
+                side,
+                p_rows,
+                p_cols,
+                p: r.f32s()?,
+                m: r.f32s()?,
+                v: r.f32s()?,
+            }
+        };
+        states.push((idx, state));
+    }
+    Ok(GaloreBlob {
+        t,
+        refreshes,
+        rng,
+        states,
+    })
+}
+
+fn write_galore(b: &GaloreBlob) -> Vec<u8> {
+    let mut out = Vec::new();
+    push_u64(&mut out, b.t);
+    push_u64(&mut out, b.refreshes);
+    out.extend_from_slice(&b.rng);
+    push_u64(&mut out, b.states.len() as u64);
+    for (idx, st) in &b.states {
+        push_u64(&mut out, *idx as u64);
+        match st {
+            GaloreParamState::Full { m, v } => {
+                push_u64(&mut out, 0);
+                push_f32s(&mut out, m);
+                push_f32s(&mut out, v);
+            }
+            GaloreParamState::LowRank {
+                last_refresh,
+                side,
+                p_rows,
+                p_cols,
+                p,
+                m,
+                v,
+            } => {
+                push_u64(&mut out, 1);
+                push_u64(&mut out, *last_refresh);
+                push_u64(&mut out, *side);
+                push_u64(&mut out, *p_rows as u64);
+                push_u64(&mut out, *p_cols as u64);
+                push_f32s(&mut out, p);
+                push_f32s(&mut out, m);
+                push_f32s(&mut out, v);
+            }
+        }
+    }
+    out
+}
+
+/// Full shape of a low-rank moment tensor: Left projectors (wide params)
+/// hold r×n moments, Right projectors (tall params) hold m×r.
+fn low_rank_shape(side: u64, p_cols: usize, meta: &ParamMeta) -> (usize, usize) {
+    if side == 0 {
+        (p_cols, meta.cols)
+    } else {
+        (meta.rows, p_cols)
+    }
+}
+
+fn meta_for(metas: &[ParamMeta], idx: usize) -> Result<&ParamMeta, String> {
+    metas
+        .get(idx)
+        .ok_or_else(|| format!("optimizer state names parameter {idx}, model has {}", metas.len()))
+}
+
+/// Gather per-rank GaLore worker frames into the single-process blob. The
+/// leader's (rank 0's) SVD-stream position becomes the canonical RNG — the
+/// same `0x6a10` stream a single-process optimizer draws its sketches
+/// from, so a resumed run in ANY mode continues the identical sketch
+/// sequence.
+fn gather_galore(frames: &[Vec<u8>], metas: &[ParamMeta]) -> Result<Vec<u8>, String> {
+    if frames.is_empty() {
+        return Err("no worker frames to gather".into());
+    }
+    let world = frames.len();
+    let mut svd_rng = Vec::new();
+    let mut blobs = Vec::with_capacity(world);
+    for (rank, frame) in frames.iter().enumerate() {
+        let (rng, blob) = split_frame(frame, rank)?;
+        if rank == 0 {
+            svd_rng = rng.to_vec();
+        }
+        blobs.push(parse_galore(blob).map_err(|e| format!("rank {rank}: {e}"))?);
+    }
+    let leader = &blobs[0];
+    for (rank, b) in blobs.iter().enumerate() {
+        if b.t != leader.t || b.states.len() != leader.states.len() {
+            return Err(format!(
+                "rank {rank} optimizer state out of lockstep with rank 0 \
+                 (t {} vs {}, {} vs {} states)",
+                b.t,
+                leader.t,
+                b.states.len(),
+                leader.states.len()
+            ));
+        }
+    }
+    let mut states = Vec::with_capacity(leader.states.len());
+    for (si, (idx, s0)) in leader.states.iter().enumerate() {
+        let meta = meta_for(metas, *idx)?;
+        let axis = shard_axis(meta.rows, meta.cols);
+        // Pull this state's moment shards from every rank, checking the
+        // ranks agree on the state's index and kind.
+        let mut ms = Vec::with_capacity(world);
+        let mut vs = Vec::with_capacity(world);
+        for (rank, b) in blobs.iter().enumerate() {
+            let (ri, rs) = &b.states[si];
+            if ri != idx {
+                return Err(format!(
+                    "rank {rank}: state {si} is for parameter {ri}, rank 0 has {idx}"
+                ));
+            }
+            match (s0, rs) {
+                (GaloreParamState::Full { .. }, GaloreParamState::Full { m, v }) => {
+                    ms.push(m.clone());
+                    vs.push(v.clone());
+                }
+                (
+                    GaloreParamState::LowRank { .. },
+                    GaloreParamState::LowRank { m, v, .. },
+                ) => {
+                    ms.push(m.clone());
+                    vs.push(v.clone());
+                }
+                _ => {
+                    return Err(format!(
+                        "rank {rank}: parameter {idx} state kind differs from rank 0"
+                    ))
+                }
+            }
+        }
+        let gathered = match s0 {
+            GaloreParamState::Full { .. } => GaloreParamState::Full {
+                m: concat_vecs(&ms, meta.rows, meta.cols, axis, &meta.name)?,
+                v: concat_vecs(&vs, meta.rows, meta.cols, axis, &meta.name)?,
+            },
+            GaloreParamState::LowRank {
+                last_refresh,
+                side,
+                p_rows,
+                p_cols,
+                p,
+                ..
+            } => {
+                // P is replicated (it spans the un-sharded dimension), so
+                // rank 0's copy IS the full projector.
+                let (lm, ln) = low_rank_shape(*side, *p_cols, meta);
+                GaloreParamState::LowRank {
+                    last_refresh: *last_refresh,
+                    side: *side,
+                    p_rows: *p_rows,
+                    p_cols: *p_cols,
+                    p: p.clone(),
+                    m: concat_vecs(&ms, lm, ln, axis, &meta.name)?,
+                    v: concat_vecs(&vs, lm, ln, axis, &meta.name)?,
+                }
+            }
+        };
+        states.push((*idx, gathered));
+    }
+    Ok(write_galore(&GaloreBlob {
+        t: leader.t,
+        refreshes: leader.refreshes,
+        rng: svd_rng,
+        states,
+    }))
+}
+
+/// Re-slice a single-process GaLore blob into per-rank FSDP worker frames.
+/// Every rank's frame carries the canonical RNG position; only the leader
+/// ever draws from it, continuing the exact stream the source run (single,
+/// DDP, or FSDP at any world) would have used.
+fn scatter_galore(
+    blob: &[u8],
+    world: usize,
+    metas: &[ParamMeta],
+) -> Result<Vec<Vec<u8>>, String> {
+    let b = parse_galore(blob)?;
+    let mut frames = Vec::with_capacity(world);
+    for rank in 0..world {
+        let mut states = Vec::with_capacity(b.states.len());
+        for (idx, st) in &b.states {
+            let meta = meta_for(metas, *idx)?;
+            let axis = shard_axis(meta.rows, meta.cols);
+            let sliced = match st {
+                GaloreParamState::Full { m, v } => {
+                    for (name, mom) in [("m", m), ("v", v)] {
+                        if !mom.is_empty() && mom.len() != meta.rows * meta.cols {
+                            return Err(format!(
+                                "{}: canonical {name} moment has {} elements, expected {}x{}",
+                                meta.name,
+                                mom.len(),
+                                meta.rows,
+                                meta.cols
+                            ));
+                        }
+                    }
+                    GaloreParamState::Full {
+                        m: slice_vec(m, meta.rows, meta.cols, axis, world, rank),
+                        v: slice_vec(v, meta.rows, meta.cols, axis, world, rank),
+                    }
+                }
+                GaloreParamState::LowRank {
+                    last_refresh,
+                    side,
+                    p_rows,
+                    p_cols,
+                    p,
+                    m,
+                    v,
+                } => {
+                    let (lm, ln) = low_rank_shape(*side, *p_cols, meta);
+                    for (name, mom) in [("m", m), ("v", v)] {
+                        if !mom.is_empty() && mom.len() != lm * ln {
+                            return Err(format!(
+                                "{}: canonical low-rank {name} moment has {} elements, \
+                                 expected {lm}x{ln}",
+                                meta.name,
+                                mom.len()
+                            ));
+                        }
+                    }
+                    GaloreParamState::LowRank {
+                        last_refresh: *last_refresh,
+                        side: *side,
+                        p_rows: *p_rows,
+                        p_cols: *p_cols,
+                        p: p.clone(),
+                        m: slice_vec(m, lm, ln, axis, world, rank),
+                        v: slice_vec(v, lm, ln, axis, world, rank),
+                    }
+                }
+            };
+            states.push((*idx, sliced));
+        }
+        let mut frame = b.rng.clone();
+        frame.extend_from_slice(&write_galore(&GaloreBlob {
+            t: b.t,
+            refreshes: b.refreshes,
+            rng: b.rng.clone(),
+            states,
+        }));
+        frames.push(frame);
+    }
+    Ok(frames)
+}
+
+// ---------------------------------------------------------------------------
+// Q-GaLore framing (format defined by `optim::qgalore::export_state`)
+// ---------------------------------------------------------------------------
+
+/// Wrap a GaLore blob in Q-GaLore's framing with an empty lazy-gate: under
+/// FSDP the gate is inert (the coordinator owns refreshes), so gathered
+/// state carries no gate history — a single/DDP resume re-seeds the gate
+/// from its first post-resume refresh probe.
+fn wrap_qgalore(inner: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::new();
+    push_u64(&mut out, inner.len() as u64);
+    out.extend_from_slice(&inner);
+    push_u64(&mut out, 0); // refreshes skipped by the gate
+    push_u64(&mut out, 0); // refreshes taken
+    push_u64(&mut out, 0); // no per-parameter probe directions
+    out
+}
+
+/// Extract the inner GaLore blob from Q-GaLore framing (the gate state is
+/// dropped: it is inert under FSDP).
+fn unwrap_qgalore(blob: &[u8]) -> Result<Vec<u8>, String> {
+    let mut r = Reader::new(blob);
+    let len = r.u64()? as usize;
+    Ok(r.bytes(len)?.to_vec())
+}
+
+// ---------------------------------------------------------------------------
+// Plain moment-map codec (AdamW: 2 moment tensors; SGDM: 1) — format
+// defined by `optim::adamw::export_state` / `optim::sgdm::export_state`:
+// `[t u64][n u64]` then per state `[idx u64]` + nmoments length-framed f32
+// vectors.
+// ---------------------------------------------------------------------------
+
+type MomentStates = Vec<(usize, Vec<Vec<f32>>)>;
+
+fn parse_moments(bytes: &[u8], nmoments: usize) -> Result<(u64, MomentStates), String> {
+    let mut r = Reader::new(bytes);
+    let t = r.u64()?;
+    let n = r.u64()? as usize;
+    // Every state is at least [idx] + nmoments length headers: reject
+    // corrupt counts before allocating.
+    if n > r.remaining() / (8 * (1 + nmoments)) {
+        return Err(format!("optimizer state count {n} exceeds blob size"));
+    }
+    let mut states = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = r.u64()? as usize;
+        let mut moments = Vec::with_capacity(nmoments);
+        for _ in 0..nmoments {
+            moments.push(r.f32s()?);
+        }
+        states.push((idx, moments));
+    }
+    Ok((t, states))
+}
+
+fn write_moments(t: u64, states: &MomentStates) -> Vec<u8> {
+    let mut out = Vec::new();
+    push_u64(&mut out, t);
+    push_u64(&mut out, states.len() as u64);
+    for (idx, moments) in states {
+        push_u64(&mut out, *idx as u64);
+        for m in moments {
+            push_f32s(&mut out, m);
+        }
+    }
+    out
+}
+
+fn gather_moments(
+    frames: &[Vec<u8>],
+    metas: &[ParamMeta],
+    nmoments: usize,
+) -> Result<Vec<u8>, String> {
+    if frames.is_empty() {
+        return Err("no worker frames to gather".into());
+    }
+    let world = frames.len();
+    let mut per_rank = Vec::with_capacity(world);
+    for (rank, frame) in frames.iter().enumerate() {
+        let (_rng, blob) = split_frame(frame, rank)?;
+        per_rank.push(parse_moments(blob, nmoments).map_err(|e| format!("rank {rank}: {e}"))?);
+    }
+    let (t, leader) = &per_rank[0];
+    for (rank, (rt, rs)) in per_rank.iter().enumerate() {
+        if rt != t || rs.len() != leader.len() {
+            return Err(format!(
+                "rank {rank} optimizer state out of lockstep with rank 0"
+            ));
+        }
+    }
+    let mut states = Vec::with_capacity(leader.len());
+    for (si, (idx, _)) in leader.iter().enumerate() {
+        let meta = meta_for(metas, *idx)?;
+        let axis = shard_axis(meta.rows, meta.cols);
+        let mut moments = Vec::with_capacity(nmoments);
+        for k in 0..nmoments {
+            let mut parts = Vec::with_capacity(world);
+            for (rank, (_, rs)) in per_rank.iter().enumerate() {
+                let (ri, rm) = &rs[si];
+                if ri != idx {
+                    return Err(format!(
+                        "rank {rank}: state {si} is for parameter {ri}, rank 0 has {idx}"
+                    ));
+                }
+                parts.push(rm[k].clone());
+            }
+            moments.push(concat_vecs(&parts, meta.rows, meta.cols, axis, &meta.name)?);
+        }
+        states.push((*idx, moments));
+    }
+    Ok(write_moments(*t, &states))
+}
+
+fn scatter_moments(
+    blob: &[u8],
+    world: usize,
+    metas: &[ParamMeta],
+    nmoments: usize,
+) -> Result<Vec<Vec<u8>>, String> {
+    let (t, states) = parse_moments(blob, nmoments)?;
+    let mut frames = Vec::with_capacity(world);
+    for rank in 0..world {
+        let mut sliced = Vec::with_capacity(states.len());
+        for (idx, moments) in &states {
+            let meta = meta_for(metas, *idx)?;
+            let axis = shard_axis(meta.rows, meta.cols);
+            let mut shards = Vec::with_capacity(nmoments);
+            for m in moments {
+                if m.len() != meta.rows * meta.cols {
+                    return Err(format!(
+                        "{}: canonical moment has {} elements, expected {}x{}",
+                        meta.name,
+                        m.len(),
+                        meta.rows,
+                        meta.cols
+                    ));
+                }
+                shards.push(slice_vec(m, meta.rows, meta.cols, axis, world, rank));
+            }
+            sliced.push((*idx, shards));
+        }
+        let mut frame = dormant_svd_stream();
+        frame.extend_from_slice(&write_moments(t, &sliced));
+        frames.push(frame);
+    }
+    Ok(frames)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metas(shapes: &[(usize, usize)]) -> Vec<ParamMeta> {
+        shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(r, c))| ParamMeta {
+                name: format!("p{i}"),
+                rows: r,
+                cols: c,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_both_flavors() {
+        let full = CanonicalOptState::full("galore", vec![1, 2, 3]);
+        assert_eq!(CanonicalOptState::decode(&full.encode()).unwrap(), full);
+        let per_rank = CanonicalOptState {
+            name: "adam8bit".into(),
+            payload: OptPayload::PerRank {
+                frames: vec![vec![9; 40], vec![8; 33]],
+            },
+        };
+        assert_eq!(
+            CanonicalOptState::decode(&per_rank.encode()).unwrap(),
+            per_rank
+        );
+    }
+
+    #[test]
+    fn sniff_distinguishes_legacy_blobs() {
+        assert!(CanonicalOptState::sniff(
+            &CanonicalOptState::full("adamw", vec![]).encode()
+        ));
+        // Legacy blobs start with a small little-endian counter (a step or
+        // a world size), never the magic.
+        assert!(!CanonicalOptState::sniff(&7u64.to_le_bytes()));
+        assert!(!CanonicalOptState::sniff(b"GAL"));
+        assert!(!CanonicalOptState::sniff(&[]));
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_garbage() {
+        let blob = CanonicalOptState::full("galore", vec![0; 64]).encode();
+        assert!(CanonicalOptState::decode(&blob[..blob.len() - 9]).is_err());
+        let err = CanonicalOptState::decode(b"not a canonical blob....").unwrap_err();
+        assert!(err.contains("GAL2OPT"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn name_mismatch_is_loud() {
+        let c = CanonicalOptState::full("galore", vec![]);
+        let err = c.expect_name("adamw").unwrap_err();
+        assert!(err.contains("galore") && err.contains("adamw"));
+    }
+
+    #[test]
+    fn slice_concat_roundtrip_all_axes_and_worlds() {
+        for (rows, cols) in [(3usize, 8usize), (8, 3), (1, 5), (4, 4)] {
+            let full: Vec<f32> = (0..rows * cols).map(|i| i as f32).collect();
+            let axis = shard_axis(rows, cols);
+            for world in [1usize, 2, 3, 4, 5, 7] {
+                let parts: Vec<Vec<f32>> = (0..world)
+                    .map(|r| slice_vec(&full, rows, cols, axis, world, r))
+                    .collect();
+                let back = concat_vecs(&parts, rows, cols, axis, "t").unwrap();
+                assert_eq!(back, full, "{rows}x{cols} world {world}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_moments_stay_empty_through_gather_and_scatter() {
+        // Lazily-unsized GaLore moments are empty on every rank in
+        // lockstep; the canonical form keeps them unsized.
+        let parts = vec![Vec::new(), Vec::new(), Vec::new()];
+        assert_eq!(
+            concat_vecs(&parts, 4, 6, ShardAxis::Cols, "t").unwrap(),
+            Vec::<f32>::new()
+        );
+        assert_eq!(
+            slice_vec(&[], 4, 6, ShardAxis::Cols, 3, 1),
+            Vec::<f32>::new()
+        );
+    }
+
+    #[test]
+    fn concat_rejects_inconsistent_shards() {
+        let parts = vec![vec![0.0; 5], vec![0.0; 5]];
+        let err = concat_vecs(&parts, 2, 4, ShardAxis::Cols, "p0").unwrap_err();
+        assert!(err.contains("expected"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn moment_blob_scatter_gather_is_identity() {
+        // gather(scatter(blob)) == blob for the AdamW codec at several
+        // worlds, including worlds larger than the narrow (1, 3) bias —
+        // which leaves some ranks with empty shards.
+        let shapes = [(4usize, 6usize), (6, 4), (1, 3)];
+        let ms = metas(&shapes);
+        let states: MomentStates = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(r, c))| {
+                let m: Vec<f32> = (0..r * c).map(|k| (i * 100 + k) as f32).collect();
+                let v: Vec<f32> = (0..r * c).map(|k| (i * 100 + k) as f32 * 0.5).collect();
+                (i, vec![m, v])
+            })
+            .collect();
+        let blob = write_moments(7, &states);
+        for world in [1usize, 2, 3, 4, 5] {
+            let frames = scatter_moments(&blob, world, &ms, 2).unwrap();
+            assert_eq!(frames.len(), world);
+            let back = gather_moments(&frames, &ms, 2).unwrap();
+            assert_eq!(back, blob, "world {world}: scatter/gather not identity");
+        }
+    }
+
+    #[test]
+    fn galore_blob_scatter_gather_is_identity() {
+        // Same identity for the GaLore codec: a wide low-rank state (Left
+        // projector, r×n moments), a tall one (Right, m×r), a full-rank
+        // fallback, and a lazily-unsized low-rank state.
+        let shapes = [(4usize, 10usize), (10, 4), (1, 6), (5, 5)];
+        let ms = metas(&shapes);
+        let r = 2usize;
+        let states = vec![
+            (
+                0,
+                GaloreParamState::LowRank {
+                    last_refresh: 3,
+                    side: 0,
+                    p_rows: 4,
+                    p_cols: r,
+                    p: (0..4 * r).map(|k| k as f32).collect(),
+                    m: (0..r * 10).map(|k| k as f32 + 0.25).collect(),
+                    v: (0..r * 10).map(|k| k as f32 + 0.5).collect(),
+                },
+            ),
+            (
+                1,
+                GaloreParamState::LowRank {
+                    last_refresh: 3,
+                    side: 1,
+                    p_rows: 4,
+                    p_cols: r,
+                    p: (0..4 * r).map(|k| k as f32).collect(),
+                    m: (0..10 * r).map(|k| k as f32 - 0.25).collect(),
+                    v: (0..10 * r).map(|k| k as f32 - 0.5).collect(),
+                },
+            ),
+            (
+                2,
+                GaloreParamState::Full {
+                    m: (0..6).map(|k| k as f32).collect(),
+                    v: (0..6).map(|k| k as f32 * 2.0).collect(),
+                },
+            ),
+            (
+                3,
+                GaloreParamState::LowRank {
+                    last_refresh: 0,
+                    side: 0,
+                    p_rows: 5,
+                    p_cols: r,
+                    p: (0..5 * r).map(|k| k as f32).collect(),
+                    m: Vec::new(), // lazily unsized: preset but never stepped
+                    v: Vec::new(),
+                },
+            ),
+        ];
+        let mut rng_bytes = Vec::new();
+        Pcg64::new(11, 0x6a10).write_state(&mut rng_bytes);
+        let blob = write_galore(&GaloreBlob {
+            t: 9,
+            refreshes: 4,
+            rng: rng_bytes,
+            states,
+        });
+        for world in [1usize, 2, 3, 4, 5] {
+            let frames = scatter_galore(&blob, world, &ms).unwrap();
+            assert_eq!(frames.len(), world);
+            let back = gather_galore(&frames, &ms).unwrap();
+            assert_eq!(back, blob, "world {world}: scatter/gather not identity");
+        }
+    }
+
+    #[test]
+    fn corrupt_counts_error_instead_of_aborting() {
+        // Bit-flipped counts must yield Err, not a capacity-overflow
+        // abort that bypasses the loud-failure contract.
+        let mut blob = Vec::new();
+        blob.extend_from_slice(MAGIC);
+        push_u64(&mut blob, 6);
+        blob.extend_from_slice(b"galore");
+        push_u64(&mut blob, FLAVOR_PER_RANK);
+        push_u64(&mut blob, u64::MAX); // insane frame count
+        assert!(CanonicalOptState::decode(&blob).is_err());
+
+        let mut g = Vec::new();
+        push_u64(&mut g, 0); // t
+        push_u64(&mut g, 0); // refreshes
+        Pcg64::new(0, 0).write_state(&mut g);
+        push_u64(&mut g, u64::MAX); // insane state count
+        assert!(parse_galore(&g).is_err());
+
+        let mut m = Vec::new();
+        push_u64(&mut m, 0); // t
+        push_u64(&mut m, u64::MAX); // insane state count
+        assert!(parse_moments(&m, 2).is_err());
+    }
+
+    #[test]
+    fn codec_conversion_bridges_raw_and_framed_qgalore_layouts() {
+        // The "qgalore" name covers two layouts (OptimizerSpec::state_codec):
+        // a concrete GaLore exporting the raw layout must still produce a
+        // framed canonical blob, and imports convert back per target codec.
+        let raw = vec![7u8; 40];
+        let c = CanonicalOptState::from_full("qgalore", "galore", raw.clone());
+        assert_eq!(c.to_full_for("galore").unwrap(), raw, "raw → framed → raw");
+        assert_eq!(
+            c.to_full_for("qgalore").unwrap(),
+            wrap_qgalore(raw.clone()),
+            "framed view keeps the canonical layout"
+        );
+        // A true QGaLore blob passes through unchanged for its own codec.
+        let framed = wrap_qgalore(raw.clone());
+        let c = CanonicalOptState::from_full("qgalore", "qgalore", framed.clone());
+        assert_eq!(c.to_full_for("qgalore").unwrap(), framed);
+        assert_eq!(c.to_full_for("galore").unwrap(), raw);
+        // Non-family names are untouched by codec conversion.
+        let c = CanonicalOptState::from_full("adamw", "adamw", raw.clone());
+        assert_eq!(c.to_full_for("adamw").unwrap(), raw);
+    }
+
+    #[test]
+    fn qgalore_framing_roundtrips() {
+        let inner = vec![5u8; 24];
+        let wrapped = wrap_qgalore(inner.clone());
+        assert_eq!(unwrap_qgalore(&wrapped).unwrap(), inner);
+        assert!(unwrap_qgalore(&wrapped[..10]).is_err());
+    }
+
+    #[test]
+    fn per_rank_world_mismatch_errors_are_actionable() {
+        let c = CanonicalOptState {
+            name: "adam8bit".into(),
+            payload: OptPayload::PerRank {
+                frames: vec![vec![0; 40]; 2],
+            },
+        };
+        let err = c.fsdp_frames(4, &[]).unwrap_err();
+        assert!(
+            err.contains("world=2") && err.contains("adam8bit"),
+            "unhelpful error: {err}"
+        );
+        let err = c.to_full().unwrap_err();
+        assert!(err.contains("world-locked"), "unhelpful error: {err}");
+        // Same-world passthrough still works.
+        assert_eq!(c.fsdp_frames(2, &[]).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn non_reshardable_full_state_only_fits_world_one() {
+        let c = CanonicalOptState::full("adafactor", vec![3; 50]);
+        let frames = c.fsdp_frames(1, &[]).unwrap();
+        assert_eq!(frames.len(), 1);
+        assert_eq!(&frames[0][Pcg64::STATE_BYTES..], &[3u8; 50][..]);
+        let err = c.fsdp_frames(2, &[]).unwrap_err();
+        assert!(err.contains("adafactor"), "unhelpful error: {err}");
+    }
+}

@@ -3,10 +3,23 @@
 //! Format (little-endian):
 //!   magic "GAL2CKPT" | version u32 | step u64 | n_params u64 |
 //!   per param: name_len u64, name bytes, rows u64, cols u64, f32 data |
-//!   opt_blob_len u64 | optimizer-private state blob
+//!   opt_blob_len u64 | optimizer state blob
+//!
+//! Since v3 the optimizer blob is the **canonical, world-agnostic form**
+//! ([`canonical::CanonicalOptState`]): a checkpoint written by any
+//! execution mode (`--parallel single|fsdp|ddp`) at any world size resumes
+//! under any other — the elastic-restart contract pinned by
+//! `tests/resharding.rs`. Legacy v2 files (mode-specific blobs: raw
+//! single-process state, or FSDP per-rank frames that hard-require the
+//! same world) still load; engines detect them by the missing canonical
+//! header and fail loudly on any world mismatch instead of silently
+//! resetting moments. Loading a v2 checkpoint at its original
+//! mode/world and re-saving migrates it to v3.
 //!
 //! Resume fidelity is tested end to end: a resumed run reproduces the
 //! exact next-step losses of the uninterrupted run.
+
+pub mod canonical;
 
 use crate::tensor::Matrix;
 use anyhow::{bail, Context, Result};
@@ -14,10 +27,12 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"GAL2CKPT";
-/// v2: optimizer blobs carry the SVD-stream RNG position (GaLore), the
-/// Q-GaLore lazy-gate state, and — under FSDP — framed per-rank worker
-/// state. v1 blobs would misparse, so the version gate rejects them.
-const VERSION: u32 = 2;
+/// v3: canonical (re-shardable) optimizer state. v2: mode-specific blobs —
+/// readable, but FSDP state is world-locked. v1 blobs would misparse, so
+/// the version gate rejects them.
+pub const VERSION: u32 = 3;
+/// Oldest version [`Checkpoint::load`] still accepts.
+pub const LEGACY_VERSION: u32 = 2;
 
 pub struct Checkpoint {
     pub step: u64,
@@ -28,12 +43,19 @@ pub struct Checkpoint {
 
 impl Checkpoint {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.save_with_version(path, VERSION)
+    }
+
+    /// Write with an explicit version number. Exists for migration tooling
+    /// and the negative/migration tests — regular checkpoints always go
+    /// through [`Checkpoint::save`], which writes the current [`VERSION`].
+    pub fn save_with_version(&self, path: impl AsRef<Path>, version: u32) -> Result<()> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
         f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&version.to_le_bytes())?;
         f.write_all(&self.step.to_le_bytes())?;
         f.write_all(&(self.params.len() as u64).to_le_bytes())?;
         for (name, p) in self.names.iter().zip(&self.params) {
@@ -61,8 +83,11 @@ impl Checkpoint {
             bail!("not a galore2 checkpoint");
         }
         let version = read_u32(&mut f)?;
-        if version != VERSION {
-            bail!("unsupported checkpoint version {version}");
+        if version != VERSION && version != LEGACY_VERSION {
+            bail!(
+                "unsupported checkpoint version {version} (this build reads v{LEGACY_VERSION} \
+                 legacy and v{VERSION} canonical checkpoints)"
+            );
         }
         let step = read_u64(&mut f)?;
         let n = read_u64(&mut f)? as usize;
@@ -85,7 +110,8 @@ impl Checkpoint {
         }
         let blob_len = read_u64(&mut f)? as usize;
         let mut opt_state = vec![0u8; blob_len];
-        f.read_exact(&mut opt_state)?;
+        f.read_exact(&mut opt_state)
+            .context("truncated checkpoint: optimizer state shorter than its header claims")?;
         Ok(Checkpoint {
             step,
             names,
@@ -144,6 +170,49 @@ mod tests {
         let path = tmp("garbage");
         std::fs::write(&path, b"definitely not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn accepts_legacy_v2_rejects_unknown_versions() {
+        let ckpt = Checkpoint {
+            step: 3,
+            names: vec!["w".into()],
+            params: vec![Matrix::zeros(2, 2)],
+            opt_state: vec![7; 12],
+        };
+        let path = tmp("versions");
+        ckpt.save_with_version(&path, LEGACY_VERSION).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.opt_state, vec![7; 12], "v2 payload must pass through");
+        for bad in [1u32, 4, 99] {
+            ckpt.save_with_version(&path, bad).unwrap();
+            let err = Checkpoint::load(&path).unwrap_err().to_string();
+            assert!(
+                err.contains(&format!("version {bad}")),
+                "unhelpful error for v{bad}: {err}"
+            );
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncated_file_fails_loudly() {
+        let ckpt = Checkpoint {
+            step: 3,
+            names: vec!["w".into()],
+            params: vec![Matrix::zeros(4, 4)],
+            opt_state: vec![9; 100],
+        };
+        let path = tmp("truncated");
+        ckpt.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Chop into the framed optimizer blob: the declared length no
+        // longer matches, which must be an error — never a silent
+        // moment reset.
+        std::fs::write(&path, &bytes[..bytes.len() - 40]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "unhelpful error: {err}");
         std::fs::remove_file(path).ok();
     }
 

@@ -57,6 +57,12 @@ pub struct TrainConfig {
     pub artifacts_dir: PathBuf,
     pub out_dir: PathBuf,
     pub run_name: String,
+    /// Checkpoint to resume from before training (`[train] resume` /
+    /// `--resume`). Elastic: the checkpoint may come from ANY
+    /// `--parallel` mode and world size — v3 checkpoints store the
+    /// world-agnostic canonical optimizer state (see EXPERIMENTS.md
+    /// §Resume).
+    pub resume_from: Option<PathBuf>,
 
     pub optimizer: String,
     pub lr: f32,
@@ -101,6 +107,7 @@ impl Default for TrainConfig {
             artifacts_dir: PathBuf::from("artifacts"),
             out_dir: PathBuf::from("runs"),
             run_name: "run".into(),
+            resume_from: None,
             optimizer: "galore".into(),
             lr: 0.01,
             weight_decay: 0.0,
@@ -146,6 +153,10 @@ impl TrainConfig {
                 d.artifacts_dir.to_str().unwrap(),
             )),
             out_dir: PathBuf::from(doc.str_or("", "out_dir", d.out_dir.to_str().unwrap())),
+            resume_from: match doc.str_or("train", "resume", "") {
+                s if s.is_empty() => None,
+                s => Some(PathBuf::from(s)),
+            },
             optimizer: doc.str_or("optimizer", "name", &d.optimizer),
             lr: doc.f64_or("optimizer", "lr", d.lr as f64) as f32,
             weight_decay: doc.f64_or("optimizer", "weight_decay", d.weight_decay as f64)
@@ -200,6 +211,9 @@ impl TrainConfig {
         }
         if let Some(d) = args.get("out-dir") {
             self.out_dir = PathBuf::from(d);
+        }
+        if let Some(p) = args.get("resume") {
+            self.resume_from = Some(PathBuf::from(p));
         }
         self.optimizer = args.str_or("optimizer", &self.optimizer);
         self.lr = args.f32_or("lr", self.lr);
@@ -355,6 +369,34 @@ threads = 2
         assert_eq!(c.world, 4);
         assert_eq!(c.threads, 2);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn resume_path_parses_from_toml_and_cli() {
+        let c = TrainConfig::default();
+        assert!(c.resume_from.is_none());
+        let path = write_sample(
+            "resume",
+            "[train]\nresume = \"runs/x/step_20.ckpt\"\n",
+        );
+        let c = TrainConfig::from_toml(path.to_str().unwrap()).unwrap();
+        assert_eq!(
+            c.resume_from.as_deref(),
+            Some(std::path::Path::new("runs/x/step_20.ckpt"))
+        );
+        std::fs::remove_file(path).ok();
+        let mut c = TrainConfig::default();
+        let args = Args::parse(
+            "train --resume runs/y/step_5.ckpt"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_cli(&args).unwrap();
+        assert_eq!(
+            c.resume_from.as_deref(),
+            Some(std::path::Path::new("runs/y/step_5.ckpt"))
+        );
     }
 
     #[test]

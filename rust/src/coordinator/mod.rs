@@ -52,6 +52,17 @@ pub fn train_with(
     for obs in observers {
         trainer.add_observer(obs);
     }
+    // Elastic restart: the checkpoint may come from any mode/world — v3
+    // canonical optimizer state is re-sliced for this run's engine.
+    if let Some(path) = trainer.cfg.resume_from.clone() {
+        let step = trainer.resume(&path)?;
+        println!(
+            "resumed {} at step {step} (parallel={} world={})",
+            path.display(),
+            trainer.engine().name(),
+            trainer.engine().world()
+        );
+    }
     let exec = format!("{:?}", trainer.cfg.engine).to_lowercase();
     println!(
         "run={} preset={} optimizer={} engine={} parallel={} world={} steps={}",

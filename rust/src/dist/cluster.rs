@@ -1,29 +1,28 @@
-//! The threaded FSDP cluster: persistent worker threads owning shards.
+//! The generic worker cluster: persistent threads behind one shared
+//! command protocol.
 //!
-//! Topology: the coordinator (caller) holds one command channel per worker
-//! and drives lockstep steps; workers rendezvous with each other through
-//! [`Comm`] collectives. Every parameter is sharded along its *longer*
-//! dimension — which is exactly the dimension the GaLore projector does
-//! NOT span, so a leader-computed P applies unchanged to every shard:
+//! Both distributed modes — FSDP (sharded state, `dist/fsdp.rs`) and DDP
+//! (replicated state, `dist/ddp.rs`) — are worlds of persistent OS threads
+//! driven in lockstep by the coordinator. Everything mode-*independent*
+//! lives here, written once:
 //!
-//!   wide  W (m ≤ n): P is m×r (left), shard columns → R = Pᵀ·G_shard
-//!   tall  W (m > n): P is n×r (right), shard rows   → R = G_shard·P
+//! * the [`Cmd`]/[`Reply`] channel protocol and the serve loop,
+//! * the spawn path (per-rank [`Comm`] handles, thread naming, the
+//!   [`crate::parallel::set_thread_share`] core-budget split),
+//! * coordinator-side shape validation (a worker panicking mid-collective
+//!   would strand its peers inside a barrier, so bad inputs are rejected
+//!   *before* any `Cmd` is sent),
+//! * the panic-aware, barrier-safe [`Drop`].
 //!
-//! Per-layer fused update (Fig. 2): each layer's gradient is reduced and
-//! consumed immediately, so at most one full-size gradient buffer is live
-//! per worker at a time (tracked in `peak_transient_bytes`).
-//!
-//! Subspace refreshes (§4.3): on refresh steps the full averaged gradient
-//! is materialized on every rank (all-reduce), the leader computes the
-//! randomized SVD once, and P is broadcast and installed via
-//! [`GaLore::preset_projector`] — workers never SVD their own shards,
-//! whose spectra would be wrong.
+//! A mode is one [`Worker`] implementation: what a rank stores (shards vs
+//! a replica), how a step consumes gradients, and what its state blob
+//! contains. `Cluster<FsdpWorker>` and `Cluster<DdpWorker>` are the two
+//! instantiations; protocol fixes land here and cannot drift between them.
 
 use super::comm::Comm;
-use super::{BuildTarget, OptimizerSpec, WorkerOpt};
-use crate::optim::{Projector, ProjectorSide};
+use super::OptimizerSpec;
 use crate::tensor::Matrix;
-use crate::util::rng::Pcg64;
+use std::marker::PhantomData;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
@@ -51,14 +50,16 @@ pub struct MemoryReport {
     pub traffic_elems: u64,
 }
 
-/// Which dimension a parameter is sharded along.
+/// Which dimension a parameter is sharded along (always the *longer* one —
+/// exactly the dimension the GaLore projector does not span, so a
+/// leader-computed P applies unchanged to every shard).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum ShardAxis {
+pub(crate) enum ShardAxis {
     Rows,
     Cols,
 }
 
-fn shard_axis(rows: usize, cols: usize) -> ShardAxis {
+pub(crate) fn shard_axis(rows: usize, cols: usize) -> ShardAxis {
     if rows > cols {
         ShardAxis::Rows
     } else {
@@ -67,13 +68,14 @@ fn shard_axis(rows: usize, cols: usize) -> ShardAxis {
 }
 
 /// Balanced contiguous split of `len` across `world`: rank r owns
-/// [r·len/world, (r+1)·len/world).
-fn shard_bounds(len: usize, world: usize, rank: usize) -> (usize, usize) {
+/// [r·len/world, (r+1)·len/world). Ranks may own empty ranges when
+/// `len < world` (layers narrower than the world size).
+pub(crate) fn shard_bounds(len: usize, world: usize, rank: usize) -> (usize, usize) {
     (rank * len / world, (rank + 1) * len / world)
 }
 
 /// Extract a shard (row range or column range) from a full matrix.
-fn slice_shard(full: &Matrix, axis: ShardAxis, lo: usize, hi: usize) -> Matrix {
+pub(crate) fn slice_shard(full: &Matrix, axis: ShardAxis, lo: usize, hi: usize) -> Matrix {
     match axis {
         ShardAxis::Rows => Matrix::from_vec(
             hi - lo,
@@ -90,12 +92,81 @@ fn slice_shard(full: &Matrix, axis: ShardAxis, lo: usize, hi: usize) -> Matrix {
     }
 }
 
+/// Reassemble a full parameter from per-rank shards (in rank order).
+pub(crate) fn assemble(meta: &ParamMeta, shards: &[&Matrix]) -> Matrix {
+    let (m, n) = (meta.rows, meta.cols);
+    match shard_axis(m, n) {
+        ShardAxis::Rows => {
+            let mut data = Vec::with_capacity(m * n);
+            for s in shards {
+                assert_eq!(s.cols, n, "{}: shard col mismatch", meta.name);
+                data.extend_from_slice(&s.data);
+            }
+            Matrix::from_vec(m, n, data)
+        }
+        ShardAxis::Cols => {
+            let mut out = Matrix::zeros(m, n);
+            let mut c0 = 0;
+            for s in shards {
+                assert_eq!(s.rows, m, "{}: shard row mismatch", meta.name);
+                for r in 0..m {
+                    out.row_mut(r)[c0..c0 + s.cols].copy_from_slice(s.row(r));
+                }
+                c0 += s.cols;
+            }
+            assert_eq!(c0, n, "{}: shards do not cover all columns", meta.name);
+            out
+        }
+    }
+}
+
+/// One rank's behavior: what it stores and how it consumes a step. The
+/// generic [`Cluster`] owns everything else (protocol, spawn, shutdown).
+///
+/// Not `Send`-bounded on purpose: workers are CONSTRUCTED inside their
+/// own thread from the `Send`-able spec (built optimizers hold
+/// deliberately non-`Send` state) and never cross threads afterwards.
+pub trait Worker: 'static {
+    /// Mode tag ("fsdp" | "ddp") — thread names and diagnostics.
+    const MODE: &'static str;
+
+    /// Construct this rank's state. Runs *inside* the worker thread; the
+    /// optimizer is built locally from the `Send`-able spec.
+    fn new(
+        rank: usize,
+        world: usize,
+        comm: Comm,
+        metas: Vec<ParamMeta>,
+        spec: OptimizerSpec,
+        seed: u64,
+    ) -> Self;
+
+    /// Install initial full parameters (keep shards or the whole replica).
+    fn install(&mut self, full: Vec<Matrix>);
+
+    /// One training step given this rank's microbatch gradients (full,
+    /// unsharded shapes); collectives rendezvous with peer ranks inside.
+    fn step(&mut self, t: u64, lr: f32, grads: Vec<Matrix>);
+
+    /// This rank's parameter view (its shards under FSDP, the full replica
+    /// under DDP).
+    fn params(&self) -> Vec<Matrix>;
+
+    /// This rank's serialized optimizer-state frame (mode-private format).
+    fn export_state(&self) -> Vec<u8>;
+
+    /// Restore this rank's state from an `export_state` frame.
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String>;
+
+    fn report(&self) -> MemoryReport;
+}
+
 enum Cmd {
-    /// Install the initial full parameters; each worker keeps its shards.
+    /// Install the initial full parameters.
     Init(Vec<Matrix>),
     /// One training step: this worker's microbatch gradients (full shapes).
     Step { t: u64, lr: f32, grads: Vec<Matrix> },
-    Gather,
+    Params,
     ExportOpt,
     ImportOpt(Vec<u8>),
     Report,
@@ -104,24 +175,52 @@ enum Cmd {
 
 enum Reply {
     StepDone,
-    Shards(Vec<Matrix>),
+    Params(Vec<Matrix>),
     OptState(Vec<u8>),
     ImportDone(Result<(), String>),
     Report(MemoryReport),
 }
 
-/// A world of persistent worker threads with sharded optimizer state.
-pub struct FsdpCluster {
+fn serve<W: Worker>(w: &mut W, rx: Receiver<Cmd>, tx: Sender<Reply>) {
+    loop {
+        match rx.recv() {
+            Ok(Cmd::Init(full)) => w.install(full),
+            Ok(Cmd::Step { t, lr, grads }) => {
+                w.step(t, lr, grads);
+                let _ = tx.send(Reply::StepDone);
+            }
+            Ok(Cmd::Params) => {
+                let _ = tx.send(Reply::Params(w.params()));
+            }
+            Ok(Cmd::ExportOpt) => {
+                let _ = tx.send(Reply::OptState(w.export_state()));
+            }
+            Ok(Cmd::ImportOpt(bytes)) => {
+                let r = w.import_state(&bytes);
+                let _ = tx.send(Reply::ImportDone(r));
+            }
+            Ok(Cmd::Report) => {
+                let _ = tx.send(Reply::Report(w.report()));
+            }
+            Ok(Cmd::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
+/// A world of persistent worker threads, one per rank, driven in lockstep
+/// through channels. `W` decides what each rank stores (see [`Worker`]).
+pub struct Cluster<W: Worker> {
     world: usize,
     metas: Vec<ParamMeta>,
     cmd_tx: Vec<Sender<Cmd>>,
     reply_rx: Vec<Receiver<Reply>>,
     handles: Vec<JoinHandle<()>>,
     spec_name: &'static str,
+    _mode: PhantomData<fn() -> W>,
 }
 
-impl FsdpCluster {
-    pub fn new(world: usize, metas: Vec<ParamMeta>, spec: OptimizerSpec, seed: u64) -> FsdpCluster {
+impl<W: Worker> Cluster<W> {
+    pub fn new(world: usize, metas: Vec<ParamMeta>, spec: OptimizerSpec, seed: u64) -> Cluster<W> {
         assert!(world >= 1, "world size must be >= 1");
         assert!(
             spec.distributed_ok(),
@@ -139,23 +238,28 @@ impl FsdpCluster {
             let metas = metas.clone();
             let spec = spec.clone();
             let handle = std::thread::Builder::new()
-                .name(format!("fsdp-worker-{rank}"))
+                .name(format!("{}-worker-{rank}", W::MODE))
                 .spawn(move || {
-                    let mut w = Worker::new(rank, world, comm, metas, spec, seed);
-                    w.serve(crx, rtx);
+                    // This thread is one of `world` concurrent compute
+                    // workers: nested GEMM/SVD kernels split the core
+                    // budget instead of each resolving the full machine.
+                    crate::parallel::set_thread_share(world);
+                    let mut w = W::new(rank, world, comm, metas, spec, seed);
+                    serve(&mut w, crx, rtx);
                 })
-                .expect("spawning FSDP worker thread");
+                .unwrap_or_else(|e| panic!("spawning {} worker thread: {e}", W::MODE));
             cmd_tx.push(ctx);
             reply_rx.push(rrx);
             handles.push(handle);
         }
-        FsdpCluster {
+        Cluster {
             world,
             metas,
             cmd_tx,
             reply_rx,
             handles,
             spec_name,
+            _mode: PhantomData,
         }
     }
 
@@ -167,10 +271,14 @@ impl FsdpCluster {
         self.spec_name
     }
 
-    /// Distribute initial full parameters; each worker keeps only its
-    /// shards (channel ordering serializes this before any later step).
-    /// Shapes are validated HERE — a worker panicking later would strand
-    /// its peers in a collective.
+    /// Full parameter shapes, in parameter order.
+    pub fn metas(&self) -> &[ParamMeta] {
+        &self.metas
+    }
+
+    /// Distribute initial full parameters to every worker (channel ordering
+    /// serializes this before any later step). Shapes are validated HERE —
+    /// a worker panicking later would strand its peers in a collective.
     pub fn init_params(&self, full: &[Matrix]) {
         assert_eq!(full.len(), self.metas.len(), "param count != meta count");
         for (p, meta) in full.iter().zip(&self.metas) {
@@ -187,8 +295,8 @@ impl FsdpCluster {
     }
 
     /// One synchronous training step. `per_rank[r]` holds rank r's
-    /// microbatch gradients in full (unsharded) shapes; the reduction to
-    /// shards happens inside the workers. Blocks until all ranks finish.
+    /// microbatch gradients in full (unsharded) shapes. Blocks until all
+    /// ranks finish.
     pub fn step(&mut self, t: u64, per_rank: Vec<Vec<Matrix>>, lr: f32) {
         assert_eq!(per_rank.len(), self.world, "need one gradient set per rank");
         // Validate shapes HERE, not in the workers: a worker panicking
@@ -215,87 +323,68 @@ impl FsdpCluster {
         }
     }
 
-    /// Assemble the full parameter set from every rank's shards.
-    pub fn gather_params(&self) -> Vec<Matrix> {
+    /// Every rank's parameter view, in rank order (shards under FSDP, full
+    /// replicas under DDP).
+    pub fn params_per_rank(&self) -> Vec<Vec<Matrix>> {
         for tx in &self.cmd_tx {
-            tx.send(Cmd::Gather).expect("worker alive");
+            tx.send(Cmd::Params).expect("worker alive");
         }
-        let per_rank: Vec<Vec<Matrix>> = self
-            .reply_rx
+        self.reply_rx
             .iter()
             .map(|rx| match rx.recv().expect("worker alive") {
-                Reply::Shards(s) => s,
-                _ => unreachable!("protocol error: expected Shards"),
-            })
-            .collect();
-        self.metas
-            .iter()
-            .enumerate()
-            .map(|(idx, meta)| {
-                let shards: Vec<&Matrix> = per_rank.iter().map(|r| &r[idx]).collect();
-                assemble(meta, &shards)
+                Reply::Params(p) => p,
+                _ => unreachable!("protocol error: expected Params"),
             })
             .collect()
     }
 
-    /// Serialized optimizer state of rank 0 (shard-local; diagnostic use —
-    /// checkpoints go through [`FsdpCluster::export_optimizers`]).
-    pub fn export_rank0_optimizer(&self) -> Vec<u8> {
-        self.cmd_tx[0].send(Cmd::ExportOpt).expect("worker alive");
-        match self.reply_rx[0].recv().expect("worker alive") {
-            Reply::OptState(bytes) => bytes,
-            _ => unreachable!("protocol error: expected OptState"),
+    /// One rank's parameter view.
+    pub fn rank_params(&self, rank: usize) -> Vec<Matrix> {
+        self.cmd_tx[rank].send(Cmd::Params).expect("worker alive");
+        match self.reply_rx[rank].recv().expect("worker alive") {
+            Reply::Params(p) => p,
+            _ => unreachable!("protocol error: expected Params"),
         }
     }
 
-    /// Serialize EVERY rank's shard-local state (optimizer moments + the
-    /// worker's SVD-stream position) into one framed blob:
-    /// `[world u64] ([len u64][bytes])×world`. Round-trips through
-    /// [`FsdpCluster::import_optimizers`] so FSDP resume restores each
-    /// rank's moments instead of only rank 0's, and the next subspace
-    /// refresh continues the uninterrupted run's sketch stream.
-    pub fn export_optimizers(&self) -> Vec<u8> {
+    /// Every rank's raw optimizer-state frame, in rank order. The frame
+    /// format is worker-private; see `checkpoint::canonical` for the
+    /// world-agnostic form checkpoints store.
+    pub fn export_frames(&self) -> Vec<Vec<u8>> {
         for tx in &self.cmd_tx {
             tx.send(Cmd::ExportOpt).expect("worker alive");
         }
-        let blobs: Vec<Vec<u8>> = self
-            .reply_rx
+        self.reply_rx
             .iter()
             .map(|rx| match rx.recv().expect("worker alive") {
                 Reply::OptState(bytes) => bytes,
                 _ => unreachable!("protocol error: expected OptState"),
             })
-            .collect();
-        let mut out = Vec::new();
-        out.extend_from_slice(&(self.world as u64).to_le_bytes());
-        for b in &blobs {
-            out.extend_from_slice(&(b.len() as u64).to_le_bytes());
-            out.extend_from_slice(b);
-        }
-        out
+            .collect()
     }
 
-    /// Restore per-rank optimizer state from an [`export_optimizers`] blob.
-    /// Fails (without touching worker state) when the blob was written at a
-    /// different world size — shard-local moments do not re-shard.
-    ///
-    /// [`export_optimizers`]: FsdpCluster::export_optimizers
-    pub fn import_optimizers(&self, bytes: &[u8]) -> Result<(), String> {
-        let mut r = crate::optim::ser::Reader::new(bytes);
-        let world = r.u64()? as usize;
-        if world != self.world {
+    /// One rank's raw optimizer-state frame.
+    pub fn export_rank_frame(&self, rank: usize) -> Vec<u8> {
+        self.cmd_tx[rank].send(Cmd::ExportOpt).expect("worker alive");
+        match self.reply_rx[rank].recv().expect("worker alive") {
+            Reply::OptState(bytes) => bytes,
+            _ => unreachable!("protocol error: expected OptState"),
+        }
+    }
+
+    /// Restore every rank's optimizer state from per-rank frames (one per
+    /// rank, in rank order). The first rank's error is reported when
+    /// several fail.
+    pub fn import_frames(&self, frames: Vec<Vec<u8>>) -> Result<(), String> {
+        if frames.len() != self.world {
             return Err(format!(
-                "optimizer state was saved at world={world}, cluster has world={}",
+                "need one optimizer-state frame per rank: got {}, world={}",
+                frames.len(),
                 self.world
             ));
         }
-        let mut blobs = Vec::with_capacity(world);
-        for _ in 0..world {
-            let len = r.u64()? as usize;
-            blobs.push(r.bytes(len)?.to_vec());
-        }
-        for (tx, blob) in self.cmd_tx.iter().zip(blobs) {
-            tx.send(Cmd::ImportOpt(blob)).expect("worker alive");
+        for (tx, frame) in self.cmd_tx.iter().zip(frames) {
+            tx.send(Cmd::ImportOpt(frame)).expect("worker alive");
         }
         let mut result = Ok(());
         for rx in &self.reply_rx {
@@ -326,7 +415,7 @@ impl FsdpCluster {
     }
 }
 
-impl Drop for FsdpCluster {
+impl<W: Worker> Drop for Cluster<W> {
     fn drop(&mut self) {
         for tx in &self.cmd_tx {
             let _ = tx.send(Cmd::Shutdown);
@@ -344,476 +433,57 @@ impl Drop for FsdpCluster {
     }
 }
 
-/// Reassemble a full parameter from per-rank shards.
-fn assemble(meta: &ParamMeta, shards: &[&Matrix]) -> Matrix {
-    let (m, n) = (meta.rows, meta.cols);
-    match shard_axis(m, n) {
-        ShardAxis::Rows => {
-            let mut data = Vec::with_capacity(m * n);
-            for s in shards {
-                assert_eq!(s.cols, n, "{}: shard col mismatch", meta.name);
-                data.extend_from_slice(&s.data);
-            }
-            Matrix::from_vec(m, n, data)
-        }
-        ShardAxis::Cols => {
-            let mut out = Matrix::zeros(m, n);
-            let mut c0 = 0;
-            for s in shards {
-                assert_eq!(s.rows, m, "{}: shard row mismatch", meta.name);
-                for r in 0..m {
-                    out.row_mut(r)[c0..c0 + s.cols].copy_from_slice(s.row(r));
-                }
-                c0 += s.cols;
-            }
-            assert_eq!(c0, n, "{}: shards do not cover all columns", meta.name);
-            out
-        }
-    }
-}
-
-/// One worker thread's state: its rank's shards + optimizer + comm handle.
-struct Worker {
-    rank: usize,
-    world: usize,
-    comm: Comm,
-    metas: Vec<ParamMeta>,
-    galore: Option<crate::optim::GaLoreCfg>,
-    opt: WorkerOpt,
-    shards: Vec<Matrix>,
-    /// Leader-only RNG stream for subspace SVDs (deterministic: refresh
-    /// order is fixed by the step/param loop).
-    svd_rng: Pcg64,
-    peak_transient: usize,
-}
-
-impl Worker {
-    fn new(
-        rank: usize,
-        world: usize,
-        comm: Comm,
-        metas: Vec<ParamMeta>,
-        spec: OptimizerSpec,
-        seed: u64,
-    ) -> Worker {
-        // This thread is one of `world` concurrent compute workers: nested
-        // GEMM/SVD kernels split the core budget instead of each resolving
-        // the full machine (world-fold oversubscription otherwise).
-        crate::parallel::set_thread_share(world);
-        let galore = spec.galore_cfg();
-        // Per-rank optimizer seed (only hygiene — in external-subspace mode
-        // workers never draw from their optimizer RNG).
-        let opt = spec
-            .build(
-                seed ^ (rank as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15),
-                BuildTarget::Worker {
-                    external_subspace: true,
-                },
-            )
-            .expect("spec validated in FsdpCluster::new");
-        Worker {
-            rank,
-            world,
-            comm,
-            metas,
-            galore,
-            opt,
-            // Same stream constant as the single-process GaLore optimizer:
-            // the leader's refresh SVDs then draw the identical sketch
-            // sequence, making FSDP(world=1) trajectories match Single mode
-            // bitwise (tests/engine_parity.rs pins this).
-            svd_rng: Pcg64::new(seed, 0x6a10),
-            peak_transient: 0,
-        }
-    }
-
-    fn serve(&mut self, rx: Receiver<Cmd>, tx: Sender<Reply>) {
-        loop {
-            match rx.recv() {
-                Ok(Cmd::Init(full)) => self.init(full),
-                Ok(Cmd::Step { t, lr, grads }) => {
-                    self.step(t, lr, grads);
-                    let _ = tx.send(Reply::StepDone);
-                }
-                Ok(Cmd::Gather) => {
-                    let _ = tx.send(Reply::Shards(self.shards.clone()));
-                }
-                Ok(Cmd::ExportOpt) => {
-                    let _ = tx.send(Reply::OptState(self.export_opt_state()));
-                }
-                Ok(Cmd::ImportOpt(bytes)) => {
-                    let r = self.import_opt_state(&bytes);
-                    let _ = tx.send(Reply::ImportDone(r));
-                }
-                Ok(Cmd::Report) => {
-                    let _ = tx.send(Reply::Report(self.report()));
-                }
-                Ok(Cmd::Shutdown) | Err(_) => break,
-            }
-        }
-    }
-
-    /// Worker state blob: `[svd_rng position][optimizer blob]`. The SVD
-    /// stream position rides along so a resumed run's next leader refresh
-    /// draws the sketches the uninterrupted run would have.
-    fn export_opt_state(&self) -> Vec<u8> {
-        let mut out = Vec::new();
-        self.svd_rng.write_state(&mut out);
-        out.extend_from_slice(&self.opt.export_state());
-        out
-    }
-
-    fn import_opt_state(&mut self, bytes: &[u8]) -> Result<(), String> {
-        self.svd_rng = Pcg64::read_state(bytes)?;
-        self.opt
-            .as_opt()
-            .import_state(&bytes[Pcg64::STATE_BYTES..])
-    }
-
-    fn init(&mut self, full: Vec<Matrix>) {
-        assert_eq!(full.len(), self.metas.len());
-        self.shards = full
-            .iter()
-            .zip(&self.metas)
-            .map(|(p, meta)| {
-                assert_eq!(
-                    p.shape(),
-                    (meta.rows, meta.cols),
-                    "{}: param/meta shape mismatch",
-                    meta.name
-                );
-                let axis = shard_axis(meta.rows, meta.cols);
-                let len = match axis {
-                    ShardAxis::Rows => meta.rows,
-                    ShardAxis::Cols => meta.cols,
-                };
-                let (lo, hi) = shard_bounds(len, self.world, self.rank);
-                slice_shard(p, axis, lo, hi)
-            })
-            .collect();
-    }
-
-    fn step(&mut self, t: u64, lr: f32, grads: Vec<Matrix>) {
-        assert_eq!(grads.len(), self.shards.len(), "init_params before step");
-        self.opt.as_opt().begin_step(t);
-        let scale = 1.0 / self.world as f32;
-        for (idx, grad) in grads.into_iter().enumerate() {
-            let (m, n) = (self.metas[idx].rows, self.metas[idx].cols);
-            assert_eq!(grad.shape(), (m, n), "{}: bad grad shape", self.metas[idx].name);
-            let axis = shard_axis(m, n);
-            let len = match axis {
-                ShardAxis::Rows => m,
-                ShardAxis::Cols => n,
-            };
-            let (lo, hi) = shard_bounds(len, self.world, self.rank);
-
-            let projects = self.galore.map_or(false, |g| g.projects(m, n));
-            let refresh = projects
-                && (t % self.galore.unwrap().update_freq == 0
-                    || !self.opt.has_projector(idx));
-
-            let mut transient;
-            let shard_grad = if refresh {
-                // Refresh step: materialize the full averaged gradient on
-                // every rank, leader computes the SVD, P is broadcast.
-                let mut full =
-                    Matrix::from_vec(m, n, self.comm.all_reduce_sum(grad.data));
-                full.scale(scale);
-                transient = full.numel() * 4;
-                let g = self.galore.unwrap();
-                let r = g.rank.min(m.min(n));
-                let (side, d) = if m <= n {
-                    (ProjectorSide::Left, m)
-                } else {
-                    (ProjectorSide::Right, n)
-                };
-                let p = if self.rank == 0 {
-                    let proj =
-                        Projector::from_gradient(&full, g.rank, g.projection, &mut self.svd_rng);
-                    let p = proj.export_p();
-                    debug_assert_eq!(p.shape(), (d, r));
-                    self.comm.broadcast(0, Some(p.data.clone()));
-                    p
-                } else {
-                    Matrix::from_vec(d, r, self.comm.broadcast(0, None))
-                };
-                transient += p.numel() * 4;
-                if let Some(gal) = self.opt.galore_mut() {
-                    gal.preset_projector(idx, Projector::from_parts(p, side, g.projection));
-                }
-                slice_shard(&full, axis, lo, hi)
-            } else {
-                match axis {
-                    ShardAxis::Rows => {
-                        // Row shards are contiguous in row-major order —
-                        // a true reduce-scatter, no full buffer needed.
-                        let offsets: Vec<usize> = (0..=self.world)
-                            .map(|r| (r * m / self.world) * n)
-                            .collect();
-                        let mut sh = self.comm.reduce_scatter_sum(grad.data, &offsets);
-                        for x in sh.iter_mut() {
-                            *x *= scale;
-                        }
-                        transient = sh.len() * 4;
-                        Matrix::from_vec(hi - lo, n, sh)
-                    }
-                    ShardAxis::Cols => {
-                        // Column shards interleave in memory; reduce the
-                        // full gradient and slice (dropped right after).
-                        let mut full =
-                            Matrix::from_vec(m, n, self.comm.all_reduce_sum(grad.data));
-                        full.scale(scale);
-                        transient = full.numel() * 4;
-                        slice_shard(&full, axis, lo, hi)
-                    }
-                }
-            };
-            self.peak_transient = self.peak_transient.max(transient + shard_grad.numel() * 4);
-            // Per-layer fused update: step now, drop the gradient buffers.
-            self.opt
-                .as_opt()
-                .step_param(idx, &mut self.shards[idx], &shard_grad, lr);
-        }
-    }
-
-    fn report(&self) -> MemoryReport {
-        MemoryReport {
-            rank: self.rank,
-            param_shard_bytes: self.shards.iter().map(|s| s.numel() * 4).sum(),
-            optimizer_bytes: self.opt.state_bytes(),
-            peak_transient_bytes: self.peak_transient,
-            traffic_elems: self.comm.traffic_elems(),
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::{step_all, AdamCfg, AdamW, GaLoreCfg, ProjectionKind};
-
-    fn metas(shapes: &[(usize, usize)]) -> Vec<ParamMeta> {
-        shapes
-            .iter()
-            .enumerate()
-            .map(|(i, &(r, c))| ParamMeta {
-                name: format!("p{i}"),
-                rows: r,
-                cols: c,
-            })
-            .collect()
-    }
-
-    fn init_set(shapes: &[(usize, usize)], seed: u64) -> Vec<Matrix> {
-        let mut rng = Pcg64::new(seed, 0);
-        shapes
-            .iter()
-            .map(|&(r, c)| Matrix::randn(r, c, 0.5, &mut rng))
-            .collect()
-    }
-
-    /// Identical gradients on every rank make the averaged gradient equal
-    /// to the single-rank gradient *bitwise* (sum of w equal values is an
-    /// exact power-of-two multiple for w ∈ {1,2,4}, then ·1/w is exact),
-    /// so runs become comparable across world sizes.
-    fn grad_set(shapes: &[(usize, usize)], seed: u64) -> Vec<Matrix> {
-        let mut rng = Pcg64::new(seed, 1);
-        shapes
-            .iter()
-            .map(|&(r, c)| Matrix::randn(r, c, 0.1, &mut rng))
-            .collect()
-    }
-
-    const SHAPES: &[(usize, usize)] = &[(12, 24), (24, 12), (16, 16), (1, 16)];
-
-    fn run_cluster(world: usize, spec: OptimizerSpec, steps: u64) -> Vec<Matrix> {
-        let mut cluster = FsdpCluster::new(world, metas(SHAPES), spec, 42);
-        cluster.init_params(&init_set(SHAPES, 7));
-        for t in 0..steps {
-            let grads = grad_set(SHAPES, 100 + t);
-            let per_rank = vec![grads; world];
-            cluster.step(t, per_rank, 0.05);
-        }
-        cluster.gather_params()
-    }
 
     #[test]
-    fn world1_adamw_matches_single_process_step_all() {
-        let got = run_cluster(1, OptimizerSpec::AdamW(AdamCfg::default()), 5);
-        let mut params = init_set(SHAPES, 7);
-        let mut opt = AdamW::new(AdamCfg::default());
-        for t in 0..5 {
-            let grads = grad_set(SHAPES, 100 + t);
-            step_all(&mut opt, t, &mut params, &grads, 0.05);
-        }
-        for (a, b) in got.iter().zip(&params) {
-            assert_eq!(a.data, b.data, "world-1 cluster diverged from step_all");
-        }
-    }
-
-    #[test]
-    fn adamw_bitwise_invariant_across_world_sizes() {
-        let w1 = run_cluster(1, OptimizerSpec::AdamW(AdamCfg::default()), 4);
-        let w2 = run_cluster(2, OptimizerSpec::AdamW(AdamCfg::default()), 4);
-        let w4 = run_cluster(4, OptimizerSpec::AdamW(AdamCfg::default()), 4);
-        for ((a, b), c) in w1.iter().zip(&w2).zip(&w4) {
-            assert_eq!(a.data, b.data, "world 1 vs 2 diverged");
-            assert_eq!(a.data, c.data, "world 1 vs 4 diverged");
-        }
-    }
-
-    fn galore_spec() -> OptimizerSpec {
-        OptimizerSpec::GaLore {
-            galore: GaLoreCfg {
-                rank: 4,
-                update_freq: 3,
-                alpha: 1.0,
-                projection: ProjectionKind::RandSvd,
-                ..GaLoreCfg::default()
-            },
-            adam: AdamCfg::default(),
-        }
-    }
-
-    #[test]
-    fn galore_bitwise_invariant_across_world_sizes() {
-        // Elementwise inner Adam + shard-compatible projector application
-        // (P spans the un-sharded dimension) make the whole GaLore step
-        // world-size invariant given identical per-rank microbatches.
-        let w1 = run_cluster(1, galore_spec(), 7);
-        let w2 = run_cluster(2, galore_spec(), 7);
-        let w4 = run_cluster(4, galore_spec(), 7);
-        for (idx, ((a, b), c)) in w1.iter().zip(&w2).zip(&w4).enumerate() {
-            assert_eq!(a.data, b.data, "param {idx}: world 1 vs 2 diverged");
-            assert_eq!(a.data, c.data, "param {idx}: world 1 vs 4 diverged");
-        }
-    }
-
-    #[test]
-    fn galore_learns_low_rank_target_under_fsdp() {
-        // Convex quadratic with a low-rank offset: grads differ per rank
-        // (each rank sees a noisy microbatch), loss must still fall.
-        let shapes = &[(16, 32)];
-        let mut rng = Pcg64::new(3, 0);
-        let u = Matrix::randn(16, 3, 1.0, &mut rng);
-        let v = Matrix::randn(3, 32, 1.0, &mut rng);
-        let target = u.matmul(&v);
-        let world = 2;
-        let mut cluster = FsdpCluster::new(
-            world,
-            metas(shapes),
-            OptimizerSpec::GaLore {
-                galore: GaLoreCfg {
-                    rank: 3,
-                    update_freq: 25,
-                    alpha: 1.0,
-                    ..GaLoreCfg::default()
-                },
-                adam: AdamCfg::default(),
-            },
-            11,
-        );
-        let mut w = vec![Matrix::zeros(16, 32)];
-        cluster.init_params(&w);
-        for t in 0..200 {
-            let mut per_rank = Vec::new();
-            for r in 0..world {
-                let mut g = w[0].sub(&target);
-                // microbatch noise, different per rank
-                let noise = Matrix::randn(16, 32, 0.01, &mut Pcg64::new(t, r as u64));
-                g.add_assign(&noise);
-                per_rank.push(vec![g]);
+    fn shard_bounds_partition_any_length_and_world() {
+        for world in 1..=6 {
+            for len in 0..=9 {
+                let mut covered = 0;
+                for rank in 0..world {
+                    let (lo, hi) = shard_bounds(len, world, rank);
+                    assert!(lo <= hi, "len={len} world={world} rank={rank}");
+                    assert_eq!(lo, covered, "gap at len={len} world={world} rank={rank}");
+                    covered = hi;
+                }
+                assert_eq!(covered, len, "len={len} world={world} not covered");
             }
-            cluster.step(t, per_rank, 0.05);
-            w = cluster.gather_params();
         }
-        let rel = w[0].sub(&target).frobenius_norm() / target.frobenius_norm();
-        assert!(rel < 0.1, "FSDP GaLore did not converge: rel {rel}");
     }
 
     #[test]
-    fn memory_reports_cover_all_params_and_traffic() {
-        let world = 4;
-        let mut cluster = FsdpCluster::new(world, metas(SHAPES), galore_spec(), 5);
-        cluster.init_params(&init_set(SHAPES, 7));
-        cluster.step(0, vec![grad_set(SHAPES, 9); world], 0.01);
-        let reports = cluster.memory_reports();
-        assert_eq!(reports.len(), world);
-        let total_param: usize = reports.iter().map(|r| r.param_shard_bytes).sum();
-        let expect: usize = SHAPES.iter().map(|&(r, c)| r * c * 4).sum();
-        assert_eq!(total_param, expect, "shards must partition the params");
-        for r in &reports {
-            assert!(r.optimizer_bytes > 0);
-            assert!(r.traffic_elems > 0);
-            assert!(r.peak_transient_bytes > 0);
-        }
-        // Sharded GaLore moments: each rank's optimizer state is well below
-        // full-model AdamW state (2·4 bytes/elem).
-        let full_adam: usize = SHAPES.iter().map(|&(r, c)| 2 * r * c * 4).sum();
-        assert!(reports[0].optimizer_bytes < full_adam);
-    }
-
-    #[test]
-    fn optimizer_state_roundtrips_across_all_ranks() {
-        // FSDP resume contract: export_optimizers captures every rank's
-        // shard-local moments; a fresh cluster restored from the blob (plus
-        // re-scattered params) continues bitwise identically.
-        let world = 2;
-        let mut cluster = FsdpCluster::new(
-            world,
-            metas(SHAPES),
-            OptimizerSpec::AdamW(AdamCfg::default()),
-            1,
-        );
-        cluster.init_params(&init_set(SHAPES, 7));
-        cluster.step(0, vec![grad_set(SHAPES, 3); world], 0.01);
-        let blob = cluster.export_optimizers();
-        let mut restored = FsdpCluster::new(
-            world,
-            metas(SHAPES),
-            OptimizerSpec::AdamW(AdamCfg::default()),
-            99,
-        );
-        restored.init_params(&cluster.gather_params());
-        restored.import_optimizers(&blob).unwrap();
-        cluster.step(1, vec![grad_set(SHAPES, 4); world], 0.01);
-        restored.step(1, vec![grad_set(SHAPES, 4); world], 0.01);
-        let a = cluster.gather_params();
-        let b = restored.gather_params();
-        for (idx, (x, y)) in a.iter().zip(&b).enumerate() {
-            assert_eq!(x.data, y.data, "param {idx}: restored cluster diverged");
-        }
-        // A different world size must be rejected (shards don't re-shard).
-        let other_world = FsdpCluster::new(
-            4,
-            metas(SHAPES),
-            OptimizerSpec::AdamW(AdamCfg::default()),
-            1,
-        );
-        assert!(other_world.import_optimizers(&blob).is_err());
-    }
-
-    #[test]
-    fn rank0_optimizer_state_exports() {
-        let world = 2;
-        let mut cluster =
-            FsdpCluster::new(world, metas(SHAPES), OptimizerSpec::AdamW(AdamCfg::default()), 1);
-        cluster.init_params(&init_set(SHAPES, 7));
-        cluster.step(0, vec![grad_set(SHAPES, 3); world], 0.01);
-        let state = cluster.export_rank0_optimizer();
-        assert!(!state.is_empty(), "AdamW state must serialize");
-    }
-
-    #[test]
-    fn gather_roundtrips_init_params_before_any_step() {
-        let world = 3;
-        let cluster =
-            FsdpCluster::new(world, metas(SHAPES), OptimizerSpec::AdamW(AdamCfg::default()), 1);
-        let init = init_set(SHAPES, 7);
-        cluster.init_params(&init);
-        let got = cluster.gather_params();
-        for (a, b) in got.iter().zip(&init) {
-            assert_eq!(a.data, b.data, "shard/assemble roundtrip lost data");
+    fn slice_and_assemble_roundtrip_including_empty_shards() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(9, 0);
+        // (1, 3) at world 4 gives rank 0 an empty shard; (5, 2) shards rows.
+        for (rows, cols) in [(1usize, 3usize), (5, 2), (4, 4), (3, 7)] {
+            let meta = ParamMeta {
+                name: format!("p{rows}x{cols}"),
+                rows,
+                cols,
+            };
+            let full = Matrix::randn(rows, cols, 1.0, &mut rng);
+            for world in [1usize, 2, 3, 4, 5] {
+                let axis = shard_axis(rows, cols);
+                let len = match axis {
+                    ShardAxis::Rows => rows,
+                    ShardAxis::Cols => cols,
+                };
+                let shards: Vec<Matrix> = (0..world)
+                    .map(|r| {
+                        let (lo, hi) = shard_bounds(len, world, r);
+                        slice_shard(&full, axis, lo, hi)
+                    })
+                    .collect();
+                let views: Vec<&Matrix> = shards.iter().collect();
+                let back = assemble(&meta, &views);
+                assert_eq!(
+                    back.data, full.data,
+                    "{rows}x{cols} world={world}: slice/assemble lost data"
+                );
+            }
         }
     }
 }

@@ -307,6 +307,71 @@ mod tests {
     }
 
     #[test]
+    fn non_power_of_two_worlds_reduce_exactly() {
+        // Worlds 3 and 5 exercise the uneven tail of the stride-doubling
+        // tree ((r0+r1)+(r2+r3))+r4. Integer-valued contributions make the
+        // expected sums exact, so any dropped or double-counted rank shows.
+        for world in [3usize, 5] {
+            let out = run_world(world, |c| {
+                let data: Vec<f32> = (0..6).map(|i| ((c.rank() + 1) * (i + 1)) as f32).collect();
+                c.all_reduce_sum(data)
+            });
+            // sum_r (r+1)·(i+1) = (i+1)·world·(world+1)/2
+            let s = (world * (world + 1) / 2) as f32;
+            for r in &out {
+                let expect: Vec<f32> = (0..6).map(|i| (i + 1) as f32 * s).collect();
+                assert_eq!(r, &expect, "world {world} all_reduce wrong");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_handles_empty_ranges() {
+        // A layer narrower than the world: some ranks own zero elements.
+        // offsets [0,0,1,2] at world 3 gives rank 0 an empty shard.
+        let out = run_world(3, |c| {
+            let data = vec![(c.rank() + 1) as f32; 2];
+            c.reduce_scatter_sum(data, &[0, 0, 1, 2])
+        });
+        assert_eq!(out[0], Vec::<f32>::new(), "rank 0 shard must be empty");
+        assert_eq!(out[1], vec![6.0]);
+        assert_eq!(out[2], vec![6.0]);
+    }
+
+    #[test]
+    fn zero_length_collectives_are_noops() {
+        // Zero-length reduce inputs (empty layers / empty shards) must
+        // round-trip without panicking and without counting traffic.
+        let out = run_world(4, |c| {
+            let a = c.all_reduce_sum(Vec::new());
+            let s = c.reduce_scatter_sum(Vec::new(), &[0, 0, 0, 0, 0]);
+            let g = c.all_gather(Vec::new());
+            let b = c.broadcast(1, if c.rank() == 1 { Some(Vec::new()) } else { None });
+            (a, s, g, b, c.traffic_elems())
+        });
+        for (a, s, g, b, traffic) in &out {
+            assert!(a.is_empty() && s.is_empty() && g.is_empty() && b.is_empty());
+            assert_eq!(*traffic, 0, "empty collectives must not count traffic");
+        }
+    }
+
+    #[test]
+    fn ragged_gather_with_empty_ranks() {
+        // all_gather where some ranks contribute nothing (empty shards).
+        let out = run_world(4, |c| {
+            let shard = if c.rank() % 2 == 0 {
+                Vec::new()
+            } else {
+                vec![c.rank() as f32]
+            };
+            c.all_gather(shard)
+        });
+        for r in &out {
+            assert_eq!(r, &vec![1.0, 3.0]);
+        }
+    }
+
+    #[test]
     fn world_of_one_is_identity() {
         let out = run_world(1, |c| {
             let a = c.all_reduce_sum(vec![3.0, 4.0]);

@@ -1,252 +1,33 @@
-//! Replicated data-parallel training (the Table 1 "DDP" baseline), now a
-//! first-class trainer mode.
+//! DDP mode: replicated data-parallel training (the Table 1 "DDP"
+//! baseline), a first-class trainer mode.
 //!
 //! Every rank holds a FULL parameter replica and FULL optimizer state;
 //! per step each rank computes gradients on its own microbatch, the
 //! gradients are tree-all-reduced (then averaged), and each rank applies
 //! the identical update. Because the reduction order is fixed and the
 //! optimizers are seeded identically, replicas stay **bitwise equal** —
-//! [`DdpCluster::gather_params`] verifies this on every gather.
+//! [`gather_params`](Cluster::gather_params) verifies this on every
+//! gather.
 //!
 //! Contrast with [`super::FsdpCluster`]: DDP trades w× optimizer-state
 //! replication for one all-reduce per layer; FSDP shards the state and
 //! pays (reduce-)scatter/gather traffic instead.
 //!
-//! [`DdpCluster`] mirrors the FSDP cluster's command protocol (persistent
-//! worker threads behind channels) so the trainer drives both through the
-//! same `TrainEngine` surface; [`run_ddp`] remains as the closure-driven
-//! harness the dist tests use.
+//! The worker protocol (channels, spawn loop, panic-aware Drop) is the
+//! generic [`Cluster`] — this file defines only what a DDP rank stores
+//! plus the replica-specific surface; [`run_ddp`] remains as the
+//! closure-driven harness the dist tests use.
 
+use super::cluster::{Cluster, MemoryReport, ParamMeta, Worker};
 use super::comm::Comm;
-use super::{BuildTarget, MemoryReport, OptimizerSpec, ParamMeta, WorkerOpt};
+use super::{BuildTarget, OptimizerSpec, WorkerOpt};
 use crate::tensor::Matrix;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
-
-enum Cmd {
-    /// Install the initial full parameters (every worker keeps a replica).
-    Init(Vec<Matrix>),
-    /// One training step: this worker's microbatch gradients (full shapes).
-    Step { t: u64, lr: f32, grads: Vec<Matrix> },
-    Gather,
-    ExportOpt,
-    ImportOpt(Vec<u8>),
-    Report,
-    Shutdown,
-}
-
-enum Reply {
-    StepDone,
-    Replica(Vec<Matrix>),
-    OptState(Vec<u8>),
-    ImportDone(Result<(), String>),
-    Report(MemoryReport),
-}
 
 /// A world of persistent worker threads with replicated state.
-pub struct DdpCluster {
-    world: usize,
-    metas: Vec<ParamMeta>,
-    cmd_tx: Vec<Sender<Cmd>>,
-    reply_rx: Vec<Receiver<Reply>>,
-    handles: Vec<JoinHandle<()>>,
-    spec_name: &'static str,
-}
+pub type DdpCluster = Cluster<DdpWorker>;
 
-impl DdpCluster {
-    pub fn new(world: usize, metas: Vec<ParamMeta>, spec: OptimizerSpec, seed: u64) -> DdpCluster {
-        assert!(world >= 1, "world size must be >= 1");
-        assert!(
-            spec.distributed_ok(),
-            "{} cannot run on distributed workers",
-            spec.name()
-        );
-        let spec_name = spec.name();
-        let comms = Comm::create_world(world);
-        let mut cmd_tx = Vec::with_capacity(world);
-        let mut reply_rx = Vec::with_capacity(world);
-        let mut handles = Vec::with_capacity(world);
-        for (rank, comm) in comms.into_iter().enumerate() {
-            let (ctx, crx) = channel::<Cmd>();
-            let (rtx, rrx) = channel::<Reply>();
-            let spec = spec.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("ddp-worker-{rank}"))
-                .spawn(move || {
-                    let mut w = Worker::new(rank, world, comm, spec, seed);
-                    w.serve(crx, rtx);
-                })
-                .expect("spawning DDP worker thread");
-            cmd_tx.push(ctx);
-            reply_rx.push(rrx);
-            handles.push(handle);
-        }
-        DdpCluster {
-            world,
-            metas,
-            cmd_tx,
-            reply_rx,
-            handles,
-            spec_name,
-        }
-    }
-
-    pub fn world(&self) -> usize {
-        self.world
-    }
-
-    pub fn optimizer_name(&self) -> &'static str {
-        self.spec_name
-    }
-
-    /// Replicate initial full parameters to every worker. Shapes are
-    /// validated HERE — a worker panicking later, mid-collective, would
-    /// strand its peers in a barrier.
-    pub fn init_params(&self, full: &[Matrix]) {
-        assert_eq!(full.len(), self.metas.len(), "param count != meta count");
-        for (p, meta) in full.iter().zip(&self.metas) {
-            assert_eq!(
-                p.shape(),
-                (meta.rows, meta.cols),
-                "{}: param/meta shape mismatch",
-                meta.name
-            );
-        }
-        for tx in &self.cmd_tx {
-            tx.send(Cmd::Init(full.to_vec())).expect("worker alive");
-        }
-    }
-
-    /// One synchronous training step. `per_rank[r]` holds rank r's
-    /// microbatch gradients in full shapes. Blocks until all ranks finish.
-    pub fn step(&mut self, t: u64, per_rank: Vec<Vec<Matrix>>, lr: f32) {
-        assert_eq!(per_rank.len(), self.world, "need one gradient set per rank");
-        // Validate shapes HERE, not in the workers: a worker panicking
-        // between barrier waves would strand its peers in the collective.
-        for (rank, grads) in per_rank.iter().enumerate() {
-            assert_eq!(grads.len(), self.metas.len(), "rank {rank}: grad count");
-            for (g, meta) in grads.iter().zip(&self.metas) {
-                assert_eq!(
-                    g.shape(),
-                    (meta.rows, meta.cols),
-                    "rank {rank}, {}: bad gradient shape",
-                    meta.name
-                );
-            }
-        }
-        for (tx, grads) in self.cmd_tx.iter().zip(per_rank) {
-            tx.send(Cmd::Step { t, lr, grads }).expect("worker alive");
-        }
-        for rx in &self.reply_rx {
-            match rx.recv().expect("worker alive") {
-                Reply::StepDone => {}
-                _ => unreachable!("protocol error: expected StepDone"),
-            }
-        }
-    }
-
-    /// Rank 0's replica WITHOUT the cross-rank equality sweep — the cheap
-    /// per-step read (replicas are identical by construction; use
-    /// [`DdpCluster::gather_params`] where divergence should be caught).
-    pub fn rank0_params(&self) -> Vec<Matrix> {
-        self.cmd_tx[0].send(Cmd::Gather).expect("worker alive");
-        match self.reply_rx[0].recv().expect("worker alive") {
-            Reply::Replica(p) => p,
-            _ => unreachable!("protocol error: expected Replica"),
-        }
-    }
-
-    /// Rank 0's replica — after asserting every rank's replica is bitwise
-    /// identical. A divergence means a non-deterministic reduction or
-    /// optimizer, which would silently corrupt any real DDP run.
-    pub fn gather_params(&self) -> Vec<Matrix> {
-        for tx in &self.cmd_tx {
-            tx.send(Cmd::Gather).expect("worker alive");
-        }
-        let mut per_rank: Vec<Vec<Matrix>> = self
-            .reply_rx
-            .iter()
-            .map(|rx| match rx.recv().expect("worker alive") {
-                Reply::Replica(p) => p,
-                _ => unreachable!("protocol error: expected Replica"),
-            })
-            .collect();
-        for r in 1..per_rank.len() {
-            for (idx, (a, b)) in per_rank[0].iter().zip(&per_rank[r]).enumerate() {
-                assert_eq!(
-                    a.data, b.data,
-                    "DDP replicas diverged on param {idx} (rank 0 vs {r})"
-                );
-            }
-        }
-        per_rank.swap_remove(0)
-    }
-
-    /// Serialized optimizer state (replicas are identical, so rank 0's
-    /// blob represents every rank; same format as single-process state).
-    pub fn export_optimizer(&self) -> Vec<u8> {
-        self.cmd_tx[0].send(Cmd::ExportOpt).expect("worker alive");
-        match self.reply_rx[0].recv().expect("worker alive") {
-            Reply::OptState(bytes) => bytes,
-            _ => unreachable!("protocol error: expected OptState"),
-        }
-    }
-
-    /// Restore optimizer state on every rank from one blob (replicated
-    /// state ⇒ the same bytes restore every replica).
-    pub fn import_optimizer(&self, bytes: &[u8]) -> Result<(), String> {
-        for tx in &self.cmd_tx {
-            tx.send(Cmd::ImportOpt(bytes.to_vec())).expect("worker alive");
-        }
-        let mut result = Ok(());
-        for rx in &self.reply_rx {
-            match rx.recv().expect("worker alive") {
-                Reply::ImportDone(r) => {
-                    if result.is_ok() {
-                        result = r;
-                    }
-                }
-                _ => unreachable!("protocol error: expected ImportDone"),
-            }
-        }
-        result
-    }
-
-    /// Live per-rank byte counters, in rank order.
-    pub fn memory_reports(&self) -> Vec<MemoryReport> {
-        for tx in &self.cmd_tx {
-            tx.send(Cmd::Report).expect("worker alive");
-        }
-        self.reply_rx
-            .iter()
-            .map(|rx| match rx.recv().expect("worker alive") {
-                Reply::Report(r) => r,
-                _ => unreachable!("protocol error: expected Report"),
-            })
-            .collect()
-    }
-}
-
-impl Drop for DdpCluster {
-    fn drop(&mut self) {
-        for tx in &self.cmd_tx {
-            let _ = tx.send(Cmd::Shutdown);
-        }
-        if std::thread::panicking() {
-            // A dead worker strands its peers inside a Barrier (std
-            // barriers don't poison); joining them here would turn the
-            // panic into a permanent hang. Leak the threads and let the
-            // panic surface as a diagnostic instead.
-            return;
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-/// One worker thread's state: a full replica + optimizer + comm handle.
-struct Worker {
+/// One DDP rank: a full replica + optimizer + comm handle.
+pub struct DdpWorker {
     world: usize,
     rank: usize,
     comm: Comm,
@@ -255,10 +36,17 @@ struct Worker {
     peak_transient: usize,
 }
 
-impl Worker {
-    fn new(rank: usize, world: usize, comm: Comm, spec: OptimizerSpec, seed: u64) -> Worker {
-        // One of `world` concurrent compute workers: split the core budget.
-        crate::parallel::set_thread_share(world);
+impl Worker for DdpWorker {
+    const MODE: &'static str = "ddp";
+
+    fn new(
+        rank: usize,
+        world: usize,
+        comm: Comm,
+        _metas: Vec<ParamMeta>,
+        spec: OptimizerSpec,
+        seed: u64,
+    ) -> DdpWorker {
         // SAME seed on every rank (unlike FSDP's per-rank hygiene XOR):
         // GaLore's local SVD refreshes draw identical streams, keeping the
         // replicas in lockstep — and making DDP(world=1) bitwise equal to
@@ -270,8 +58,8 @@ impl Worker {
                     external_subspace: false,
                 },
             )
-            .expect("spec validated in DdpCluster::new");
-        Worker {
+            .expect("spec validated in Cluster::new");
+        DdpWorker {
             world,
             rank,
             comm,
@@ -281,30 +69,8 @@ impl Worker {
         }
     }
 
-    fn serve(&mut self, rx: Receiver<Cmd>, tx: Sender<Reply>) {
-        loop {
-            match rx.recv() {
-                Ok(Cmd::Init(full)) => self.params = full,
-                Ok(Cmd::Step { t, lr, grads }) => {
-                    self.step(t, lr, grads);
-                    let _ = tx.send(Reply::StepDone);
-                }
-                Ok(Cmd::Gather) => {
-                    let _ = tx.send(Reply::Replica(self.params.clone()));
-                }
-                Ok(Cmd::ExportOpt) => {
-                    let _ = tx.send(Reply::OptState(self.opt.export_state()));
-                }
-                Ok(Cmd::ImportOpt(bytes)) => {
-                    let r = self.opt.as_opt().import_state(&bytes);
-                    let _ = tx.send(Reply::ImportDone(r));
-                }
-                Ok(Cmd::Report) => {
-                    let _ = tx.send(Reply::Report(self.report()));
-                }
-                Ok(Cmd::Shutdown) | Err(_) => break,
-            }
-        }
+    fn install(&mut self, full: Vec<Matrix>) {
+        self.params = full;
     }
 
     fn step(&mut self, t: u64, lr: f32, grads: Vec<Matrix>) {
@@ -325,6 +91,20 @@ impl Worker {
         }
     }
 
+    fn params(&self) -> Vec<Matrix> {
+        self.params.clone()
+    }
+
+    /// DDP frame: the optimizer blob alone (replicated state carries no
+    /// per-rank SVD stream — each rank's optimizer owns its own RNG).
+    fn export_state(&self) -> Vec<u8> {
+        self.opt.export_state()
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.opt.as_opt().import_state(bytes)
+    }
+
     fn report(&self) -> MemoryReport {
         MemoryReport {
             rank: self.rank,
@@ -334,6 +114,44 @@ impl Worker {
             peak_transient_bytes: self.peak_transient,
             traffic_elems: self.comm.traffic_elems(),
         }
+    }
+}
+
+impl Cluster<DdpWorker> {
+    /// Rank 0's replica WITHOUT the cross-rank equality sweep — the cheap
+    /// per-step read (replicas are identical by construction; use
+    /// [`gather_params`](Cluster::gather_params) where divergence should
+    /// be caught).
+    pub fn rank0_params(&self) -> Vec<Matrix> {
+        self.rank_params(0)
+    }
+
+    /// Rank 0's replica — after asserting every rank's replica is bitwise
+    /// identical. A divergence means a non-deterministic reduction or
+    /// optimizer, which would silently corrupt any real DDP run.
+    pub fn gather_params(&self) -> Vec<Matrix> {
+        let mut per_rank = self.params_per_rank();
+        for r in 1..per_rank.len() {
+            for (idx, (a, b)) in per_rank[0].iter().zip(&per_rank[r]).enumerate() {
+                assert_eq!(
+                    a.data, b.data,
+                    "DDP replicas diverged on param {idx} (rank 0 vs {r})"
+                );
+            }
+        }
+        per_rank.swap_remove(0)
+    }
+
+    /// Serialized optimizer state (replicas are identical, so rank 0's
+    /// blob represents every rank; same format as single-process state).
+    pub fn export_optimizer(&self) -> Vec<u8> {
+        self.export_rank_frame(0)
+    }
+
+    /// Restore optimizer state on every rank from one blob (replicated
+    /// state ⇒ the same bytes restore every replica).
+    pub fn import_optimizer(&self, bytes: &[u8]) -> Result<(), String> {
+        self.import_frames(vec![bytes.to_vec(); self.world()])
     }
 }
 

@@ -6,26 +6,36 @@
 //!   all-gather / broadcast) with fixed-tree reductions, so results are
 //!   bitwise identical regardless of thread scheduling, plus per-rank
 //!   byte-traffic accounting for the Table 1 reproduction.
-//! * [`FsdpCluster`] — one OS thread per worker ("GPU"), each owning its
-//!   parameter / gradient / optimizer-state *shards*. Per layer, gradients
-//!   are reduced and the optimizer steps immediately so the full-size
-//!   gradient buffer can be dropped (the per-layer fused update of Fig. 2).
-//!   In GaLore mode the leader computes the randomized SVD on the gathered
-//!   full gradient and broadcasts P (`GaLoreCfg::external_subspace`).
-//! * [`DdpCluster`] — the replicated-state data-parallel baseline Table 1
-//!   compares against, now a first-class trainer mode (`--parallel ddp`);
-//!   [`run_ddp`] remains as the closure-driven harness the tests use.
+//! * [`Cluster`]`<W: `[`Worker`]`>` — the generic worker-protocol runtime:
+//!   persistent threads behind channels, shared Cmd/Reply protocol,
+//!   coordinator-side validation, panic-aware barrier-safe shutdown, and
+//!   per-worker core-budget splitting. Protocol fixes land once and apply
+//!   to every mode.
+//! * The two instantiations: [`FsdpCluster`] (= `Cluster<FsdpWorker>`) —
+//!   each rank owns parameter / gradient / optimizer-state *shards*, with
+//!   the per-layer fused update of Fig. 2 and leader-computed subspaces —
+//!   and [`DdpCluster`] (= `Cluster<DdpWorker>`) — the replicated-state
+//!   baseline Table 1 compares against ([`run_ddp`] remains as the
+//!   closure-driven harness the tests use).
 //!
 //! Worker threads construct their optimizers from
 //! [`crate::optim::OptimizerSpec`] (re-exported here), the `Send`-able
 //! recipe that is the codebase's single optimizer-construction path.
+//!
+//! Checkpointing: `Cluster::export_frames` captures each rank's raw state
+//! frame; `checkpoint::canonical` gathers those into the world-agnostic
+//! canonical form (and re-slices it for any target world on resume).
 
 mod cluster;
 mod comm;
 mod ddp;
+mod fsdp;
 
-pub use cluster::{FsdpCluster, MemoryReport, ParamMeta};
+pub use cluster::{Cluster, MemoryReport, ParamMeta, Worker};
 pub use comm::Comm;
-pub use ddp::{run_ddp, DdpCluster};
+pub use ddp::{run_ddp, DdpCluster, DdpWorker};
+pub use fsdp::{FsdpCluster, FsdpWorker};
+
+pub(crate) use cluster::{shard_axis, shard_bounds, ShardAxis};
 
 pub use crate::optim::spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};

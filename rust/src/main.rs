@@ -67,6 +67,7 @@ USAGE: galore2 <train|eval|memory|svd|presets> [flags]
           --projection KIND --moments keep|reset|project
           --parallel single|fsdp|ddp --world N --threads N
           --engine native|pjrt --eval-batches N
+          --resume CKPT (elastic: any source mode/world)
           [--save-final] [--eval-downstream]
   eval    --config FILE --checkpoint CKPT [--questions N]
   memory  --preset P [--seq N] [--world N]

@@ -123,6 +123,12 @@ pub(crate) mod ser {
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect())
         }
+        /// Bytes left to read — lets parsers sanity-check untrusted
+        /// counts BEFORE allocating (`Vec::with_capacity` on a corrupt
+        /// u64 would abort instead of returning an error).
+        pub fn remaining(&self) -> usize {
+            self.buf.len() - self.pos
+        }
         /// Raw byte slice of length `n` (nested optimizer blobs).
         pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
             let end = self.pos + n;

@@ -249,6 +249,109 @@ impl Projector {
         self.stored.materialize()
     }
 
+    /// Encode the *stored* representation exactly as f32 words for
+    /// collective transport. Quantized projectors ship their codes and
+    /// block scales (i8 / u8 map to f32 losslessly), NOT dequantized
+    /// values: re-quantizing a dequantized P can wobble a block's absmax
+    /// scale by 1 ulp, which would let FSDP replicas drift bitwise from a
+    /// single-process run holding the leader's original quantization.
+    /// Round-trips through [`Projector::decode_wire`] bit-exactly.
+    pub fn encode_wire(&self) -> Vec<f32> {
+        let mut w = Vec::new();
+        match &self.stored {
+            Stored::F32(m) => {
+                w.push(0.0);
+                w.push(m.rows as f32);
+                w.push(m.cols as f32);
+                w.extend_from_slice(&m.data);
+            }
+            Stored::Q8 { q, rows, cols } => {
+                w.push(1.0);
+                w.push(*rows as f32);
+                w.push(*cols as f32);
+                w.push(q.scales.len() as f32);
+                w.extend_from_slice(&q.scales);
+                w.extend(q.codes.iter().map(|&c| c as f32));
+            }
+            Stored::Q4 { q, rows, cols } => {
+                w.push(2.0);
+                w.push(*rows as f32);
+                w.push(*cols as f32);
+                w.push(q.scales.len() as f32);
+                w.extend_from_slice(&q.scales);
+                w.extend(q.packed.iter().map(|&b| b as f32));
+            }
+        }
+        w
+    }
+
+    /// Rebuild a projector from [`Projector::encode_wire`] words. `side`
+    /// must come from the FULL parameter shape (the decoder may live on a
+    /// worker whose local shard has a different aspect ratio); `kind` is
+    /// the config's projection kind and must agree with the encoded tag.
+    pub fn decode_wire(words: &[f32], side: ProjectorSide, kind: ProjectionKind) -> Projector {
+        let tag = words[0] as i32;
+        let rows = words[1] as usize;
+        let cols = words[2] as usize;
+        let stored = match tag {
+            0 => Stored::F32(Matrix::from_vec(
+                rows,
+                cols,
+                words[3..3 + rows * cols].to_vec(),
+            )),
+            1 => {
+                let ns = words[3] as usize;
+                let scales = words[4..4 + ns].to_vec();
+                let codes: Vec<i8> = words[4 + ns..4 + ns + rows * cols]
+                    .iter()
+                    .map(|&x| x as i8)
+                    .collect();
+                Stored::Q8 {
+                    q: LinearQ8 {
+                        codes,
+                        scales,
+                        len: rows * cols,
+                    },
+                    rows,
+                    cols,
+                }
+            }
+            2 => {
+                let ns = words[3] as usize;
+                let scales = words[4..4 + ns].to_vec();
+                let n = rows * cols;
+                let packed: Vec<u8> = words[4 + ns..4 + ns + n.div_ceil(2)]
+                    .iter()
+                    .map(|&x| x as u8)
+                    .collect();
+                Stored::Q4 {
+                    q: LinearQ4 {
+                        packed,
+                        scales,
+                        len: n,
+                    },
+                    rows,
+                    cols,
+                }
+            }
+            other => panic!("corrupt projector wire encoding (tag {other})"),
+        };
+        let expect_tag = match kind {
+            ProjectionKind::Quant8 => 1,
+            ProjectionKind::Quant4 => 2,
+            _ => 0,
+        };
+        debug_assert_eq!(tag, expect_tag, "wire tag does not match kind {kind:?}");
+        Projector {
+            kind,
+            side,
+            rank: cols,
+            stored,
+            cache: None,
+            refresh_count: 0,
+        }
+    }
+
     /// Install a replicated P (on non-leader workers).
     pub fn install_p(&mut self, p: Matrix) {
         self.stored = match self.kind {
@@ -395,6 +498,36 @@ mod tests {
         let a = leader.project(&g);
         let b = worker.project(&g);
         prop::assert_close(&a.data, &b.data, 1e-6, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn wire_encoding_transports_stored_repr_bit_exactly() {
+        // The FSDP broadcast contract: a decoded projector projects
+        // IDENTICALLY to the leader's — including quantized kinds, where
+        // re-quantizing dequantized values could wobble block scales by
+        // 1 ulp. (This is why the wire carries codes+scales, not floats.)
+        let mut rng = Pcg64::new(17, 0);
+        let g = Matrix::randn(20, 36, 1.0, &mut rng);
+        for kind in [
+            ProjectionKind::RandSvd,
+            ProjectionKind::Quant8,
+            ProjectionKind::Quant4,
+        ] {
+            let mut leader = Projector::from_gradient(&g, 6, kind, &mut rng);
+            let words = leader.encode_wire();
+            let mut worker = Projector::decode_wire(&words, leader.side, kind);
+            assert_eq!(worker.rank, leader.rank, "{kind:?} rank");
+            assert_eq!(
+                worker.export_p().data,
+                leader.export_p().data,
+                "{kind:?}: dequantized P differs after wire transport"
+            );
+            let a = leader.project(&g);
+            let b = worker.project(&g);
+            assert_eq!(a.data, b.data, "{kind:?}: projection differs");
+            // And a second encode round-trips to the same words.
+            assert_eq!(worker.encode_wire(), words, "{kind:?}: unstable encoding");
+        }
     }
 
     #[test]

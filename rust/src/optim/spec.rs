@@ -116,6 +116,22 @@ impl OptimizerSpec {
         !matches!(self, OptimizerSpec::PjrtGaLore { .. })
     }
 
+    /// Serialization layout of the state blob the built optimizer exports
+    /// ("galore" | "qgalore" | the optimizer name). This can differ from
+    /// [`OptimizerSpec::name`]: a quantized-projector `GaLore` spec
+    /// *reports* "qgalore" but serializes the raw GaLore layout, and the
+    /// FSDP (external-subspace) build of `QGaLore` is a concrete `GaLore`
+    /// too. `checkpoint::canonical` uses this to convert blobs between
+    /// the two layouts at the canonical boundary, so a checkpoint written
+    /// by any build of the family resumes under any other.
+    pub fn state_codec(&self, external_subspace: bool) -> &'static str {
+        match self {
+            OptimizerSpec::QGaLore { .. } if !external_subspace => "qgalore",
+            OptimizerSpec::QGaLore { .. } | OptimizerSpec::GaLore { .. } => "galore",
+            _ => self.name(),
+        }
+    }
+
     /// Build the optimizer for a given execution target. This is the ONE
     /// optimizer construction path in the codebase.
     pub fn build(&self, seed: u64, target: BuildTarget) -> Result<WorkerOpt, String> {
@@ -311,6 +327,34 @@ mod tests {
             assert_eq!(fsdp.name(), spec.name(), "fsdp path name drift");
             assert_eq!(ddp.name(), spec.name(), "ddp path name drift");
         }
+    }
+
+    #[test]
+    fn state_codec_tracks_blob_layout_not_display_name() {
+        // The "qgalore" display name covers two state layouts: the true
+        // QGaLore optimizer (framed blob + lazy-gate state, single/DDP
+        // builds) and the concrete GaLore it degenerates to (raw layout:
+        // FSDP builds, and the quantized-projector GaLore spec).
+        let qspec = OptimizerSpec::QGaLore {
+            galore: GaLoreCfg::default(),
+            adam: AdamCfg::default(),
+            similarity_threshold: 0.9,
+        };
+        assert_eq!(qspec.name(), "qgalore");
+        assert_eq!(qspec.state_codec(false), "qgalore");
+        assert_eq!(qspec.state_codec(true), "galore");
+        let alias = OptimizerSpec::GaLore {
+            galore: GaLoreCfg {
+                projection: ProjectionKind::Quant8,
+                ..GaLoreCfg::default()
+            },
+            adam: AdamCfg::default(),
+        };
+        assert_eq!(alias.name(), "qgalore");
+        assert_eq!(alias.state_codec(false), "galore");
+        assert_eq!(alias.state_codec(true), "galore");
+        let plain = OptimizerSpec::AdamW(AdamCfg::default());
+        assert_eq!(plain.state_codec(false), "adamw");
     }
 
     #[test]

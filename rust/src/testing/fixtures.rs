@@ -1,0 +1,121 @@
+//! Shared integration-test fixtures.
+//!
+//! The tiny-model/trainer builders used to be duplicated (with drifting
+//! parameters) across `tests/determinism.rs`, `tests/engine_parity.rs`
+//! and `tests/end_to_end.rs`; they live here once so every suite —
+//! including `tests/resharding.rs` — trains the same fixture models.
+//!
+//! Skip policy: suites that need the compiled fwd/bwd artifacts guard on
+//! [`artifacts_ready`] and return early when `make artifacts` hasn't run.
+//! CI jobs that must not lose coverage silently set `GALORE2_DENY_SKIP=1`,
+//! which turns that graceful skip into a hard failure.
+
+use crate::config::TrainConfig;
+use crate::dist::ParamMeta;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg64;
+use std::path::PathBuf;
+
+/// The repo's artifact directory (`make artifacts` output).
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Whether the llama-nano artifacts exist. Under `GALORE2_DENY_SKIP=1`
+/// (set by CI for suites that may not skip) missing artifacts PANIC
+/// instead of letting the caller return early, so a skipped test can
+/// never masquerade as a green job.
+pub fn artifacts_ready() -> bool {
+    let ready = artifacts_dir().join("manifest_llama-nano.json").exists();
+    if !ready && std::env::var_os("GALORE2_DENY_SKIP").is_some() {
+        panic!(
+            "GALORE2_DENY_SKIP is set but the llama-nano artifacts are missing — \
+             a test was about to skip silently; run `make artifacts PRESET=llama-nano`"
+        );
+    }
+    ready
+}
+
+/// The shared tiny-trainer config (llama-nano, deterministic corpus, no
+/// periodic eval). Suites override individual fields via struct-update
+/// syntax where they need a different cadence.
+pub fn tiny_train_cfg(optimizer: &str, run: &str, steps: u64) -> TrainConfig {
+    TrainConfig {
+        preset: "llama-nano".into(),
+        artifacts_dir: artifacts_dir(),
+        out_dir: std::env::temp_dir().join("galore2_it"),
+        run_name: format!("{run}_{}", std::process::id()),
+        optimizer: optimizer.into(),
+        lr: 0.02,
+        steps,
+        galore_rank: 16,
+        galore_update_freq: 40,
+        galore_alpha: 0.25,
+        eval_every: 0,
+        eval_batches: 4,
+        log_every: 100,
+        corpus_tokens: 120_000,
+        val_tokens: 12_000,
+        seed: 42,
+        ..TrainConfig::default()
+    }
+}
+
+/// Parameter metadata ("p0", "p1", …) for a list of shapes.
+pub fn metas_for(shapes: &[(usize, usize)]) -> Vec<ParamMeta> {
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(r, c))| ParamMeta {
+            name: format!("p{i}"),
+            rows: r,
+            cols: c,
+        })
+        .collect()
+}
+
+/// A deterministic gaussian parameter/gradient set for a list of shapes.
+pub fn randn_set(shapes: &[(usize, usize)], std: f32, seed: u64, stream: u64) -> Vec<Matrix> {
+    let mut rng = Pcg64::new(seed, stream);
+    shapes
+        .iter()
+        .map(|&(r, c)| Matrix::randn(r, c, std, &mut rng))
+        .collect()
+}
+
+/// A deterministic per-(step, rank) microbatch gradient set — the standard
+/// stand-in for the fwd/bwd pass in engine-level cluster tests. Passing
+/// the same `rank` to every worker yields identical per-rank gradients,
+/// which makes trajectories bitwise comparable across world sizes 1/2/4
+/// (the averaged gradient is then exactly the single-rank gradient).
+pub fn rank_grads(shapes: &[(usize, usize)], t: u64, rank: usize, std: f32) -> Vec<Matrix> {
+    randn_set(shapes, std, 1000 + t, rank as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_are_deterministic() {
+        let shapes = [(3usize, 4usize), (4, 3)];
+        assert_eq!(metas_for(&shapes).len(), 2);
+        assert_eq!(metas_for(&shapes)[1].rows, 4);
+        let a = randn_set(&shapes, 0.5, 7, 0);
+        let b = randn_set(&shapes, 0.5, 7, 0);
+        assert_eq!(a[0].data, b[0].data);
+        let g0 = rank_grads(&shapes, 3, 0, 0.1);
+        let g1 = rank_grads(&shapes, 3, 1, 0.1);
+        assert_eq!(g0.len(), 2);
+        assert_ne!(g0[0].data, g1[0].data, "ranks must get distinct streams");
+    }
+
+    #[test]
+    fn tiny_cfg_points_at_repo_artifacts() {
+        let c = tiny_train_cfg("galore", "fixture", 5);
+        assert_eq!(c.preset, "llama-nano");
+        assert_eq!(c.steps, 5);
+        assert!(c.artifacts_dir.ends_with("artifacts"));
+        assert!(c.run_name.starts_with("fixture_"));
+    }
+}

@@ -1,3 +1,5 @@
+//! Test support: property harness + shared integration fixtures.
+//!
 //! Property-based testing helper (proptest substitute for the offline build).
 //!
 //! Usage:
@@ -13,6 +15,8 @@
 //! On failure the harness re-runs the failing case seed and panics with the
 //! seed so the case can be replayed deterministically with
 //! `PROP_SEED=<seed> cargo test <name>`.
+
+pub mod fixtures;
 
 pub mod prop {
     use crate::util::rng::Pcg64;

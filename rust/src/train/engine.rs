@@ -13,7 +13,16 @@
 //! * [`FsdpEngine`]   — sharded state over [`FsdpCluster`] worker threads.
 //! * [`DdpEngine`]    — replicated state over [`DdpCluster`] worker
 //!   threads; world=1 trajectories are bitwise equal to [`SingleEngine`].
+//!
+//! Checkpoint state flows through `export_state`/`import_state` in the
+//! **canonical, world-agnostic form** ([`CanonicalOptState`]): every
+//! engine exports the same bytes for the same trajectory, and every
+//! engine imports state exported by any other engine at any world size —
+//! the elastic-resume contract (`tests/resharding.rs`). Legacy (v2)
+//! mode-specific blobs are still accepted on import, but remain
+//! world-locked for FSDP and fail loudly on mismatch.
 
+use crate::checkpoint::canonical::CanonicalOptState;
 use crate::dist::{DdpCluster, FsdpCluster, MemoryReport, ParamMeta};
 use crate::optim::spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};
 use crate::tensor::Matrix;
@@ -40,8 +49,10 @@ pub trait TrainEngine {
     /// microbatch gradients in full shapes; `lr` is the scheduled rate.
     fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32);
 
-    /// Serialized optimizer state (checkpointing); round-trips through
-    /// `import_state` on an engine of the same mode and world size.
+    /// Serialized optimizer state in the canonical (world-agnostic) form:
+    /// round-trips through `import_state` on an engine of ANY mode and
+    /// world size (for re-shardable optimizers; world-locked state says so
+    /// on import instead of silently resetting).
     fn export_state(&self) -> Vec<u8>;
 
     fn import_state(&mut self, bytes: &[u8]) -> Result<(), String>;
@@ -53,6 +64,10 @@ pub trait TrainEngine {
 /// Single-process engine: one optimizer instance stepping in place.
 pub struct SingleEngine {
     opt: WorkerOpt,
+    /// Layout of `opt`'s state blob — can differ from its display name
+    /// (a quantized-projector GaLore reports "qgalore" but serializes the
+    /// raw layout); the canonical boundary converts on it.
+    codec: &'static str,
     params: Vec<Matrix>,
 }
 
@@ -65,6 +80,7 @@ impl SingleEngine {
     ) -> Result<SingleEngine, String> {
         Ok(SingleEngine {
             opt: spec.build(seed, BuildTarget::Single { pjrt })?,
+            codec: spec.state_codec(false),
             params,
         })
     }
@@ -104,11 +120,19 @@ impl TrainEngine for SingleEngine {
     }
 
     fn export_state(&self) -> Vec<u8> {
-        self.opt.export_state()
+        CanonicalOptState::from_full(self.opt.name(), self.codec, self.opt.export_state())
+            .encode()
     }
 
     fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
-        self.opt.as_opt().import_state(bytes)
+        if CanonicalOptState::sniff(bytes) {
+            let c = CanonicalOptState::decode(bytes)?;
+            c.expect_name(self.opt.name())?;
+            self.opt.as_opt().import_state(&c.to_full_for(self.codec)?)
+        } else {
+            // Legacy (v2) checkpoint: the raw single-process blob.
+            self.opt.as_opt().import_state(bytes)
+        }
     }
 
     fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
@@ -171,11 +195,30 @@ impl TrainEngine for FsdpEngine {
     }
 
     fn export_state(&self) -> Vec<u8> {
-        self.cluster.export_optimizers()
+        // Gather every rank's shard-local frame into the world-agnostic
+        // canonical form. A parse failure here means a worker serialized
+        // corrupt state — an internal invariant, not a user error.
+        let frames = self.cluster.export_frames();
+        CanonicalOptState::from_fsdp_frames(
+            self.cluster.optimizer_name(),
+            frames,
+            self.cluster.metas(),
+        )
+        .expect("canonicalizing FSDP optimizer state")
+        .encode()
     }
 
     fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
-        self.cluster.import_optimizers(bytes)
+        if CanonicalOptState::sniff(bytes) {
+            let c = CanonicalOptState::decode(bytes)?;
+            c.expect_name(self.cluster.optimizer_name())?;
+            let frames = c.fsdp_frames(self.cluster.world(), self.cluster.metas())?;
+            self.cluster.import_frames(frames)
+        } else {
+            // Legacy (v2) checkpoint: world-locked per-rank frames; the
+            // cluster rejects world mismatches with a migration hint.
+            self.cluster.import_optimizers(bytes)
+        }
     }
 
     fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
@@ -187,6 +230,8 @@ impl TrainEngine for FsdpEngine {
 /// verifies the replicas are still bitwise identical.
 pub struct DdpEngine {
     cluster: DdpCluster,
+    /// Layout of the workers' state blobs (see [`OptimizerSpec::state_codec`]).
+    codec: &'static str,
     params: Vec<Matrix>,
 }
 
@@ -201,10 +246,12 @@ impl DdpEngine {
         if !spec.distributed_ok() {
             return Err(format!("{} cannot run under ddp", spec.name()));
         }
+        let codec = spec.state_codec(false);
         let cluster = DdpCluster::new(world, metas, spec, seed);
         cluster.init_params(init);
         Ok(DdpEngine {
             cluster,
+            codec,
             params: init.to_vec(),
         })
     }
@@ -242,13 +289,27 @@ impl TrainEngine for DdpEngine {
 
     fn export_state(&self) -> Vec<u8> {
         // Checkpoint gate: panic here, not after persisting, if the
-        // replicas have somehow diverged.
+        // replicas have somehow diverged. Replicated state is already
+        // full-tensor — rank 0's blob is the canonical payload (converted
+        // to the canonical layout where the display name requires it).
         let _ = self.cluster.gather_params();
-        self.cluster.export_optimizer()
+        CanonicalOptState::from_full(
+            self.cluster.optimizer_name(),
+            self.codec,
+            self.cluster.export_optimizer(),
+        )
+        .encode()
     }
 
     fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
-        self.cluster.import_optimizer(bytes)
+        if CanonicalOptState::sniff(bytes) {
+            let c = CanonicalOptState::decode(bytes)?;
+            c.expect_name(self.cluster.optimizer_name())?;
+            self.cluster.import_optimizer(&c.to_full_for(self.codec)?)
+        } else {
+            // Legacy (v2) checkpoint: the raw replicated blob.
+            self.cluster.import_optimizer(bytes)
+        }
     }
 
     fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
@@ -371,5 +432,35 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn import_rejects_mismatched_optimizer_state() {
+        // A galore checkpoint must never silently feed adamw moments.
+        let shapes = &[(6, 10)];
+        let (_, init, _) = setup(shapes);
+        let adamw = SingleEngine::new(
+            &OptimizerSpec::AdamW(AdamCfg::default()),
+            3,
+            None,
+            init.clone(),
+        )
+        .unwrap();
+        let blob = adamw.export_state();
+        let mut galore = SingleEngine::new(
+            &OptimizerSpec::GaLore {
+                galore: crate::optim::GaLoreCfg::default(),
+                adam: AdamCfg::default(),
+            },
+            3,
+            None,
+            init,
+        )
+        .unwrap();
+        let err = galore.import_state(&blob).unwrap_err();
+        assert!(
+            err.contains("adamw") && err.contains("galore"),
+            "unhelpful error: {err}"
+        );
     }
 }

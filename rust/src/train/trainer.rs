@@ -338,8 +338,17 @@ impl Trainer {
     /// Resume parameters + optimizer state from a checkpoint. Parameters
     /// are re-installed through the engine (sharded engines re-scatter
     /// into their workers) and optimizer state flows through
-    /// [`TrainEngine::import_state`] — FSDP restores every rank's
-    /// shard-local moments, not just rank 0's.
+    /// [`TrainEngine::import_state`].
+    ///
+    /// **Elastic**: a v3 checkpoint stores the canonical (world-agnostic)
+    /// optimizer form, so the source run's `--parallel` mode and world
+    /// size don't have to match this trainer's — FSDP moments are
+    /// re-sliced for the new world (`checkpoint::canonical`). Legacy v2
+    /// checkpoints remain world-locked under FSDP and fail loudly on a
+    /// mismatch. Note that changing the world also changes how microbatch
+    /// data is dealt across ranks, so only a same-world resume reproduces
+    /// the uninterrupted *loss* trajectory; optimizer state itself is
+    /// restored exactly either way (pinned in tests/resharding.rs).
     pub fn resume(&mut self, path: &Path) -> Result<u64> {
         let ckpt = Checkpoint::load(path)?;
         anyhow::ensure!(
@@ -352,8 +361,12 @@ impl Trainer {
             .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
         self.start_step = ckpt.step;
         // Telemetry continuity: each step consumes exactly world×batch×seq
-        // tokens, so the resumed counter picks up where the run left off
-        // (metrics.csv token axes stay comparable across a resume).
+        // tokens, so for a same-world resume this reconstructs the exact
+        // counter the run left off with. An ELASTIC resume uses the NEW
+        // world here — the source world isn't recorded in the checkpoint —
+        // so the token axis is rescaled to this run's consumption rate
+        // (approximation noted in ROADMAP: store tokens_seen in a v4
+        // checkpoint field to make it exact).
         self.tokens_seen = ckpt.step
             * self.engine.world() as u64
             * self.loader.tokens_per_batch() as u64;

@@ -6,13 +6,14 @@
 //! full FSDP training run must produce identical bits at 1, 2 and 4
 //! worker threads.
 
-use galore2::dist::{FsdpCluster, OptimizerSpec, ParamMeta};
+use galore2::dist::{FsdpCluster, OptimizerSpec};
 use galore2::linalg::{randomized_svd, RandSvdOpts};
 use galore2::optim::{AdamCfg, GaLoreCfg};
 use galore2::parallel;
 use galore2::tensor::{
     matmul_a_bt_with_plan, matmul_at_b_with_plan, matmul_with_plan, Matrix, MatmulPlan,
 };
+use galore2::testing::fixtures;
 use galore2::util::rng::Pcg64;
 use std::sync::Mutex;
 
@@ -84,35 +85,17 @@ fn randomized_svd_bitwise_identical_across_thread_counts() {
     }
 }
 
+/// Sizes above the parallel GEMM cutover, so the pool actually engages.
 fn cluster_shapes() -> Vec<(usize, usize)> {
     vec![(256, 384), (384, 256), (64, 64), (1, 128)]
 }
 
-fn cluster_metas() -> Vec<ParamMeta> {
-    cluster_shapes()
-        .iter()
-        .enumerate()
-        .map(|(i, &(r, c))| ParamMeta {
-            name: format!("layer{i}"),
-            rows: r,
-            cols: c,
-        })
-        .collect()
-}
-
-/// A deterministic per-(step, rank) microbatch gradient set.
-fn grads_for(t: u64, rank: usize) -> Vec<Matrix> {
-    let mut rng = Pcg64::new(1000 + t, rank as u64);
-    cluster_shapes()
-        .iter()
-        .map(|&(r, c)| Matrix::randn(r, c, 0.05, &mut rng))
-        .collect()
-}
-
-/// Full FSDP GaLore run at a given worker-pool thread count.
+/// Full FSDP GaLore run at a given worker-pool thread count (model/grad
+/// builders shared with the other suites via `testing::fixtures`).
 fn run_fsdp_galore(pool_threads: usize) -> Vec<Matrix> {
     parallel::set_default_threads(pool_threads);
     let world = 2;
+    let shapes = cluster_shapes();
     let spec = OptimizerSpec::GaLore {
         galore: GaLoreCfg {
             rank: 64,
@@ -122,17 +105,13 @@ fn run_fsdp_galore(pool_threads: usize) -> Vec<Matrix> {
         },
         adam: AdamCfg::default(),
     };
-    let mut cluster = FsdpCluster::new(world, cluster_metas(), spec, 33);
-    let init: Vec<Matrix> = {
-        let mut rng = Pcg64::new(2, 0);
-        cluster_shapes()
-            .iter()
-            .map(|&(r, c)| Matrix::randn(r, c, 0.1, &mut rng))
-            .collect()
-    };
+    let mut cluster = FsdpCluster::new(world, fixtures::metas_for(&shapes), spec, 33);
+    let init = fixtures::randn_set(&shapes, 0.1, 2, 0);
     cluster.init_params(&init);
     for t in 0..4 {
-        let per_rank: Vec<Vec<Matrix>> = (0..world).map(|r| grads_for(t, r)).collect();
+        let per_rank: Vec<Vec<Matrix>> = (0..world)
+            .map(|r| fixtures::rank_grads(&shapes, t, r, 0.05))
+            .collect();
         cluster.step(t, per_rank, 0.02);
     }
     let out = cluster.gather_params();

@@ -4,36 +4,15 @@
 //! All tests skip gracefully when `make artifacts` hasn't been run.
 
 use galore2::config::{ParallelMode, TrainConfig};
+use galore2::testing::fixtures;
 use galore2::train::Trainer;
 
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
 fn ready() -> bool {
-    artifacts_dir().join("manifest_llama-nano.json").exists()
+    fixtures::artifacts_ready()
 }
 
 fn cfg(optimizer: &str, run: &str, steps: u64) -> TrainConfig {
-    TrainConfig {
-        preset: "llama-nano".into(),
-        artifacts_dir: artifacts_dir(),
-        out_dir: std::env::temp_dir().join("galore2_it"),
-        run_name: format!("{run}_{}", std::process::id()),
-        optimizer: optimizer.into(),
-        lr: 0.02,
-        steps,
-        galore_rank: 16,
-        galore_update_freq: 40,
-        galore_alpha: 0.25,
-        eval_every: 0,
-        eval_batches: 4,
-        log_every: 50,
-        corpus_tokens: 120_000,
-        val_tokens: 12_000,
-        seed: 42,
-        ..TrainConfig::default()
-    }
+    fixtures::tiny_train_cfg(optimizer, run, steps)
 }
 
 #[test]

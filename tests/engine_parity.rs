@@ -6,36 +6,20 @@
 
 use galore2::config::{Engine, ParallelMode, TrainConfig};
 use galore2::optim::{BuildTarget, OptimizerSpec};
-use galore2::testing::prop;
+use galore2::testing::{fixtures, prop};
 use galore2::train::Trainer;
 
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
 fn ready() -> bool {
-    artifacts_dir().join("manifest_llama-nano.json").exists()
+    fixtures::artifacts_ready()
 }
 
 fn cfg(engine: Engine, run: &str) -> TrainConfig {
     TrainConfig {
-        preset: "llama-nano".into(),
-        artifacts_dir: artifacts_dir(),
-        out_dir: std::env::temp_dir().join("galore2_it"),
-        run_name: format!("{run}_{}", std::process::id()),
-        optimizer: "galore".into(),
         engine,
-        lr: 0.02,
-        steps: 15,
-        galore_rank: 16,
         galore_update_freq: 10,
-        galore_alpha: 0.25,
-        eval_every: 0,
-        log_every: 100,
         corpus_tokens: 50_000,
         val_tokens: 8_000,
-        seed: 42,
-        ..TrainConfig::default()
+        ..fixtures::tiny_train_cfg("galore", run, 15)
     }
 }
 

@@ -1,0 +1,483 @@
+//! Cross-world parity: the elastic-resume contract.
+//!
+//! A v3 checkpoint stores optimizer state in the canonical, world-agnostic
+//! form (`checkpoint::canonical`). These tests pin the contract end to
+//! end at the engine level, with no compiled artifacts needed:
+//!
+//! * a checkpoint written under FSDP world=2 resumes under FSDP world=4,
+//!   world=1, DDP, and single-process with a **bitwise identical**
+//!   trajectory — for galore, qgalore, and adamw;
+//! * DDP checkpoints resume under FSDP and single-process the same way;
+//! * the canonical export bytes are identical no matter which mode/world
+//!   produced them, and gather∘scatter is the identity on them — including
+//!   non-power-of-two worlds (3, 5) and worlds that leave ranks with
+//!   empty shards;
+//! * legacy (v2) world-locked state and corrupt blobs fail loudly, never
+//!   silently resetting moments; loading a v2 checkpoint at its original
+//!   world and re-saving migrates it to v3.
+//!
+//! Identical per-rank microbatch gradients make trajectories bitwise
+//! comparable across worlds 1/2/4 (the tree-reduced average of w equal
+//! values is exact for power-of-two w — see dist/fsdp.rs tests).
+//! Q-GaLore's checkpoint boundary sits ON a refresh step: quantized
+//! projectors are re-derived from the restored sketch stream at the first
+//! refresh after resume, sidestepping the 1-ulp absmax wobble that
+//! re-quantizing a dequantized P can introduce (EXPERIMENTS.md §Resume).
+
+use galore2::checkpoint::canonical::CanonicalOptState;
+use galore2::checkpoint::{Checkpoint, LEGACY_VERSION};
+use galore2::dist::FsdpCluster;
+use galore2::optim::{AdamCfg, GaLoreCfg, OptimizerSpec, ProjectionKind};
+use galore2::tensor::Matrix;
+use galore2::testing::fixtures;
+use galore2::train::{DdpEngine, FsdpEngine, SingleEngine, TrainEngine};
+
+/// Wide, tall, square, and bias-like (unprojected) parameters.
+const SHAPES: &[(usize, usize)] = &[(8, 16), (16, 8), (6, 6), (1, 12)];
+const LR: f32 = 0.03;
+const SEED: u64 = 21;
+
+fn grads(shapes: &[(usize, usize)], t: u64) -> Vec<Matrix> {
+    // Stream of rank 0 for EVERY rank: identical microbatches keep runs
+    // comparable across world sizes.
+    fixtures::rank_grads(shapes, t, 0, 0.1)
+}
+
+fn init(shapes: &[(usize, usize)]) -> Vec<Matrix> {
+    fixtures::randn_set(shapes, 0.5, 7, 0)
+}
+
+/// Build an engine: ("single", _) | ("fsdp", w) | ("ddp", w).
+fn build(
+    mode: &str,
+    world: usize,
+    shapes: &[(usize, usize)],
+    spec: &OptimizerSpec,
+    seed: u64,
+) -> Box<dyn TrainEngine> {
+    let metas = fixtures::metas_for(shapes);
+    match mode {
+        "single" => Box::new(SingleEngine::new(spec, seed, None, init(shapes)).unwrap()),
+        "fsdp" => {
+            Box::new(FsdpEngine::new(world, metas, spec.clone(), seed, &init(shapes)).unwrap())
+        }
+        "ddp" => Box::new(DdpEngine::new(world, metas, spec.clone(), seed, &init(shapes)).unwrap()),
+        other => panic!("unknown mode {other}"),
+    }
+}
+
+fn drive(e: &mut dyn TrainEngine, shapes: &[(usize, usize)], t0: u64, t1: u64) {
+    let w = e.world();
+    for t in t0..t1 {
+        e.step(t, vec![grads(shapes, t); w], LR);
+    }
+}
+
+fn assert_params_eq(got: &[Matrix], want: &[Matrix], label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: param count");
+    for (idx, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.data, b.data, "{label}: param {idx} diverged");
+    }
+}
+
+fn galore_spec() -> OptimizerSpec {
+    OptimizerSpec::GaLore {
+        galore: GaLoreCfg {
+            rank: 4,
+            update_freq: 3,
+            alpha: 1.0,
+            projection: ProjectionKind::RandSvd,
+            ..GaLoreCfg::default()
+        },
+        adam: AdamCfg::default(),
+    }
+}
+
+fn qgalore_spec() -> OptimizerSpec {
+    OptimizerSpec::QGaLore {
+        galore: GaLoreCfg {
+            rank: 4,
+            update_freq: 3,
+            alpha: 1.0,
+            projection: ProjectionKind::Quant8,
+            ..GaLoreCfg::default()
+        },
+        adam: AdamCfg::default(),
+        // Cosine similarity never exceeds 2.0: the lazy gate takes every
+        // scheduled refresh, keeping single/DDP (gated) trajectories equal
+        // to FSDP (coordinator-driven, gate inert).
+        similarity_threshold: 2.0,
+    }
+}
+
+fn galore_q8_spec() -> OptimizerSpec {
+    // A *GaLore* spec with a quantized projector: reports the "qgalore"
+    // display name but serializes the raw GaLore layout on every build
+    // path — the codec conversion at the canonical boundary
+    // (OptimizerSpec::state_codec) is what keeps it resumable anywhere.
+    OptimizerSpec::GaLore {
+        galore: GaLoreCfg {
+            rank: 4,
+            update_freq: 3,
+            alpha: 1.0,
+            projection: ProjectionKind::Quant8,
+            ..GaLoreCfg::default()
+        },
+        adam: AdamCfg::default(),
+    }
+}
+
+fn adamw_spec() -> OptimizerSpec {
+    OptimizerSpec::AdamW(AdamCfg::default())
+}
+
+/// The headline contract: train under FSDP world=2, checkpoint at
+/// `boundary`, resume under every other mode/world, and the continued
+/// trajectory is bitwise identical to the uninterrupted run.
+fn elastic_from_fsdp2(spec: OptimizerSpec, boundary: u64, total: u64) {
+    // Uninterrupted single-process reference — for these specs the
+    // FSDP/DDP trajectories are bitwise equal to it by construction.
+    let mut reference = build("single", 1, SHAPES, &spec, SEED);
+    drive(reference.as_mut(), SHAPES, 0, total);
+
+    // Source run: FSDP world=2, checkpoint at `boundary`, then continue —
+    // pinning that the export itself doesn't perturb the trajectory and
+    // that the sharded run matches the single-process reference.
+    let mut src = build("fsdp", 2, SHAPES, &spec, SEED);
+    drive(src.as_mut(), SHAPES, 0, boundary);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+    drive(src.as_mut(), SHAPES, boundary, total);
+    assert_params_eq(src.params(), reference.params(), "uninterrupted fsdp(2)");
+
+    for (mode, world) in [("fsdp", 4), ("fsdp", 1), ("ddp", 2), ("ddp", 4), ("single", 1)] {
+        // Seed 999: everything the resumed run knows must come from the
+        // checkpoint, not from construction-time state.
+        let mut target = build(mode, world, SHAPES, &spec, 999);
+        target.init_params(&snapshot);
+        target
+            .import_state(&blob)
+            .unwrap_or_else(|e| panic!("{mode}({world}) import: {e}"));
+        drive(target.as_mut(), SHAPES, boundary, total);
+        assert_params_eq(
+            target.params(),
+            reference.params(),
+            &format!("resumed {mode}({world})"),
+        );
+    }
+}
+
+#[test]
+fn galore_fsdp2_checkpoint_resumes_anywhere() {
+    // Boundary mid refresh-cycle (freq 3, boundary 7): the projector and
+    // low-rank moments cross the checkpoint, and the next refresh (t=9)
+    // draws from the restored sketch stream.
+    elastic_from_fsdp2(galore_spec(), 7, 12);
+}
+
+#[test]
+fn adamw_fsdp2_checkpoint_resumes_anywhere() {
+    elastic_from_fsdp2(adamw_spec(), 5, 10);
+}
+
+#[test]
+fn qgalore_fsdp2_checkpoint_resumes_anywhere() {
+    // Boundary ON a refresh step (6 % 3 == 0): the quantized projector is
+    // re-derived from the restored stream before first use (see module
+    // docs for why quantized P transport pins this alignment).
+    elastic_from_fsdp2(qgalore_spec(), 6, 12);
+}
+
+#[test]
+fn quantized_galore_alias_checkpoint_resumes_anywhere() {
+    // The other spec that answers to the "qgalore" name: plain GaLore
+    // with a quantized projector (raw state layout everywhere). Its
+    // checkpoints must convert through the same canonical framing.
+    elastic_from_fsdp2(galore_q8_spec(), 6, 12);
+}
+
+#[test]
+fn ddp_checkpoint_resumes_under_fsdp_and_single() {
+    // The reverse direction: replicated-state checkpoints re-slice onto
+    // sharded workers.
+    let spec = galore_spec();
+    let mut reference = build("single", 1, SHAPES, &spec, SEED);
+    drive(reference.as_mut(), SHAPES, 0, 12);
+
+    let mut src = build("ddp", 2, SHAPES, &spec, SEED);
+    drive(src.as_mut(), SHAPES, 0, 7);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+
+    for (mode, world) in [("fsdp", 4), ("fsdp", 1), ("single", 1)] {
+        let mut target = build(mode, world, SHAPES, &spec, 999);
+        target.init_params(&snapshot);
+        target
+            .import_state(&blob)
+            .unwrap_or_else(|e| panic!("{mode}({world}) import: {e}"));
+        drive(target.as_mut(), SHAPES, 7, 12);
+        assert_params_eq(
+            target.params(),
+            reference.params(),
+            &format!("ddp→{mode}({world})"),
+        );
+    }
+}
+
+#[test]
+fn canonical_export_bytes_identical_across_modes_and_worlds() {
+    // The canonical form really is canonical: the same trajectory exports
+    // the same BYTES from every mode and world — single, FSDP at 1/2/4,
+    // and DDP — for both the projected (galore) and full-rank (adamw)
+    // optimizers, and for the quantized-GaLore alias (raw layout under a
+    // "qgalore" name — every mode wraps it into the same framed
+    // canonical form). True Q-GaLore is excluded: its single/DDP blob
+    // carries lazy-gate probe history that FSDP's inert gate never
+    // accumulates.
+    for spec in [galore_spec(), adamw_spec(), galore_q8_spec()] {
+        let mut engines: Vec<(String, Box<dyn TrainEngine>)> = vec![
+            ("single".into(), build("single", 1, SHAPES, &spec, SEED)),
+            ("fsdp(1)".into(), build("fsdp", 1, SHAPES, &spec, SEED)),
+            ("fsdp(2)".into(), build("fsdp", 2, SHAPES, &spec, SEED)),
+            ("fsdp(4)".into(), build("fsdp", 4, SHAPES, &spec, SEED)),
+            ("ddp(2)".into(), build("ddp", 2, SHAPES, &spec, SEED)),
+        ];
+        for (_, e) in engines.iter_mut() {
+            drive(e.as_mut(), SHAPES, 0, 7);
+        }
+        let base = engines[0].1.export_state();
+        assert!(
+            CanonicalOptState::sniff(&base),
+            "engine export must be canonical"
+        );
+        for (label, e) in &engines[1..] {
+            let bytes = e.export_state();
+            assert_eq!(
+                bytes.len(),
+                base.len(),
+                "{}: {label} canonical size differs from single",
+                spec.name()
+            );
+            assert_eq!(
+                bytes,
+                base,
+                "{}: {label} canonical bytes differ from single",
+                spec.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn import_export_is_identity_at_any_world() {
+    // Scatter∘gather over live clusters: importing canonical state into a
+    // world-w engine and immediately re-exporting reproduces the exact
+    // canonical bytes — for odd worlds too (3, 5), where shard widths are
+    // uneven and the (1, 12) bias leaves ranks with tiny/empty slices.
+    for spec in [galore_spec(), adamw_spec()] {
+        let mut src = build("fsdp", 2, SHAPES, &spec, SEED);
+        drive(src.as_mut(), SHAPES, 0, 7);
+        let blob = src.export_state();
+        let snapshot = src.params().to_vec();
+        for world in [1usize, 2, 3, 4, 5] {
+            let mut target = build("fsdp", world, SHAPES, &spec, 999);
+            target.init_params(&snapshot);
+            target
+                .import_state(&blob)
+                .unwrap_or_else(|e| panic!("world {world} import: {e}"));
+            assert_eq!(
+                target.export_state(),
+                blob,
+                "{} world {world}: import→export not identity",
+                spec.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn odd_world_resume_is_deterministic_and_finite() {
+    // Worlds 3 and 5 average by non-powers-of-two, so they are not
+    // bitwise-comparable to the single reference — but resuming there
+    // must be deterministic (two resumes agree exactly) and healthy.
+    let spec = galore_spec();
+    let mut src = build("fsdp", 2, SHAPES, &spec, SEED);
+    drive(src.as_mut(), SHAPES, 0, 6);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+    for world in [3usize, 5] {
+        let run = |seed: u64| {
+            let mut eng = build("fsdp", world, SHAPES, &spec, seed);
+            eng.init_params(&snapshot);
+            eng.import_state(&blob).unwrap();
+            drive(eng.as_mut(), SHAPES, 6, 12);
+            eng.params().to_vec()
+        };
+        let a = run(999);
+        let b = run(4242);
+        assert_params_eq(&a, &b, &format!("world {world} repeat resume"));
+        for (idx, p) in a.iter().enumerate() {
+            assert!(
+                p.data.iter().all(|x| x.is_finite()),
+                "world {world} param {idx} non-finite"
+            );
+        }
+    }
+}
+
+#[test]
+fn empty_shards_survive_checkpoint_and_resume() {
+    // Layers narrower than the world: at world=4 the (2, 3) and (1, 3)
+    // params leave rank 0 with ZERO columns. Train, checkpoint, resume
+    // narrower and wider — trajectories must still match the
+    // single-process reference bitwise.
+    let shapes: &[(usize, usize)] = &[(2, 3), (1, 3), (3, 2), (4, 8)];
+    let spec = adamw_spec();
+    let mut reference = build("single", 1, shapes, &spec, SEED);
+    drive(reference.as_mut(), shapes, 0, 8);
+
+    let mut src = build("fsdp", 4, shapes, &spec, SEED);
+    drive(src.as_mut(), shapes, 0, 4);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+    for (mode, world) in [("fsdp", 2), ("fsdp", 4), ("single", 1)] {
+        let mut target = build(mode, world, shapes, &spec, 999);
+        target.init_params(&snapshot);
+        target.import_state(&blob).unwrap();
+        drive(target.as_mut(), shapes, 4, 8);
+        assert_params_eq(
+            target.params(),
+            reference.params(),
+            &format!("empty-shard {mode}({world})"),
+        );
+    }
+}
+
+#[test]
+fn truncated_canonical_state_fails_loudly() {
+    // Chopping the canonical blob anywhere — mid-header, mid-frame, off
+    // by one — must produce an error, never a silent partial import.
+    let spec = galore_spec();
+    let mut src = build("fsdp", 2, SHAPES, &spec, SEED);
+    drive(src.as_mut(), SHAPES, 0, 4);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+    for cut in [8usize, 9, 20, blob.len() / 2, blob.len() - 1] {
+        let mut target = build("fsdp", 2, SHAPES, &spec, 999);
+        target.init_params(&snapshot);
+        assert!(
+            target.import_state(&blob[..cut]).is_err(),
+            "truncation at {cut}/{} bytes imported silently",
+            blob.len()
+        );
+    }
+    // Wrong-optimizer state is rejected by name, not misparsed.
+    let mut adamw_engine = build("fsdp", 2, SHAPES, &adamw_spec(), 999);
+    adamw_engine.init_params(&snapshot);
+    let err = adamw_engine.import_state(&blob).unwrap_err();
+    assert!(
+        err.contains("galore") && err.contains("adamw"),
+        "unhelpful optimizer-mismatch error: {err}"
+    );
+}
+
+#[test]
+fn legacy_v2_state_is_world_locked_with_actionable_error() {
+    // v2 checkpoints carried raw FSDP per-rank frames. Same world still
+    // resumes bitwise; any other world must fail loudly with a migration
+    // hint — NEVER silently reset moments.
+    let spec = galore_spec();
+    let metas = fixtures::metas_for(SHAPES);
+    let mut cluster = FsdpCluster::new(2, metas, spec.clone(), SEED);
+    cluster.init_params(&init(SHAPES));
+    for t in 0..4u64 {
+        cluster.step(t, vec![grads(SHAPES, t); 2], LR);
+    }
+    let legacy = cluster.export_optimizers();
+    let snapshot = cluster.gather_params();
+    assert!(
+        !CanonicalOptState::sniff(&legacy),
+        "legacy framed blob must not carry the canonical header"
+    );
+
+    // Same world: the legacy path still restores every rank.
+    let mut same = build("fsdp", 2, SHAPES, &spec, 999);
+    same.init_params(&snapshot);
+    same.import_state(&legacy).unwrap();
+    let mut reference = build("single", 1, SHAPES, &spec, SEED);
+    drive(reference.as_mut(), SHAPES, 0, 8);
+    drive(same.as_mut(), SHAPES, 4, 8);
+    assert_params_eq(same.params(), reference.params(), "legacy same-world resume");
+
+    // Different world: loud, actionable failure.
+    let mut other = build("fsdp", 4, SHAPES, &spec, 999);
+    other.init_params(&snapshot);
+    let err = other.import_state(&legacy).unwrap_err();
+    assert!(
+        err.contains("world=2") && err.contains("--world 2"),
+        "unhelpful legacy world-mismatch error: {err}"
+    );
+}
+
+#[test]
+fn v2_checkpoint_migrates_to_v3_and_unlocks_elastic_resume() {
+    // Load a legacy (v2) checkpoint at its original world, re-save — the
+    // new file is v3 canonical and resumes at any world.
+    let dir = std::env::temp_dir().join(format!("galore2_resharding_{}", std::process::id()));
+    let v2_path = dir.join("legacy_v2.ckpt");
+    let v3_path = dir.join("migrated_v3.ckpt");
+    let spec = galore_spec();
+    let names: Vec<String> = fixtures::metas_for(SHAPES)
+        .iter()
+        .map(|m| m.name.clone())
+        .collect();
+
+    // Source run writes a v2 checkpoint at step 6 (legacy framed state).
+    let mut cluster = FsdpCluster::new(2, fixtures::metas_for(SHAPES), spec.clone(), SEED);
+    cluster.init_params(&init(SHAPES));
+    for t in 0..6u64 {
+        cluster.step(t, vec![grads(SHAPES, t); 2], LR);
+    }
+    Checkpoint {
+        step: 6,
+        names: names.clone(),
+        params: cluster.gather_params(),
+        opt_state: cluster.export_optimizers(),
+    }
+    .save_with_version(&v2_path, LEGACY_VERSION)
+    .unwrap();
+
+    // Migrate: load v2, resume at the ORIGINAL world, save → v3.
+    let v2 = Checkpoint::load(&v2_path).unwrap();
+    let mut migrator = build("fsdp", 2, SHAPES, &spec, 999);
+    migrator.init_params(&v2.params);
+    migrator.import_state(&v2.opt_state).unwrap();
+    Checkpoint {
+        step: v2.step,
+        names,
+        params: migrator.params().to_vec(),
+        opt_state: migrator.export_state(),
+    }
+    .save(&v3_path)
+    .unwrap();
+
+    // The migrated file is canonical and resumes at a DIFFERENT world,
+    // bitwise on the uninterrupted single-process trajectory.
+    let v3 = Checkpoint::load(&v3_path).unwrap();
+    assert!(
+        CanonicalOptState::sniff(&v3.opt_state),
+        "migrated checkpoint must carry canonical state"
+    );
+    let mut reference = build("single", 1, SHAPES, &spec, SEED);
+    drive(reference.as_mut(), SHAPES, 0, 12);
+    let mut elastic = build("fsdp", 4, SHAPES, &spec, 999);
+    elastic.init_params(&v3.params);
+    elastic.import_state(&v3.opt_state).unwrap();
+    drive(elastic.as_mut(), SHAPES, v3.step, 12);
+    assert_params_eq(
+        elastic.params(),
+        reference.params(),
+        "migrated v3 elastic resume",
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
