@@ -14,11 +14,12 @@
 
 use galore2::bench::Bench;
 use galore2::config::TrainConfig;
-use galore2::dist::Comm;
+use galore2::dist::{Comm, FsdpCluster, TransportKind};
 use galore2::optim::{
     Adam8bit, AdamCfg, AdamW, GaLore, GaLoreCfg, Optimizer, ProjectionKind,
 };
 use galore2::tensor::{matmul_at_b_with_plan, matmul_with_plan, Matrix, MatmulPlan};
+use galore2::testing::fixtures;
 use galore2::train::Trainer;
 use galore2::util::json::Json;
 use galore2::util::rng::Pcg64;
@@ -209,6 +210,33 @@ fn main() -> anyhow::Result<()> {
             })
         });
     }
+
+    println!("\n== 4b. cluster step: threads vs process transport (FSDP world 2) ==");
+    // The process transport self-execs the galore2 binary; benches (like
+    // integration tests) get its path from cargo (thread-safe override,
+    // not set_var).
+    galore2::dist::set_worker_binary(env!("CARGO_BIN_EXE_galore2"));
+    let cluster_shapes: &[(usize, usize)] = &[(256, 384), (384, 256), (64, 64)];
+    for transport in [TransportKind::Threads, TransportKind::Process] {
+        let mut cluster = FsdpCluster::with_transport(
+            2,
+            fixtures::metas_for(cluster_shapes),
+            galore2::dist::OptimizerSpec::AdamW(AdamCfg::default()),
+            7,
+            transport,
+        )
+        .expect("spawning bench cluster");
+        cluster.init_params(&fixtures::randn_set(cluster_shapes, 0.1, 3, 0));
+        let mut t = 0u64;
+        b.run(&format!("clusterstep_fsdp2_{}", transport.name()), || {
+            let grads = fixtures::rank_grads(cluster_shapes, t, 0, 0.05);
+            cluster.step(t, vec![grads; 2], 1e-3);
+            t += 1;
+        });
+    }
+    // The gap between the two rows IS the socket overhead per step
+    // (serialize grads + relayed collectives) — paste per-host figures
+    // into EXPERIMENTS.md §Transport.
 
     println!("\n== 5. full train step (llama-nano, artifact + optimizer) ==");
     if !artifacts.join("manifest_llama-nano.json").exists() {

@@ -1,7 +1,9 @@
 //! Checkpointing: parameters + optimizer state + step, one binary file.
 //!
 //! Format (little-endian):
-//!   magic "GAL2CKPT" | version u32 | step u64 | n_params u64 |
+//!   magic "GAL2CKPT" | version u32 | step u64 |
+//!   v4+: has_tokens u8, tokens_seen u64 |
+//!   n_params u64 |
 //!   per param: name_len u64, name bytes, rows u64, cols u64, f32 data |
 //!   opt_blob_len u64 | optimizer state blob
 //!
@@ -14,7 +16,13 @@
 //! same world) still load; engines detect them by the missing canonical
 //! header and fail loudly on any world mismatch instead of silently
 //! resetting moments. Loading a v2 checkpoint at its original
-//! mode/world and re-saving migrates it to v3.
+//! mode/world and re-saving migrates it to the current version.
+//!
+//! v4 adds the exact `tokens_seen` counter: an ELASTIC resume (different
+//! world) previously had to reconstruct the token axis from the NEW
+//! world's tokens-per-step, rescaling the metrics axis. v2/v3 files load
+//! with `tokens_seen: None` and keep that documented approximation
+//! (`Trainer::resume`).
 //!
 //! Resume fidelity is tested end to end: a resumed run reproduces the
 //! exact next-step losses of the uninterrupted run.
@@ -27,15 +35,22 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"GAL2CKPT";
-/// v3: canonical (re-shardable) optimizer state. v2: mode-specific blobs —
-/// readable, but FSDP state is world-locked. v1 blobs would misparse, so
-/// the version gate rejects them.
-pub const VERSION: u32 = 3;
+/// v4: exact `tokens_seen` counter. v3: canonical (re-shardable)
+/// optimizer state. v2: mode-specific blobs — readable, but FSDP state is
+/// world-locked. v1 blobs would misparse, so the version gate rejects
+/// them.
+pub const VERSION: u32 = 4;
 /// Oldest version [`Checkpoint::load`] still accepts.
 pub const LEGACY_VERSION: u32 = 2;
+/// First version carrying the `tokens_seen` field.
+const TOKENS_SEEN_VERSION: u32 = 4;
 
 pub struct Checkpoint {
     pub step: u64,
+    /// Exact tokens consumed when this checkpoint was written (v4 field).
+    /// `None` for pre-v4 files and non-trainer writers — resume then falls
+    /// back to reconstructing from the resuming world's tokens-per-step.
+    pub tokens_seen: Option<u64>,
     pub names: Vec<String>,
     pub params: Vec<Matrix>,
     pub opt_state: Vec<u8>,
@@ -57,6 +72,10 @@ impl Checkpoint {
         f.write_all(MAGIC)?;
         f.write_all(&version.to_le_bytes())?;
         f.write_all(&self.step.to_le_bytes())?;
+        if version >= TOKENS_SEEN_VERSION {
+            f.write_all(&[self.tokens_seen.is_some() as u8])?;
+            f.write_all(&self.tokens_seen.unwrap_or(0).to_le_bytes())?;
+        }
         f.write_all(&(self.params.len() as u64).to_le_bytes())?;
         for (name, p) in self.names.iter().zip(&self.params) {
             f.write_all(&(name.len() as u64).to_le_bytes())?;
@@ -83,13 +102,21 @@ impl Checkpoint {
             bail!("not a galore2 checkpoint");
         }
         let version = read_u32(&mut f)?;
-        if version != VERSION && version != LEGACY_VERSION {
+        if !(LEGACY_VERSION..=VERSION).contains(&version) {
             bail!(
-                "unsupported checkpoint version {version} (this build reads v{LEGACY_VERSION} \
-                 legacy and v{VERSION} canonical checkpoints)"
+                "unsupported checkpoint version {version} (this build reads \
+                 v{LEGACY_VERSION}–v{VERSION} checkpoints)"
             );
         }
         let step = read_u64(&mut f)?;
+        let tokens_seen = if version >= TOKENS_SEEN_VERSION {
+            let mut has = [0u8; 1];
+            f.read_exact(&mut has)?;
+            let tokens = read_u64(&mut f)?;
+            (has[0] != 0).then_some(tokens)
+        } else {
+            None
+        };
         let n = read_u64(&mut f)? as usize;
         let mut names = Vec::with_capacity(n);
         let mut params = Vec::with_capacity(n);
@@ -114,6 +141,7 @@ impl Checkpoint {
             .context("truncated checkpoint: optimizer state shorter than its header claims")?;
         Ok(Checkpoint {
             step,
+            tokens_seen,
             names,
             params,
             opt_state,
@@ -147,6 +175,7 @@ mod tests {
         let mut rng = Pcg64::new(1, 0);
         let ckpt = Checkpoint {
             step: 42,
+            tokens_seen: Some(987_654_321),
             names: vec!["a".into(), "b.weight".into()],
             params: vec![
                 Matrix::randn(3, 5, 1.0, &mut rng),
@@ -158,6 +187,7 @@ mod tests {
         ckpt.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back.step, 42);
+        assert_eq!(back.tokens_seen, Some(987_654_321));
         assert_eq!(back.names, ckpt.names);
         assert_eq!(back.params[0].data, ckpt.params[0].data);
         assert_eq!(back.params[1].shape(), (7, 2));
@@ -174,18 +204,29 @@ mod tests {
     }
 
     #[test]
-    fn accepts_legacy_v2_rejects_unknown_versions() {
+    fn accepts_legacy_v2_v3_rejects_unknown_versions() {
         let ckpt = Checkpoint {
             step: 3,
+            tokens_seen: Some(999),
             names: vec!["w".into()],
             params: vec![Matrix::zeros(2, 2)],
             opt_state: vec![7; 12],
         };
         let path = tmp("versions");
-        ckpt.save_with_version(&path, LEGACY_VERSION).unwrap();
-        let back = Checkpoint::load(&path).unwrap();
-        assert_eq!(back.opt_state, vec![7; 12], "v2 payload must pass through");
-        for bad in [1u32, 4, 99] {
+        for legacy in [2u32, 3] {
+            ckpt.save_with_version(&path, legacy).unwrap();
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(
+                back.opt_state,
+                vec![7; 12],
+                "v{legacy} payload must pass through"
+            );
+            assert_eq!(
+                back.tokens_seen, None,
+                "pre-v4 files carry no token counter"
+            );
+        }
+        for bad in [1u32, 5, 99] {
             ckpt.save_with_version(&path, bad).unwrap();
             let err = Checkpoint::load(&path).unwrap_err().to_string();
             assert!(
@@ -197,9 +238,27 @@ mod tests {
     }
 
     #[test]
+    fn absent_token_counter_survives_v4_roundtrip() {
+        // Non-trainer writers (migration tools, tests) may not know the
+        // counter; None must NOT come back as Some(0).
+        let ckpt = Checkpoint {
+            step: 1,
+            tokens_seen: None,
+            names: vec!["w".into()],
+            params: vec![Matrix::zeros(1, 2)],
+            opt_state: Vec::new(),
+        };
+        let path = tmp("no_tokens");
+        ckpt.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().tokens_seen, None);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn truncated_file_fails_loudly() {
         let ckpt = Checkpoint {
             step: 3,
+            tokens_seen: None,
             names: vec!["w".into()],
             params: vec![Matrix::zeros(4, 4)],
             opt_state: vec![9; 100],
@@ -230,6 +289,7 @@ mod tests {
         }
         let ckpt = Checkpoint {
             step: 7,
+            tokens_seen: None,
             names: vec!["w".into()],
             params: vec![w.clone()],
             opt_state: opt.export_state(),

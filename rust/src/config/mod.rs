@@ -5,6 +5,7 @@
 //! optimizer from. CLI and TOML agree on accepted values: both bail on an
 //! unknown `parallel.mode` / `--parallel` or `engine` / `--engine`.
 
+use crate::dist::TransportKind;
 use crate::optim::{AdamCfg, GaLoreCfg, MomentHandling, OptimizerSpec, ProjectionKind};
 use crate::util::cli::Args;
 use crate::util::toml::TomlDoc;
@@ -89,6 +90,11 @@ pub struct TrainConfig {
     /// Worker threads for the GEMM/SVD hot path; 0 = auto
     /// (`GALORE2_THREADS` or the hardware parallelism).
     pub threads: usize,
+    /// Fabric connecting distributed ranks (`[dist] transport` /
+    /// `--transport`): in-process worker threads (default) or self-exec'd
+    /// worker OS processes over Unix-domain sockets. Trajectories are
+    /// bitwise identical across transports (tests/transport.rs).
+    pub transport: TransportKind,
     pub engine: Engine,
 
     pub seed: u64,
@@ -125,6 +131,7 @@ impl Default for TrainConfig {
             parallel: ParallelMode::Single,
             world: 1,
             threads: 0,
+            transport: TransportKind::Threads,
             engine: Engine::Native,
             seed: 42,
             corpus_tokens: 200_000,
@@ -185,6 +192,8 @@ impl TrainConfig {
             world: doc.i64_or("parallel", "world", d.world as i64) as usize,
             // Clamp: a negative value would wrap to a huge usize thread count.
             threads: doc.i64_or("parallel", "threads", d.threads as i64).max(0) as usize,
+            transport: TransportKind::parse(&doc.str_or("dist", "transport", "threads"))
+                .map_err(|e| anyhow::anyhow!(e))?,
             engine: Engine::parse(&doc.str_or("train", "engine", "native"))?,
             seed: doc.i64_or("train", "seed", d.seed as i64) as u64,
             corpus_tokens: doc.i64_or("data", "corpus_tokens", d.corpus_tokens as i64)
@@ -229,6 +238,9 @@ impl TrainConfig {
         if let Some(mode) = args.get("parallel") {
             self.parallel = ParallelMode::parse(mode)?;
         }
+        if let Some(transport) = args.get("transport") {
+            self.transport = TransportKind::parse(transport).map_err(|e| anyhow::anyhow!(e))?;
+        }
         if let Some(engine) = args.get("engine") {
             self.engine = Engine::parse(engine)?;
         }
@@ -237,6 +249,20 @@ impl TrainConfig {
         self.eval_batches = args.usize_or("eval-batches", self.eval_batches);
         self.corpus_tokens = args.usize_or("corpus-tokens", self.corpus_tokens);
         self.log_every = args.u64_or("log-every", self.log_every);
+        Ok(())
+    }
+
+    /// Cross-field validation (individual fields are validated where they
+    /// parse). Call sites: `main::load_cfg` (fail before any artifact or
+    /// data work) and `Trainer::new` (guards non-CLI construction paths).
+    pub fn validate(&self) -> Result<()> {
+        if self.parallel == ParallelMode::Single && self.transport != TransportKind::Threads {
+            bail!(
+                "transport {:?} needs distributed workers; use --parallel fsdp|ddp \
+                 (single-process runs have no worker fabric to select)",
+                self.transport.name()
+            );
+        }
         Ok(())
     }
 
@@ -345,6 +371,9 @@ similarity_threshold = 0.7
 mode = "fsdp"
 world = 4
 threads = 2
+
+[dist]
+transport = "process"
 "#;
 
     fn write_sample(name: &str, body: &str) -> std::path::PathBuf {
@@ -368,7 +397,46 @@ threads = 2
         assert_eq!(c.parallel, ParallelMode::Fsdp);
         assert_eq!(c.world, 4);
         assert_eq!(c.threads, 2);
+        assert_eq!(c.transport, TransportKind::Process);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn transport_defaults_to_threads_and_parses_both_ways() {
+        let c = TrainConfig::default();
+        assert_eq!(c.transport, TransportKind::Threads);
+        let mut c = TrainConfig::default();
+        let args = Args::parse(
+            "train --parallel fsdp --transport process"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.transport, TransportKind::Process);
+        // CLI/TOML parity: both reject unknown transports.
+        let mut c = TrainConfig::default();
+        let bad =
+            Args::parse("train --transport tcp".split_whitespace().map(String::from)).unwrap();
+        assert!(c.apply_cli(&bad).is_err());
+        let toml_bad = write_sample("badtransport", "[dist]\ntransport = \"tcp\"\n");
+        assert!(TrainConfig::from_toml(toml_bad.to_str().unwrap()).is_err());
+        std::fs::remove_file(toml_bad).ok();
+    }
+
+    #[test]
+    fn validate_rejects_process_transport_without_distributed_workers() {
+        let mut c = TrainConfig {
+            transport: TransportKind::Process,
+            ..TrainConfig::default()
+        };
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("fsdp|ddp"), "unhelpful error: {err}");
+        c.parallel = ParallelMode::Fsdp;
+        assert!(c.validate().is_ok());
+        c.parallel = ParallelMode::Ddp;
+        assert!(c.validate().is_ok());
+        assert!(TrainConfig::default().validate().is_ok());
     }
 
     #[test]

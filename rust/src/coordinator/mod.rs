@@ -65,12 +65,13 @@ pub fn train_with(
     }
     let exec = format!("{:?}", trainer.cfg.engine).to_lowercase();
     println!(
-        "run={} preset={} optimizer={} engine={} parallel={} world={} steps={}",
+        "run={} preset={} optimizer={} engine={} parallel={} transport={} world={} steps={}",
         trainer.cfg.run_name,
         trainer.cfg.preset,
         trainer.engine().optimizer_name(),
         exec,
         trainer.engine().name(),
+        trainer.cfg.transport.name(),
         trainer.engine().world(),
         trainer.cfg.steps
     );

@@ -1,30 +1,69 @@
-//! The generic worker cluster: persistent threads behind one shared
-//! command protocol.
+//! The generic worker cluster: persistent workers behind one shared
+//! command protocol, over a selectable transport.
 //!
 //! Both distributed modes — FSDP (sharded state, `dist/fsdp.rs`) and DDP
-//! (replicated state, `dist/ddp.rs`) — are worlds of persistent OS threads
+//! (replicated state, `dist/ddp.rs`) — are worlds of persistent workers
 //! driven in lockstep by the coordinator. Everything mode-*independent*
 //! lives here, written once:
 //!
-//! * the [`Cmd`]/[`Reply`] channel protocol and the serve loop,
-//! * the spawn path (per-rank [`Comm`] handles, thread naming, the
-//!   [`crate::parallel::set_thread_share`] core-budget split),
-//! * coordinator-side shape validation (a worker panicking mid-collective
-//!   would strand its peers inside a barrier, so bad inputs are rejected
-//!   *before* any `Cmd` is sent),
-//! * the panic-aware, barrier-safe [`Drop`].
+//! * the [`Cmd`]/[`Reply`] protocol and the single [`handle_cmd`] dispatch
+//!   both serve loops (thread channels, worker-process sockets) call into,
+//! * the transport-agnostic spawn path ([`TransportKind::Threads`]: worker
+//!   threads with per-rank [`Comm`] handles and the
+//!   [`crate::parallel::set_thread_share`] core-budget split;
+//!   [`TransportKind::Process`]: self-exec'd worker OS processes over
+//!   Unix-domain sockets — see `dist/process.rs`),
+//! * coordinator-side shape validation (a worker dying mid-collective
+//!   would strand its peers inside the rendezvous, so bad inputs are
+//!   rejected *before* any `Cmd` is sent),
+//! * the panic/exit-aware [`Drop`] for both worker kinds.
 //!
 //! A mode is one [`Worker`] implementation: what a rank stores (shards vs
 //! a replica), how a step consumes gradients, and what its state blob
 //! contains. `Cluster<FsdpWorker>` and `Cluster<DdpWorker>` are the two
-//! instantiations; protocol fixes land here and cannot drift between them.
+//! instantiations; protocol fixes land here and cannot drift between
+//! modes — or between transports.
 
 use super::comm::Comm;
-use super::OptimizerSpec;
+use super::{process, wire, OptimizerSpec};
 use crate::tensor::Matrix;
 use std::marker::PhantomData;
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::process::Child;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
+
+/// Which fabric connects the ranks of a cluster (`[dist] transport` /
+/// `--transport`). Both transports produce **bitwise identical**
+/// trajectories — the collective math is transport-independent
+/// (`dist/comm.rs`); pinned by `tests/transport.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process worker threads over shared-memory slots (default).
+    Threads,
+    /// Worker OS processes (self-exec `galore2 worker …`) over
+    /// length-framed Unix-domain sockets.
+    Process,
+}
+
+impl TransportKind {
+    /// Shared by TOML and CLI parsing so the two can never drift.
+    pub fn parse(s: &str) -> Result<TransportKind, String> {
+        match s {
+            "threads" => Ok(TransportKind::Threads),
+            "process" => Ok(TransportKind::Process),
+            other => Err(format!("unknown transport {other:?} (threads|process)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Threads => "threads",
+            TransportKind::Process => "process",
+        }
+    }
+}
 
 /// Shape metadata for one trainable parameter (from the manifest).
 #[derive(Clone, Debug)]
@@ -124,14 +163,16 @@ pub(crate) fn assemble(meta: &ParamMeta, shards: &[&Matrix]) -> Matrix {
 /// generic [`Cluster`] owns everything else (protocol, spawn, shutdown).
 ///
 /// Not `Send`-bounded on purpose: workers are CONSTRUCTED inside their
-/// own thread from the `Send`-able spec (built optimizers hold
+/// own thread/process from the `Send`-able spec (built optimizers hold
 /// deliberately non-`Send` state) and never cross threads afterwards.
 pub trait Worker: 'static {
-    /// Mode tag ("fsdp" | "ddp") — thread names and diagnostics.
+    /// Mode tag ("fsdp" | "ddp") — thread names, the `galore2 worker
+    /// --mode` flag, and diagnostics.
     const MODE: &'static str;
 
-    /// Construct this rank's state. Runs *inside* the worker thread; the
-    /// optimizer is built locally from the `Send`-able spec.
+    /// Construct this rank's state. Runs *inside* the worker
+    /// thread/process; the optimizer is built locally from the `Send`-able
+    /// spec.
     fn new(
         rank: usize,
         world: usize,
@@ -161,7 +202,7 @@ pub trait Worker: 'static {
     fn report(&self) -> MemoryReport;
 }
 
-enum Cmd {
+pub(crate) enum Cmd {
     /// Install the initial full parameters.
     Init(Vec<Matrix>),
     /// One training step: this worker's microbatch gradients (full shapes).
@@ -173,7 +214,7 @@ enum Cmd {
     Shutdown,
 }
 
-enum Reply {
+pub(crate) enum Reply {
     StepDone,
     Params(Vec<Matrix>),
     OptState(Vec<u8>),
@@ -181,46 +222,162 @@ enum Reply {
     Report(MemoryReport),
 }
 
+/// What serving one command produced.
+pub(crate) enum Served {
+    Reply(Reply),
+    NoReply,
+    Shutdown,
+}
+
+/// THE protocol dispatch: both serve loops — thread workers reading a
+/// channel, process workers reading socket frames — route every command
+/// through here, so transports cannot drift in what a command does.
+pub(crate) fn handle_cmd<W: Worker>(w: &mut W, cmd: Cmd) -> Served {
+    match cmd {
+        Cmd::Init(full) => {
+            w.install(full);
+            Served::NoReply
+        }
+        Cmd::Step { t, lr, grads } => {
+            w.step(t, lr, grads);
+            Served::Reply(Reply::StepDone)
+        }
+        Cmd::Params => Served::Reply(Reply::Params(w.params())),
+        Cmd::ExportOpt => Served::Reply(Reply::OptState(w.export_state())),
+        Cmd::ImportOpt(bytes) => Served::Reply(Reply::ImportDone(w.import_state(&bytes))),
+        Cmd::Report => Served::Reply(Reply::Report(w.report())),
+        Cmd::Shutdown => Served::Shutdown,
+    }
+}
+
 fn serve<W: Worker>(w: &mut W, rx: Receiver<Cmd>, tx: Sender<Reply>) {
     loop {
-        match rx.recv() {
-            Ok(Cmd::Init(full)) => w.install(full),
-            Ok(Cmd::Step { t, lr, grads }) => {
-                w.step(t, lr, grads);
-                let _ = tx.send(Reply::StepDone);
+        let cmd = match rx.recv() {
+            Ok(cmd) => cmd,
+            Err(_) => break,
+        };
+        match handle_cmd(w, cmd) {
+            Served::Reply(reply) => {
+                let _ = tx.send(reply);
             }
-            Ok(Cmd::Params) => {
-                let _ = tx.send(Reply::Params(w.params()));
-            }
-            Ok(Cmd::ExportOpt) => {
-                let _ = tx.send(Reply::OptState(w.export_state()));
-            }
-            Ok(Cmd::ImportOpt(bytes)) => {
-                let r = w.import_state(&bytes);
-                let _ = tx.send(Reply::ImportDone(r));
-            }
-            Ok(Cmd::Report) => {
-                let _ = tx.send(Reply::Report(w.report()));
-            }
-            Ok(Cmd::Shutdown) | Err(_) => break,
+            Served::NoReply => {}
+            Served::Shutdown => break,
         }
     }
 }
 
-/// A world of persistent worker threads, one per rank, driven in lockstep
-/// through channels. `W` decides what each rank stores (see [`Worker`]).
+/// The coordinator's handle onto one rank: a channel pair into a worker
+/// thread, or a framed control socket into a worker process. `send`/`recv`
+/// panic with an attributable message when the worker is gone — the
+/// protocol guarantees a worker only disappears on a real failure, and a
+/// prompt panic beats a silent hang (pinned by the crash cases in
+/// `tests/transport.rs`).
+enum Link {
+    Thread {
+        tx: Sender<Cmd>,
+        rx: Receiver<Reply>,
+        handle: Option<JoinHandle<()>>,
+    },
+    Process {
+        control: UnixStream,
+        child: Child,
+        rank: usize,
+        mode: &'static str,
+    },
+}
+
+impl Link {
+    fn send(&self, cmd: Cmd) {
+        match self {
+            Link::Thread { tx, .. } => tx.send(cmd).expect("worker alive"),
+            Link::Process {
+                control,
+                rank,
+                mode,
+                ..
+            } => {
+                let frame = wire::encode_cmd(&cmd);
+                wire::write_frame(&mut &*control, &frame).unwrap_or_else(|e| {
+                    panic!(
+                        "{mode} worker process rank {rank} is gone ({e}) — \
+                         check its stderr for the original failure"
+                    )
+                });
+            }
+        }
+    }
+
+    fn recv(&self) -> Reply {
+        match self {
+            Link::Thread { rx, .. } => rx.recv().expect("worker alive"),
+            Link::Process {
+                control,
+                rank,
+                mode,
+                ..
+            } => {
+                let frame = wire::read_frame(&mut &*control).unwrap_or_else(|e| {
+                    panic!(
+                        "{mode} worker process rank {rank} died mid-command ({e}) — \
+                         check its stderr for the original failure"
+                    )
+                });
+                wire::decode_reply(&frame).unwrap_or_else(|e| {
+                    panic!("{mode} worker process rank {rank} sent a malformed reply: {e}")
+                })
+            }
+        }
+    }
+
+    /// Best-effort shutdown notice (Drop path — the worker may be gone).
+    fn send_shutdown_quietly(&self) {
+        match self {
+            Link::Thread { tx, .. } => {
+                let _ = tx.send(Cmd::Shutdown);
+            }
+            Link::Process { control, .. } => {
+                let _ = wire::write_frame(&mut &*control, &wire::encode_cmd(&Cmd::Shutdown));
+            }
+        }
+    }
+}
+
+/// A world of persistent workers, one per rank, driven in lockstep. `W`
+/// decides what each rank stores (see [`Worker`]); [`TransportKind`]
+/// decides whether ranks are threads or OS processes.
 pub struct Cluster<W: Worker> {
     world: usize,
     metas: Vec<ParamMeta>,
-    cmd_tx: Vec<Sender<Cmd>>,
-    reply_rx: Vec<Receiver<Reply>>,
-    handles: Vec<JoinHandle<()>>,
+    links: Vec<Link>,
+    transport: TransportKind,
+    /// Process transport only: the collective relay thread and the
+    /// rendezvous socket path (for Drop-time cleanup).
+    relay: Option<JoinHandle<()>>,
+    socket_path: Option<PathBuf>,
     spec_name: &'static str,
     _mode: PhantomData<fn() -> W>,
 }
 
 impl<W: Worker> Cluster<W> {
+    /// Spawn an in-process (threaded) cluster — the default transport.
+    /// Infallible like thread spawning itself; the process transport's
+    /// fallible spawn path is [`Cluster::with_transport`].
     pub fn new(world: usize, metas: Vec<ParamMeta>, spec: OptimizerSpec, seed: u64) -> Cluster<W> {
+        Self::with_transport(world, metas, spec, seed, TransportKind::Threads)
+            .unwrap_or_else(|e| panic!("spawning {} thread cluster: {e}", W::MODE))
+    }
+
+    /// Spawn a cluster over the given transport. The process transport can
+    /// fail to come up (missing worker binary, a worker dying during the
+    /// handshake) — those are errors, not panics, so the coordinator can
+    /// report them.
+    pub fn with_transport(
+        world: usize,
+        metas: Vec<ParamMeta>,
+        spec: OptimizerSpec,
+        seed: u64,
+        transport: TransportKind,
+    ) -> Result<Cluster<W>, String> {
         assert!(world >= 1, "world size must be >= 1");
         assert!(
             spec.distributed_ok(),
@@ -228,43 +385,43 @@ impl<W: Worker> Cluster<W> {
             spec.name()
         );
         let spec_name = spec.name();
-        let comms = Comm::create_world(world);
-        let mut cmd_tx = Vec::with_capacity(world);
-        let mut reply_rx = Vec::with_capacity(world);
-        let mut handles = Vec::with_capacity(world);
-        for (rank, comm) in comms.into_iter().enumerate() {
-            let (ctx, crx) = channel::<Cmd>();
-            let (rtx, rrx) = channel::<Reply>();
-            let metas = metas.clone();
-            let spec = spec.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("{}-worker-{rank}", W::MODE))
-                .spawn(move || {
-                    // This thread is one of `world` concurrent compute
-                    // workers: nested GEMM/SVD kernels split the core
-                    // budget instead of each resolving the full machine.
-                    crate::parallel::set_thread_share(world);
-                    let mut w = W::new(rank, world, comm, metas, spec, seed);
-                    serve(&mut w, crx, rtx);
-                })
-                .unwrap_or_else(|e| panic!("spawning {} worker thread: {e}", W::MODE));
-            cmd_tx.push(ctx);
-            reply_rx.push(rrx);
-            handles.push(handle);
-        }
-        Cluster {
+        let (links, relay, socket_path) = match transport {
+            TransportKind::Threads => (spawn_threads::<W>(world, &metas, &spec, seed), None, None),
+            TransportKind::Process => {
+                let spawned = process::spawn_world(W::MODE, world, &metas, &spec, seed)?;
+                let links = spawned
+                    .controls
+                    .into_iter()
+                    .zip(spawned.children)
+                    .enumerate()
+                    .map(|(rank, (control, child))| Link::Process {
+                        control,
+                        child,
+                        rank,
+                        mode: W::MODE,
+                    })
+                    .collect();
+                (links, Some(spawned.relay), Some(spawned.socket_path))
+            }
+        };
+        Ok(Cluster {
             world,
             metas,
-            cmd_tx,
-            reply_rx,
-            handles,
+            links,
+            transport,
+            relay,
+            socket_path,
             spec_name,
             _mode: PhantomData,
-        }
+        })
     }
 
     pub fn world(&self) -> usize {
         self.world
+    }
+
+    pub fn transport(&self) -> TransportKind {
+        self.transport
     }
 
     pub fn optimizer_name(&self) -> &'static str {
@@ -276,9 +433,16 @@ impl<W: Worker> Cluster<W> {
         &self.metas
     }
 
-    /// Distribute initial full parameters to every worker (channel ordering
-    /// serializes this before any later step). Shapes are validated HERE —
-    /// a worker panicking later would strand its peers in a collective.
+    /// Rendezvous socket path (process transport; `None` for threads).
+    /// Exposed so the transport suite can assert Drop-time cleanup.
+    pub fn socket_path(&self) -> Option<&std::path::Path> {
+        self.socket_path.as_deref()
+    }
+
+    /// Distribute initial full parameters to every worker (protocol
+    /// ordering serializes this before any later step). Shapes are
+    /// validated HERE — a worker dying later would strand its peers in a
+    /// collective.
     pub fn init_params(&self, full: &[Matrix]) {
         assert_eq!(full.len(), self.metas.len(), "param count != meta count");
         for (p, meta) in full.iter().zip(&self.metas) {
@@ -289,8 +453,8 @@ impl<W: Worker> Cluster<W> {
                 meta.name
             );
         }
-        for tx in &self.cmd_tx {
-            tx.send(Cmd::Init(full.to_vec())).expect("worker alive");
+        for link in &self.links {
+            link.send(Cmd::Init(full.to_vec()));
         }
     }
 
@@ -299,8 +463,8 @@ impl<W: Worker> Cluster<W> {
     /// ranks finish.
     pub fn step(&mut self, t: u64, per_rank: Vec<Vec<Matrix>>, lr: f32) {
         assert_eq!(per_rank.len(), self.world, "need one gradient set per rank");
-        // Validate shapes HERE, not in the workers: a worker panicking
-        // between barrier waves would strand its peers in the collective.
+        // Validate shapes HERE, not in the workers: a worker dying between
+        // rendezvous waves would strand its peers in the collective.
         for (rank, grads) in per_rank.iter().enumerate() {
             assert_eq!(grads.len(), self.metas.len(), "rank {rank}: grad count");
             for (g, meta) in grads.iter().zip(&self.metas) {
@@ -312,11 +476,11 @@ impl<W: Worker> Cluster<W> {
                 );
             }
         }
-        for (tx, grads) in self.cmd_tx.iter().zip(per_rank) {
-            tx.send(Cmd::Step { t, lr, grads }).expect("worker alive");
+        for (link, grads) in self.links.iter().zip(per_rank) {
+            link.send(Cmd::Step { t, lr, grads });
         }
-        for rx in &self.reply_rx {
-            match rx.recv().expect("worker alive") {
+        for link in &self.links {
+            match link.recv() {
                 Reply::StepDone => {}
                 _ => unreachable!("protocol error: expected StepDone"),
             }
@@ -326,12 +490,12 @@ impl<W: Worker> Cluster<W> {
     /// Every rank's parameter view, in rank order (shards under FSDP, full
     /// replicas under DDP).
     pub fn params_per_rank(&self) -> Vec<Vec<Matrix>> {
-        for tx in &self.cmd_tx {
-            tx.send(Cmd::Params).expect("worker alive");
+        for link in &self.links {
+            link.send(Cmd::Params);
         }
-        self.reply_rx
+        self.links
             .iter()
-            .map(|rx| match rx.recv().expect("worker alive") {
+            .map(|link| match link.recv() {
                 Reply::Params(p) => p,
                 _ => unreachable!("protocol error: expected Params"),
             })
@@ -340,8 +504,8 @@ impl<W: Worker> Cluster<W> {
 
     /// One rank's parameter view.
     pub fn rank_params(&self, rank: usize) -> Vec<Matrix> {
-        self.cmd_tx[rank].send(Cmd::Params).expect("worker alive");
-        match self.reply_rx[rank].recv().expect("worker alive") {
+        self.links[rank].send(Cmd::Params);
+        match self.links[rank].recv() {
             Reply::Params(p) => p,
             _ => unreachable!("protocol error: expected Params"),
         }
@@ -351,12 +515,12 @@ impl<W: Worker> Cluster<W> {
     /// format is worker-private; see `checkpoint::canonical` for the
     /// world-agnostic form checkpoints store.
     pub fn export_frames(&self) -> Vec<Vec<u8>> {
-        for tx in &self.cmd_tx {
-            tx.send(Cmd::ExportOpt).expect("worker alive");
+        for link in &self.links {
+            link.send(Cmd::ExportOpt);
         }
-        self.reply_rx
+        self.links
             .iter()
-            .map(|rx| match rx.recv().expect("worker alive") {
+            .map(|link| match link.recv() {
                 Reply::OptState(bytes) => bytes,
                 _ => unreachable!("protocol error: expected OptState"),
             })
@@ -365,8 +529,8 @@ impl<W: Worker> Cluster<W> {
 
     /// One rank's raw optimizer-state frame.
     pub fn export_rank_frame(&self, rank: usize) -> Vec<u8> {
-        self.cmd_tx[rank].send(Cmd::ExportOpt).expect("worker alive");
-        match self.reply_rx[rank].recv().expect("worker alive") {
+        self.links[rank].send(Cmd::ExportOpt);
+        match self.links[rank].recv() {
             Reply::OptState(bytes) => bytes,
             _ => unreachable!("protocol error: expected OptState"),
         }
@@ -383,12 +547,12 @@ impl<W: Worker> Cluster<W> {
                 self.world
             ));
         }
-        for (tx, frame) in self.cmd_tx.iter().zip(frames) {
-            tx.send(Cmd::ImportOpt(frame)).expect("worker alive");
+        for (link, frame) in self.links.iter().zip(frames) {
+            link.send(Cmd::ImportOpt(frame));
         }
         let mut result = Ok(());
-        for rx in &self.reply_rx {
-            match rx.recv().expect("worker alive") {
+        for link in &self.links {
+            match link.recv() {
                 Reply::ImportDone(r) => {
                     if result.is_ok() {
                         result = r;
@@ -402,12 +566,12 @@ impl<W: Worker> Cluster<W> {
 
     /// Live per-rank byte counters, in rank order.
     pub fn memory_reports(&self) -> Vec<MemoryReport> {
-        for tx in &self.cmd_tx {
-            tx.send(Cmd::Report).expect("worker alive");
+        for link in &self.links {
+            link.send(Cmd::Report);
         }
-        self.reply_rx
+        self.links
             .iter()
-            .map(|rx| match rx.recv().expect("worker alive") {
+            .map(|link| match link.recv() {
                 Reply::Report(r) => r,
                 _ => unreachable!("protocol error: expected Report"),
             })
@@ -415,20 +579,81 @@ impl<W: Worker> Cluster<W> {
     }
 }
 
+fn spawn_threads<W: Worker>(
+    world: usize,
+    metas: &[ParamMeta],
+    spec: &OptimizerSpec,
+    seed: u64,
+) -> Vec<Link> {
+    let comms = Comm::create_world(world);
+    comms
+        .into_iter()
+        .enumerate()
+        .map(|(rank, comm)| {
+            let (ctx, crx) = channel::<Cmd>();
+            let (rtx, rrx) = channel::<Reply>();
+            let metas = metas.to_vec();
+            let spec = spec.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("{}-worker-{rank}", W::MODE))
+                .spawn(move || {
+                    // This thread is one of `world` concurrent compute
+                    // workers: nested GEMM/SVD kernels split the core
+                    // budget instead of each resolving the full machine.
+                    crate::parallel::set_thread_share(world);
+                    let mut w = W::new(rank, world, comm, metas, spec, seed);
+                    serve(&mut w, crx, rtx);
+                })
+                .unwrap_or_else(|e| panic!("spawning {} worker thread: {e}", W::MODE));
+            Link::Thread {
+                tx: ctx,
+                rx: rrx,
+                handle: Some(handle),
+            }
+        })
+        .collect()
+}
+
 impl<W: Worker> Drop for Cluster<W> {
     fn drop(&mut self) {
-        for tx in &self.cmd_tx {
-            let _ = tx.send(Cmd::Shutdown);
+        for link in &self.links {
+            link.send_shutdown_quietly();
         }
-        if std::thread::panicking() {
-            // A dead worker strands its peers inside a Barrier (std
-            // barriers don't poison); joining them here would turn the
-            // panic into a permanent hang. Leak the threads and let the
-            // panic surface as a diagnostic instead.
-            return;
+        let panicking = std::thread::panicking();
+        for link in &mut self.links {
+            match link {
+                Link::Thread { handle, .. } => {
+                    if panicking {
+                        // A dead worker strands its peers inside a Barrier
+                        // (std barriers don't poison); joining them here
+                        // would turn the panic into a permanent hang. Leak
+                        // the threads and let the panic surface as a
+                        // diagnostic instead.
+                        continue;
+                    }
+                    if let Some(h) = handle.take() {
+                        let _ = h.join();
+                    }
+                }
+                Link::Process { child, .. } => {
+                    // Unlike threads, worker PROCESSES can always be
+                    // reclaimed: on a coordinator panic, kill outright
+                    // (their peers unblock when the relay drops the
+                    // sockets), then reap the zombie either way.
+                    if panicking {
+                        let _ = child.kill();
+                    }
+                    let _ = child.wait();
+                }
+            }
         }
-        for h in self.handles.drain(..) {
+        // The relay exits once every worker's comm socket has closed —
+        // which the shutdowns (or kills) above guarantee.
+        if let Some(h) = self.relay.take() {
             let _ = h.join();
+        }
+        if let Some(path) = self.socket_path.take() {
+            process::cleanup_socket(&path);
         }
     }
 }
@@ -485,5 +710,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn transport_kind_parses_and_rejects() {
+        assert_eq!(
+            TransportKind::parse("threads").unwrap(),
+            TransportKind::Threads
+        );
+        assert_eq!(
+            TransportKind::parse("process").unwrap(),
+            TransportKind::Process
+        );
+        assert_eq!(TransportKind::Threads.name(), "threads");
+        assert_eq!(TransportKind::Process.name(), "process");
+        let err = TransportKind::parse("tcp").unwrap_err();
+        assert!(err.contains("threads|process"), "unhelpful error: {err}");
     }
 }

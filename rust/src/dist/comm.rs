@@ -1,21 +1,56 @@
-//! In-process collectives for the threaded FSDP/DDP runtime.
+//! Collectives for the FSDP/DDP runtime, generic over a [`Transport`].
 //!
-//! One [`Comm`] handle per worker thread, all sharing a slot table + a
-//! reusable barrier. Every collective is two barrier waves:
-//!
-//!   1. each rank deposits its contribution into its own slot,
-//!   2. (barrier) every rank computes its result from the slot table,
-//!   3. (barrier) slots may be overwritten by the next collective.
+//! One [`Comm`] handle per worker (thread or OS process). The collective
+//! *math* lives here and is transport-independent: every collective is one
+//! [`Transport::exchange`] rendezvous in which each rank deposits its
+//! contribution and then computes its result from the full slot table
+//! (every rank's contribution, in rank order).
 //!
 //! Reductions combine rank contributions in a **fixed binary-tree order**
 //! ((r0+r1)+(r2+r3))+…, so the result is bitwise identical on every rank
-//! and independent of thread scheduling — the determinism contract stated
-//! in `util/rng.rs`. Per-rank traffic counters model ring-collective costs
-//! (all-reduce 2·(w−1)/w·n, reduce-scatter/all-gather (w−1)/w·n) for the
-//! Table 1 byte accounting.
+//! and independent of scheduling — the determinism contract stated in
+//! `util/rng.rs`. Because the tree runs over the same slot table on every
+//! transport, a process-transport run is bitwise identical to a threaded
+//! one by construction (pinned in `tests/transport.rs`).
+//!
+//! Transports:
+//! * [`ThreadTransport`] — in-process shared slots + a reusable barrier
+//!   (two barrier waves per exchange: deposit, read, release).
+//! * `ProcessTransport` (`dist/process.rs`) — length-framed messages over
+//!   Unix-domain sockets, relayed through the coordinator process.
+//!
+//! Per-rank traffic counters model ring-collective costs (all-reduce
+//! 2·(w−1)/w·n, reduce-scatter/all-gather (w−1)/w·n) for the Table 1 byte
+//! accounting; they count the modeled wire cost, not the bytes a
+//! particular transport happens to move.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::cell::{Cell, RefCell};
 use std::sync::{Arc, Barrier, RwLock};
+
+/// A rendezvous fabric connecting the ranks of one world.
+///
+/// `exchange` is the single collective primitive: deposit this rank's
+/// contribution, wait for every peer's, and run `reduce` over the full
+/// slot table (index = rank). All ranks must call the same sequence of
+/// exchanges with compatible payloads — exactly the discipline the
+/// lockstep worker protocol (`dist/cluster.rs`) already enforces.
+pub trait Transport: Send {
+    fn rank(&self) -> usize;
+
+    fn world(&self) -> usize;
+
+    /// Collective rendezvous. `reduce` sees every rank's contribution in
+    /// rank order; its return value becomes this rank's result. The slot
+    /// table may be reused afterwards — `reduce` must copy what it keeps.
+    fn exchange(
+        &mut self,
+        data: Vec<f32>,
+        reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
+    ) -> Vec<f32>;
+
+    /// Pure synchronization point: returns once every rank has entered.
+    fn barrier(&mut self);
+}
 
 struct Shared {
     world: usize,
@@ -24,33 +59,103 @@ struct Shared {
     /// ranks compute their reductions concurrently under read locks.
     slots: RwLock<Vec<Vec<f32>>>,
     barrier: Barrier,
-    /// Elements moved per rank (ring-collective cost model).
-    traffic: Vec<AtomicU64>,
 }
 
-/// A worker's handle onto the collective group. Cheap to move into its
-/// owning thread; all handles of a world share state via `Arc`.
-pub struct Comm {
+/// In-process transport: all handles of a world share a slot table + a
+/// reusable barrier via `Arc`. Each exchange is two barrier waves:
+///
+///   1. each rank deposits its contribution into its own slot,
+///   2. (barrier) every rank computes its result from the slot table,
+///   3. (barrier) slots may be overwritten by the next exchange.
+pub struct ThreadTransport {
     rank: usize,
     shared: Arc<Shared>,
 }
 
-impl Comm {
-    /// Create a world of `world` connected handles, one per rank.
-    pub fn create_world(world: usize) -> Vec<Comm> {
+impl ThreadTransport {
+    /// Create a world of `world` connected transports, one per rank.
+    pub fn create_world(world: usize) -> Vec<ThreadTransport> {
         assert!(world >= 1, "world size must be >= 1");
         let shared = Arc::new(Shared {
             world,
             slots: RwLock::new(vec![Vec::new(); world]),
             barrier: Barrier::new(world),
-            traffic: (0..world).map(|_| AtomicU64::new(0)).collect(),
         });
         (0..world)
-            .map(|rank| Comm {
+            .map(|rank| ThreadTransport {
                 rank,
                 shared: shared.clone(),
             })
             .collect()
+    }
+}
+
+impl Transport for ThreadTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.shared.world
+    }
+
+    fn exchange(
+        &mut self,
+        data: Vec<f32>,
+        reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
+    ) -> Vec<f32> {
+        self.shared.slots.write().unwrap()[self.rank] = data;
+        self.shared.barrier.wait();
+        let result = {
+            let slots = self.shared.slots.read().unwrap();
+            reduce(&slots)
+        };
+        // Second barrier wave: after this, slots may be overwritten.
+        self.shared.barrier.wait();
+        result
+    }
+
+    fn barrier(&mut self) {
+        self.shared.barrier.wait();
+    }
+}
+
+/// A worker's handle onto the collective group. Cheap to move into its
+/// owning thread/process; the collective algorithms (fixed-tree sums,
+/// rank-order concatenation) are identical across transports.
+pub struct Comm {
+    rank: usize,
+    world: usize,
+    /// Interior mutability keeps the collectives `&self` (the worker step
+    /// loop borrows its shards mutably alongside the comm handle); a Comm
+    /// is owned by exactly one worker and never shared by reference.
+    transport: RefCell<Box<dyn Transport>>,
+    /// Elements moved per rank (ring-collective cost model).
+    traffic: Cell<u64>,
+}
+
+impl Comm {
+    /// Create an in-process (threaded) world of `world` connected handles,
+    /// one per rank.
+    pub fn create_world(world: usize) -> Vec<Comm> {
+        ThreadTransport::create_world(world)
+            .into_iter()
+            .map(|t| Comm::from_transport(Box::new(t)))
+            .collect()
+    }
+
+    /// Wrap an already-connected transport endpoint (the process-transport
+    /// worker path).
+    pub fn from_transport(transport: Box<dyn Transport>) -> Comm {
+        let (rank, world) = (transport.rank(), transport.world());
+        assert!(world >= 1, "world size must be >= 1");
+        assert!(rank < world, "rank {rank} outside world {world}");
+        Comm {
+            rank,
+            world,
+            transport: RefCell::new(transport),
+            traffic: Cell::new(0),
+        }
     }
 
     pub fn rank(&self) -> usize {
@@ -58,40 +163,36 @@ impl Comm {
     }
 
     pub fn world(&self) -> usize {
-        self.shared.world
+        self.world
     }
 
     /// Elements this rank has moved through collectives so far.
     pub fn traffic_elems(&self) -> u64 {
-        self.shared.traffic[self.rank].load(Ordering::Relaxed)
+        self.traffic.get()
     }
 
     fn add_traffic(&self, elems: u64) {
-        self.shared.traffic[self.rank].fetch_add(elems, Ordering::Relaxed);
+        self.traffic.set(self.traffic.get() + elems);
     }
 
-    fn deposit(&self, data: Vec<f32>) {
-        self.shared.slots.write().unwrap()[self.rank] = data;
-        self.shared.barrier.wait();
-    }
-
-    /// Second barrier wave: after this, slots may be overwritten.
-    fn release(&self) {
-        self.shared.barrier.wait();
+    fn exchange(
+        &self,
+        data: Vec<f32>,
+        reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
+    ) -> Vec<f32> {
+        self.transport.borrow_mut().exchange(data, reduce)
     }
 
     /// Elementwise sum of every rank's `data` in fixed tree order; all
     /// ranks receive the identical full-length result.
     pub fn all_reduce_sum(&self, data: Vec<f32>) -> Vec<f32> {
         let n = data.len();
-        let w = self.shared.world;
-        self.deposit(data);
-        let result = {
-            let slots = self.shared.slots.read().unwrap();
+        let w = self.world;
+        let mut reduce = |slots: &[Vec<f32>]| {
             debug_assert!(slots.iter().all(|s| s.len() == n), "ragged all_reduce");
-            tree_sum(&slots, 0, n)
+            tree_sum(slots, 0, n)
         };
-        self.release();
+        let result = self.exchange(data, &mut reduce);
         self.add_traffic((2 * (w - 1) * n / w.max(1)) as u64);
         result
     }
@@ -101,16 +202,12 @@ impl Comm {
     /// `[offsets[r], offsets[r+1])` of the reduced vector.
     pub fn reduce_scatter_sum(&self, data: Vec<f32>, offsets: &[usize]) -> Vec<f32> {
         let n = data.len();
-        let w = self.shared.world;
+        let w = self.world;
         assert_eq!(offsets.len(), w + 1, "offsets must have world+1 entries");
         assert_eq!(offsets[w], n, "offsets must cover the full vector");
         let (lo, hi) = (offsets[self.rank], offsets[self.rank + 1]);
-        self.deposit(data);
-        let result = {
-            let slots = self.shared.slots.read().unwrap();
-            tree_sum(&slots, lo, hi)
-        };
-        self.release();
+        let mut reduce = |slots: &[Vec<f32>]| tree_sum(slots, lo, hi);
+        let result = self.exchange(data, &mut reduce);
         self.add_traffic(((w - 1) * n / w.max(1)) as u64);
         result
     }
@@ -119,9 +216,7 @@ impl Comm {
     /// identical concatenation. Shards may have different lengths.
     pub fn all_gather(&self, shard: Vec<f32>) -> Vec<f32> {
         let own = shard.len();
-        self.deposit(shard);
-        let result = {
-            let slots = self.shared.slots.read().unwrap();
+        let mut concat = |slots: &[Vec<f32>]| {
             let total: usize = slots.iter().map(|s| s.len()).sum();
             let mut out = Vec::with_capacity(total);
             for s in slots.iter() {
@@ -129,7 +224,7 @@ impl Comm {
             }
             out
         };
-        self.release();
+        let result = self.exchange(shard, &mut concat);
         self.add_traffic((result.len() - own) as u64);
         result
     }
@@ -137,18 +232,14 @@ impl Comm {
     /// Replicate `root`'s vector to every rank. Exactly the root must pass
     /// `Some(data)`; every rank (including the root) receives a copy.
     pub fn broadcast(&self, root: usize, data: Option<Vec<f32>>) -> Vec<f32> {
-        assert!(root < self.shared.world);
+        assert!(root < self.world);
         assert_eq!(
             data.is_some(),
             self.rank == root,
             "broadcast: exactly the root provides data"
         );
-        self.deposit(data.unwrap_or_default());
-        let result = {
-            let slots = self.shared.slots.read().unwrap();
-            slots[root].clone()
-        };
-        self.release();
+        let mut pick = |slots: &[Vec<f32>]| slots[root].clone();
+        let result = self.exchange(data.unwrap_or_default(), &mut pick);
         if self.rank != root {
             self.add_traffic(result.len() as u64);
         }
@@ -157,7 +248,7 @@ impl Comm {
 
     /// Pure synchronization point (used between training phases).
     pub fn barrier(&self) {
-        self.shared.barrier.wait();
+        self.transport.borrow_mut().barrier();
     }
 }
 
@@ -165,7 +256,8 @@ impl Comm {
 /// pass 1 combines (0,1), (2,3), …; pass 2 combines (0,2), (4,6), …; and
 /// so on. Every caller runs the identical FP operation sequence, so the
 /// reduction is associativity-safe: bitwise reproducible regardless of
-/// which thread finishes first.
+/// which rank computes first — and regardless of the transport that
+/// delivered the slots.
 fn tree_sum(slots: &[Vec<f32>], e0: usize, e1: usize) -> Vec<f32> {
     let mut bufs: Vec<Vec<f32>> = slots.iter().map(|s| s[e0..e1].to_vec()).collect();
     let mut stride = 1;

@@ -23,7 +23,8 @@ use super::comm::Comm;
 use super::{BuildTarget, OptimizerSpec, WorkerOpt};
 use crate::tensor::Matrix;
 
-/// A world of persistent worker threads with replicated state.
+/// A world of persistent workers (threads or processes, per
+/// [`super::TransportKind`]) with replicated state.
 pub type DdpCluster = Cluster<DdpWorker>;
 
 /// One DDP rank: a full replica + optimizer + comm handle.

@@ -34,7 +34,8 @@ use crate::optim::{Projector, ProjectorSide};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg64;
 
-/// A world of persistent worker threads with sharded optimizer state.
+/// A world of persistent workers (threads or processes, per
+/// [`super::TransportKind`]) with sharded optimizer state.
 pub type FsdpCluster = Cluster<FsdpWorker>;
 
 /// One FSDP rank: its shards + optimizer + comm handle.
@@ -181,13 +182,29 @@ impl Worker for FsdpWorker {
                         Matrix::from_vec(hi - lo, n, sh)
                     }
                     ShardAxis::Cols => {
-                        // Column shards interleave in memory; reduce the
-                        // full gradient and slice (dropped right after).
-                        let mut full =
-                            Matrix::from_vec(m, n, self.comm.all_reduce_sum(grad.data));
-                        full.scale(scale);
-                        transient = full.numel() * 4;
-                        slice_shard(&full, axis, lo, hi)
+                        // Column shards interleave in row-major memory, but
+                        // the TRANSPOSED gradient makes them contiguous
+                        // rows — so a true reduce-scatter applies here too,
+                        // cutting this path from the all-reduce's
+                        // 2·(w−1)/w·n traffic to (w−1)/w·n like the row
+                        // path. Bitwise-safe: the fixed-tree sum is
+                        // elementwise across ranks, so transposing first
+                        // only permutes element POSITIONS, never any
+                        // element's cross-rank summation order.
+                        let gt = grad.transpose();
+                        drop(grad);
+                        let offsets: Vec<usize> = (0..=self.world)
+                            .map(|r| (r * n / self.world) * m)
+                            .collect();
+                        let mut sh = self.comm.reduce_scatter_sum(gt.data, &offsets);
+                        for x in sh.iter_mut() {
+                            *x *= scale;
+                        }
+                        // The full-size transpose copy is still the peak
+                        // buffer on this path (traffic shrank; memory
+                        // didn't).
+                        transient = m * n * 4;
+                        Matrix::from_vec(hi - lo, m, sh).transpose()
                     }
                 }
             };
@@ -480,6 +497,41 @@ mod tests {
         // full-model AdamW state (2·4 bytes/elem).
         let full_adam: usize = SHAPES.iter().map(|&(r, c)| 2 * r * c * 4).sum();
         assert!(reports[0].optimizer_bytes < full_adam);
+    }
+
+    #[test]
+    fn wide_layers_pay_reduce_scatter_not_all_reduce_traffic() {
+        // ROADMAP follow-up (PR 1): column-sharded (wide) layers used to
+        // all-reduce their full gradient (2·(w−1)/w·n elems per rank); the
+        // transpose-aware reduce-scatter must charge (w−1)/w·n — the same
+        // ring cost as the row-sharded path. Exact equality on the Comm
+        // traffic counters, so a regression to all-reduce (or any hidden
+        // extra collective) fails loudly.
+        let world = 4;
+        for &shape in &[(8usize, 32usize), (32, 8)] {
+            let shapes = &[shape];
+            let mut cluster = FsdpCluster::new(
+                world,
+                metas(shapes),
+                OptimizerSpec::AdamW(AdamCfg::default()),
+                3,
+            );
+            cluster.init_params(&init_set(shapes, 7));
+            let steps = 3u64;
+            for t in 0..steps {
+                cluster.step(t, vec![grad_set(shapes, 50 + t); world], 0.01);
+            }
+            let n = (shape.0 * shape.1) as u64;
+            let expect = steps * ((world as u64 - 1) * n / world as u64);
+            for r in cluster.memory_reports() {
+                assert_eq!(
+                    r.traffic_elems, expect,
+                    "rank {} of {shape:?}: sharded-grad traffic must follow \
+                     the reduce-scatter model",
+                    r.rank
+                );
+            }
+        }
     }
 
     #[test]

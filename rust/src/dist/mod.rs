@@ -1,16 +1,23 @@
-//! Threaded FSDP/DDP distributed runtime (§4.3 of the paper).
+//! FSDP/DDP distributed runtime (§4.3 of the paper), over selectable
+//! transports.
 //!
-//! GaLore 2's integration with parallel training maps onto three pieces:
+//! GaLore 2's integration with parallel training maps onto four pieces:
 //!
-//! * [`Comm`] — in-process collectives (all-reduce / reduce-scatter /
-//!   all-gather / broadcast) with fixed-tree reductions, so results are
-//!   bitwise identical regardless of thread scheduling, plus per-rank
-//!   byte-traffic accounting for the Table 1 reproduction.
+//! * [`Comm`] — collectives (all-reduce / reduce-scatter / all-gather /
+//!   broadcast) with fixed-tree reductions, generic over a [`Transport`]:
+//!   results are bitwise identical regardless of scheduling *and* of the
+//!   fabric that moved the bytes, plus per-rank byte-traffic accounting
+//!   for the Table 1 reproduction.
+//! * [`Transport`] implementations: [`ThreadTransport`] (in-process shared
+//!   slots + barrier — the default) and the Unix-socket process transport
+//!   (`dist/process.rs`, workers self-exec'd as `galore2 worker`),
+//!   selected per cluster via [`TransportKind`] (`[dist] transport` /
+//!   `--transport threads|process`).
 //! * [`Cluster`]`<W: `[`Worker`]`>` — the generic worker-protocol runtime:
-//!   persistent threads behind channels, shared Cmd/Reply protocol,
-//!   coordinator-side validation, panic-aware barrier-safe shutdown, and
-//!   per-worker core-budget splitting. Protocol fixes land once and apply
-//!   to every mode.
+//!   persistent workers behind one framed Cmd/Reply protocol,
+//!   coordinator-side validation, panic/exit-aware shutdown for both
+//!   worker kinds, and per-worker core-budget splitting. Protocol fixes
+//!   land once and apply to every mode and transport.
 //! * The two instantiations: [`FsdpCluster`] (= `Cluster<FsdpWorker>`) —
 //!   each rank owns parameter / gradient / optimizer-state *shards*, with
 //!   the per-layer fused update of Fig. 2 and leader-computed subspaces —
@@ -18,23 +25,28 @@
 //!   baseline Table 1 compares against ([`run_ddp`] remains as the
 //!   closure-driven harness the tests use).
 //!
-//! Worker threads construct their optimizers from
+//! Worker threads/processes construct their optimizers from
 //! [`crate::optim::OptimizerSpec`] (re-exported here), the `Send`-able
-//! recipe that is the codebase's single optimizer-construction path.
+//! recipe that is the codebase's single optimizer-construction path; the
+//! process transport ships it over the wire (`dist/wire.rs`).
 //!
 //! Checkpointing: `Cluster::export_frames` captures each rank's raw state
 //! frame; `checkpoint::canonical` gathers those into the world-agnostic
-//! canonical form (and re-slices it for any target world on resume).
+//! canonical form (and re-slices it for any target world on resume) —
+//! transport-independent by construction.
 
 mod cluster;
 mod comm;
 mod ddp;
 mod fsdp;
+mod process;
+mod wire;
 
-pub use cluster::{Cluster, MemoryReport, ParamMeta, Worker};
-pub use comm::Comm;
+pub use cluster::{Cluster, MemoryReport, ParamMeta, TransportKind, Worker};
+pub use comm::{Comm, ThreadTransport, Transport};
 pub use ddp::{run_ddp, DdpCluster, DdpWorker};
 pub use fsdp::{FsdpCluster, FsdpWorker};
+pub use process::{run_worker, set_test_crash_hooks, set_worker_binary, WORKER_BIN_ENV};
 
 pub(crate) use cluster::{shard_axis, shard_bounds, ShardAxis};
 

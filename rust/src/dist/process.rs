@@ -1,0 +1,601 @@
+//! Process transport: worker ranks as OS processes over Unix-domain
+//! sockets.
+//!
+//! Topology — a star with the coordinator at the hub. Each worker is a
+//! self-exec of this binary (`galore2 worker --mode M --rank R --world W
+//! --endpoint PATH`) holding two connections to the coordinator's
+//! rendezvous socket:
+//!
+//! * a **control** connection carrying the framed [`Cmd`]/[`Reply`]
+//!   cluster protocol (`dist/wire.rs`), driven by the coordinator, and
+//! * a **comm** connection carrying collective payloads, serviced by a
+//!   dedicated relay thread in the coordinator process: per exchange it
+//!   reads one frame from every rank and writes the full slot table back
+//!   to every rank. The worker-side [`ProcessTransport`] then runs the
+//!   same fixed-tree reduction the threaded transport runs, so results
+//!   are **bitwise identical** to `--transport threads`.
+//!
+//! Spawn handshake (deadline-bounded, child-exit aware — a worker that
+//! dies or never connects is an error, not a hang):
+//!
+//!   1. coordinator binds PATH, spawns `world` workers;
+//!   2. each worker connects twice, prefacing each connection with a
+//!      9-byte hello `[kind u8][rank u64]`;
+//!   3. coordinator sends each worker its setup frame (parameter metas +
+//!      [`OptimizerSpec`] + seed) on the control connection;
+//!   4. each worker builds its [`Worker`] state and answers `Ready`;
+//!   5. the socket file is unlinked and the relay thread takes over the
+//!      comm connections.
+//!
+//! Failure model: a worker that dies mid-run closes both its sockets. The
+//! relay sees EOF and drops *every* comm stream, which unblocks any peers
+//! waiting inside a collective (they exit with an error); the coordinator
+//! sees EOF on a control read and panics with an attributable message
+//! instead of hanging (`dist/cluster.rs::Link`). On a coordinator panic,
+//! `Cluster::drop` kills and reaps the children.
+
+use super::cluster::{handle_cmd, Cmd, ParamMeta, Served, Worker};
+use super::comm::{Comm, Transport};
+use super::{wire, OptimizerSpec};
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Hello tags: which of a worker's two connections this is.
+const CONN_CONTROL: u8 = 0;
+const CONN_COMM: u8 = 1;
+
+/// Single-byte `Ready` frame a worker sends once its state is built.
+const READY: &[u8] = &[0x52]; // 'R'
+
+/// Spawn/handshake deadline. Generous: release-built workers connect in
+/// milliseconds; the deadline only bounds pathological failures.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Env override for the worker binary (defaults to `current_exe`) — for
+/// embedders launching through a non-galore2 coordinator binary. Read
+/// only (getenv is thread-safe); IN-PROCESS callers such as test
+/// harnesses must use [`set_worker_binary`] instead, because calling
+/// `std::env::set_var` while other threads read the environment is a
+/// data race.
+pub const WORKER_BIN_ENV: &str = "GALORE2_WORKER_BIN";
+
+/// Programmatic worker-binary override; takes precedence over
+/// [`WORKER_BIN_ENV`]. Thread-safe (unlike `std::env::set_var`) — test
+/// suites point this at `env!("CARGO_BIN_EXE_galore2")`, since the test
+/// harness binary they run in has no `worker` subcommand.
+pub fn set_worker_binary(path: impl Into<PathBuf>) {
+    *worker_bin_override().write().unwrap() = Some(path.into());
+}
+
+fn worker_bin_override() -> &'static RwLock<Option<PathBuf>> {
+    static OVERRIDE: RwLock<Option<PathBuf>> = RwLock::new(None);
+    &OVERRIDE
+}
+
+/// Test-only fault injection: a worker whose rank matches the value exits
+/// before answering `Ready` (handshake failure path) …
+const CRASH_SETUP_ENV: &str = "GALORE2_TEST_CRASH_SETUP_RANK";
+/// … or exits on its first `Step` command (mid-run failure path).
+const CRASH_STEP_ENV: &str = "GALORE2_TEST_CRASH_STEP_RANK";
+
+/// Test-only fault injection (see tests/transport.rs): ranks that should
+/// die during setup / on their first Step. The values are injected into
+/// the worker environments at spawn time via `Command::env`, so setting
+/// them is thread-safe — no `std::env::set_var` in the coordinator.
+#[doc(hidden)]
+pub fn set_test_crash_hooks(setup_rank: Option<usize>, step_rank: Option<usize>) {
+    *test_crash_hooks().write().unwrap() = (setup_rank, step_rank);
+}
+
+fn test_crash_hooks() -> &'static RwLock<(Option<usize>, Option<usize>)> {
+    static HOOKS: RwLock<(Option<usize>, Option<usize>)> = RwLock::new((None, None));
+    &HOOKS
+}
+
+/// Worker-process side of the hooks: reads its OWN environment (set at
+/// exec, no concurrent mutation).
+fn crash_hook(var: &str, rank: usize) -> bool {
+    std::env::var(var)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        == Some(rank)
+}
+
+/// Socket filename inside the per-cluster private directory.
+const SOCKET_NAME: &str = "w.sock";
+
+/// A fresh mode-0700 directory for the rendezvous socket. Sockets in a
+/// shared temp dir under a predictable name would be squattable by other
+/// local users (bind denial, or worse a fake coordinator feeding workers
+/// an attacker-controlled setup frame); a private directory we must
+/// CREATE (never adopt — `create` fails on an existing path) closes that.
+fn fresh_socket_dir() -> Result<PathBuf, String> {
+    use std::os::unix::fs::DirBuilderExt;
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let mut last_err = String::new();
+    // A handful of attempts skips over stale/squatted names (pid reuse).
+    for _ in 0..16 {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        // Short name: Unix socket paths are capped around 108 bytes.
+        let dir = std::env::temp_dir().join(format!("g2w-{}-{n}", std::process::id()));
+        let mut builder = std::fs::DirBuilder::new();
+        builder.mode(0o700);
+        match builder.create(&dir) {
+            Ok(()) => return Ok(dir),
+            Err(e) => last_err = format!("creating socket dir {}: {e}", dir.display()),
+        }
+    }
+    Err(last_err)
+}
+
+/// Best-effort removal of the socket file and its private directory.
+pub(crate) fn cleanup_socket(path: &std::path::Path) {
+    let _ = std::fs::remove_file(path);
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::remove_dir(dir);
+    }
+}
+
+fn worker_binary() -> PathBuf {
+    if let Some(p) = worker_bin_override().read().unwrap().as_ref() {
+        return p.clone();
+    }
+    match std::env::var_os(WORKER_BIN_ENV) {
+        Some(p) => PathBuf::from(p),
+        None => std::env::current_exe().unwrap_or_else(|_| PathBuf::from("galore2")),
+    }
+}
+
+/// A spawned-and-handshaken world, ready to be wrapped into cluster links.
+pub(crate) struct SpawnedWorld {
+    /// Control connections, in rank order.
+    pub(crate) controls: Vec<UnixStream>,
+    /// Worker processes, in rank order.
+    pub(crate) children: Vec<Child>,
+    /// The collective relay servicing the comm connections.
+    pub(crate) relay: JoinHandle<()>,
+    /// Rendezvous socket path inside its private 0700 directory (already
+    /// unlinked; kept for Drop hygiene).
+    pub(crate) socket_path: PathBuf,
+}
+
+/// Spawn `world` worker processes for `mode` and run the full handshake.
+/// On any error every already-spawned child is killed and reaped and the
+/// socket file removed — no orphans, no leftover sockets.
+pub(crate) fn spawn_world(
+    mode: &'static str,
+    world: usize,
+    metas: &[ParamMeta],
+    spec: &OptimizerSpec,
+    seed: u64,
+) -> Result<SpawnedWorld, String> {
+    let path = fresh_socket_dir()?.join(SOCKET_NAME);
+    let listener = UnixListener::bind(&path)
+        .map_err(|e| format!("binding worker rendezvous socket {}: {e}", path.display()))?;
+    let mut children: Vec<Child> = Vec::with_capacity(world);
+    match establish(mode, world, metas, spec, seed, &listener, &path, &mut children) {
+        Ok((controls, comm_streams)) => {
+            // All connections are up: the filesystem name is no longer
+            // needed (established sockets outlive the unlink).
+            drop(listener);
+            cleanup_socket(&path);
+            let relay = std::thread::Builder::new()
+                .name(format!("{mode}-relay"))
+                .spawn(move || relay_loop(comm_streams))
+                .map_err(|e| {
+                    for c in &mut children {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                    format!("spawning {mode} collective relay thread: {e}")
+                })?;
+            Ok(SpawnedWorld {
+                controls,
+                children,
+                relay,
+                socket_path: path,
+            })
+        }
+        Err(e) => {
+            for c in &mut children {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            drop(listener);
+            cleanup_socket(&path);
+            Err(e)
+        }
+    }
+}
+
+/// Spawn + accept + hello + setup + ready. Children are pushed into
+/// `children` as they spawn so the caller can clean up on error.
+#[allow(clippy::too_many_arguments)]
+fn establish(
+    mode: &str,
+    world: usize,
+    metas: &[ParamMeta],
+    spec: &OptimizerSpec,
+    seed: u64,
+    listener: &UnixListener,
+    path: &std::path::Path,
+    children: &mut Vec<Child>,
+) -> Result<(Vec<UnixStream>, Vec<UnixStream>), String> {
+    // Refuse un-shippable specs BEFORE spawning anything.
+    let setup = wire::encode_setup(metas, spec, seed)?;
+
+    let bin = worker_binary();
+    let (crash_setup, crash_step) = *test_crash_hooks().read().unwrap();
+    for rank in 0..world {
+        let mut cmd = Command::new(&bin);
+        cmd.arg("worker")
+            .arg("--mode")
+            .arg(mode)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--world")
+            .arg(world.to_string())
+            .arg("--endpoint")
+            .arg(path)
+            // Keep worker compute budgets identical to the thread
+            // transport: each worker divides the coordinator's resolved
+            // pool default by the world size (`set_thread_share`).
+            .env("GALORE2_THREADS", crate::parallel::default_threads().to_string())
+            .stdin(Stdio::null());
+        if let Some(r) = crash_setup {
+            cmd.env(CRASH_SETUP_ENV, r.to_string());
+        }
+        if let Some(r) = crash_step {
+            cmd.env(CRASH_STEP_ENV, r.to_string());
+        }
+        let child = cmd.spawn().map_err(|e| {
+            format!(
+                "spawning {mode} worker rank {rank} via {:?}: {e} — when the \
+                 coordinator is not the galore2 binary itself, point at the \
+                 built one ({WORKER_BIN_ENV} in the environment, or \
+                 dist::set_worker_binary from in-process harnesses)",
+                bin
+            )
+        })?;
+        children.push(child);
+    }
+
+    // Accept 2·world connections (control + comm per rank), watching the
+    // children: a worker that exits before connecting is an error now, not
+    // a 30-second timeout later.
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("configuring rendezvous listener: {e}"))?;
+    let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+    let mut controls: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
+    let mut comms: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
+    let mut connected = 0usize;
+    while connected < 2 * world {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| format!("configuring worker connection: {e}"))?;
+                // Bound the hello read so a rogue connector can't stall us.
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                let (kind, rank) = read_hello(&mut stream)
+                    .map_err(|e| format!("reading worker hello: {e}"))?;
+                let _ = stream.set_read_timeout(None);
+                if rank >= world {
+                    return Err(format!("worker hello claims rank {rank} in world {world}"));
+                }
+                let slot = match kind {
+                    CONN_CONTROL => &mut controls[rank],
+                    CONN_COMM => &mut comms[rank],
+                    other => return Err(format!("worker hello with unknown kind {other}")),
+                };
+                if slot.is_some() {
+                    return Err(format!("rank {rank} connected twice with the same kind"));
+                }
+                *slot = Some(stream);
+                connected += 1;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    return Err(format!(
+                        "{mode} worker handshake timed out after {HANDSHAKE_TIMEOUT:?} \
+                         ({connected}/{} connections)",
+                        2 * world
+                    ));
+                }
+                for (rank, child) in children.iter_mut().enumerate() {
+                    if let Ok(Some(status)) = child.try_wait() {
+                        return Err(format!(
+                            "{mode} worker rank {rank} exited during the handshake \
+                             ({status}) — check its stderr"
+                        ));
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(format!("accepting worker connection: {e}")),
+        }
+    }
+    let mut controls: Vec<UnixStream> = controls.into_iter().map(|s| s.unwrap()).collect();
+    let comms: Vec<UnixStream> = comms.into_iter().map(|s| s.unwrap()).collect();
+
+    // Ship the setup and wait for every rank's Ready. Timeout-bounded: a
+    // worker that dies building its state must error out, not hang.
+    for (rank, control) in controls.iter_mut().enumerate() {
+        wire::write_frame(control, &setup)
+            .map_err(|e| format!("sending setup to {mode} worker rank {rank}: {e}"))?;
+    }
+    for (rank, control) in controls.iter_mut().enumerate() {
+        let _ = control.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+        let frame = wire::read_frame(control).map_err(|e| {
+            format!(
+                "{mode} worker rank {rank} failed during setup ({e}) — \
+                 check its stderr"
+            )
+        })?;
+        let _ = control.set_read_timeout(None);
+        if frame != READY {
+            return Err(format!(
+                "{mode} worker rank {rank} sent a malformed ready frame"
+            ));
+        }
+    }
+    Ok((controls, comms))
+}
+
+/// The coordinator-side collective hub: one round per exchange — read one
+/// frame from every rank (rank order; sockets buffer early senders), then
+/// write the full slot table to every rank. Exits on the first socket
+/// error/EOF, DROPPING every stream: that is what unblocks surviving
+/// workers when one rank dies (their reads fail instead of waiting
+/// forever).
+fn relay_loop(mut streams: Vec<UnixStream>) {
+    loop {
+        let mut frames: Vec<Vec<u8>> = Vec::with_capacity(streams.len());
+        for s in &mut streams {
+            match wire::read_frame(s) {
+                Ok(f) => frames.push(f),
+                Err(_) => return,
+            }
+        }
+        for s in &mut streams {
+            for f in &frames {
+                if wire::write_frame(s, f).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn send_hello(stream: &mut UnixStream, kind: u8, rank: usize) -> Result<(), String> {
+    let mut hello = [0u8; 9];
+    hello[0] = kind;
+    hello[1..9].copy_from_slice(&(rank as u64).to_le_bytes());
+    stream
+        .write_all(&hello)
+        .map_err(|e| format!("sending hello: {e}"))
+}
+
+fn read_hello(stream: &mut UnixStream) -> std::io::Result<(u8, usize)> {
+    let mut hello = [0u8; 9];
+    stream.read_exact(&mut hello)?;
+    let rank = u64::from_le_bytes(hello[1..9].try_into().unwrap()) as usize;
+    Ok((hello[0], rank))
+}
+
+/// The worker half of an exchange: ship this rank's contribution to the
+/// relay, read back the full slot table, reduce locally. Socket failures
+/// panic — in a worker process that exits the process with a diagnostic,
+/// which is exactly the EOF signal the coordinator and relay react to.
+struct ProcessTransport {
+    rank: usize,
+    world: usize,
+    stream: UnixStream,
+}
+
+impl Transport for ProcessTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn exchange(
+        &mut self,
+        data: Vec<f32>,
+        reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
+    ) -> Vec<f32> {
+        wire::write_frame(&mut self.stream, &wire::f32s_to_bytes(&data)).unwrap_or_else(|e| {
+            panic!(
+                "rank {}: collective send failed ({e}) — coordinator or a peer died",
+                self.rank
+            )
+        });
+        drop(data);
+        let mut slots: Vec<Vec<f32>> = Vec::with_capacity(self.world);
+        for _ in 0..self.world {
+            let frame = wire::read_frame(&mut self.stream).unwrap_or_else(|e| {
+                panic!(
+                    "rank {}: collective receive failed ({e}) — coordinator or a peer died",
+                    self.rank
+                )
+            });
+            slots.push(wire::bytes_to_f32s(&frame).unwrap_or_else(|e| {
+                panic!("rank {}: corrupt collective frame: {e}", self.rank)
+            }));
+        }
+        reduce(&slots)
+    }
+
+    fn barrier(&mut self) {
+        let mut noop = |_: &[Vec<f32>]| Vec::new();
+        let _ = self.exchange(Vec::new(), &mut noop);
+    }
+}
+
+/// Entry point for the `galore2 worker` subcommand: dispatch on the mode
+/// tag to the matching [`Worker`] implementation.
+pub fn run_worker(mode: &str, rank: usize, world: usize, endpoint: &str) -> Result<(), String> {
+    if world == 0 || rank >= world {
+        return Err(format!("invalid rank {rank} for world {world}"));
+    }
+    match mode {
+        "fsdp" => serve_worker::<super::FsdpWorker>(rank, world, endpoint),
+        "ddp" => serve_worker::<super::DdpWorker>(rank, world, endpoint),
+        other => Err(format!("unknown worker mode {other:?} (fsdp|ddp)")),
+    }
+}
+
+/// A worker process's whole life: connect, receive setup, build state,
+/// answer Ready, then serve framed commands until Shutdown.
+fn serve_worker<W: Worker>(rank: usize, world: usize, endpoint: &str) -> Result<(), String> {
+    let mut control = UnixStream::connect(endpoint)
+        .map_err(|e| format!("rank {rank}: connecting control to {endpoint}: {e}"))?;
+    send_hello(&mut control, CONN_CONTROL, rank)?;
+    let mut comm_stream = UnixStream::connect(endpoint)
+        .map_err(|e| format!("rank {rank}: connecting comm to {endpoint}: {e}"))?;
+    send_hello(&mut comm_stream, CONN_COMM, rank)?;
+
+    let setup = wire::read_frame(&mut control)
+        .map_err(|e| format!("rank {rank}: reading setup frame: {e}"))?;
+    let (metas, spec, seed) = wire::decode_setup(&setup)?;
+
+    if crash_hook(CRASH_SETUP_ENV, rank) {
+        // Test hook: die before Ready so the coordinator exercises its
+        // handshake-failure path.
+        std::process::exit(61);
+    }
+
+    // Same core-budget split as a worker thread in a world of this size.
+    crate::parallel::set_thread_share(world);
+    let comm = Comm::from_transport(Box::new(ProcessTransport {
+        rank,
+        world,
+        stream: comm_stream,
+    }));
+    let mut worker = W::new(rank, world, comm, metas, spec, seed);
+    wire::write_frame(&mut control, READY)
+        .map_err(|e| format!("rank {rank}: sending ready: {e}"))?;
+
+    loop {
+        let frame = wire::read_frame(&mut control).map_err(|e| {
+            // EOF without a Shutdown command means the coordinator died.
+            format!("rank {rank}: control connection lost ({e})")
+        })?;
+        let cmd = wire::decode_cmd(&frame)?;
+        if matches!(cmd, Cmd::Step { .. }) && crash_hook(CRASH_STEP_ENV, rank) {
+            // Test hook: die mid-run so the coordinator and the relay
+            // exercise their no-hang failure paths.
+            std::process::exit(62);
+        }
+        match handle_cmd(&mut worker, cmd) {
+            Served::Reply(reply) => {
+                wire::write_frame(&mut control, &wire::encode_reply(&reply))
+                    .map_err(|e| format!("rank {rank}: sending reply: {e}"))?;
+            }
+            Served::NoReply => {}
+            Served::Shutdown => return Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn socket_dirs_are_private_unique_and_short() {
+        let a = fresh_socket_dir().unwrap();
+        let b = fresh_socket_dir().unwrap();
+        assert_ne!(a, b, "socket dirs must be unique per cluster");
+        // sun_path is ~108 bytes on Linux; leave generous headroom.
+        let sock = a.join(SOCKET_NAME);
+        assert!(
+            sock.as_os_str().len() < 100,
+            "socket path too long for sun_path: {}",
+            sock.display()
+        );
+        // Private: no other local user may squat or connect early.
+        use std::os::unix::fs::PermissionsExt;
+        let mode = std::fs::metadata(&a).unwrap().permissions().mode();
+        assert_eq!(mode & 0o777, 0o700, "socket dir must be mode 0700");
+        // cleanup_socket removes the file (if any) and the directory.
+        cleanup_socket(&sock);
+        assert!(!a.exists(), "cleanup must remove the private dir");
+        std::fs::remove_dir_all(&b).ok();
+    }
+
+    #[test]
+    fn run_worker_rejects_bad_arguments() {
+        assert!(run_worker("fsdp", 2, 2, "/nonexistent").is_err());
+        assert!(run_worker("fsdp", 0, 0, "/nonexistent").is_err());
+        let err = run_worker("mesh", 0, 1, "/nonexistent").unwrap_err();
+        assert!(err.contains("fsdp|ddp"), "unhelpful error: {err}");
+        // A valid mode with a dead endpoint fails at connect, not by
+        // hanging.
+        let err = run_worker("ddp", 0, 1, "/nonexistent/g2.sock").unwrap_err();
+        assert!(err.contains("connecting"), "unhelpful error: {err}");
+    }
+
+    /// In-process smoke of the relay contract: every rank's frame comes
+    /// back to every rank, in rank order, round after round. (Full
+    /// process-spawn coverage lives in tests/transport.rs, which has the
+    /// galore2 binary path.)
+    #[test]
+    fn relay_round_trips_slot_tables() {
+        let world = 3;
+        let path = fresh_socket_dir().unwrap().join(SOCKET_NAME);
+        let listener = UnixListener::bind(&path).unwrap();
+        let clients: Vec<UnixStream> = (0..world)
+            .map(|_| UnixStream::connect(&path).unwrap())
+            .collect();
+        let serves: Vec<UnixStream> = (0..world).map(|_| listener.accept().unwrap().0).collect();
+        cleanup_socket(&path);
+        let relay = std::thread::spawn(move || relay_loop(serves));
+        let workers: Vec<std::thread::JoinHandle<Vec<Vec<f32>>>> = clients
+            .into_iter()
+            .enumerate()
+            .map(|(rank, stream)| {
+                std::thread::spawn(move || {
+                    let mut t = ProcessTransport {
+                        rank,
+                        world,
+                        stream,
+                    };
+                    let mut out = Vec::new();
+                    for round in 0..4 {
+                        let data = vec![(rank * 10 + round) as f32; 2 + round];
+                        let mut collect = |slots: &[Vec<f32>]| -> Vec<f32> {
+                            slots.iter().map(|s| s[0]).collect()
+                        };
+                        out.push(t.exchange(data, &mut collect));
+                    }
+                    t.barrier();
+                    out
+                })
+            })
+            .collect();
+        let results: Vec<Vec<Vec<f32>>> =
+            workers.into_iter().map(|h| h.join().unwrap()).collect();
+        for (rank, rounds) in results.iter().enumerate() {
+            for (round, firsts) in rounds.iter().enumerate() {
+                let expect: Vec<f32> = (0..world).map(|r| (r * 10 + round) as f32).collect();
+                assert_eq!(
+                    firsts, &expect,
+                    "rank {rank} round {round}: relay delivered wrong slot table"
+                );
+            }
+        }
+        // Workers hung up: the relay must exit on EOF, not spin.
+        relay.join().unwrap();
+    }
+}

@@ -1,0 +1,688 @@
+//! Wire format for the process transport: length-framed binary messages.
+//!
+//! Everything that crosses a worker-process boundary is serialized here,
+//! in one place, so the coordinator and the self-exec'd worker can never
+//! drift: the [`Cmd`]/[`Reply`] cluster protocol, the setup payload
+//! (parameter metas + [`OptimizerSpec`] + seed), and raw f32 collective
+//! payloads.
+//!
+//! Framing: `[len u64 LE][payload]`. f32 values travel as their exact
+//! little-endian bit patterns (`to_le_bytes`/`from_le_bytes`), so a
+//! process-transport run is bit-for-bit the threaded run — the wire never
+//! rounds.
+//!
+//! The decoders parse *trusted* peers (our own spawned workers), but still
+//! fail with errors rather than panics on malformed input: a worker that
+//! died mid-write leaves a truncated frame, and the coordinator must
+//! report that, not abort.
+
+use super::cluster::{Cmd, MemoryReport, ParamMeta, Reply};
+use super::OptimizerSpec;
+use crate::optim::ser::{push_f32s, push_u64, Reader};
+use crate::optim::{AdamCfg, GaLoreCfg, MomentHandling, ProjectionKind};
+use crate::tensor::Matrix;
+use std::io::{Read, Write};
+
+/// Upper bound on a single frame (16 GiB) — guards the length prefix of a
+/// torn frame from turning into an absurd allocation.
+const MAX_FRAME: u64 = 1 << 34;
+
+pub(crate) fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+pub(crate) fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len_b = [0u8; 8];
+    r.read_exact(&mut len_b)?;
+    let len = u64::from_le_bytes(len_b);
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+pub(crate) fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub(crate) fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>, String> {
+    if b.len() % 4 != 0 {
+        return Err(format!("f32 payload length {} not a multiple of 4", b.len()));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn push_u8(out: &mut Vec<u8>, x: u8) {
+    out.push(x);
+}
+
+fn push_f32(out: &mut Vec<u8>, x: f32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_str(out: &mut Vec<u8>, s: &str) {
+    push_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn read_u8(r: &mut Reader) -> Result<u8, String> {
+    Ok(r.bytes(1)?[0])
+}
+
+fn read_f32(r: &mut Reader) -> Result<f32, String> {
+    let b = r.bytes(4)?;
+    Ok(f32::from_le_bytes(b.try_into().unwrap()))
+}
+
+fn read_usize(r: &mut Reader) -> Result<usize, String> {
+    Ok(r.u64()? as usize)
+}
+
+fn read_str(r: &mut Reader) -> Result<String, String> {
+    let n = read_usize(r)?;
+    if n > r.remaining() {
+        return Err("truncated string".into());
+    }
+    String::from_utf8(r.bytes(n)?.to_vec()).map_err(|_| "non-utf8 string".into())
+}
+
+fn push_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    push_u64(out, m.rows as u64);
+    push_u64(out, m.cols as u64);
+    // The [len u64][f32 LE…] vector layout is optim::ser's — one codec,
+    // one (hardened) parser for it crate-wide.
+    push_f32s(out, &m.data);
+}
+
+fn read_matrix(r: &mut Reader) -> Result<Matrix, String> {
+    let rows = read_usize(r)?;
+    let cols = read_usize(r)?;
+    let data = r.f32s()?;
+    // Checked: corrupt dimensions must error here, not overflow-panic (or
+    // wrap past the equality check in release) before Matrix::from_vec.
+    let expect = rows
+        .checked_mul(cols)
+        .ok_or_else(|| format!("matrix shape {rows}x{cols} overflows"))?;
+    if data.len() != expect {
+        return Err(format!(
+            "matrix payload has {} elements for shape {rows}x{cols}",
+            data.len()
+        ));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn push_matrices(out: &mut Vec<u8>, ms: &[Matrix]) {
+    push_u64(out, ms.len() as u64);
+    for m in ms {
+        push_matrix(out, m);
+    }
+}
+
+fn read_matrices(r: &mut Reader) -> Result<Vec<Matrix>, String> {
+    let n = read_usize(r)?;
+    let mut out = Vec::new();
+    for _ in 0..n {
+        out.push(read_matrix(r)?);
+    }
+    Ok(out)
+}
+
+fn push_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    push_u64(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+fn read_bytes(r: &mut Reader) -> Result<Vec<u8>, String> {
+    let n = read_usize(r)?;
+    if n > r.remaining() {
+        return Err("truncated byte blob".into());
+    }
+    Ok(r.bytes(n)?.to_vec())
+}
+
+// ---------------------------------------------------------------- configs
+
+fn push_adam(out: &mut Vec<u8>, c: &AdamCfg) {
+    push_f32(out, c.beta1);
+    push_f32(out, c.beta2);
+    push_f32(out, c.eps);
+    push_f32(out, c.weight_decay);
+}
+
+fn read_adam(r: &mut Reader) -> Result<AdamCfg, String> {
+    Ok(AdamCfg {
+        beta1: read_f32(r)?,
+        beta2: read_f32(r)?,
+        eps: read_f32(r)?,
+        weight_decay: read_f32(r)?,
+    })
+}
+
+fn projection_tag(k: ProjectionKind) -> u8 {
+    match k {
+        ProjectionKind::FullSvd => 0,
+        ProjectionKind::RandSvd => 1,
+        ProjectionKind::Quant8 => 2,
+        ProjectionKind::Quant4 => 3,
+        ProjectionKind::Random => 4,
+    }
+}
+
+fn projection_from_tag(t: u8) -> Result<ProjectionKind, String> {
+    Ok(match t {
+        0 => ProjectionKind::FullSvd,
+        1 => ProjectionKind::RandSvd,
+        2 => ProjectionKind::Quant8,
+        3 => ProjectionKind::Quant4,
+        4 => ProjectionKind::Random,
+        other => return Err(format!("unknown projection tag {other}")),
+    })
+}
+
+fn push_galore(out: &mut Vec<u8>, g: &GaLoreCfg) {
+    push_u64(out, g.rank as u64);
+    push_u64(out, g.update_freq);
+    push_f32(out, g.alpha);
+    push_u8(out, projection_tag(g.projection));
+    push_u8(
+        out,
+        match g.moments {
+            MomentHandling::Keep => 0,
+            MomentHandling::Reset => 1,
+            MomentHandling::Project => 2,
+        },
+    );
+    push_u64(out, g.min_dim as u64);
+    push_u8(out, g.external_subspace as u8);
+}
+
+fn read_galore(r: &mut Reader) -> Result<GaLoreCfg, String> {
+    Ok(GaLoreCfg {
+        rank: read_usize(r)?,
+        update_freq: r.u64()?,
+        alpha: read_f32(r)?,
+        projection: projection_from_tag(read_u8(r)?)?,
+        moments: match read_u8(r)? {
+            0 => MomentHandling::Keep,
+            1 => MomentHandling::Reset,
+            2 => MomentHandling::Project,
+            other => return Err(format!("unknown moment-handling tag {other}")),
+        },
+        min_dim: read_usize(r)?,
+        external_subspace: read_u8(r)? != 0,
+    })
+}
+
+/// Serialize an [`OptimizerSpec`] — every variant a worker process can
+/// build. `PjrtGaLore` is refused: it holds non-`Send` device handles and
+/// is single-process by contract (`OptimizerSpec::distributed_ok`).
+pub(crate) fn encode_spec(out: &mut Vec<u8>, spec: &OptimizerSpec) -> Result<(), String> {
+    match spec {
+        OptimizerSpec::AdamW(c) => {
+            push_u8(out, 0);
+            push_adam(out, c);
+        }
+        OptimizerSpec::Adam8bit(c) => {
+            push_u8(out, 1);
+            push_adam(out, c);
+        }
+        OptimizerSpec::Adafactor { eps } => {
+            push_u8(out, 2);
+            push_f32(out, *eps);
+        }
+        OptimizerSpec::SgdM { momentum } => {
+            push_u8(out, 3);
+            push_f32(out, *momentum);
+        }
+        OptimizerSpec::GaLore { galore, adam } => {
+            push_u8(out, 4);
+            push_galore(out, galore);
+            push_adam(out, adam);
+        }
+        OptimizerSpec::QGaLore {
+            galore,
+            adam,
+            similarity_threshold,
+        } => {
+            push_u8(out, 5);
+            push_galore(out, galore);
+            push_adam(out, adam);
+            push_f32(out, *similarity_threshold);
+        }
+        OptimizerSpec::PjrtGaLore { .. } => {
+            return Err("pjrt galore cannot run on process-transport workers".into());
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn decode_spec(r: &mut Reader) -> Result<OptimizerSpec, String> {
+    Ok(match read_u8(r)? {
+        0 => OptimizerSpec::AdamW(read_adam(r)?),
+        1 => OptimizerSpec::Adam8bit(read_adam(r)?),
+        2 => OptimizerSpec::Adafactor { eps: read_f32(r)? },
+        3 => OptimizerSpec::SgdM {
+            momentum: read_f32(r)?,
+        },
+        4 => OptimizerSpec::GaLore {
+            galore: read_galore(r)?,
+            adam: read_adam(r)?,
+        },
+        5 => OptimizerSpec::QGaLore {
+            galore: read_galore(r)?,
+            adam: read_adam(r)?,
+            similarity_threshold: read_f32(r)?,
+        },
+        other => return Err(format!("unknown optimizer-spec tag {other}")),
+    })
+}
+
+// ------------------------------------------------------------------ setup
+
+/// The first frame on a worker's control connection: everything
+/// `Worker::new` needs beyond what the command line carries.
+pub(crate) fn encode_setup(
+    metas: &[ParamMeta],
+    spec: &OptimizerSpec,
+    seed: u64,
+) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    push_u64(&mut out, metas.len() as u64);
+    for m in metas {
+        push_str(&mut out, &m.name);
+        push_u64(&mut out, m.rows as u64);
+        push_u64(&mut out, m.cols as u64);
+    }
+    encode_spec(&mut out, spec)?;
+    push_u64(&mut out, seed);
+    Ok(out)
+}
+
+pub(crate) fn decode_setup(
+    bytes: &[u8],
+) -> Result<(Vec<ParamMeta>, OptimizerSpec, u64), String> {
+    let mut r = Reader::new(bytes);
+    let n = read_usize(&mut r)?;
+    let mut metas = Vec::new();
+    for _ in 0..n {
+        metas.push(ParamMeta {
+            name: read_str(&mut r)?,
+            rows: read_usize(&mut r)?,
+            cols: read_usize(&mut r)?,
+        });
+    }
+    let spec = decode_spec(&mut r)?;
+    let seed = r.u64()?;
+    Ok((metas, spec, seed))
+}
+
+// ------------------------------------------------------------- cmd/reply
+
+pub(crate) fn encode_cmd(cmd: &Cmd) -> Vec<u8> {
+    let mut out = Vec::new();
+    match cmd {
+        Cmd::Init(full) => {
+            push_u8(&mut out, 0);
+            push_matrices(&mut out, full);
+        }
+        Cmd::Step { t, lr, grads } => {
+            push_u8(&mut out, 1);
+            push_u64(&mut out, *t);
+            push_f32(&mut out, *lr);
+            push_matrices(&mut out, grads);
+        }
+        Cmd::Params => push_u8(&mut out, 2),
+        Cmd::ExportOpt => push_u8(&mut out, 3),
+        Cmd::ImportOpt(bytes) => {
+            push_u8(&mut out, 4);
+            push_bytes(&mut out, bytes);
+        }
+        Cmd::Report => push_u8(&mut out, 5),
+        Cmd::Shutdown => push_u8(&mut out, 6),
+    }
+    out
+}
+
+pub(crate) fn decode_cmd(bytes: &[u8]) -> Result<Cmd, String> {
+    let mut r = Reader::new(bytes);
+    Ok(match read_u8(&mut r)? {
+        0 => Cmd::Init(read_matrices(&mut r)?),
+        1 => Cmd::Step {
+            t: r.u64()?,
+            lr: read_f32(&mut r)?,
+            grads: read_matrices(&mut r)?,
+        },
+        2 => Cmd::Params,
+        3 => Cmd::ExportOpt,
+        4 => Cmd::ImportOpt(read_bytes(&mut r)?),
+        5 => Cmd::Report,
+        6 => Cmd::Shutdown,
+        other => return Err(format!("unknown command tag {other}")),
+    })
+}
+
+pub(crate) fn encode_reply(reply: &Reply) -> Vec<u8> {
+    let mut out = Vec::new();
+    match reply {
+        Reply::StepDone => push_u8(&mut out, 0),
+        Reply::Params(ms) => {
+            push_u8(&mut out, 1);
+            push_matrices(&mut out, ms);
+        }
+        Reply::OptState(bytes) => {
+            push_u8(&mut out, 2);
+            push_bytes(&mut out, bytes);
+        }
+        Reply::ImportDone(result) => {
+            push_u8(&mut out, 3);
+            match result {
+                Ok(()) => push_u8(&mut out, 1),
+                Err(e) => {
+                    push_u8(&mut out, 0);
+                    push_str(&mut out, e);
+                }
+            }
+        }
+        Reply::Report(rep) => {
+            push_u8(&mut out, 4);
+            push_u64(&mut out, rep.rank as u64);
+            push_u64(&mut out, rep.param_shard_bytes as u64);
+            push_u64(&mut out, rep.optimizer_bytes as u64);
+            push_u64(&mut out, rep.peak_transient_bytes as u64);
+            push_u64(&mut out, rep.traffic_elems);
+        }
+    }
+    out
+}
+
+pub(crate) fn decode_reply(bytes: &[u8]) -> Result<Reply, String> {
+    let mut r = Reader::new(bytes);
+    Ok(match read_u8(&mut r)? {
+        0 => Reply::StepDone,
+        1 => Reply::Params(read_matrices(&mut r)?),
+        2 => Reply::OptState(read_bytes(&mut r)?),
+        3 => {
+            if read_u8(&mut r)? != 0 {
+                Reply::ImportDone(Ok(()))
+            } else {
+                Reply::ImportDone(Err(read_str(&mut r)?))
+            }
+        }
+        4 => Reply::Report(MemoryReport {
+            rank: read_usize(&mut r)?,
+            param_shard_bytes: read_usize(&mut r)?,
+            optimizer_bytes: read_usize(&mut r)?,
+            peak_transient_bytes: read_usize(&mut r)?,
+            traffic_elems: r.u64()?,
+        }),
+        other => return Err(format!("unknown reply tag {other}")),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn frames_roundtrip_through_a_buffer() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[7u8; 1000]).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cursor).unwrap(), b"");
+        assert_eq!(read_frame(&mut cursor).unwrap(), vec![7u8; 1000]);
+        // EOF mid-frame is an error, not a hang or a short read.
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn torn_frame_length_is_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(buf);
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("cap"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn f32_payloads_are_bit_exact() {
+        // NaN payloads and signed zeros must survive the wire untouched.
+        let xs = vec![
+            0.0f32,
+            -0.0,
+            f32::NAN,
+            f32::from_bits(0x7fc0_dead),
+            f32::INFINITY,
+            -1.5e-38,
+        ];
+        let back = bytes_to_f32s(&f32s_to_bytes(&xs)).unwrap();
+        assert_eq!(back.len(), xs.len());
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn cmds_roundtrip() {
+        let mut rng = Pcg64::new(3, 0);
+        let grads = vec![
+            Matrix::randn(3, 5, 1.0, &mut rng),
+            Matrix::randn(1, 2, 1.0, &mut rng),
+        ];
+        let cases = vec![
+            Cmd::Init(grads.clone()),
+            Cmd::Step {
+                t: 42,
+                lr: 0.125,
+                grads: grads.clone(),
+            },
+            Cmd::Params,
+            Cmd::ExportOpt,
+            Cmd::ImportOpt(vec![1, 2, 3, 255]),
+            Cmd::Report,
+            Cmd::Shutdown,
+        ];
+        for cmd in &cases {
+            let back = decode_cmd(&encode_cmd(cmd)).unwrap();
+            match (cmd, &back) {
+                (Cmd::Init(a), Cmd::Init(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.data, y.data);
+                        assert_eq!(x.shape(), y.shape());
+                    }
+                }
+                (
+                    Cmd::Step { t, lr, grads },
+                    Cmd::Step {
+                        t: t2,
+                        lr: lr2,
+                        grads: g2,
+                    },
+                ) => {
+                    assert_eq!(t, t2);
+                    assert_eq!(lr.to_bits(), lr2.to_bits());
+                    assert_eq!(grads.len(), g2.len());
+                    for (x, y) in grads.iter().zip(g2) {
+                        assert_eq!(x.data, y.data);
+                    }
+                }
+                (Cmd::Params, Cmd::Params) => {}
+                (Cmd::ExportOpt, Cmd::ExportOpt) => {}
+                (Cmd::ImportOpt(a), Cmd::ImportOpt(b)) => assert_eq!(a, b),
+                (Cmd::Report, Cmd::Report) => {}
+                (Cmd::Shutdown, Cmd::Shutdown) => {}
+                _ => panic!("command changed variant over the wire"),
+            }
+        }
+    }
+
+    #[test]
+    fn replies_roundtrip() {
+        let mut rng = Pcg64::new(4, 0);
+        let report = MemoryReport {
+            rank: 3,
+            param_shard_bytes: 1024,
+            optimizer_bytes: 2048,
+            peak_transient_bytes: 4096,
+            traffic_elems: 123_456,
+        };
+        let cases = vec![
+            Reply::StepDone,
+            Reply::Params(vec![Matrix::randn(2, 4, 1.0, &mut rng)]),
+            Reply::OptState(vec![9; 33]),
+            Reply::ImportDone(Ok(())),
+            Reply::ImportDone(Err("shard mismatch".into())),
+            Reply::Report(report),
+        ];
+        for reply in &cases {
+            let back = decode_reply(&encode_reply(reply)).unwrap();
+            match (reply, &back) {
+                (Reply::StepDone, Reply::StepDone) => {}
+                (Reply::Params(a), Reply::Params(b)) => {
+                    assert_eq!(a[0].data, b[0].data);
+                }
+                (Reply::OptState(a), Reply::OptState(b)) => assert_eq!(a, b),
+                (Reply::ImportDone(Ok(())), Reply::ImportDone(Ok(()))) => {}
+                (Reply::ImportDone(Err(a)), Reply::ImportDone(Err(b))) => assert_eq!(a, b),
+                (Reply::Report(a), Reply::Report(b)) => {
+                    assert_eq!(a.rank, b.rank);
+                    assert_eq!(a.param_shard_bytes, b.param_shard_bytes);
+                    assert_eq!(a.optimizer_bytes, b.optimizer_bytes);
+                    assert_eq!(a.peak_transient_bytes, b.peak_transient_bytes);
+                    assert_eq!(a.traffic_elems, b.traffic_elems);
+                }
+                _ => panic!("reply changed variant over the wire"),
+            }
+        }
+    }
+
+    #[test]
+    fn setup_roundtrips_every_shippable_spec() {
+        let metas = vec![
+            ParamMeta {
+                name: "blocks.0.wq".into(),
+                rows: 64,
+                cols: 16,
+            },
+            ParamMeta {
+                name: "embed".into(),
+                rows: 1,
+                cols: 128,
+            },
+        ];
+        let galore = GaLoreCfg {
+            rank: 7,
+            update_freq: 11,
+            alpha: 0.375,
+            projection: ProjectionKind::Quant4,
+            moments: MomentHandling::Project,
+            min_dim: 3,
+            external_subspace: true,
+        };
+        let specs = vec![
+            OptimizerSpec::AdamW(AdamCfg {
+                weight_decay: 0.25,
+                ..AdamCfg::default()
+            }),
+            OptimizerSpec::Adam8bit(AdamCfg::default()),
+            OptimizerSpec::Adafactor { eps: 1e-21 },
+            OptimizerSpec::SgdM { momentum: 0.85 },
+            OptimizerSpec::GaLore {
+                galore,
+                adam: AdamCfg::default(),
+            },
+            OptimizerSpec::QGaLore {
+                galore,
+                adam: AdamCfg::default(),
+                similarity_threshold: 0.65,
+            },
+        ];
+        for spec in &specs {
+            let frame = encode_setup(&metas, spec, 0xdead_beef).unwrap();
+            let (m2, s2, seed) = decode_setup(&frame).unwrap();
+            assert_eq!(seed, 0xdead_beef);
+            assert_eq!(m2.len(), 2);
+            assert_eq!(m2[0].name, "blocks.0.wq");
+            assert_eq!((m2[1].rows, m2[1].cols), (1, 128));
+            assert_eq!(s2.name(), spec.name());
+            // Spot-check the lossiest fields.
+            if let (
+                OptimizerSpec::QGaLore {
+                    galore: g1,
+                    similarity_threshold: t1,
+                    ..
+                },
+                OptimizerSpec::QGaLore {
+                    galore: g2,
+                    similarity_threshold: t2,
+                    ..
+                },
+            ) = (spec, &s2)
+            {
+                assert_eq!(g1.rank, g2.rank);
+                assert_eq!(g1.update_freq, g2.update_freq);
+                assert_eq!(g1.alpha.to_bits(), g2.alpha.to_bits());
+                assert_eq!(g1.projection, g2.projection);
+                assert_eq!(g1.min_dim, g2.min_dim);
+                assert_eq!(g1.external_subspace, g2.external_subspace);
+                assert_eq!(t1.to_bits(), t2.to_bits());
+            }
+        }
+        // The PJRT variant must refuse to cross a process boundary.
+        let pjrt = OptimizerSpec::PjrtGaLore {
+            galore,
+            adam: AdamCfg::default(),
+        };
+        assert!(encode_setup(&metas, &pjrt, 1).is_err());
+    }
+
+    #[test]
+    fn truncated_payloads_error_out() {
+        let frame = encode_setup(
+            &[ParamMeta {
+                name: "p".into(),
+                rows: 2,
+                cols: 2,
+            }],
+            &OptimizerSpec::AdamW(AdamCfg::default()),
+            9,
+        )
+        .unwrap();
+        for cut in [0, 1, frame.len() / 2, frame.len() - 1] {
+            assert!(
+                decode_setup(&frame[..cut]).is_err(),
+                "setup truncated at {cut} decoded silently"
+            );
+        }
+        let cmd = encode_cmd(&Cmd::Step {
+            t: 1,
+            lr: 0.5,
+            grads: vec![Matrix::zeros(2, 3)],
+        });
+        for cut in [0, 1, cmd.len() / 2, cmd.len() - 1] {
+            assert!(
+                decode_cmd(&cmd[..cut]).is_err(),
+                "cmd truncated at {cut} decoded silently"
+            );
+        }
+    }
+}

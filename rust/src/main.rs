@@ -6,6 +6,8 @@
 //!   memory   print the analytic per-GPU memory table (Table 1 / §1)
 //!   svd      time full vs randomized SVD (§4.1.2's 15× claim)
 //!   presets  list model presets
+//!   worker   (internal) one process-transport rank — the coordinator
+//!            self-execs this binary per rank under `--transport process`
 //!
 //! Examples:
 //!   galore2 train --config configs/nano-galore.toml --steps 100
@@ -32,6 +34,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "memory" => cmd_memory(&args),
         "svd" => cmd_svd(&args),
+        "worker" => cmd_worker(&args),
         "presets" => {
             for name in LlamaCfg::preset_names() {
                 let c = LlamaCfg::preset(name).unwrap();
@@ -66,13 +69,15 @@ USAGE: galore2 <train|eval|memory|svd|presets> [flags]
           --weight-decay W --rank R --update-freq T --alpha A
           --projection KIND --moments keep|reset|project
           --parallel single|fsdp|ddp --world N --threads N
+          --transport threads|process (worker fabric for fsdp/ddp)
           --engine native|pjrt --eval-batches N
-          --resume CKPT (elastic: any source mode/world)
+          --resume CKPT (elastic: any source mode/world/transport)
           [--save-final] [--eval-downstream]
   eval    --config FILE --checkpoint CKPT [--questions N]
   memory  --preset P [--seq N] [--world N]
   svd     [--m N] [--n N] [--rank R] [--iters K]
-  presets";
+  presets
+  worker  (internal) --mode fsdp|ddp --rank N --world N --endpoint PATH";
 
 fn load_cfg(args: &Args) -> Result<TrainConfig> {
     let mut cfg = if let Some(path) = args.get("config") {
@@ -81,6 +86,9 @@ fn load_cfg(args: &Args) -> Result<TrainConfig> {
         TrainConfig::default()
     };
     cfg.apply_cli(args)?;
+    // Cross-field checks (e.g. --transport process needs --parallel
+    // fsdp|ddp) — fail at the flag level, before any real work.
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -98,6 +106,31 @@ fn cmd_train(args: &Args) -> Result<()> {
         coordinator::eval_params(&trainer.cfg, trainer.params(), questions)?;
     }
     Ok(())
+}
+
+/// One process-transport rank. Spawned by the coordinator (never by
+/// hand) as `galore2 worker --mode fsdp --rank 0 --world 2 --endpoint
+/// /tmp/g2w-<pid>-<n>/w.sock`; lives exactly as long as its cluster.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let mode = args
+        .get("mode")
+        .context("--mode required for worker")?
+        .to_string();
+    let rank: usize = args
+        .get("rank")
+        .context("--rank required for worker")?
+        .parse()
+        .context("--rank must be a number")?;
+    let world: usize = args
+        .get("world")
+        .context("--world required for worker")?
+        .parse()
+        .context("--world must be a number")?;
+    let endpoint = args
+        .get("endpoint")
+        .context("--endpoint required for worker")?
+        .to_string();
+    galore2::dist::run_worker(&mode, rank, world, &endpoint).map_err(|e| anyhow::anyhow!(e))
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

@@ -115,10 +115,14 @@ pub(crate) mod ser {
         }
         pub fn f32s(&mut self) -> Result<Vec<f32>, String> {
             let n = self.u64()? as usize;
-            let end = self.pos + n * 4;
-            let bytes = self.buf.get(self.pos..end).ok_or("truncated state")?;
-            self.pos = end;
-            Ok(bytes
+            // Checked: a corrupt length must error, not overflow (debug)
+            // or wrap (release) before the range check catches it.
+            let nbytes = n.checked_mul(4).ok_or("truncated state")?;
+            if nbytes > self.remaining() {
+                return Err("truncated state".into());
+            }
+            Ok(self
+                .bytes(nbytes)?
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect())
@@ -131,7 +135,7 @@ pub(crate) mod ser {
         }
         /// Raw byte slice of length `n` (nested optimizer blobs).
         pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
-            let end = self.pos + n;
+            let end = self.pos.checked_add(n).ok_or("truncated state")?;
             let bytes = self.buf.get(self.pos..end).ok_or("truncated state")?;
             self.pos = end;
             Ok(bytes)

@@ -3,10 +3,13 @@
 //! The trainer's step loop is mode-agnostic: it computes per-rank
 //! microbatch gradients through the fwd_bwd artifact and hands them to an
 //! engine, which owns the parameters (full or sharded) and the optimizer
-//! state, however it is distributed. Adding an execution mode (e.g. a
-//! shared-memory or TCP `Comm` transport, per ROADMAP) means implementing
-//! this trait — the optimizer construction matrix stays untouched because
-//! every engine builds through [`OptimizerSpec::build`].
+//! state, however it is distributed. Adding an execution mode means
+//! implementing this trait — the optimizer construction matrix stays
+//! untouched because every engine builds through [`OptimizerSpec::build`].
+//! Orthogonally, the distributed engines take a
+//! [`TransportKind`] (`--transport threads|process`) choosing whether
+//! their ranks are worker threads or Unix-socket worker processes; the
+//! trajectory is bitwise identical either way.
 //!
 //! Engines:
 //! * [`SingleEngine`] — in-process optimizer (native or PJRT-kernel).
@@ -23,7 +26,7 @@
 //! world-locked for FSDP and fail loudly on mismatch.
 
 use crate::checkpoint::canonical::CanonicalOptState;
-use crate::dist::{DdpCluster, FsdpCluster, MemoryReport, ParamMeta};
+use crate::dist::{DdpCluster, FsdpCluster, MemoryReport, ParamMeta, TransportKind};
 use crate::optim::spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};
 use crate::tensor::Matrix;
 
@@ -155,10 +158,24 @@ impl FsdpEngine {
         seed: u64,
         init: &[Matrix],
     ) -> Result<FsdpEngine, String> {
+        Self::with_transport(world, metas, spec, seed, init, TransportKind::Threads)
+    }
+
+    /// [`FsdpEngine::new`] with an explicit worker transport
+    /// (`--transport threads|process`). The trajectory is bitwise
+    /// identical either way (`tests/transport.rs`).
+    pub fn with_transport(
+        world: usize,
+        metas: Vec<ParamMeta>,
+        spec: OptimizerSpec,
+        seed: u64,
+        init: &[Matrix],
+        transport: TransportKind,
+    ) -> Result<FsdpEngine, String> {
         if !spec.distributed_ok() {
             return Err(format!("{} cannot run under fsdp", spec.name()));
         }
-        let cluster = FsdpCluster::new(world, metas, spec, seed);
+        let cluster = FsdpCluster::with_transport(world, metas, spec, seed, transport)?;
         cluster.init_params(init);
         Ok(FsdpEngine {
             cluster,
@@ -243,11 +260,25 @@ impl DdpEngine {
         seed: u64,
         init: &[Matrix],
     ) -> Result<DdpEngine, String> {
+        Self::with_transport(world, metas, spec, seed, init, TransportKind::Threads)
+    }
+
+    /// [`DdpEngine::new`] with an explicit worker transport
+    /// (`--transport threads|process`). The trajectory is bitwise
+    /// identical either way (`tests/transport.rs`).
+    pub fn with_transport(
+        world: usize,
+        metas: Vec<ParamMeta>,
+        spec: OptimizerSpec,
+        seed: u64,
+        init: &[Matrix],
+        transport: TransportKind,
+    ) -> Result<DdpEngine, String> {
         if !spec.distributed_ok() {
             return Err(format!("{} cannot run under ddp", spec.name()));
         }
         let codec = spec.state_codec(false);
-        let cluster = DdpCluster::new(world, metas, spec, seed);
+        let cluster = DdpCluster::with_transport(world, metas, spec, seed, transport)?;
         cluster.init_params(init);
         Ok(DdpEngine {
             cluster,

@@ -64,6 +64,9 @@ pub struct TrainOutcome {
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        // Cross-field validation first — a bad flag combination must not
+        // cost an artifact load or corpus synthesis before erroring.
+        cfg.validate()?;
         // Pin the compute pool before any kernel runs; 0 keeps auto-detect.
         crate::parallel::set_default_threads(cfg.threads);
         let llama = LlamaCfg::preset(&cfg.preset)
@@ -138,12 +141,26 @@ impl Trainer {
                 )
             }
             ParallelMode::Fsdp => Box::new(
-                FsdpEngine::new(cfg.world.max(1), metas, spec, cfg.seed, &params)
-                    .map_err(anyhow::Error::msg)?,
+                FsdpEngine::with_transport(
+                    cfg.world.max(1),
+                    metas,
+                    spec,
+                    cfg.seed,
+                    &params,
+                    cfg.transport,
+                )
+                .map_err(anyhow::Error::msg)?,
             ),
             ParallelMode::Ddp => Box::new(
-                DdpEngine::new(cfg.world.max(1), metas, spec, cfg.seed, &params)
-                    .map_err(anyhow::Error::msg)?,
+                DdpEngine::with_transport(
+                    cfg.world.max(1),
+                    metas,
+                    spec,
+                    cfg.seed,
+                    &params,
+                    cfg.transport,
+                )
+                .map_err(anyhow::Error::msg)?,
             ),
         };
 
@@ -322,6 +339,7 @@ impl Trainer {
         let path = self.checkpoint_path(step);
         Checkpoint {
             step,
+            tokens_seen: Some(self.tokens_seen),
             names: self
                 .manifest
                 .params
@@ -360,16 +378,14 @@ impl Trainer {
             .import_state(&ckpt.opt_state)
             .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
         self.start_step = ckpt.step;
-        // Telemetry continuity: each step consumes exactly world×batch×seq
-        // tokens, so for a same-world resume this reconstructs the exact
-        // counter the run left off with. An ELASTIC resume uses the NEW
-        // world here — the source world isn't recorded in the checkpoint —
-        // so the token axis is rescaled to this run's consumption rate
-        // (approximation noted in ROADMAP: store tokens_seen in a v4
-        // checkpoint field to make it exact).
-        self.tokens_seen = ckpt.step
-            * self.engine.world() as u64
-            * self.loader.tokens_per_batch() as u64;
+        // Telemetry continuity: v4 checkpoints record the exact counter,
+        // so even an ELASTIC resume (different world, hence different
+        // tokens-per-step) reports the true token axis. Pre-v4 files
+        // don't carry it; reconstruct from THIS run's consumption rate —
+        // exact for a same-world resume, a documented rescaling otherwise.
+        self.tokens_seen = ckpt.tokens_seen.unwrap_or_else(|| {
+            ckpt.step * self.engine.world() as u64 * self.loader.tokens_per_batch() as u64
+        });
         Ok(ckpt.step)
     }
 

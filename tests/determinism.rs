@@ -6,7 +6,7 @@
 //! full FSDP training run must produce identical bits at 1, 2 and 4
 //! worker threads.
 
-use galore2::dist::{FsdpCluster, OptimizerSpec};
+use galore2::dist::{set_worker_binary, FsdpCluster, OptimizerSpec, TransportKind};
 use galore2::linalg::{randomized_svd, RandSvdOpts};
 use galore2::optim::{AdamCfg, GaLoreCfg};
 use galore2::parallel;
@@ -93,6 +93,10 @@ fn cluster_shapes() -> Vec<(usize, usize)> {
 /// Full FSDP GaLore run at a given worker-pool thread count (model/grad
 /// builders shared with the other suites via `testing::fixtures`).
 fn run_fsdp_galore(pool_threads: usize) -> Vec<Matrix> {
+    run_fsdp_galore_over(pool_threads, TransportKind::Threads)
+}
+
+fn run_fsdp_galore_over(pool_threads: usize, transport: TransportKind) -> Vec<Matrix> {
     parallel::set_default_threads(pool_threads);
     let world = 2;
     let shapes = cluster_shapes();
@@ -105,7 +109,9 @@ fn run_fsdp_galore(pool_threads: usize) -> Vec<Matrix> {
         },
         adam: AdamCfg::default(),
     };
-    let mut cluster = FsdpCluster::new(world, fixtures::metas_for(&shapes), spec, 33);
+    let mut cluster =
+        FsdpCluster::with_transport(world, fixtures::metas_for(&shapes), spec, 33, transport)
+            .unwrap_or_else(|e| panic!("spawning fsdp cluster over {}: {e}", transport.name()));
     let init = fixtures::randn_set(&shapes, 0.1, 2, 0);
     cluster.init_params(&init);
     for t in 0..4 {
@@ -142,5 +148,21 @@ fn fsdp_run_is_reproducible_across_repeats() {
     let b = run_fsdp_galore(0);
     for (idx, (x, y)) in a.iter().zip(&b).enumerate() {
         assert_eq!(x.data, y.data, "param {idx}: repeat run diverged");
+    }
+}
+
+#[test]
+fn fsdp_process_transport_bitwise_equals_threads() {
+    let _g = lock();
+    // The same run with ranks as Unix-socket worker PROCESSES instead of
+    // threads — at SVD-refresh-heavy settings (update_freq 2), so the
+    // leader's randomized SVD, the projector broadcast wire, and the
+    // sharded low-rank Adam all cross the socket fabric. Bits must not
+    // notice (the f32 wire ships exact little-endian bit patterns).
+    set_worker_binary(env!("CARGO_BIN_EXE_galore2"));
+    let threads = run_fsdp_galore(0);
+    let process = run_fsdp_galore_over(0, TransportKind::Process);
+    for (idx, (x, y)) in threads.iter().zip(&process).enumerate() {
+        assert_eq!(x.data, y.data, "param {idx}: transports diverged");
     }
 }

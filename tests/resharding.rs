@@ -1,6 +1,6 @@
 //! Cross-world parity: the elastic-resume contract.
 //!
-//! A v3 checkpoint stores optimizer state in the canonical, world-agnostic
+//! A v3+ checkpoint stores optimizer state in the canonical, world-agnostic
 //! form (`checkpoint::canonical`). These tests pin the contract end to
 //! end at the engine level, with no compiled artifacts needed:
 //!
@@ -14,7 +14,7 @@
 //!   empty shards;
 //! * legacy (v2) world-locked state and corrupt blobs fail loudly, never
 //!   silently resetting moments; loading a v2 checkpoint at its original
-//!   world and re-saving migrates it to v3.
+//!   world and re-saving migrates it to the current (canonical) version.
 //!
 //! Identical per-rank microbatch gradients make trajectories bitwise
 //! comparable across worlds 1/2/4 (the tree-reduced average of w equal
@@ -26,7 +26,7 @@
 
 use galore2::checkpoint::canonical::CanonicalOptState;
 use galore2::checkpoint::{Checkpoint, LEGACY_VERSION};
-use galore2::dist::FsdpCluster;
+use galore2::dist::{set_worker_binary, FsdpCluster, TransportKind};
 use galore2::optim::{AdamCfg, GaLoreCfg, OptimizerSpec, ProjectionKind};
 use galore2::tensor::Matrix;
 use galore2::testing::fixtures;
@@ -420,12 +420,12 @@ fn legacy_v2_state_is_world_locked_with_actionable_error() {
 }
 
 #[test]
-fn v2_checkpoint_migrates_to_v3_and_unlocks_elastic_resume() {
+fn v2_checkpoint_migrates_to_canonical_and_unlocks_elastic_resume() {
     // Load a legacy (v2) checkpoint at its original world, re-save — the
-    // new file is v3 canonical and resumes at any world.
+    // new file carries canonical (v3+) state and resumes at any world.
     let dir = std::env::temp_dir().join(format!("galore2_resharding_{}", std::process::id()));
     let v2_path = dir.join("legacy_v2.ckpt");
-    let v3_path = dir.join("migrated_v3.ckpt");
+    let migrated_path = dir.join("migrated.ckpt");
     let spec = galore_spec();
     let names: Vec<String> = fixtures::metas_for(SHAPES)
         .iter()
@@ -440,6 +440,7 @@ fn v2_checkpoint_migrates_to_v3_and_unlocks_elastic_resume() {
     }
     Checkpoint {
         step: 6,
+        tokens_seen: None,
         names: names.clone(),
         params: cluster.gather_params(),
         opt_state: cluster.export_optimizers(),
@@ -447,37 +448,103 @@ fn v2_checkpoint_migrates_to_v3_and_unlocks_elastic_resume() {
     .save_with_version(&v2_path, LEGACY_VERSION)
     .unwrap();
 
-    // Migrate: load v2, resume at the ORIGINAL world, save → v3.
+    // Migrate: load v2, resume at the ORIGINAL world, save → current version.
     let v2 = Checkpoint::load(&v2_path).unwrap();
     let mut migrator = build("fsdp", 2, SHAPES, &spec, 999);
     migrator.init_params(&v2.params);
     migrator.import_state(&v2.opt_state).unwrap();
     Checkpoint {
         step: v2.step,
+        tokens_seen: None,
         names,
         params: migrator.params().to_vec(),
         opt_state: migrator.export_state(),
     }
-    .save(&v3_path)
+    .save(&migrated_path)
     .unwrap();
 
     // The migrated file is canonical and resumes at a DIFFERENT world,
     // bitwise on the uninterrupted single-process trajectory.
-    let v3 = Checkpoint::load(&v3_path).unwrap();
+    let migrated = Checkpoint::load(&migrated_path).unwrap();
     assert!(
-        CanonicalOptState::sniff(&v3.opt_state),
+        CanonicalOptState::sniff(&migrated.opt_state),
         "migrated checkpoint must carry canonical state"
     );
     let mut reference = build("single", 1, SHAPES, &spec, SEED);
     drive(reference.as_mut(), SHAPES, 0, 12);
     let mut elastic = build("fsdp", 4, SHAPES, &spec, 999);
-    elastic.init_params(&v3.params);
-    elastic.import_state(&v3.opt_state).unwrap();
-    drive(elastic.as_mut(), SHAPES, v3.step, 12);
+    elastic.init_params(&migrated.params);
+    elastic.import_state(&migrated.opt_state).unwrap();
+    drive(elastic.as_mut(), SHAPES, migrated.step, 12);
     assert_params_eq(
         elastic.params(),
         reference.params(),
-        "migrated v3 elastic resume",
+        "migrated elastic resume",
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn process_transport_checkpoint_resumes_elastically_across_transports() {
+    // The canonical form is transport-independent by construction: a
+    // checkpoint produced by Unix-socket worker PROCESSES (FSDP world=2)
+    // exports the exact bytes a threaded source would, and resumes under
+    // threaded FSDP(4), a process-transport DDP(2), and single-process —
+    // all bitwise on the uninterrupted single-process trajectory.
+    set_worker_binary(env!("CARGO_BIN_EXE_galore2"));
+    let spec = galore_spec();
+    let mut reference = build("single", 1, SHAPES, &spec, SEED);
+    drive(reference.as_mut(), SHAPES, 0, 12);
+
+    let metas = fixtures::metas_for(SHAPES);
+    let mut src: Box<dyn TrainEngine> = Box::new(
+        FsdpEngine::with_transport(
+            2,
+            metas.clone(),
+            spec.clone(),
+            SEED,
+            &init(SHAPES),
+            TransportKind::Process,
+        )
+        .unwrap(),
+    );
+    drive(src.as_mut(), SHAPES, 0, 7);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+
+    // Same boundary, threaded source: byte-identical canonical export.
+    let mut threaded = build("fsdp", 2, SHAPES, &spec, SEED);
+    drive(threaded.as_mut(), SHAPES, 0, 7);
+    assert_eq!(
+        blob,
+        threaded.export_state(),
+        "canonical bytes must not depend on the transport"
+    );
+
+    let targets: Vec<(&str, Box<dyn TrainEngine>)> = vec![
+        ("threads fsdp(4)", build("fsdp", 4, SHAPES, &spec, 999)),
+        ("threads single", build("single", 1, SHAPES, &spec, 999)),
+        (
+            "process ddp(2)",
+            Box::new(
+                DdpEngine::with_transport(
+                    2,
+                    metas,
+                    spec.clone(),
+                    999,
+                    &init(SHAPES),
+                    TransportKind::Process,
+                )
+                .unwrap(),
+            ),
+        ),
+    ];
+    for (label, mut target) in targets {
+        target.init_params(&snapshot);
+        target
+            .import_state(&blob)
+            .unwrap_or_else(|e| panic!("{label} import: {e}"));
+        drive(target.as_mut(), SHAPES, 7, 12);
+        assert_params_eq(target.params(), reference.params(), label);
+    }
 }
