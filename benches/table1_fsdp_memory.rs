@@ -105,6 +105,12 @@ fn main() -> anyhow::Result<()> {
         human_bytes(optimizer_state_bytes(OptimKind::GaLore { rank: r }, m, n))
     );
     println!(
+        // Q-GaLore charges the STORED projector: mr int8 codes + one f32
+        // absmax scale per 256-element block (matches Projector::nbytes).
+        "QGaLore mr·1+2nr·4= {}",
+        human_bytes(optimizer_state_bytes(OptimKind::QGaLore { rank: r }, m, n))
+    );
+    println!(
         "LoRA   3(m+n)r·4  = {}",
         human_bytes(optimizer_state_bytes(OptimKind::Lora { rank: r }, m, n))
     );
@@ -114,6 +120,9 @@ fn main() -> anyhow::Result<()> {
         (ParallelMode::Fsdp, "adamw"),
         (ParallelMode::Fsdp, "adam8bit"),
         (ParallelMode::Fsdp, "galore"),
+        // Quantized projector: the optim column reports the stored
+        // (codes + scales) size via state_bytes/Projector::nbytes.
+        (ParallelMode::Fsdp, "qgalore"),
         (ParallelMode::Ddp, "galore"),
     ] {
         let cfg = TrainConfig {

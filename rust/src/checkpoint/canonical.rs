@@ -28,12 +28,33 @@
 //! the re-shardable optimizers (AdamW, SGDM, GaLore, Q-GaLore) the
 //! canonical bytes are *identical* no matter which mode or world exported
 //! them — `tests/resharding.rs` pins both properties.
+//!
+//! **Quantized canonical state (checkpoint v5).** Optimizers whose stored
+//! representation is not plain f32 get a third, *typed* flavor:
+//!
+//! * **Quantized** — the optimizer's stored representation carried as
+//!   [`CanonicalTensor`]s (f32 vectors or exact codes+block-scales via the
+//!   `quant` codec). Adam8bit's block-quantized moments live here: an FSDP
+//!   export whose shard boundaries all land on 256-element quantization
+//!   blocks gathers EXACTLY into the same bytes a single-process run would
+//!   export, and re-slices exactly for any block-aligned target world.
+//!   Adafactor's factored accumulators ride as f32 tensors from
+//!   single/DDP exports.
+//!
+//! Geometries that cannot be re-sliced exactly (misaligned quant blocks,
+//! factored cross-statistics, a different per-rank world) stay available
+//! behind an **explicit, loud opt-in** — [`ImportOpts::requantize`]
+//! (`--resume-requantize`): moments are dequantized, re-sliced, and
+//! re-quantized (adam8bit), or the factored cross-statistic is merged /
+//! replicated (adafactor). Without the opt-in those imports FAIL with an
+//! actionable error; they never silently approximate.
 
 use crate::dist::{shard_axis, shard_bounds, ParamMeta, ShardAxis};
-use crate::optim::ser::{push_f32s, push_u64, Reader};
+use crate::optim::ser::{push_f32s, push_u64, Reader, STATE_MAGIC2};
+use crate::quant::{Quantized8, StoredTensor, BLOCK};
 use crate::util::rng::Pcg64;
 
-/// Header identifying a canonical optimizer-state blob (v3 checkpoints).
+/// Header identifying a canonical optimizer-state blob (v3+ checkpoints).
 /// Legacy (v2) payloads — raw single-process blobs or FSDP `[world]`-framed
 /// blobs — never start with these bytes (they begin with a small
 /// little-endian counter), so [`CanonicalOptState::sniff`] is unambiguous.
@@ -41,18 +62,108 @@ pub const MAGIC: &[u8; 8] = b"GAL2OPT\x01";
 
 const FLAVOR_FULL: u64 = 0;
 const FLAVOR_PER_RANK: u64 = 1;
+const FLAVOR_QUANTIZED: u64 = 2;
 
 /// Optimizer names whose state the canonical form can re-slice for an
-/// arbitrary FSDP world.
+/// arbitrary FSDP world, bitwise. (`adam8bit` additionally re-slices
+/// bitwise for *block-aligned* worlds, and every optimizer re-slices
+/// approximately behind [`ImportOpts::requantize`].)
 pub const RESHARDABLE: &[&str] = &["adamw", "sgdm", "galore", "qgalore"];
+
+/// Resume-time import policy, plumbed from `--resume-requantize` /
+/// `[train] resume_requantize` through [`crate::train::TrainEngine`].
+///
+/// With `requantize: false` (the default) every import is either bitwise
+/// exact or a loud error. With `requantize: true` the lossy conversions
+/// are allowed — and announced on stderr — for state that cannot be
+/// re-sliced exactly: re-blocking quantized moments across misaligned
+/// shard boundaries, and merging/replicating Adafactor's factored
+/// cross-statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ImportOpts {
+    pub requantize: bool,
+}
+
+impl ImportOpts {
+    /// The opt-in policy (`--resume-requantize`).
+    pub fn requantize() -> ImportOpts {
+        ImportOpts { requantize: true }
+    }
+}
+
+/// One stored tensor inside the [`OptPayload::Quantized`] flavor: either a
+/// plain f32 vector or exact block-quantized codes + scales (the `quant`
+/// codec's dynamic-8-bit layout, which is what Adam8bit stores).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CanonicalTensor {
+    F32(Vec<f32>),
+    Q8(Quantized8),
+}
+
+const CT_F32: u8 = 0;
+const CT_Q8: u8 = 1;
+
+impl CanonicalTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            CanonicalTensor::F32(xs) => xs.len(),
+            CanonicalTensor::Q8(q) => q.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dequantized values (f32 passes through untouched).
+    pub fn values(&self) -> Vec<f32> {
+        match self {
+            CanonicalTensor::F32(xs) => xs.clone(),
+            CanonicalTensor::Q8(q) => q.dequantize(),
+        }
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            CanonicalTensor::F32(xs) => {
+                out.push(CT_F32);
+                push_f32s(out, xs);
+            }
+            CanonicalTensor::Q8(q) => {
+                out.push(CT_Q8);
+                q.encode(out);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader) -> Result<CanonicalTensor, String> {
+        match r.bytes(1)?[0] {
+            CT_F32 => Ok(CanonicalTensor::F32(r.f32s()?)),
+            CT_Q8 => Ok(CanonicalTensor::Q8(Quantized8::decode(r)?)),
+            other => Err(format!("canonical tensor: unknown storage tag {other}")),
+        }
+    }
+}
+
+/// Per-parameter states of the [`OptPayload::Quantized`] flavor, in
+/// ascending parameter-index order (matching the optimizers' BTreeMap
+/// iteration, so re-serialization is byte-stable).
+pub type QuantStates = Vec<(usize, Vec<CanonicalTensor>)>;
 
 /// The payload of a canonical optimizer state.
 #[derive(Clone, Debug, PartialEq)]
 pub enum OptPayload {
     /// World-agnostic full-tensor blob in the single-process format.
     Full(Vec<u8>),
-    /// World-locked raw per-rank frames (non-re-shardable optimizers).
+    /// World-locked raw per-rank frames (state whose exact gather is not
+    /// representable world-agnostically: misaligned quantized moments,
+    /// factored accumulators under FSDP).
     PerRank { frames: Vec<Vec<u8>> },
+    /// Typed stored-representation states (v5): full-tensor
+    /// [`CanonicalTensor`]s per parameter plus the optimizer's step
+    /// counter. Adam8bit: `[m, v]` quantized moments; Adafactor:
+    /// `[row, col]` f32 accumulators.
+    Quantized { t: u64, states: QuantStates },
 }
 
 /// A checkpoint's optimizer state, normalized away from the execution mode
@@ -87,24 +198,42 @@ impl CanonicalOptState {
     /// `name`: "qgalore"-named state is canonically Q-GaLore-framed even
     /// when the exporting optimizer was a concrete `GaLore` holding the
     /// raw layout (the quantized-projector GaLore spec, whose name is
-    /// also "qgalore").
+    /// also "qgalore"), and the "adam8bit"/"adafactor" codecs parse into
+    /// the typed [`OptPayload::Quantized`] flavor (legacy dequantized
+    /// adam8bit blobs stay opaque [`OptPayload::Full`], bit-preserving).
     ///
     /// [`OptimizerSpec::state_codec`]: crate::optim::OptimizerSpec::state_codec
-    pub fn from_full(name: &str, codec: &str, blob: Vec<u8>) -> CanonicalOptState {
-        let blob = if name == "qgalore" && codec == "galore" {
-            wrap_qgalore(blob)
-        } else {
-            blob
+    pub fn from_full(name: &str, codec: &str, blob: Vec<u8>) -> Result<CanonicalOptState, String> {
+        let payload = match codec {
+            "adam8bit" if sniff_magic2(&blob) => {
+                let (t, states) = parse_adam8bit(&blob)?;
+                OptPayload::Quantized { t, states }
+            }
+            "adafactor" => {
+                let (t, states) = parse_adafactor(&blob)?;
+                OptPayload::Quantized { t, states }
+            }
+            "galore" if name == "qgalore" => OptPayload::Full(wrap_qgalore(blob)),
+            _ => OptPayload::Full(blob),
         };
-        CanonicalOptState::full(name, blob)
+        Ok(CanonicalOptState {
+            name: name.to_string(),
+            payload,
+        })
     }
 
     /// The full-tensor blob converted to the importing optimizer's
     /// `codec` layout (the lazy-gate state is dropped when a framed
     /// "qgalore" blob feeds a concrete `GaLore`, mirroring FSDP's inert
-    /// gate).
-    pub fn to_full_for(&self, codec: &str) -> Result<Vec<u8>, String> {
-        let blob = self.to_full()?;
+    /// gate). `metas` + `opts` feed the [`CanonicalOptState::to_full`]
+    /// conversion paths.
+    pub fn to_full_for(
+        &self,
+        codec: &str,
+        metas: &[ParamMeta],
+        opts: ImportOpts,
+    ) -> Result<Vec<u8>, String> {
+        let blob = self.to_full(metas, opts)?;
         if self.name == "qgalore" && codec == "galore" {
             unwrap_qgalore(&blob)
         } else {
@@ -129,6 +258,18 @@ impl CanonicalOptState {
                 for f in frames {
                     push_u64(&mut out, f.len() as u64);
                     out.extend_from_slice(f);
+                }
+            }
+            OptPayload::Quantized { t, states } => {
+                push_u64(&mut out, FLAVOR_QUANTIZED);
+                push_u64(&mut out, *t);
+                push_u64(&mut out, states.len() as u64);
+                for (idx, tensors) in states {
+                    push_u64(&mut out, *idx as u64);
+                    push_u64(&mut out, tensors.len() as u64);
+                    for tensor in tensors {
+                        tensor.encode(&mut out);
+                    }
                 }
             }
         }
@@ -169,6 +310,34 @@ impl CanonicalOptState {
                 }
                 OptPayload::PerRank { frames }
             }
+            FLAVOR_QUANTIZED => {
+                let t = r.u64()?;
+                let n = r.u64()? as usize;
+                // Each state is at least [idx][ntensors]: bound before
+                // allocating.
+                if n > r.remaining() / 16 {
+                    return Err(format!(
+                        "canonical state: quantized state count {n} exceeds blob size"
+                    ));
+                }
+                let mut states = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let idx = r.u64()? as usize;
+                    let k = r.u64()? as usize;
+                    // Each tensor is at least a tag + one u64 header.
+                    if k > r.remaining() / 9 {
+                        return Err(format!(
+                            "canonical state: tensor count {k} exceeds blob size"
+                        ));
+                    }
+                    let mut tensors = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        tensors.push(CanonicalTensor::decode(&mut r)?);
+                    }
+                    states.push((idx, tensors));
+                }
+                OptPayload::Quantized { t, states }
+            }
             other => return Err(format!("canonical state: unknown flavor {other}")),
         };
         Ok(CanonicalOptState { name, payload })
@@ -190,8 +359,13 @@ impl CanonicalOptState {
     /// Gather per-rank FSDP worker frames into the canonical form. For
     /// re-shardable optimizers (see [`RESHARDABLE`]) the result is the
     /// world-agnostic [`OptPayload::Full`] blob — byte-identical to what a
-    /// single-process run would export; everything else is kept
-    /// [`OptPayload::PerRank`] (world-locked).
+    /// single-process run would export. Adam8bit gathers into the typed
+    /// [`OptPayload::Quantized`] flavor when every shard boundary lands on
+    /// a quantization-block boundary (then also byte-identical to the
+    /// single-process export); everything else — misaligned adam8bit,
+    /// adafactor's rank-local factored statistics — is kept
+    /// [`OptPayload::PerRank`] (lossless, world-locked without the
+    /// [`ImportOpts::requantize`] opt-in).
     pub fn from_fsdp_frames(
         name: &str,
         frames: Vec<Vec<u8>>,
@@ -202,6 +376,7 @@ impl CanonicalOptState {
             "qgalore" => OptPayload::Full(wrap_qgalore(gather_galore(&frames, metas)?)),
             "adamw" => OptPayload::Full(gather_moments(&frames, metas, 2)?),
             "sgdm" => OptPayload::Full(gather_moments(&frames, metas, 1)?),
+            "adam8bit" => gather_adam8bit(frames, metas)?,
             _ => OptPayload::PerRank { frames },
         };
         Ok(CanonicalOptState {
@@ -212,28 +387,56 @@ impl CanonicalOptState {
 
     /// Re-slice the canonical form into per-rank FSDP worker frames for a
     /// target world. Fails loudly — without touching any worker state —
-    /// when the state cannot be represented at that world.
+    /// when the state cannot be represented exactly at that world and the
+    /// lossy conversion was not opted into ([`ImportOpts::requantize`]).
     pub fn fsdp_frames(
         &self,
         world: usize,
         metas: &[ParamMeta],
+        opts: ImportOpts,
     ) -> Result<Vec<Vec<u8>>, String> {
         match &self.payload {
             OptPayload::PerRank { frames } => {
                 if frames.len() == world {
                     Ok(frames.clone())
                 } else {
-                    Err(format!(
-                        "{} optimizer state was captured per-rank at world={} and \
-                         cannot be re-sliced to world={world}; resume with --world {} \
-                         or train with a re-shardable optimizer ({})",
-                        self.name,
-                        frames.len(),
-                        frames.len(),
-                        RESHARDABLE.join(", ")
-                    ))
+                    match self.name.as_str() {
+                        "adam8bit" if opts.requantize => {
+                            let (t, states) = merge_adam8bit_frames(frames, metas)?;
+                            scatter_adam8bit(t, &states, world, metas, opts)
+                        }
+                        "adafactor" if opts.requantize => {
+                            let (t, states) = merge_adafactor_frames(frames, metas)?;
+                            scatter_adafactor(t, &states, world, metas, opts)
+                        }
+                        "adam8bit" | "adafactor" => Err(format!(
+                            "{} optimizer state was captured per-rank at world={} and \
+                             cannot be re-sliced to world={world} exactly; resume with \
+                             --world {} for a bitwise continuation, or pass \
+                             --resume-requantize to accept an approximate re-slice",
+                            self.name,
+                            frames.len(),
+                            frames.len(),
+                        )),
+                        _ => Err(format!(
+                            "{} optimizer state was captured per-rank at world={} and \
+                             cannot be re-sliced to world={world}; resume with --world {} \
+                             or train with a re-shardable optimizer ({})",
+                            self.name,
+                            frames.len(),
+                            frames.len(),
+                            RESHARDABLE.join(", ")
+                        )),
+                    }
                 }
             }
+            OptPayload::Quantized { t, states } => match self.name.as_str() {
+                "adam8bit" => scatter_adam8bit(*t, states, world, metas, opts),
+                "adafactor" => scatter_adafactor(*t, states, world, metas, opts),
+                other => Err(format!(
+                    "unexpected quantized canonical state for optimizer {other}"
+                )),
+            },
             OptPayload::Full(blob) => match self.name.as_str() {
                 "galore" => scatter_galore(blob, world, metas),
                 "qgalore" => scatter_galore(&unwrap_qgalore(blob)?, world, metas),
@@ -246,6 +449,13 @@ impl CanonicalOptState {
                         let mut frame = dormant_svd_stream();
                         frame.extend_from_slice(blob);
                         Ok(vec![frame])
+                    } else if other == "adam8bit" {
+                        // Legacy (pre-v5) full blob: dequantized moments.
+                        let (t, states) = parse_adam8bit(blob)?;
+                        scatter_adam8bit(t, &states, world, metas, opts)
+                    } else if other == "adafactor" {
+                        let (t, states) = parse_adafactor(blob)?;
+                        scatter_adafactor(t, &states, world, metas, opts)
                     } else {
                         Err(format!(
                             "cannot re-shard {other} optimizer state across \
@@ -259,10 +469,18 @@ impl CanonicalOptState {
     }
 
     /// The full-tensor blob for a single-process or DDP (replicated)
-    /// import.
-    pub fn to_full(&self) -> Result<Vec<u8>, String> {
+    /// import, in the importing optimizer's own state layout.
+    pub fn to_full(&self, metas: &[ParamMeta], opts: ImportOpts) -> Result<Vec<u8>, String> {
         match &self.payload {
             OptPayload::Full(blob) => Ok(blob.clone()),
+            OptPayload::Quantized { t, states } => match self.name.as_str() {
+                // Full-tensor stored representations serialize exactly.
+                "adam8bit" => write_adam8bit(*t, states),
+                "adafactor" => write_adafactor(*t, states),
+                other => Err(format!(
+                    "unexpected quantized canonical state for optimizer {other}"
+                )),
+            },
             OptPayload::PerRank { frames } if frames.len() == 1 => {
                 // A world-1 FSDP frame holds the full state behind its
                 // SVD-stream prefix.
@@ -271,15 +489,34 @@ impl CanonicalOptState {
                 }
                 Ok(frames[0][Pcg64::STATE_BYTES..].to_vec())
             }
-            OptPayload::PerRank { frames } => Err(format!(
-                "{} optimizer state is world-locked (captured per-rank at \
-                 world={}); resume with --parallel fsdp --world {} or train \
-                 with a re-shardable optimizer ({})",
-                self.name,
-                frames.len(),
-                frames.len(),
-                RESHARDABLE.join(", ")
-            )),
+            OptPayload::PerRank { frames } => match self.name.as_str() {
+                "adam8bit" if opts.requantize => {
+                    let (t, states) = merge_adam8bit_frames(frames, metas)?;
+                    write_adam8bit(t, &states)
+                }
+                "adafactor" if opts.requantize => {
+                    let (t, states) = merge_adafactor_frames(frames, metas)?;
+                    write_adafactor(t, &states)
+                }
+                "adam8bit" | "adafactor" => Err(format!(
+                    "{} optimizer state is world-locked (captured per-rank at \
+                     world={}); resume with --parallel fsdp --world {} for a \
+                     bitwise continuation, or pass --resume-requantize to accept \
+                     an approximate gathered import",
+                    self.name,
+                    frames.len(),
+                    frames.len(),
+                )),
+                _ => Err(format!(
+                    "{} optimizer state is world-locked (captured per-rank at \
+                     world={}); resume with --parallel fsdp --world {} or train \
+                     with a re-shardable optimizer ({})",
+                    self.name,
+                    frames.len(),
+                    frames.len(),
+                    RESHARDABLE.join(", ")
+                )),
+            },
         }
     }
 }
@@ -391,6 +628,12 @@ fn concat_vecs(
 // GaLore state codec (format defined by `optim::galore::export_state`)
 // ---------------------------------------------------------------------------
 
+/// Whether a blob leads with the stored-representation format gate
+/// (`optim::ser::STATE_MAGIC2`); legacy blobs lead with a small counter.
+fn sniff_magic2(bytes: &[u8]) -> bool {
+    bytes.len() >= 8 && u64::from_le_bytes(bytes[..8].try_into().unwrap()) == STATE_MAGIC2
+}
+
 enum GaloreParamState {
     Full {
         m: Vec<f32>,
@@ -399,9 +642,10 @@ enum GaloreParamState {
     LowRank {
         last_refresh: u64,
         side: u64,
-        p_rows: usize,
-        p_cols: usize,
-        p: Vec<f32>,
+        /// The projector's exact stored representation — codes + block
+        /// scales for quantized kinds. Legacy (v1) blobs parse into the
+        /// `F32` arm.
+        p: StoredTensor,
         m: Vec<f32>,
         v: Vec<f32>,
     },
@@ -416,7 +660,9 @@ struct GaloreBlob {
 
 fn parse_galore(bytes: &[u8]) -> Result<GaloreBlob, String> {
     let mut r = Reader::new(bytes);
-    let t = r.u64()?;
+    let first = r.u64()?;
+    let v2 = first == STATE_MAGIC2;
+    let t = if v2 { r.u64()? } else { first };
     let refreshes = r.u64()?;
     let rng = r.bytes(Pcg64::STATE_BYTES)?.to_vec();
     let n = r.u64()? as usize;
@@ -437,14 +683,17 @@ fn parse_galore(bytes: &[u8]) -> Result<GaloreBlob, String> {
         } else {
             let last_refresh = r.u64()?;
             let side = r.u64()?;
-            let p_rows = r.u64()? as usize;
-            let p_cols = r.u64()? as usize;
+            let p = if v2 {
+                StoredTensor::decode(&mut r)?
+            } else {
+                // v1: dequantized f32 projector behind explicit dims —
+                // one shared parser (quant) with the optimizer's own gate.
+                StoredTensor::decode_legacy_f32(&mut r)?
+            };
             GaloreParamState::LowRank {
                 last_refresh,
                 side,
-                p_rows,
-                p_cols,
-                p: r.f32s()?,
+                p,
                 m: r.f32s()?,
                 v: r.f32s()?,
             }
@@ -459,8 +708,12 @@ fn parse_galore(bytes: &[u8]) -> Result<GaloreBlob, String> {
     })
 }
 
+/// Serialize in the CURRENT (v2, stored-representation) layout — the exact
+/// bytes `optim::galore::export_state` writes; a legacy blob routed
+/// through parse∘write therefore migrates to v2.
 fn write_galore(b: &GaloreBlob) -> Vec<u8> {
     let mut out = Vec::new();
+    push_u64(&mut out, STATE_MAGIC2);
     push_u64(&mut out, b.t);
     push_u64(&mut out, b.refreshes);
     out.extend_from_slice(&b.rng);
@@ -476,8 +729,6 @@ fn write_galore(b: &GaloreBlob) -> Vec<u8> {
             GaloreParamState::LowRank {
                 last_refresh,
                 side,
-                p_rows,
-                p_cols,
                 p,
                 m,
                 v,
@@ -485,9 +736,7 @@ fn write_galore(b: &GaloreBlob) -> Vec<u8> {
                 push_u64(&mut out, 1);
                 push_u64(&mut out, *last_refresh);
                 push_u64(&mut out, *side);
-                push_u64(&mut out, *p_rows as u64);
-                push_u64(&mut out, *p_cols as u64);
-                push_f32s(&mut out, p);
+                p.encode(&mut out);
                 push_f32s(&mut out, m);
                 push_f32s(&mut out, v);
             }
@@ -586,19 +835,16 @@ fn gather_galore(frames: &[Vec<u8>], metas: &[ParamMeta]) -> Result<Vec<u8>, Str
             GaloreParamState::LowRank {
                 last_refresh,
                 side,
-                p_rows,
-                p_cols,
                 p,
                 ..
             } => {
                 // P is replicated (it spans the un-sharded dimension), so
-                // rank 0's copy IS the full projector.
-                let (lm, ln) = low_rank_shape(*side, *p_cols, meta);
+                // rank 0's copy IS the full projector — carried in its
+                // exact stored representation.
+                let (lm, ln) = low_rank_shape(*side, p.cols(), meta);
                 GaloreParamState::LowRank {
                     last_refresh: *last_refresh,
                     side: *side,
-                    p_rows: *p_rows,
-                    p_cols: *p_cols,
                     p: p.clone(),
                     m: concat_vecs(&ms, lm, ln, axis, &meta.name)?,
                     v: concat_vecs(&vs, lm, ln, axis, &meta.name)?,
@@ -652,13 +898,11 @@ fn scatter_galore(
                 GaloreParamState::LowRank {
                     last_refresh,
                     side,
-                    p_rows,
-                    p_cols,
                     p,
                     m,
                     v,
                 } => {
-                    let (lm, ln) = low_rank_shape(*side, *p_cols, meta);
+                    let (lm, ln) = low_rank_shape(*side, p.cols(), meta);
                     for (name, mom) in [("m", m), ("v", v)] {
                         if !mom.is_empty() && mom.len() != lm * ln {
                             return Err(format!(
@@ -672,8 +916,6 @@ fn scatter_galore(
                     GaloreParamState::LowRank {
                         last_refresh: *last_refresh,
                         side: *side,
-                        p_rows: *p_rows,
-                        p_cols: *p_cols,
                         p: p.clone(),
                         m: slice_vec(m, lm, ln, axis, world, rank),
                         v: slice_vec(v, lm, ln, axis, world, rank),
@@ -843,6 +1085,557 @@ fn scatter_moments(
     Ok(frames)
 }
 
+// ---------------------------------------------------------------------------
+// Adam8bit codec (format defined by `optim::adam8bit::export_state`):
+// `[STATE_MAGIC2][t][n]` then per state `[idx][q8 m][q8 v]` in the shared
+// quant block codec. Legacy (pre-v5) blobs are `[t][n]` + dequantized f32
+// moment vectors; they parse into `CanonicalTensor::F32` arms.
+// ---------------------------------------------------------------------------
+
+fn parse_adam8bit(bytes: &[u8]) -> Result<(u64, QuantStates), String> {
+    let mut r = Reader::new(bytes);
+    let first = r.u64()?;
+    let v2 = first == STATE_MAGIC2;
+    let t = if v2 { r.u64()? } else { first };
+    let n = r.u64()? as usize;
+    // Every state is at least [idx] + two tensor headers.
+    if n > r.remaining() / 24 {
+        return Err(format!("adam8bit state count {n} exceeds blob size"));
+    }
+    let mut states = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = r.u64()? as usize;
+        let (m, v) = if v2 {
+            (
+                CanonicalTensor::Q8(Quantized8::decode(&mut r)?),
+                CanonicalTensor::Q8(Quantized8::decode(&mut r)?),
+            )
+        } else {
+            (
+                CanonicalTensor::F32(r.f32s()?),
+                CanonicalTensor::F32(r.f32s()?),
+            )
+        };
+        states.push((idx, vec![m, v]));
+    }
+    Ok((t, states))
+}
+
+/// Serialize in the CURRENT (stored-representation) adam8bit layout.
+/// Requires quantized tensors — f32 moments must be quantized first (the
+/// scatter/merge paths do this under the `requantize` opt-in).
+fn write_adam8bit(t: u64, states: &QuantStates) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    push_u64(&mut out, STATE_MAGIC2);
+    push_u64(&mut out, t);
+    push_u64(&mut out, states.len() as u64);
+    for (idx, tensors) in states {
+        push_u64(&mut out, *idx as u64);
+        if tensors.len() != 2 {
+            return Err(format!(
+                "adam8bit canonical state holds {} tensors for parameter {idx}, expected 2",
+                tensors.len()
+            ));
+        }
+        for tensor in tensors {
+            match tensor {
+                CanonicalTensor::Q8(q) => q.encode(&mut out),
+                CanonicalTensor::F32(_) => {
+                    return Err(
+                        "adam8bit canonical state holds non-quantized tensors".into()
+                    )
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Flat element ranges (row-major order of the FULL tensor) that `rank`'s
+/// shard covers, in shard-local order: one contiguous run for row-sharded
+/// (tall) parameters, one run per row for column-sharded (wide) ones.
+fn shard_flat_ranges(meta: &ParamMeta, world: usize, rank: usize) -> Vec<(usize, usize)> {
+    match shard_axis(meta.rows, meta.cols) {
+        ShardAxis::Rows => {
+            let (lo, hi) = shard_bounds(meta.rows, world, rank);
+            vec![(lo * meta.cols, hi * meta.cols)]
+        }
+        ShardAxis::Cols => {
+            let (lo, hi) = shard_bounds(meta.cols, world, rank);
+            (0..meta.rows)
+                .map(|r| (r * meta.cols + lo, r * meta.cols + hi))
+                .collect()
+        }
+    }
+}
+
+/// Whether every rank's shard of this parameter decomposes into whole
+/// [`BLOCK`]-element quantization blocks of the full flattened tensor
+/// (the tensor's final partial block excepted). Exactly then do the
+/// per-rank block quantizations coincide with the full-tensor one, and
+/// block-quantized state re-slices across worlds bit-for-bit.
+fn shards_block_aligned(meta: &ParamMeta, world: usize) -> bool {
+    let total = meta.rows * meta.cols;
+    (0..world).all(|rank| {
+        shard_flat_ranges(meta, world, rank)
+            .iter()
+            .all(|&(s, e)| s == e || (s % BLOCK == 0 && (e % BLOCK == 0 || e == total)))
+    })
+}
+
+/// Slice a full-tensor block-quantized moment for one rank, EXACTLY —
+/// callers must have established block alignment via
+/// [`shards_block_aligned`].
+fn slice_q8(
+    q: &Quantized8,
+    meta: &ParamMeta,
+    world: usize,
+    rank: usize,
+) -> Result<Quantized8, String> {
+    if q.len != meta.rows * meta.cols {
+        return Err(format!(
+            "{}: canonical quantized moment has {} elements, expected {}x{}",
+            meta.name, q.len, meta.rows, meta.cols
+        ));
+    }
+    let mut codes = Vec::new();
+    let mut scales = Vec::new();
+    let mut len = 0usize;
+    for (s, e) in shard_flat_ranges(meta, world, rank) {
+        if s == e {
+            continue;
+        }
+        codes.extend_from_slice(&q.codes[s..e]);
+        scales.extend_from_slice(&q.scales[s / BLOCK..e.div_ceil(BLOCK)]);
+        len += e - s;
+    }
+    Ok(Quantized8 { codes, scales, len })
+}
+
+/// Reassemble the full-tensor block-quantized moment from per-rank
+/// shards — the exact inverse of [`slice_q8`] under block alignment.
+fn concat_q8(parts: &[&Quantized8], meta: &ParamMeta) -> Result<Quantized8, String> {
+    let total = meta.rows * meta.cols;
+    let world = parts.len();
+    let mut codes = vec![0u8; total];
+    let mut scales = vec![0f32; total.div_ceil(BLOCK)];
+    for (rank, q) in parts.iter().enumerate() {
+        let mut cpos = 0usize; // cursor into the rank's local codes
+        let mut spos = 0usize; // cursor into the rank's local scales
+        for (s, e) in shard_flat_ranges(meta, world, rank) {
+            if s == e {
+                continue;
+            }
+            let n = e - s;
+            let nb = e.div_ceil(BLOCK) - s / BLOCK;
+            if cpos + n > q.codes.len() || spos + nb > q.scales.len() {
+                return Err(format!(
+                    "{}: rank {rank} quantized moment is shorter than its shard",
+                    meta.name
+                ));
+            }
+            codes[s..e].copy_from_slice(&q.codes[cpos..cpos + n]);
+            scales[s / BLOCK..e.div_ceil(BLOCK)].copy_from_slice(&q.scales[spos..spos + nb]);
+            cpos += n;
+            spos += nb;
+        }
+        if q.len != cpos || cpos != q.codes.len() || spos != q.scales.len() {
+            return Err(format!(
+                "{}: rank {rank} quantized moment does not tile the canonical blocks",
+                meta.name
+            ));
+        }
+    }
+    Ok(Quantized8 {
+        codes,
+        scales,
+        len: total,
+    })
+}
+
+/// Parse every rank's `[svd_rng][blob]` frame with `parse` and enforce the
+/// cross-rank lockstep invariants — same step counter, same state count,
+/// same parameter order — shared by every per-rank gather/merge below.
+fn parse_rank_states(
+    frames: &[Vec<u8>],
+    parse: fn(&[u8]) -> Result<(u64, QuantStates), String>,
+) -> Result<(u64, Vec<QuantStates>), String> {
+    if frames.is_empty() {
+        return Err("no worker frames to gather".into());
+    }
+    let mut per_rank = Vec::with_capacity(frames.len());
+    for (rank, frame) in frames.iter().enumerate() {
+        let (_rng, blob) = split_frame(frame, rank)?;
+        per_rank.push(parse(blob).map_err(|e| format!("rank {rank}: {e}"))?);
+    }
+    let t = per_rank[0].0;
+    let n = per_rank[0].1.len();
+    for (rank, (rt, rs)) in per_rank.iter().enumerate() {
+        if *rt != t || rs.len() != n {
+            return Err(format!(
+                "rank {rank} optimizer state out of lockstep with rank 0"
+            ));
+        }
+    }
+    for si in 0..n {
+        let idx = per_rank[0].1[si].0;
+        for (rank, (_, rs)) in per_rank.iter().enumerate() {
+            if rs[si].0 != idx {
+                return Err(format!(
+                    "rank {rank}: state {si} is for parameter {}, rank 0 has {idx}",
+                    rs[si].0
+                ));
+            }
+        }
+    }
+    Ok((t, per_rank.into_iter().map(|(_, rs)| rs).collect()))
+}
+
+/// Gather per-rank Adam8bit frames. Exact — producing the typed
+/// [`OptPayload::Quantized`] flavor, byte-identical to a single-process
+/// export — when every sharded parameter is block-aligned and every rank
+/// exported the stored (v2) representation; otherwise the lossless
+/// world-locked [`OptPayload::PerRank`] fallback.
+fn gather_adam8bit(frames: Vec<Vec<u8>>, metas: &[ParamMeta]) -> Result<OptPayload, String> {
+    let (t, per_rank) = parse_rank_states(&frames, parse_adam8bit)?;
+    let world = frames.len();
+    let aligned = per_rank[0].iter().all(|(idx, _)| {
+        metas
+            .get(*idx)
+            .map_or(false, |m| shards_block_aligned(m, world))
+    }) && per_rank.iter().all(|rs| {
+        rs.iter()
+            .all(|(_, ts)| ts.iter().all(|ct| matches!(ct, CanonicalTensor::Q8(_))))
+    });
+    if !aligned {
+        return Ok(OptPayload::PerRank { frames });
+    }
+    let mut states = Vec::with_capacity(per_rank[0].len());
+    for si in 0..per_rank[0].len() {
+        let idx = per_rank[0][si].0;
+        let meta = meta_for(metas, idx)?;
+        let mut tensors = Vec::with_capacity(2);
+        for k in 0..2 {
+            let mut parts = Vec::with_capacity(world);
+            for rs in &per_rank {
+                match &rs[si].1[k] {
+                    CanonicalTensor::Q8(q) => parts.push(q),
+                    CanonicalTensor::F32(_) => unreachable!("alignment check ensured Q8"),
+                }
+            }
+            tensors.push(CanonicalTensor::Q8(concat_q8(&parts, meta)?));
+        }
+        states.push((idx, tensors));
+    }
+    Ok(OptPayload::Quantized { t, states })
+}
+
+/// Re-slice full-tensor Adam8bit state into per-rank frames: EXACT (codes
+/// + scales sliced along quant-block boundaries) when the geometry is
+/// block-aligned and the state is quantized; otherwise a LOSSY
+/// dequantize→slice→requantize, gated on [`ImportOpts::requantize`] and
+/// announced on stderr.
+fn scatter_adam8bit(
+    t: u64,
+    states: &QuantStates,
+    world: usize,
+    metas: &[ParamMeta],
+    opts: ImportOpts,
+) -> Result<Vec<Vec<u8>>, String> {
+    let exact = states.iter().all(|(idx, tensors)| {
+        metas
+            .get(*idx)
+            .map_or(false, |m| shards_block_aligned(m, world))
+            && tensors
+                .iter()
+                .all(|ct| matches!(ct, CanonicalTensor::Q8(_)))
+    });
+    if !exact && !opts.requantize {
+        return Err(format!(
+            "adam8bit optimizer state cannot be re-sliced exactly for world={world}: \
+             shard boundaries do not align with the {BLOCK}-element quantization \
+             blocks (or the checkpoint predates stored-representation state); pass \
+             --resume-requantize to accept a lossy re-quantized import"
+        ));
+    }
+    if !exact {
+        eprintln!(
+            "[resume] re-quantizing adam8bit moments for world={world} \
+             (lossy; opted in via --resume-requantize)"
+        );
+    }
+    let mut frames = Vec::with_capacity(world);
+    for rank in 0..world {
+        let mut sliced: QuantStates = Vec::with_capacity(states.len());
+        for (idx, tensors) in states {
+            let meta = meta_for(metas, *idx)?;
+            let axis = shard_axis(meta.rows, meta.cols);
+            let mut out_tensors = Vec::with_capacity(tensors.len());
+            for tensor in tensors {
+                let q = if exact {
+                    match tensor {
+                        CanonicalTensor::Q8(q) => slice_q8(q, meta, world, rank)?,
+                        CanonicalTensor::F32(_) => unreachable!("exact implies Q8"),
+                    }
+                } else {
+                    let full = tensor.values();
+                    if full.len() != meta.rows * meta.cols {
+                        return Err(format!(
+                            "{}: canonical moment has {} elements, expected {}x{}",
+                            meta.name,
+                            full.len(),
+                            meta.rows,
+                            meta.cols
+                        ));
+                    }
+                    Quantized8::quantize(&slice_vec(
+                        &full, meta.rows, meta.cols, axis, world, rank,
+                    ))
+                };
+                out_tensors.push(CanonicalTensor::Q8(q));
+            }
+            sliced.push((*idx, out_tensors));
+        }
+        let mut frame = dormant_svd_stream();
+        frame.extend_from_slice(&write_adam8bit(t, &sliced)?);
+        frames.push(frame);
+    }
+    Ok(frames)
+}
+
+/// Merge world-locked per-rank Adam8bit frames into full-tensor state
+/// (requantize opt-in): shards are dequantized, reassembled, and the full
+/// tensor re-quantized with full-tensor blocks.
+fn merge_adam8bit_frames(
+    frames: &[Vec<u8>],
+    metas: &[ParamMeta],
+) -> Result<(u64, QuantStates), String> {
+    let (t, per_rank) = parse_rank_states(frames, parse_adam8bit)?;
+    let world = frames.len();
+    eprintln!(
+        "[resume] merging adam8bit moments captured per-rank at world={world} \
+         (re-quantized with full-tensor blocks; opted in via --resume-requantize)"
+    );
+    let mut states: QuantStates = Vec::with_capacity(per_rank[0].len());
+    for si in 0..per_rank[0].len() {
+        let idx = per_rank[0][si].0;
+        let meta = meta_for(metas, idx)?;
+        let axis = shard_axis(meta.rows, meta.cols);
+        let mut tensors = Vec::with_capacity(2);
+        for k in 0..2 {
+            let parts: Vec<Vec<f32>> =
+                per_rank.iter().map(|rs| rs[si].1[k].values()).collect();
+            let full = concat_vecs(&parts, meta.rows, meta.cols, axis, &meta.name)?;
+            tensors.push(CanonicalTensor::Q8(Quantized8::quantize(&full)));
+        }
+        states.push((idx, tensors));
+    }
+    Ok((t, states))
+}
+
+// ---------------------------------------------------------------------------
+// Adafactor codec (format defined by `optim::adafactor::export_state`):
+// `[t][n]` then per state `[idx][f32s row][f32s col]`. The full-tensor
+// canonical form carries both factored accumulators as f32 tensors; only
+// the factor along the shard axis re-slices exactly — the cross factor is
+// a rank-local statistic, so cross-world conversions are approximate and
+// sit behind the `requantize` opt-in.
+// ---------------------------------------------------------------------------
+
+fn parse_adafactor(bytes: &[u8]) -> Result<(u64, QuantStates), String> {
+    let mut r = Reader::new(bytes);
+    let t = r.u64()?;
+    let n = r.u64()? as usize;
+    if n > r.remaining() / 24 {
+        return Err(format!("adafactor state count {n} exceeds blob size"));
+    }
+    let mut states = Vec::with_capacity(n);
+    for _ in 0..n {
+        let idx = r.u64()? as usize;
+        let row = CanonicalTensor::F32(r.f32s()?);
+        let col = CanonicalTensor::F32(r.f32s()?);
+        states.push((idx, vec![row, col]));
+    }
+    Ok((t, states))
+}
+
+fn write_adafactor(t: u64, states: &QuantStates) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    push_u64(&mut out, t);
+    push_u64(&mut out, states.len() as u64);
+    for (idx, tensors) in states {
+        push_u64(&mut out, *idx as u64);
+        if tensors.len() != 2 {
+            return Err(format!(
+                "adafactor canonical state holds {} tensors for parameter {idx}, expected 2",
+                tensors.len()
+            ));
+        }
+        for tensor in tensors {
+            match tensor {
+                CanonicalTensor::F32(xs) => push_f32s(&mut out, xs),
+                CanonicalTensor::Q8(_) => {
+                    return Err("adafactor canonical state holds quantized tensors".into())
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Expect an adafactor state's `[row, col]` f32 pair with full-tensor
+/// lengths.
+fn adafactor_row_col<'a>(
+    tensors: &'a [CanonicalTensor],
+    meta: &ParamMeta,
+) -> Result<(&'a [f32], &'a [f32]), String> {
+    match tensors {
+        [CanonicalTensor::F32(row), CanonicalTensor::F32(col)]
+            if row.len() == meta.rows && col.len() == meta.cols =>
+        {
+            Ok((row, col))
+        }
+        _ => Err(format!(
+            "{}: adafactor canonical state does not hold full {}-row/{}-col \
+             f32 accumulators",
+            meta.name, meta.rows, meta.cols
+        )),
+    }
+}
+
+/// Re-slice full-tensor Adafactor state into per-rank frames. World 1 is
+/// exact; wider worlds slice the shard-axis factor exactly but must
+/// REPLICATE the cross factor (a statistic each rank would otherwise
+/// accumulate over its own shard) — approximate, gated on
+/// [`ImportOpts::requantize`].
+fn scatter_adafactor(
+    t: u64,
+    states: &QuantStates,
+    world: usize,
+    metas: &[ParamMeta],
+    opts: ImportOpts,
+) -> Result<Vec<Vec<u8>>, String> {
+    if world > 1 {
+        if !opts.requantize {
+            return Err(format!(
+                "adafactor optimizer state cannot be re-sliced exactly for \
+                 world={world}: the factored cross-statistic is rank-local; pass \
+                 --resume-requantize to accept an approximate re-slice (shard-axis \
+                 factor sliced exactly, cross factor replicated)"
+            ));
+        }
+        eprintln!(
+            "[resume] re-slicing adafactor factored state for world={world} \
+             (cross factor replicated; opted in via --resume-requantize)"
+        );
+    }
+    let mut frames = Vec::with_capacity(world);
+    for rank in 0..world {
+        let mut sliced: QuantStates = Vec::with_capacity(states.len());
+        for (idx, tensors) in states {
+            let meta = meta_for(metas, *idx)?;
+            let (row, col) = adafactor_row_col(tensors, meta)?;
+            let (row_s, col_s) = match shard_axis(meta.rows, meta.cols) {
+                ShardAxis::Rows => {
+                    let (lo, hi) = shard_bounds(meta.rows, world, rank);
+                    (row[lo..hi].to_vec(), col.to_vec())
+                }
+                ShardAxis::Cols => {
+                    let (lo, hi) = shard_bounds(meta.cols, world, rank);
+                    (row.to_vec(), col[lo..hi].to_vec())
+                }
+            };
+            sliced.push((
+                *idx,
+                vec![CanonicalTensor::F32(row_s), CanonicalTensor::F32(col_s)],
+            ));
+        }
+        let mut frame = dormant_svd_stream();
+        frame.extend_from_slice(&write_adafactor(t, &sliced)?);
+        frames.push(frame);
+    }
+    Ok(frames)
+}
+
+/// Merge world-locked per-rank Adafactor frames into full-tensor form
+/// (requantize opt-in): the shard-axis factor concatenates exactly; the
+/// cross factor is the shard-size-weighted mean of the rank-local
+/// statistics — the value a full-tensor accumulation would have produced
+/// had every rank seen the same per-element squared gradients.
+fn merge_adafactor_frames(
+    frames: &[Vec<u8>],
+    metas: &[ParamMeta],
+) -> Result<(u64, QuantStates), String> {
+    let (t, per_rank) = parse_rank_states(frames, parse_adafactor)?;
+    let world = frames.len();
+    eprintln!(
+        "[resume] merging adafactor factored state captured per-rank at \
+         world={world} (cross factor shard-weighted; opted in via --resume-requantize)"
+    );
+    let mut states: QuantStates = Vec::with_capacity(per_rank[0].len());
+    for si in 0..per_rank[0].len() {
+        let idx = per_rank[0][si].0;
+        let meta = meta_for(metas, idx)?;
+        let axis = shard_axis(meta.rows, meta.cols);
+        // (sliceable length per rank, cross length) per the shard axis.
+        let (slice_len, cross_len) = match axis {
+            ShardAxis::Rows => (meta.rows, meta.cols),
+            ShardAxis::Cols => (meta.cols, meta.rows),
+        };
+        let mut sliceable = Vec::with_capacity(slice_len);
+        let mut cross = vec![0f32; cross_len];
+        for (rank, rs) in per_rank.iter().enumerate() {
+            let ts = &rs[si].1;
+            let (lo, hi) = shard_bounds(slice_len, world, rank);
+            let (rank_slice, rank_cross) = match (axis, ts.as_slice()) {
+                (ShardAxis::Rows, [CanonicalTensor::F32(row), CanonicalTensor::F32(col)]) => {
+                    (row, col)
+                }
+                (ShardAxis::Cols, [CanonicalTensor::F32(row), CanonicalTensor::F32(col)]) => {
+                    (col, row)
+                }
+                _ => {
+                    return Err(format!(
+                        "{}: rank {rank} adafactor state is not an f32 [row, col] pair",
+                        meta.name
+                    ))
+                }
+            };
+            if rank_slice.len() != hi - lo || rank_cross.len() != cross_len {
+                return Err(format!(
+                    "{}: rank {rank} adafactor factors have lengths {}/{}, \
+                     expected {}/{cross_len}",
+                    meta.name,
+                    rank_slice.len(),
+                    rank_cross.len(),
+                    hi - lo
+                ));
+            }
+            sliceable.extend_from_slice(rank_slice);
+            let weight = (hi - lo) as f32 / slice_len as f32;
+            for (acc, &x) in cross.iter_mut().zip(rank_cross.iter()) {
+                *acc += weight * x;
+            }
+        }
+        if sliceable.len() != slice_len {
+            return Err(format!(
+                "{}: per-rank adafactor factors do not tile the {slice_len} \
+                 shard-axis entries",
+                meta.name
+            ));
+        }
+        let (row, col) = match axis {
+            ShardAxis::Rows => (sliceable, cross),
+            ShardAxis::Cols => (cross, sliceable),
+        };
+        states.push((
+            idx,
+            vec![CanonicalTensor::F32(row), CanonicalTensor::F32(col)],
+        ));
+    }
+    Ok((t, states))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -860,7 +1653,7 @@ mod tests {
     }
 
     #[test]
-    fn encode_decode_roundtrip_both_flavors() {
+    fn encode_decode_roundtrip_all_flavors() {
         let full = CanonicalOptState::full("galore", vec![1, 2, 3]);
         assert_eq!(CanonicalOptState::decode(&full.encode()).unwrap(), full);
         let per_rank = CanonicalOptState {
@@ -873,6 +1666,71 @@ mod tests {
             CanonicalOptState::decode(&per_rank.encode()).unwrap(),
             per_rank
         );
+        let quantized = CanonicalOptState {
+            name: "adam8bit".into(),
+            payload: OptPayload::Quantized {
+                t: 11,
+                states: vec![
+                    (
+                        0,
+                        vec![
+                            CanonicalTensor::Q8(Quantized8::quantize(&[0.5; 300])),
+                            CanonicalTensor::Q8(Quantized8::quantize(&[-0.25; 300])),
+                        ],
+                    ),
+                    (
+                        2,
+                        vec![
+                            CanonicalTensor::F32(vec![1.0, 2.0]),
+                            CanonicalTensor::F32(vec![3.0]),
+                        ],
+                    ),
+                ],
+            },
+        };
+        assert_eq!(
+            CanonicalOptState::decode(&quantized.encode()).unwrap(),
+            quantized
+        );
+    }
+
+    #[test]
+    fn quantized_flavor_rejects_corrupt_counts_and_tags() {
+        // Bit-flipped state/tensor counts and unknown storage tags must
+        // error, never abort or misparse.
+        let mut blob = Vec::new();
+        blob.extend_from_slice(MAGIC);
+        push_u64(&mut blob, 8);
+        blob.extend_from_slice(b"adam8bit");
+        push_u64(&mut blob, FLAVOR_QUANTIZED);
+        push_u64(&mut blob, 0); // t
+        push_u64(&mut blob, u64::MAX); // insane state count
+        assert!(CanonicalOptState::decode(&blob).is_err());
+
+        let mut blob = Vec::new();
+        blob.extend_from_slice(MAGIC);
+        push_u64(&mut blob, 8);
+        blob.extend_from_slice(b"adam8bit");
+        push_u64(&mut blob, FLAVOR_QUANTIZED);
+        push_u64(&mut blob, 0); // t
+        push_u64(&mut blob, 1); // one state
+        push_u64(&mut blob, 0); // idx
+        push_u64(&mut blob, u64::MAX); // insane tensor count
+        assert!(CanonicalOptState::decode(&blob).is_err());
+
+        let mut blob = Vec::new();
+        blob.extend_from_slice(MAGIC);
+        push_u64(&mut blob, 8);
+        blob.extend_from_slice(b"adam8bit");
+        push_u64(&mut blob, FLAVOR_QUANTIZED);
+        push_u64(&mut blob, 0); // t
+        push_u64(&mut blob, 1); // one state
+        push_u64(&mut blob, 0); // idx
+        push_u64(&mut blob, 1); // one tensor
+        blob.push(99); // unknown storage tag
+        push_u64(&mut blob, 0); // padding so the size guard passes
+        let err = CanonicalOptState::decode(&blob).unwrap_err();
+        assert!(err.contains("tag"), "unhelpful error: {err}");
     }
 
     #[test]
@@ -972,15 +1830,18 @@ mod tests {
         let shapes = [(4usize, 10usize), (10, 4), (1, 6), (5, 5)];
         let ms = metas(&shapes);
         let r = 2usize;
+        let f32_p = |rows: usize, cols: usize| StoredTensor::F32 {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|k| k as f32).collect(),
+        };
         let states = vec![
             (
                 0,
                 GaloreParamState::LowRank {
                     last_refresh: 3,
                     side: 0,
-                    p_rows: 4,
-                    p_cols: r,
-                    p: (0..4 * r).map(|k| k as f32).collect(),
+                    p: f32_p(4, r),
                     m: (0..r * 10).map(|k| k as f32 + 0.25).collect(),
                     v: (0..r * 10).map(|k| k as f32 + 0.5).collect(),
                 },
@@ -990,9 +1851,7 @@ mod tests {
                 GaloreParamState::LowRank {
                     last_refresh: 3,
                     side: 1,
-                    p_rows: 4,
-                    p_cols: r,
-                    p: (0..4 * r).map(|k| k as f32).collect(),
+                    p: f32_p(4, r),
                     m: (0..10 * r).map(|k| k as f32 - 0.25).collect(),
                     v: (0..10 * r).map(|k| k as f32 - 0.5).collect(),
                 },
@@ -1009,9 +1868,15 @@ mod tests {
                 GaloreParamState::LowRank {
                     last_refresh: 0,
                     side: 0,
-                    p_rows: 5,
-                    p_cols: r,
-                    p: (0..5 * r).map(|k| k as f32).collect(),
+                    // The stored representation rides through the canonical
+                    // form untouched — use a quantized P to pin that.
+                    p: StoredTensor::Q8 {
+                        rows: 5,
+                        cols: r,
+                        q: crate::quant::LinearQ8::quantize(
+                            &(0..5 * r).map(|k| k as f32 * 0.1).collect::<Vec<_>>(),
+                        ),
+                    },
                     m: Vec::new(), // lazily unsized: preset but never stepped
                     v: Vec::new(),
                 },
@@ -1063,22 +1928,27 @@ mod tests {
         // The "qgalore" name covers two layouts (OptimizerSpec::state_codec):
         // a concrete GaLore exporting the raw layout must still produce a
         // framed canonical blob, and imports convert back per target codec.
+        let o = ImportOpts::default();
         let raw = vec![7u8; 40];
-        let c = CanonicalOptState::from_full("qgalore", "galore", raw.clone());
-        assert_eq!(c.to_full_for("galore").unwrap(), raw, "raw → framed → raw");
+        let c = CanonicalOptState::from_full("qgalore", "galore", raw.clone()).unwrap();
         assert_eq!(
-            c.to_full_for("qgalore").unwrap(),
+            c.to_full_for("galore", &[], o).unwrap(),
+            raw,
+            "raw → framed → raw"
+        );
+        assert_eq!(
+            c.to_full_for("qgalore", &[], o).unwrap(),
             wrap_qgalore(raw.clone()),
             "framed view keeps the canonical layout"
         );
         // A true QGaLore blob passes through unchanged for its own codec.
         let framed = wrap_qgalore(raw.clone());
-        let c = CanonicalOptState::from_full("qgalore", "qgalore", framed.clone());
-        assert_eq!(c.to_full_for("qgalore").unwrap(), framed);
-        assert_eq!(c.to_full_for("galore").unwrap(), raw);
+        let c = CanonicalOptState::from_full("qgalore", "qgalore", framed.clone()).unwrap();
+        assert_eq!(c.to_full_for("qgalore", &[], o).unwrap(), framed);
+        assert_eq!(c.to_full_for("galore", &[], o).unwrap(), raw);
         // Non-family names are untouched by codec conversion.
-        let c = CanonicalOptState::from_full("adamw", "adamw", raw.clone());
-        assert_eq!(c.to_full_for("adamw").unwrap(), raw);
+        let c = CanonicalOptState::from_full("adamw", "adamw", raw.clone()).unwrap();
+        assert_eq!(c.to_full_for("adamw", &[], o).unwrap(), raw);
     }
 
     #[test]
@@ -1091,30 +1961,183 @@ mod tests {
 
     #[test]
     fn per_rank_world_mismatch_errors_are_actionable() {
+        let o = ImportOpts::default();
         let c = CanonicalOptState {
             name: "adam8bit".into(),
             payload: OptPayload::PerRank {
                 frames: vec![vec![0; 40]; 2],
             },
         };
-        let err = c.fsdp_frames(4, &[]).unwrap_err();
+        let err = c.fsdp_frames(4, &[], o).unwrap_err();
         assert!(
-            err.contains("world=2") && err.contains("adam8bit"),
+            err.contains("world=2")
+                && err.contains("adam8bit")
+                && err.contains("--resume-requantize"),
             "unhelpful error: {err}"
         );
-        let err = c.to_full().unwrap_err();
-        assert!(err.contains("world-locked"), "unhelpful error: {err}");
+        let err = c.to_full(&[], o).unwrap_err();
+        assert!(
+            err.contains("world-locked") && err.contains("--resume-requantize"),
+            "unhelpful error: {err}"
+        );
+        // A non-convertible optimizer's error names the re-shardable set
+        // instead of the opt-in flag.
+        let sgd_like = CanonicalOptState {
+            name: "mystery".into(),
+            payload: OptPayload::PerRank {
+                frames: vec![vec![0; 40]; 2],
+            },
+        };
+        let err = sgd_like.fsdp_frames(4, &[], o).unwrap_err();
+        assert!(err.contains("galore"), "unhelpful error: {err}");
         // Same-world passthrough still works.
-        assert_eq!(c.fsdp_frames(2, &[]).unwrap().len(), 2);
+        assert_eq!(c.fsdp_frames(2, &[], o).unwrap().len(), 2);
     }
 
     #[test]
     fn non_reshardable_full_state_only_fits_world_one() {
+        let o = ImportOpts::default();
         let c = CanonicalOptState::full("adafactor", vec![3; 50]);
-        let frames = c.fsdp_frames(1, &[]).unwrap();
+        let frames = c.fsdp_frames(1, &[], o).unwrap();
         assert_eq!(frames.len(), 1);
         assert_eq!(&frames[0][Pcg64::STATE_BYTES..], &[3u8; 50][..]);
-        let err = c.fsdp_frames(2, &[]).unwrap_err();
+        let err = c.fsdp_frames(2, &[], o).unwrap_err();
         assert!(err.contains("adafactor"), "unhelpful error: {err}");
+    }
+
+    // -- quantized canonical state ----------------------------------------
+
+    fn meta(name: &str, rows: usize, cols: usize) -> ParamMeta {
+        ParamMeta {
+            name: name.into(),
+            rows,
+            cols,
+        }
+    }
+
+    #[test]
+    fn block_alignment_predicate_matches_geometry() {
+        // (512, 2) shards rows: world 2 and 4 land every boundary on a
+        // multiple of 256 flat elements; world 3 does not (170·2 = 340).
+        let tall = meta("tall", 512, 2);
+        assert!(shards_block_aligned(&tall, 1));
+        assert!(shards_block_aligned(&tall, 2));
+        assert!(shards_block_aligned(&tall, 4));
+        assert!(!shards_block_aligned(&tall, 3));
+        // (2, 1024) shards cols: per-row runs start at r·1024 + lo, all
+        // multiples of 256 for world 2/4; world 8 slices 128-wide.
+        let wide = meta("wide", 2, 1024);
+        assert!(shards_block_aligned(&wide, 2));
+        assert!(shards_block_aligned(&wide, 4));
+        assert!(!shards_block_aligned(&wide, 8));
+        // Small tensors only align at world 1 (single partial block).
+        let small = meta("small", 8, 16);
+        assert!(shards_block_aligned(&small, 1));
+        assert!(!shards_block_aligned(&small, 2));
+    }
+
+    #[test]
+    fn q8_slice_concat_roundtrip_on_aligned_geometry() {
+        let mut rng = Pcg64::new(31, 0);
+        for (rows, cols) in [(512usize, 2usize), (2, 1024), (1024, 1)] {
+            let m = meta("p", rows, cols);
+            let mut xs = vec![0f32; rows * cols];
+            rng.fill_normal(&mut xs, 1.0);
+            let full = Quantized8::quantize(&xs);
+            for world in [1usize, 2, 4] {
+                assert!(shards_block_aligned(&m, world), "{rows}x{cols} w{world}");
+                let parts: Vec<Quantized8> = (0..world)
+                    .map(|rank| slice_q8(&full, &m, world, rank).unwrap())
+                    .collect();
+                // Each slice is exactly what quantizing the shard directly
+                // would produce — the FSDP worker's own state.
+                for (rank, part) in parts.iter().enumerate() {
+                    let axis = shard_axis(rows, cols);
+                    let shard = slice_vec(&xs, rows, cols, axis, world, rank);
+                    assert_eq!(part, &Quantized8::quantize(&shard), "rank {rank}");
+                }
+                let refs: Vec<&Quantized8> = parts.iter().collect();
+                assert_eq!(
+                    concat_q8(&refs, &m).unwrap(),
+                    full,
+                    "{rows}x{cols} world {world}: slice∘concat not identity"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn adam8bit_scatter_requires_opt_in_when_misaligned() {
+        let metas = vec![meta("p0", 8, 16)];
+        let xs: Vec<f32> = (0..128).map(|k| k as f32 * 0.01).collect();
+        let states: QuantStates = vec![(
+            0,
+            vec![
+                CanonicalTensor::Q8(Quantized8::quantize(&xs)),
+                CanonicalTensor::Q8(Quantized8::quantize(&xs)),
+            ],
+        )];
+        let err =
+            scatter_adam8bit(3, &states, 2, &metas, ImportOpts::default()).unwrap_err();
+        assert!(err.contains("--resume-requantize"), "unhelpful error: {err}");
+        let frames = scatter_adam8bit(3, &states, 2, &metas, ImportOpts::requantize()).unwrap();
+        assert_eq!(frames.len(), 2);
+        // World 1 is always exact: scatter then re-parse reproduces the
+        // canonical tensors bit-for-bit.
+        let frames = scatter_adam8bit(3, &states, 1, &metas, ImportOpts::default()).unwrap();
+        let (t, back) = parse_adam8bit(&frames[0][Pcg64::STATE_BYTES..]).unwrap();
+        assert_eq!(t, 3);
+        assert_eq!(back, states);
+    }
+
+    #[test]
+    fn adafactor_roundtrip_and_cross_world_conversions() {
+        // parse∘write is the identity on the adafactor layout; scatter at
+        // world 1 is exact; wider worlds need the opt-in and slice the
+        // shard-axis factor exactly while replicating the cross factor.
+        let metas = vec![meta("p0", 6, 3), meta("p1", 2, 8)];
+        let mut blob = Vec::new();
+        push_u64(&mut blob, 9); // t
+        push_u64(&mut blob, 2); // two states
+        push_u64(&mut blob, 0);
+        push_f32s(&mut blob, &(0..6).map(|k| k as f32 + 0.5).collect::<Vec<_>>());
+        push_f32s(&mut blob, &(0..3).map(|k| k as f32 + 0.25).collect::<Vec<_>>());
+        push_u64(&mut blob, 1);
+        push_f32s(&mut blob, &[1.5, 2.5]);
+        push_f32s(&mut blob, &(0..8).map(|k| k as f32).collect::<Vec<_>>());
+        let (t, states) = parse_adafactor(&blob).unwrap();
+        assert_eq!(t, 9);
+        assert_eq!(write_adafactor(t, &states).unwrap(), blob, "parse∘write");
+
+        let err =
+            scatter_adafactor(t, &states, 2, &metas, ImportOpts::default()).unwrap_err();
+        assert!(err.contains("--resume-requantize"), "unhelpful error: {err}");
+        let frames = scatter_adafactor(t, &states, 2, &metas, ImportOpts::requantize()).unwrap();
+        assert_eq!(frames.len(), 2);
+        // p0 (6x3) shards rows: rank 0 gets rows 0..3 of the row factor
+        // and the FULL col factor.
+        let (_, rank0) = parse_adafactor(&frames[0][Pcg64::STATE_BYTES..]).unwrap();
+        assert_eq!(
+            rank0[0].1,
+            vec![
+                CanonicalTensor::F32(vec![0.5, 1.5, 2.5]),
+                CanonicalTensor::F32(vec![0.25, 1.25, 2.25]),
+            ]
+        );
+        // Merging the sliced frames back recovers the original factors
+        // exactly: slicing is exact along the shard axis, and the
+        // replicated cross factors weight-average back to themselves.
+        let (mt, merged) = merge_adafactor_frames(&frames, &metas).unwrap();
+        assert_eq!(mt, t);
+        for ((ia, a), (ib, b)) in merged.iter().zip(&states) {
+            assert_eq!(ia, ib);
+            for (ta, tb) in a.iter().zip(b) {
+                let (va, vb) = (ta.values(), tb.values());
+                assert_eq!(va.len(), vb.len());
+                for (x, y) in va.iter().zip(&vb) {
+                    assert!((x - y).abs() < 1e-6, "merged factor drifted: {x} vs {y}");
+                }
+            }
+        }
     }
 }

@@ -24,6 +24,15 @@
 //! with `tokens_seen: None` and keep that documented approximation
 //! (`Trainer::resume`).
 //!
+//! v5 carries QUANTIZED canonical state: optimizer blobs serialize their
+//! exact stored representation (Adam8bit codes + block scales, Q-GaLore
+//! projector codes via `Projector::stored_tensor`), and the canonical
+//! payload gains the typed `Quantized` flavor — extending elastic resume
+//! to adam8bit/adafactor (bitwise where re-slicing is exact, loud
+//! `--resume-requantize` opt-in otherwise) and lifting qgalore's old
+//! refresh-alignment resume caveat. v2–v4 files still load behind the
+//! existing legacy gates (mode-specific blobs, dequantized state layouts).
+//!
 //! Resume fidelity is tested end to end: a resumed run reproduces the
 //! exact next-step losses of the uninterrupted run.
 
@@ -35,11 +44,12 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"GAL2CKPT";
-/// v4: exact `tokens_seen` counter. v3: canonical (re-shardable)
-/// optimizer state. v2: mode-specific blobs — readable, but FSDP state is
-/// world-locked. v1 blobs would misparse, so the version gate rejects
-/// them.
-pub const VERSION: u32 = 4;
+/// v5: quantized canonical state (stored-representation optimizer blobs +
+/// the `Quantized` canonical flavor). v4: exact `tokens_seen` counter.
+/// v3: canonical (re-shardable) optimizer state. v2: mode-specific blobs
+/// — readable, but FSDP state is world-locked. v1 blobs would misparse,
+/// so the version gate rejects them.
+pub const VERSION: u32 = 5;
 /// Oldest version [`Checkpoint::load`] still accepts.
 pub const LEGACY_VERSION: u32 = 2;
 /// First version carrying the `tokens_seen` field.
@@ -204,7 +214,7 @@ mod tests {
     }
 
     #[test]
-    fn accepts_legacy_v2_v3_rejects_unknown_versions() {
+    fn accepts_legacy_v2_v3_v4_rejects_unknown_versions() {
         let ckpt = Checkpoint {
             step: 3,
             tokens_seen: Some(999),
@@ -226,7 +236,11 @@ mod tests {
                 "pre-v4 files carry no token counter"
             );
         }
-        for bad in [1u32, 5, 99] {
+        ckpt.save_with_version(&path, 4).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.opt_state, vec![7; 12], "v4 payload must pass through");
+        assert_eq!(back.tokens_seen, Some(999), "v4 carries the token counter");
+        for bad in [1u32, 6, 99] {
             ckpt.save_with_version(&path, bad).unwrap();
             let err = Checkpoint::load(&path).unwrap_err().to_string();
             assert!(

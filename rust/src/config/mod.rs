@@ -60,10 +60,17 @@ pub struct TrainConfig {
     pub run_name: String,
     /// Checkpoint to resume from before training (`[train] resume` /
     /// `--resume`). Elastic: the checkpoint may come from ANY
-    /// `--parallel` mode and world size — v3 checkpoints store the
+    /// `--parallel` mode and world size — v3+ checkpoints store the
     /// world-agnostic canonical optimizer state (see EXPERIMENTS.md
     /// §Resume).
     pub resume_from: Option<PathBuf>,
+    /// Opt into LOSSY resume conversions (`[train] resume_requantize` /
+    /// `--resume-requantize`): re-quantize block-quantized adam8bit
+    /// moments across misaligned shard boundaries and merge/replicate
+    /// adafactor's factored cross-statistics when the target
+    /// mode/world cannot re-slice the checkpoint exactly. Off by default:
+    /// inexact imports then fail loudly instead of approximating.
+    pub resume_requantize: bool,
 
     pub optimizer: String,
     pub lr: f32,
@@ -114,6 +121,7 @@ impl Default for TrainConfig {
             out_dir: PathBuf::from("runs"),
             run_name: "run".into(),
             resume_from: None,
+            resume_requantize: false,
             optimizer: "galore".into(),
             lr: 0.01,
             weight_decay: 0.0,
@@ -164,6 +172,7 @@ impl TrainConfig {
                 s if s.is_empty() => None,
                 s => Some(PathBuf::from(s)),
             },
+            resume_requantize: doc.bool_or("train", "resume_requantize", d.resume_requantize),
             optimizer: doc.str_or("optimizer", "name", &d.optimizer),
             lr: doc.f64_or("optimizer", "lr", d.lr as f64) as f32,
             weight_decay: doc.f64_or("optimizer", "weight_decay", d.weight_decay as f64)
@@ -224,6 +233,7 @@ impl TrainConfig {
         if let Some(p) = args.get("resume") {
             self.resume_from = Some(PathBuf::from(p));
         }
+        self.resume_requantize = args.bool_or("resume-requantize", self.resume_requantize);
         self.optimizer = args.str_or("optimizer", &self.optimizer);
         self.lr = args.f32_or("lr", self.lr);
         self.weight_decay = args.f32_or("weight-decay", self.weight_decay);
@@ -465,6 +475,28 @@ transport = "process"
             c.resume_from.as_deref(),
             Some(std::path::Path::new("runs/y/step_5.ckpt"))
         );
+    }
+
+    #[test]
+    fn resume_requantize_parses_from_toml_and_cli() {
+        // Off by default: inexact imports must be opt-in only.
+        assert!(!TrainConfig::default().resume_requantize);
+        let path = write_sample(
+            "requant",
+            "[train]\nresume = \"runs/x/step_20.ckpt\"\nresume_requantize = true\n",
+        );
+        let c = TrainConfig::from_toml(path.to_str().unwrap()).unwrap();
+        assert!(c.resume_requantize);
+        std::fs::remove_file(path).ok();
+        let mut c = TrainConfig::default();
+        let args = Args::parse(
+            "train --resume runs/y/step_5.ckpt --resume-requantize"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_cli(&args).unwrap();
+        assert!(c.resume_requantize);
     }
 
     #[test]

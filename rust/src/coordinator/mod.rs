@@ -175,6 +175,8 @@ pub fn memory_report(preset: &str, seq: usize, world: usize) -> Result<()> {
         ("Adam8bit + FSDP", OptimKind::Adam8bit, false),
         ("GaLore + FSDP", OptimKind::GaLore { rank }, true),
         ("GaLore8bit + FSDP", OptimKind::GaLore8bit { rank }, true),
+        // Stored-size accounting: int8 projector codes + block scales.
+        ("QGaLore + FSDP", OptimKind::QGaLore { rank }, true),
         ("LoRA + FSDP", OptimKind::Lora { rank }, false),
     ];
     for (name, optim, per_layer) in rows {

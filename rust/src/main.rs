@@ -72,6 +72,8 @@ USAGE: galore2 <train|eval|memory|svd|presets> [flags]
           --transport threads|process (worker fabric for fsdp/ddp)
           --engine native|pjrt --eval-batches N
           --resume CKPT (elastic: any source mode/world/transport)
+          [--resume-requantize] (opt into lossy adam8bit/adafactor
+            re-slicing when the new world is not block-aligned)
           [--save-final] [--eval-downstream]
   eval    --config FILE --checkpoint CKPT [--questions N]
   memory  --preset P [--seq N] [--world N]

@@ -17,6 +17,12 @@ pub enum OptimKind {
     GaLore { rank: usize },
     /// GaLore + 8-bit inner Adam (the §1 single-GPU configuration).
     GaLore8bit { rank: usize },
+    /// Q-GaLore (§4.2): the projector is STORED in linear INT8 blocks
+    /// (1 byte/element + one f32 absmax scale per 256-element block —
+    /// `Projector::nbytes`); inner Adam moments stay fp32. The model must
+    /// charge the stored size, never the dequantized f32 size, to match
+    /// the live `state_bytes` counters and the paper's memory table.
+    QGaLore { rank: usize },
     /// LoRA with the given adapter rank (§3's comparison equation).
     Lora { rank: usize },
 }
@@ -95,6 +101,17 @@ impl MemoryBreakdown {
     }
 }
 
+/// Stored bytes of a d×r projector under `optim`'s storage kind: fp32 for
+/// plain GaLore, INT8 codes + per-block f32 absmax scales for Q-GaLore
+/// (matching `Projector::nbytes` — the quantization is the point, so the
+/// model must never charge the dequantized size).
+fn projector_bytes(optim: OptimKind, d: u64, r: u64) -> u64 {
+    match optim {
+        OptimKind::QGaLore { .. } => d * r + (d * r).div_ceil(256) * 4,
+        _ => d * r * 4,
+    }
+}
+
 /// Optimizer-state bytes for one m×n parameter (the §3 equations).
 pub fn optimizer_state_bytes(optim: OptimKind, rows: usize, cols: usize) -> u64 {
     let (m, n) = (rows.min(cols), rows.max(cols)); // paper convention m ≤ n
@@ -102,7 +119,9 @@ pub fn optimizer_state_bytes(optim: OptimKind, rows: usize, cols: usize) -> u64 
     match optim {
         OptimKind::AdamW => 2 * numel * 4,
         OptimKind::Adam8bit => 2 * numel + 2 * numel.div_ceil(256) * 4,
-        OptimKind::GaLore { rank } | OptimKind::GaLore8bit { rank } => {
+        OptimKind::GaLore { rank }
+        | OptimKind::GaLore8bit { rank }
+        | OptimKind::QGaLore { rank } => {
             if rank >= m || rows.min(cols) < 2 {
                 // ineligible: full-rank inner Adam
                 return optimizer_state_bytes(
@@ -115,8 +134,8 @@ pub fn optimizer_state_bytes(optim: OptimKind, rows: usize, cols: usize) -> u64 
                 );
             }
             let r = rank as u64;
-            // §3: projector mr + moments 2nr.
-            let projector = (m as u64) * r * 4;
+            // §3: projector mr (at its STORED size) + moments 2nr.
+            let projector = projector_bytes(optim, m as u64, r);
             let moment_elems = 2 * (n as u64) * r;
             let moments = match optim {
                 OptimKind::GaLore8bit { .. } => {
@@ -175,10 +194,15 @@ pub fn estimate(cfg: &LlamaCfg, mem: &MemoryCfg) -> MemoryBreakdown {
         let (r, c) = spec.matrix_shape();
         let full = optimizer_state_bytes(mem.optim, r, c);
         optimizer += match (mem.optim, mem.parallelism) {
-            (OptimKind::GaLore { rank } | OptimKind::GaLore8bit { rank }, Parallelism::Fsdp { .. })
-                if rank < r.min(c) && spec.is_2d() =>
-            {
-                let proj = (r.min(c) as u64) * rank as u64 * 4;
+            (
+                OptimKind::GaLore { rank }
+                | OptimKind::GaLore8bit { rank }
+                | OptimKind::QGaLore { rank },
+                Parallelism::Fsdp { .. },
+            ) if rank < r.min(c) && spec.is_2d() => {
+                // The projector is replicated across ranks (§4.3), at its
+                // stored size; only the moments shard.
+                let proj = projector_bytes(mem.optim, r.min(c) as u64, rank as u64);
                 proj + (full - proj) / world
             }
             _ => full / world,
@@ -242,6 +266,65 @@ mod tests {
         let a = optimizer_state_bytes(OptimKind::GaLore { rank: 64 }, 1000, 300);
         let b = optimizer_state_bytes(OptimKind::GaLore { rank: 64 }, 300, 1000);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn qgalore_projector_counted_at_stored_size() {
+        // The paper-facing memory table must charge quantized state at its
+        // STORED size (codes + block scales), never dequantized f32.
+        let (m, n, r) = (4096usize, 11008usize, 1024usize);
+        let q = optimizer_state_bytes(OptimKind::QGaLore { rank: r }, m, n);
+        let proj_elems = (m * r) as u64;
+        let expect = proj_elems + proj_elems.div_ceil(256) * 4 + (2 * n * r * 4) as u64;
+        assert_eq!(q, expect, "analytic q8 projector term drifted");
+        // ~4x smaller projector than fp32 GaLore's mr·4 term.
+        let f = optimizer_state_bytes(OptimKind::GaLore { rank: r }, m, n);
+        assert_eq!(f - q, proj_elems * 4 - proj_elems - proj_elems.div_ceil(256) * 4);
+
+        // Cross-check against the LIVE accounting: a real quantized
+        // projector reports exactly the analytic stored size.
+        use crate::optim::{ProjectionKind, Projector};
+        use crate::tensor::Matrix;
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(3, 0);
+        let g = Matrix::randn(256, 512, 1.0, &mut rng);
+        let p = Projector::from_gradient(&g, 64, ProjectionKind::Quant8, &mut rng);
+        let d = 256u64 * 64;
+        assert_eq!(p.nbytes() as u64, d + d.div_ceil(256) * 4);
+
+        // And the ineligible fallback stays fp32 Adam.
+        let tiny = optimizer_state_bytes(OptimKind::QGaLore { rank: 64 }, 1, 128);
+        assert_eq!(tiny, optimizer_state_bytes(OptimKind::AdamW, 1, 128));
+    }
+
+    #[test]
+    fn fsdp_qgalore_replicates_stored_projector_only() {
+        // Under FSDP the projector term must stay at its stored (int8)
+        // size while the fp32 moments shard with the world.
+        let cfg = LlamaCfg::preset("llama-1b").unwrap();
+        let mk = |optim| {
+            estimate(
+                &cfg,
+                &MemoryCfg {
+                    optim,
+                    parallelism: Parallelism::Fsdp { world: 4 },
+                    precision: Precision::mixed_bf16(),
+                    seq: 1024,
+                    batch: 1,
+                    per_layer_update: true,
+                    activation_factor: 0.3,
+                },
+            )
+        };
+        let rank = 128;
+        let q = mk(OptimKind::QGaLore { rank });
+        let f = mk(OptimKind::GaLore { rank });
+        assert!(
+            q.optimizer < f.optimizer,
+            "quantized projector must shrink the optimizer term: {} !< {}",
+            q.optimizer,
+            f.optimizer
+        );
     }
 
     #[test]

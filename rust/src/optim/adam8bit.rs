@@ -80,35 +80,64 @@ impl Optimizer for Adam8bit {
     }
 
     fn export_state(&self) -> Vec<u8> {
-        // Serialize dequantized moments: simple and checkpoint-compatible
-        // across quantizer versions (state re-quantizes on import).
+        // Serialize the exact stored representation (codes + block scales
+        // via the shared `quant` codec): the stored INT8 state *is* the
+        // optimizer state (Q-GaLore's observation), so a resumed run
+        // continues from the identical quantization — a dequantized f32
+        // export would re-block on import and could move absmax scales.
+        // Layout gate: the blob leads with `STATE_MAGIC2`; legacy blobs
+        // (dequantized f32 moments) lead with their small step counter.
         let mut out = Vec::new();
+        ser::push_u64(&mut out, ser::STATE_MAGIC2);
         ser::push_u64(&mut out, self.t);
         ser::push_u64(&mut out, self.states.len() as u64);
         for (&idx, st) in &self.states {
             ser::push_u64(&mut out, idx as u64);
-            ser::push_f32s(&mut out, &st.m.dequantize());
-            ser::push_f32s(&mut out, &st.v.dequantize());
+            st.m.encode(&mut out);
+            st.v.encode(&mut out);
         }
         out
     }
 
     fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
         let mut r = ser::Reader::new(bytes);
-        self.t = r.u64()?;
-        let n = r.u64()? as usize;
+        let first = r.u64()?;
         self.states.clear();
-        for _ in 0..n {
-            let idx = r.u64()? as usize;
-            let m = r.f32s()?;
-            let v = r.f32s()?;
-            self.states.insert(
-                idx,
-                State {
-                    m: Quantized8::quantize(&m),
-                    v: Quantized8::quantize(&v),
-                },
-            );
+        if first == ser::STATE_MAGIC2 {
+            // Current layout: exact codes + scales, bitwise resume.
+            self.t = r.u64()?;
+            let n = r.u64()? as usize;
+            // Every state is at least [idx] + two block headers: reject
+            // corrupt counts before allocating.
+            if n > r.remaining() / (8 * 3) {
+                return Err(format!("adam8bit state count {n} exceeds blob size"));
+            }
+            for _ in 0..n {
+                let idx = r.u64()? as usize;
+                let m = Quantized8::decode(&mut r)?;
+                let v = Quantized8::decode(&mut r)?;
+                self.states.insert(idx, State { m, v });
+            }
+        } else {
+            // Legacy layout (pre-v5 checkpoints): dequantized f32 moments;
+            // re-quantizing on import reproduces the historical behavior.
+            self.t = first;
+            let n = r.u64()? as usize;
+            if n > r.remaining() / (8 * 3) {
+                return Err(format!("adam8bit state count {n} exceeds blob size"));
+            }
+            for _ in 0..n {
+                let idx = r.u64()? as usize;
+                let m = r.f32s()?;
+                let v = r.f32s()?;
+                self.states.insert(
+                    idx,
+                    State {
+                        m: Quantized8::quantize(&m),
+                        v: Quantized8::quantize(&v),
+                    },
+                );
+            }
         }
         Ok(())
     }
@@ -154,6 +183,66 @@ mod tests {
         o32.step_param(0, &mut p, &g, 0.1);
         let ratio = o32.state_bytes() as f64 / o8.state_bytes() as f64;
         assert!(ratio > 3.5 && ratio < 4.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn export_carries_stored_representation_and_resumes_bitwise() {
+        // The state blob leads with the format gate and round-trips the
+        // exact codes + scales: a resumed optimizer continues bit-for-bit
+        // on the uninterrupted trajectory (the old dequantized export only
+        // did so up to re-quantization).
+        let mut rng = Pcg64::new(5, 0);
+        let target = Matrix::randn(4, 96, 1.0, &mut rng);
+        let mut a = Adam8bit::new(AdamCfg::default());
+        let mut wa = Matrix::zeros(4, 96);
+        for t in 0..9 {
+            let g = wa.sub(&target);
+            a.begin_step(t);
+            a.step_param(0, &mut wa, &g, 0.05);
+        }
+        let blob = a.export_state();
+        assert_eq!(
+            u64::from_le_bytes(blob[..8].try_into().unwrap()),
+            crate::optim::ser::STATE_MAGIC2,
+            "stored-representation blob must lead with the format gate"
+        );
+        let mut b = Adam8bit::new(AdamCfg::default());
+        b.import_state(&blob).unwrap();
+        assert_eq!(b.export_state(), blob, "import→export must be identity");
+        let mut wb = wa.clone();
+        for t in 9..14 {
+            let ga = wa.sub(&target);
+            a.begin_step(t);
+            a.step_param(0, &mut wa, &ga, 0.05);
+            let gb = wb.sub(&target);
+            b.begin_step(t);
+            b.step_param(0, &mut wb, &gb, 0.05);
+        }
+        assert_eq!(wa.data, wb.data, "adam8bit resume diverged");
+    }
+
+    #[test]
+    fn legacy_f32_state_still_imports() {
+        // Pre-v5 blobs carry dequantized f32 moments behind a small step
+        // counter; the gate must route them through the re-quantizing
+        // legacy branch, and corrupt counts must error, not abort.
+        use crate::optim::ser;
+        let mut legacy = Vec::new();
+        ser::push_u64(&mut legacy, 3); // t (legacy blobs lead with it)
+        ser::push_u64(&mut legacy, 1); // one state
+        ser::push_u64(&mut legacy, 0); // idx
+        ser::push_f32s(&mut legacy, &[0.25; 16]);
+        ser::push_f32s(&mut legacy, &[0.5; 16]);
+        let mut opt = Adam8bit::new(AdamCfg::default());
+        opt.import_state(&legacy).unwrap();
+        let back = opt.states[&0].m.dequantize();
+        assert!((back[0] - 0.25).abs() < 0.02, "legacy moments lost: {back:?}");
+
+        let mut corrupt = Vec::new();
+        ser::push_u64(&mut corrupt, ser::STATE_MAGIC2);
+        ser::push_u64(&mut corrupt, 0); // t
+        ser::push_u64(&mut corrupt, u64::MAX); // insane state count
+        assert!(Adam8bit::new(AdamCfg::default()).import_state(&corrupt).is_err());
     }
 
     #[test]

@@ -376,7 +376,16 @@ impl Optimizer for GaLore {
         // resumed run's next subspace refresh draws the same sketches the
         // uninterrupted run would have (refresh *schedule* state is
         // reconstructed from the step counter).
+        //
+        // Format v2 (gated by `ser::STATE_MAGIC2`): P is serialized as its
+        // exact STORED representation (`Projector::stored_tensor`, the
+        // shared `quant` codec) — codes + block scales for quantized
+        // kinds. This is what lifts Q-GaLore's old refresh-alignment
+        // resume caveat: re-quantizing a dequantized P (the v1 layout)
+        // could wobble a block's absmax scale by 1 ulp, so only
+        // checkpoints taken ON a refresh step used to resume bit-exactly.
         let mut out = Vec::new();
+        ser::push_u64(&mut out, ser::STATE_MAGIC2);
         ser::push_u64(&mut out, self.t);
         ser::push_u64(&mut out, self.refreshes);
         self.rng.write_state(&mut out);
@@ -404,10 +413,7 @@ impl Optimizer for GaLore {
                             super::ProjectorSide::Right => 1,
                         },
                     );
-                    let p = projector.export_p();
-                    ser::push_u64(&mut out, p.rows as u64);
-                    ser::push_u64(&mut out, p.cols as u64);
-                    ser::push_f32s(&mut out, &p.data);
+                    projector.stored_tensor().encode(&mut out);
                     ser::push_f32s(&mut out, m);
                     ser::push_f32s(&mut out, v);
                 }
@@ -418,10 +424,18 @@ impl Optimizer for GaLore {
 
     fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
         let mut r = ser::Reader::new(bytes);
-        self.t = r.u64()?;
+        let first = r.u64()?;
+        let v2 = first == ser::STATE_MAGIC2;
+        // Legacy (v1) blobs lead directly with the step counter.
+        self.t = if v2 { r.u64()? } else { first };
         self.refreshes = r.u64()?;
         self.rng = Pcg64::read_state(r.bytes(Pcg64::STATE_BYTES)?)?;
         let n = r.u64()? as usize;
+        // Every state is at least [idx][tag]: reject corrupt counts
+        // before allocating.
+        if n > r.remaining() / 16 {
+            return Err(format!("galore state count {n} exceeds blob size"));
+        }
         // Projector kind comes from cfg; P and its side are stored.
         self.states.clear();
         for _ in 0..n {
@@ -437,15 +451,24 @@ impl Optimizer for GaLore {
                     0 => super::ProjectorSide::Left,
                     _ => super::ProjectorSide::Right,
                 };
-                let rows = r.u64()? as usize;
-                let cols = r.u64()? as usize;
-                let p = Matrix::from_vec(rows, cols, r.f32s()?);
+                let projector = if v2 {
+                    // Exact stored representation → bitwise restore for
+                    // every projection kind, aligned to a refresh or not.
+                    let st = crate::quant::StoredTensor::decode(&mut r)?;
+                    Projector::from_stored(st, side, self.cfg.projection)
+                } else {
+                    // v1: dequantized P; quantized kinds re-quantize on
+                    // install (the historical near-bitwise behavior).
+                    let st = crate::quant::StoredTensor::decode_legacy_f32(&mut r)?;
+                    let p = Matrix::from_vec(st.rows(), st.cols(), st.materialize());
+                    Projector::from_parts(p, side, self.cfg.projection)
+                };
                 let m = r.f32s()?;
                 let v = r.f32s()?;
                 self.states.insert(
                     idx,
                     ParamState::LowRank {
-                        projector: Projector::from_parts(p, side, self.cfg.projection),
+                        projector,
                         m,
                         v,
                         last_refresh,
@@ -686,6 +709,98 @@ mod tests {
                 _ => {}
             }
         }
+    }
+
+    #[test]
+    fn quantized_projector_resumes_bitwise_off_refresh_boundary() {
+        // The v2 state layout serializes P's exact stored representation
+        // (codes + block scales), so a quantized-projector checkpoint
+        // taken MID refresh-cycle resumes bit-for-bit — the alignment
+        // caveat the dequantized v1 layout imposed is gone.
+        let mut rng = Pcg64::new(13, 0);
+        let target = decaying_gradient(8, 24, &mut rng);
+        let cfg = GaLoreCfg {
+            rank: 4,
+            update_freq: 6,
+            alpha: 1.0,
+            projection: ProjectionKind::Quant8,
+            ..GaLoreCfg::default()
+        };
+        let mut a = GaLore::new(cfg, AdamCfg::default(), 4);
+        let mut wa = Matrix::zeros(8, 24);
+        // Boundary at t=8: last refresh was t=6, next is t=12 — the
+        // checkpoint crosses neither.
+        for t in 0..8 {
+            let g = wa.sub(&target);
+            a.begin_step(t);
+            a.step_param(0, &mut wa, &g, 0.05);
+        }
+        let blob = a.export_state();
+        let mut b = GaLore::new(cfg, AdamCfg::default(), 77); // other seed
+        b.import_state(&blob).unwrap();
+        assert_eq!(b.export_state(), blob, "import→export must be identity");
+        let mut wb = wa.clone();
+        for t in 8..15 {
+            let ga = wa.sub(&target);
+            a.begin_step(t);
+            a.step_param(0, &mut wa, &ga, 0.05);
+            let gb = wb.sub(&target);
+            b.begin_step(t);
+            b.step_param(0, &mut wb, &gb, 0.05);
+        }
+        assert_eq!(wa.data, wb.data, "quantized-projector resume drifted");
+    }
+
+    #[test]
+    fn legacy_v1_state_blob_still_imports() {
+        // Pre-v5 galore blobs lead with the step counter and carry P as
+        // dequantized f32s; the format gate must route them through the
+        // legacy branch, and the re-export must be the current layout.
+        let mut rng = Pcg64::new(3, 0);
+        let p = Matrix::randn(8, 4, 0.3, &mut rng);
+        let mut blob = Vec::new();
+        ser::push_u64(&mut blob, 5); // t (v1 blobs lead with it)
+        ser::push_u64(&mut blob, 2); // refreshes
+        Pcg64::new(3, 0x6a10).write_state(&mut blob);
+        ser::push_u64(&mut blob, 1); // one state
+        ser::push_u64(&mut blob, 0); // idx
+        ser::push_u64(&mut blob, 1); // low-rank tag
+        ser::push_u64(&mut blob, 0); // last_refresh
+        ser::push_u64(&mut blob, 0); // side: Left
+        ser::push_u64(&mut blob, 8); // p rows
+        ser::push_u64(&mut blob, 4); // p cols
+        ser::push_f32s(&mut blob, &p.data);
+        ser::push_f32s(&mut blob, &vec![0.01; 64]);
+        ser::push_f32s(&mut blob, &vec![0.02; 64]);
+        let cfg = GaLoreCfg {
+            rank: 4,
+            update_freq: 100,
+            alpha: 1.0,
+            ..GaLoreCfg::default()
+        };
+        let mut opt = GaLore::new(cfg, AdamCfg::default(), 9);
+        opt.import_state(&blob).unwrap();
+        let mut w = Matrix::zeros(8, 16);
+        let g = Matrix::randn(8, 16, 0.1, &mut rng);
+        opt.begin_step(5);
+        opt.step_param(0, &mut w, &g, 0.05);
+        assert!(w.data.iter().all(|x| x.is_finite()));
+        assert!(w.max_abs() > 0.0, "legacy state did not drive an update");
+        let out = opt.export_state();
+        assert_eq!(
+            u64::from_le_bytes(out[..8].try_into().unwrap()),
+            ser::STATE_MAGIC2,
+            "re-export must migrate to the v2 layout"
+        );
+        // Corrupt state counts error before allocating.
+        let mut corrupt = Vec::new();
+        ser::push_u64(&mut corrupt, ser::STATE_MAGIC2);
+        ser::push_u64(&mut corrupt, 0); // t
+        ser::push_u64(&mut corrupt, 0); // refreshes
+        Pcg64::new(0, 0).write_state(&mut corrupt);
+        ser::push_u64(&mut corrupt, u64::MAX);
+        let mut fresh = GaLore::new(cfg, AdamCfg::default(), 1);
+        assert!(fresh.import_state(&corrupt).is_err());
     }
 
     #[test]

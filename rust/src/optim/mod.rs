@@ -90,6 +90,14 @@ pub fn step_all(
 
 /// Serialization helpers shared by optimizer `export_state` impls.
 pub(crate) mod ser {
+    /// Format gate for optimizer state blobs that switched to serializing
+    /// the exact *stored* representation (codes + block scales) instead of
+    /// dequantized f32 values: a bumped blob starts with this u64, while
+    /// every legacy blob starts with a small little-endian step counter —
+    /// so `first == STATE_MAGIC2` distinguishes the layouts unambiguously
+    /// and old checkpoints keep loading through the legacy branch.
+    pub const STATE_MAGIC2: u64 = u64::from_le_bytes(*b"GALSTAT\x02");
+
     pub fn push_u64(out: &mut Vec<u8>, x: u64) {
         out.extend_from_slice(&x.to_le_bytes());
     }

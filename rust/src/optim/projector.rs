@@ -13,7 +13,7 @@
 //! orthonormal projector (the degradation case).
 
 use crate::linalg::{qr_q_only, randomized_svd, svd, RandSvdOpts};
-use crate::quant::{LinearQ4, LinearQ8};
+use crate::quant::{self, LinearQ4, LinearQ8, StoredTensor};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg64;
 
@@ -249,99 +249,88 @@ impl Projector {
         self.stored.materialize()
     }
 
-    /// Encode the *stored* representation exactly as f32 words for
-    /// collective transport. Quantized projectors ship their codes and
-    /// block scales (i8 / u8 map to f32 losslessly), NOT dequantized
-    /// values: re-quantizing a dequantized P can wobble a block's absmax
-    /// scale by 1 ulp, which would let FSDP replicas drift bitwise from a
-    /// single-process run holding the leader's original quantization.
-    /// Round-trips through [`Projector::decode_wire`] bit-exactly.
-    pub fn encode_wire(&self) -> Vec<f32> {
-        let mut w = Vec::new();
+    /// The exact *stored* representation of P — codes + block scales for
+    /// quantized kinds, the f32 matrix otherwise — as the crate-wide
+    /// [`StoredTensor`] codec type. This is what checkpoints persist and
+    /// the FSDP broadcast ships: never dequantized values, whose
+    /// re-quantization could wobble a block's absmax scale by 1 ulp and
+    /// drift replicas off the leader's trajectory.
+    pub fn stored_tensor(&self) -> StoredTensor {
         match &self.stored {
-            Stored::F32(m) => {
-                w.push(0.0);
-                w.push(m.rows as f32);
-                w.push(m.cols as f32);
-                w.extend_from_slice(&m.data);
-            }
-            Stored::Q8 { q, rows, cols } => {
-                w.push(1.0);
-                w.push(*rows as f32);
-                w.push(*cols as f32);
-                w.push(q.scales.len() as f32);
-                w.extend_from_slice(&q.scales);
-                w.extend(q.codes.iter().map(|&c| c as f32));
-            }
-            Stored::Q4 { q, rows, cols } => {
-                w.push(2.0);
-                w.push(*rows as f32);
-                w.push(*cols as f32);
-                w.push(q.scales.len() as f32);
-                w.extend_from_slice(&q.scales);
-                w.extend(q.packed.iter().map(|&b| b as f32));
-            }
+            Stored::F32(m) => StoredTensor::F32 {
+                rows: m.rows,
+                cols: m.cols,
+                data: m.data.clone(),
+            },
+            Stored::Q8 { q, rows, cols } => StoredTensor::Q8 {
+                rows: *rows,
+                cols: *cols,
+                q: q.clone(),
+            },
+            Stored::Q4 { q, rows, cols } => StoredTensor::Q4 {
+                rows: *rows,
+                cols: *cols,
+                q: q.clone(),
+            },
         }
-        w
     }
 
-    /// Rebuild a projector from [`Projector::encode_wire`] words. `side`
-    /// must come from the FULL parameter shape (the decoder may live on a
-    /// worker whose local shard has a different aspect ratio); `kind` is
-    /// the config's projection kind and must agree with the encoded tag.
-    pub fn decode_wire(words: &[f32], side: ProjectorSide, kind: ProjectionKind) -> Projector {
-        let tag = words[0] as i32;
-        let rows = words[1] as usize;
-        let cols = words[2] as usize;
-        let stored = match tag {
-            0 => Stored::F32(Matrix::from_vec(
+    /// Rebuild a projector from a [`StoredTensor`] — the exact inverse of
+    /// [`Projector::stored_tensor`] when the tensor's storage kind matches
+    /// `kind`. On a mismatch (a checkpoint taken under a different
+    /// `[galore] projection` setting) the values are materialized and
+    /// re-quantized for the configured kind, mirroring
+    /// [`Projector::install_p`] — lossy, but shape-correct. `side` must
+    /// come from the FULL parameter shape, as with `decode_wire`.
+    pub fn from_stored(st: StoredTensor, side: ProjectorSide, kind: ProjectionKind) -> Projector {
+        let (rows, cols) = (st.rows(), st.cols());
+        let stored = match (&st, kind) {
+            (StoredTensor::Q8 { q, .. }, ProjectionKind::Quant8) => Stored::Q8 {
+                q: q.clone(),
                 rows,
                 cols,
-                words[3..3 + rows * cols].to_vec(),
-            )),
-            1 => {
-                let ns = words[3] as usize;
-                let scales = words[4..4 + ns].to_vec();
-                let codes: Vec<i8> = words[4 + ns..4 + ns + rows * cols]
-                    .iter()
-                    .map(|&x| x as i8)
-                    .collect();
-                Stored::Q8 {
-                    q: LinearQ8 {
-                        codes,
-                        scales,
-                        len: rows * cols,
-                    },
-                    rows,
-                    cols,
-                }
+            },
+            (StoredTensor::Q4 { q, .. }, ProjectionKind::Quant4) => Stored::Q4 {
+                q: q.clone(),
+                rows,
+                cols,
+            },
+            (
+                StoredTensor::F32 { data, .. },
+                ProjectionKind::FullSvd
+                | ProjectionKind::RandSvd
+                | ProjectionKind::Random,
+            ) => Stored::F32(Matrix::from_vec(rows, cols, data.clone())),
+            _ => {
+                // Storage kind changed between save and resume (e.g. the
+                // `[galore] projection` setting was edited): fall back to
+                // the install path (materialize + re-encode for `kind`).
+                // LOUD, never silent — this is the one lossy projector
+                // conversion, and it only persists until the next
+                // scheduled refresh re-derives the subspace.
+                let stored_as = match &st {
+                    StoredTensor::F32 { .. } => "f32",
+                    StoredTensor::Q8 { .. } => "q8",
+                    StoredTensor::Q4 { .. } => "q4",
+                };
+                eprintln!(
+                    "[resume] projector stored as {stored_as} but the config \
+                     selects {kind:?}: re-encoding (lossy until the next \
+                     subspace refresh)"
+                );
+                let mut p = Projector {
+                    kind,
+                    side,
+                    rank: cols,
+                    stored: Stored::F32(Matrix::zeros(0, 0)),
+                    cache: None,
+                    refresh_count: 0,
+                };
+                p.install_p(Matrix::from_vec(rows, cols, st.materialize()));
+                p.refresh_count = 0;
+                return p;
             }
-            2 => {
-                let ns = words[3] as usize;
-                let scales = words[4..4 + ns].to_vec();
-                let n = rows * cols;
-                let packed: Vec<u8> = words[4 + ns..4 + ns + n.div_ceil(2)]
-                    .iter()
-                    .map(|&x| x as u8)
-                    .collect();
-                Stored::Q4 {
-                    q: LinearQ4 {
-                        packed,
-                        scales,
-                        len: n,
-                    },
-                    rows,
-                    cols,
-                }
-            }
-            other => panic!("corrupt projector wire encoding (tag {other})"),
         };
-        let expect_tag = match kind {
-            ProjectionKind::Quant8 => 1,
-            ProjectionKind::Quant4 => 2,
-            _ => 0,
-        };
-        debug_assert_eq!(tag, expect_tag, "wire tag does not match kind {kind:?}");
         Projector {
             kind,
             side,
@@ -350,6 +339,51 @@ impl Projector {
             cache: None,
             refresh_count: 0,
         }
+    }
+
+    /// Encode the stored representation as f32 words for collective
+    /// transport: the [`StoredTensor`] byte codec — the same one
+    /// checkpoints use — packed into exact-integer words
+    /// (`quant::bytes_to_words`), so there is exactly ONE quantized
+    /// serialization layout crate-wide. Round-trips through
+    /// [`Projector::decode_wire`] bit-exactly.
+    pub fn encode_wire(&self) -> Vec<f32> {
+        let mut bytes = Vec::new();
+        self.stored_tensor().encode(&mut bytes);
+        quant::bytes_to_words(&bytes)
+    }
+
+    /// Rebuild a projector from [`Projector::encode_wire`] words. `side`
+    /// must come from the FULL parameter shape (the decoder may live on a
+    /// worker whose local shard has a different aspect ratio); `kind` is
+    /// the config's projection kind and must agree with the encoded tag.
+    /// Panics on malformed words: the wire connects our own ranks, so
+    /// corruption is an internal invariant violation, not user input.
+    pub fn decode_wire(words: &[f32], side: ProjectorSide, kind: ProjectionKind) -> Projector {
+        let bytes = quant::words_to_bytes(words)
+            .unwrap_or_else(|e| panic!("corrupt projector wire encoding: {e}"));
+        let mut r = crate::optim::ser::Reader::new(&bytes);
+        let st = StoredTensor::decode(&mut r)
+            .unwrap_or_else(|e| panic!("corrupt projector wire encoding: {e}"));
+        // The broadcast connects ranks sharing one config: a storage-kind
+        // mismatch here is an internal invariant violation (from_stored
+        // would re-quantize and silently drift replicas), not a user's
+        // config edit.
+        debug_assert!(
+            matches!(
+                (&st, kind),
+                (StoredTensor::Q8 { .. }, ProjectionKind::Quant8)
+                    | (StoredTensor::Q4 { .. }, ProjectionKind::Quant4)
+                    | (
+                        StoredTensor::F32 { .. },
+                        ProjectionKind::FullSvd
+                            | ProjectionKind::RandSvd
+                            | ProjectionKind::Random
+                    )
+            ),
+            "wire tag does not match kind {kind:?}"
+        );
+        Projector::from_stored(st, side, kind)
     }
 
     /// Install a replicated P (on non-leader workers).
@@ -528,6 +562,33 @@ mod tests {
             // And a second encode round-trips to the same words.
             assert_eq!(worker.encode_wire(), words, "{kind:?}: unstable encoding");
         }
+    }
+
+    #[test]
+    fn stored_tensor_roundtrip_preserves_exact_projection() {
+        // stored_tensor → from_stored is the identity on the stored
+        // representation for matching kinds; a kind mismatch falls back to
+        // materialize + re-encode (shape-correct, possibly lossy).
+        let mut rng = Pcg64::new(21, 0);
+        let g = Matrix::randn(16, 28, 1.0, &mut rng);
+        for kind in [
+            ProjectionKind::RandSvd,
+            ProjectionKind::Quant8,
+            ProjectionKind::Quant4,
+        ] {
+            let mut a = Projector::from_gradient(&g, 5, kind, &mut rng);
+            let mut b = Projector::from_stored(a.stored_tensor(), a.side, kind);
+            assert_eq!(b.rank, a.rank, "{kind:?} rank");
+            assert_eq!(a.project(&g).data, b.project(&g).data, "{kind:?}");
+            assert_eq!(a.stored_tensor(), b.stored_tensor(), "{kind:?} stored");
+        }
+        // Mismatch: a q8 checkpoint resumed under an fp32 config still
+        // yields a usable projector of the right geometry.
+        let q8 = Projector::from_gradient(&g, 5, ProjectionKind::Quant8, &mut rng);
+        let mut back =
+            Projector::from_stored(q8.stored_tensor(), q8.side, ProjectionKind::RandSvd);
+        assert_eq!(back.rank, 5);
+        assert_eq!(back.project(&g).shape(), (5, 28));
     }
 
     #[test]

@@ -123,7 +123,11 @@ impl OptimizerSpec {
     /// FSDP (external-subspace) build of `QGaLore` is a concrete `GaLore`
     /// too. `checkpoint::canonical` uses this to convert blobs between
     /// the two layouts at the canonical boundary, so a checkpoint written
-    /// by any build of the family resumes under any other.
+    /// by any build of the family resumes under any other. The "adam8bit"
+    /// and "adafactor" codec names additionally tell the canonical layer
+    /// to parse those blobs into the structured `Quantized` payload
+    /// (stored-representation moments / factored accumulators) instead of
+    /// carrying them opaquely.
     pub fn state_codec(&self, external_subspace: bool) -> &'static str {
         match self {
             OptimizerSpec::QGaLore { .. } if !external_subspace => "qgalore",

@@ -80,7 +80,7 @@ fn nearest_code(code: &[f32], x: f32) -> u8 {
 }
 
 /// A block-wise quantized f32 vector (8-bit dynamic code).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Quantized8 {
     pub codes: Vec<u8>,
     pub scales: Vec<f32>, // one absmax per block
@@ -133,7 +133,7 @@ impl Quantized8 {
 /// Linear (uniform) signed 8-bit block quantizer — Q-GaLore's projector
 /// format (projection matrices are near-Gaussian, where a uniform code is
 /// fine and decode is a single multiply).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LinearQ8 {
     pub codes: Vec<i8>,
     pub scales: Vec<f32>,
@@ -177,7 +177,7 @@ impl LinearQ8 {
 
 /// Linear signed 4-bit block quantizer (two codes per byte) — Q-GaLore's
 /// most aggressive projector format; Figure 1's "q4" series.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LinearQ4 {
     pub packed: Vec<u8>,
     pub scales: Vec<f32>,
@@ -224,6 +224,298 @@ impl LinearQ4 {
     pub fn nbytes(&self) -> usize {
         self.packed.len() + self.scales.len() * 4
     }
+}
+
+// ---------------------------------------------------------------------------
+// Stored-representation codec
+// ---------------------------------------------------------------------------
+//
+// The single serialize/deserialize surface for block-quantized data. Every
+// persisted or transported stored representation — Adam8bit moments,
+// Q-GaLore projectors, canonical checkpoint payloads, the FSDP subspace
+// broadcast — goes through `encode_blocks`/`decode_blocks`: one layout, one
+// hardened parser. Codes travel as their exact bytes and scales as exact
+// f32 bit patterns, so encode∘decode is the identity on the stored
+// representation. (A dequantize→requantize round trip is NOT: it can
+// wobble a block's absmax scale by 1 ulp, which is exactly the drift the
+// elastic-resume and FSDP-replication contracts forbid.)
+
+use crate::optim::ser::{push_f32s, push_u64, Reader};
+
+/// Layout: `[len u64][ncodes u64][code bytes][scales: len-framed f32s]`.
+fn encode_blocks(out: &mut Vec<u8>, len: usize, codes: &[u8], scales: &[f32]) {
+    push_u64(out, len as u64);
+    push_u64(out, codes.len() as u64);
+    out.extend_from_slice(codes);
+    push_f32s(out, scales);
+}
+
+/// The one parser for the block layout. `codes_for_len` maps element count
+/// to stored code bytes (1 byte/elem for the 8-bit codes, packed nibble
+/// pairs for 4-bit). Checked: corrupt counts error before any allocation
+/// (`Reader` range checks), and the cross-invariants — code bytes and
+/// scale count both derived from `len` — are enforced so a bit-flipped
+/// header can never decode into a structurally inconsistent tensor.
+fn decode_blocks(
+    r: &mut Reader,
+    codes_for_len: fn(usize) -> usize,
+) -> Result<(usize, Vec<u8>, Vec<f32>), String> {
+    let len = r.u64()? as usize;
+    let ncodes = r.u64()? as usize;
+    if ncodes != codes_for_len(len) {
+        return Err(format!(
+            "quantized blocks: {ncodes} code bytes for {len} elements"
+        ));
+    }
+    let codes = r.bytes(ncodes)?.to_vec();
+    let scales = r.f32s()?;
+    if scales.len() != len.div_ceil(BLOCK) {
+        return Err(format!(
+            "quantized blocks: {} scales for {len} elements (block size {BLOCK})",
+            scales.len()
+        ));
+    }
+    Ok((len, codes, scales))
+}
+
+fn one_code_byte_per_elem(len: usize) -> usize {
+    len
+}
+
+fn packed_nibble_bytes(len: usize) -> usize {
+    len.div_ceil(2)
+}
+
+impl Quantized8 {
+    /// Serialize the exact stored representation (codes + block scales).
+    pub(crate) fn encode(&self, out: &mut Vec<u8>) {
+        encode_blocks(out, self.len, &self.codes, &self.scales);
+    }
+
+    /// Inverse of [`Quantized8::encode`]; errors (never panics) on
+    /// truncated or inconsistent input.
+    pub(crate) fn decode(r: &mut Reader) -> Result<Quantized8, String> {
+        let (len, codes, scales) = decode_blocks(r, one_code_byte_per_elem)?;
+        Ok(Quantized8 { codes, scales, len })
+    }
+}
+
+impl LinearQ8 {
+    pub(crate) fn encode(&self, out: &mut Vec<u8>) {
+        let bytes: Vec<u8> = self.codes.iter().map(|&c| c as u8).collect();
+        encode_blocks(out, self.len, &bytes, &self.scales);
+    }
+
+    pub(crate) fn decode(r: &mut Reader) -> Result<LinearQ8, String> {
+        let (len, bytes, scales) = decode_blocks(r, one_code_byte_per_elem)?;
+        Ok(LinearQ8 {
+            codes: bytes.iter().map(|&b| b as i8).collect(),
+            scales,
+            len,
+        })
+    }
+}
+
+impl LinearQ4 {
+    pub(crate) fn encode(&self, out: &mut Vec<u8>) {
+        encode_blocks(out, self.len, &self.packed, &self.scales);
+    }
+
+    pub(crate) fn decode(r: &mut Reader) -> Result<LinearQ4, String> {
+        let (len, packed, scales) = decode_blocks(r, packed_nibble_bytes)?;
+        Ok(LinearQ4 {
+            packed,
+            scales,
+            len,
+        })
+    }
+}
+
+/// The exact stored representation of a (possibly quantized) 2-d tensor —
+/// what [`crate::optim::Projector`] persists, broadcasts, and restores.
+/// Tagged with the storage kind so a decoder reconstructs the *identical*
+/// codes + scales, never a re-quantization of dequantized values.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StoredTensor {
+    F32 {
+        rows: usize,
+        cols: usize,
+        data: Vec<f32>,
+    },
+    /// Linear 8-bit blocks (Q-GaLore's default projector storage).
+    Q8 {
+        rows: usize,
+        cols: usize,
+        q: LinearQ8,
+    },
+    /// Linear 4-bit blocks (Q-GaLore-int4).
+    Q4 {
+        rows: usize,
+        cols: usize,
+        q: LinearQ4,
+    },
+}
+
+const STORED_F32: u8 = 0;
+const STORED_Q8: u8 = 1;
+const STORED_Q4: u8 = 2;
+
+impl StoredTensor {
+    pub fn rows(&self) -> usize {
+        match self {
+            StoredTensor::F32 { rows, .. }
+            | StoredTensor::Q8 { rows, .. }
+            | StoredTensor::Q4 { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            StoredTensor::F32 { cols, .. }
+            | StoredTensor::Q8 { cols, .. }
+            | StoredTensor::Q4 { cols, .. } => *cols,
+        }
+    }
+
+    /// Dequantized row-major values (f32 passes through untouched).
+    pub fn materialize(&self) -> Vec<f32> {
+        match self {
+            StoredTensor::F32 { data, .. } => data.clone(),
+            StoredTensor::Q8 { q, .. } => q.dequantize(),
+            StoredTensor::Q4 { q, .. } => q.dequantize(),
+        }
+    }
+
+    /// Layout: `[tag u8][rows u64][cols u64][payload]` with the payload in
+    /// the shared block codec (f32 data as a len-framed f32 vector).
+    pub(crate) fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            StoredTensor::F32 { rows, cols, data } => {
+                out.push(STORED_F32);
+                push_u64(out, *rows as u64);
+                push_u64(out, *cols as u64);
+                push_f32s(out, data);
+            }
+            StoredTensor::Q8 { rows, cols, q } => {
+                out.push(STORED_Q8);
+                push_u64(out, *rows as u64);
+                push_u64(out, *cols as u64);
+                q.encode(out);
+            }
+            StoredTensor::Q4 { rows, cols, q } => {
+                out.push(STORED_Q4);
+                push_u64(out, *rows as u64);
+                push_u64(out, *cols as u64);
+                q.encode(out);
+            }
+        }
+    }
+
+    /// Decode the LEGACY (pre-`STATE_MAGIC2`) projector layout —
+    /// `[rows u64][cols u64][len-framed f32 data]`, what v1 galore state
+    /// blobs carry. One parser for it crate-wide (the canonical layer and
+    /// the optimizer's own gated import both route here).
+    pub(crate) fn decode_legacy_f32(r: &mut Reader) -> Result<StoredTensor, String> {
+        let rows = r.u64()? as usize;
+        let cols = r.u64()? as usize;
+        let data = r.f32s()?;
+        if data.len() != rows.checked_mul(cols).ok_or("truncated state")? {
+            return Err(format!(
+                "projector has {} elements for shape {rows}x{cols}",
+                data.len()
+            ));
+        }
+        Ok(StoredTensor::F32 { rows, cols, data })
+    }
+
+    pub(crate) fn decode(r: &mut Reader) -> Result<StoredTensor, String> {
+        let tag = r.bytes(1)?[0];
+        let rows = r.u64()? as usize;
+        let cols = r.u64()? as usize;
+        let numel = rows
+            .checked_mul(cols)
+            .ok_or_else(|| format!("stored tensor shape {rows}x{cols} overflows"))?;
+        let check = |len: usize| {
+            if len == numel {
+                Ok(())
+            } else {
+                Err(format!(
+                    "stored tensor holds {len} elements for shape {rows}x{cols}"
+                ))
+            }
+        };
+        Ok(match tag {
+            STORED_F32 => {
+                let data = r.f32s()?;
+                check(data.len())?;
+                StoredTensor::F32 { rows, cols, data }
+            }
+            STORED_Q8 => {
+                let q = LinearQ8::decode(r)?;
+                check(q.len)?;
+                StoredTensor::Q8 { rows, cols, q }
+            }
+            STORED_Q4 => {
+                let q = LinearQ4::decode(r)?;
+                check(q.len)?;
+                StoredTensor::Q4 { rows, cols, q }
+            }
+            other => return Err(format!("unknown stored-tensor tag {other}")),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte payloads over f32 collectives
+// ---------------------------------------------------------------------------
+
+/// Pack an arbitrary byte payload into f32 words for transport over the
+/// f32 collectives (`Comm::broadcast`). Three bytes ride per word as an
+/// exact small integer (< 2^24, always finite — no NaN bit patterns that a
+/// fabric could quiet), prefixed by a two-word length. Exact inverse:
+/// [`words_to_bytes`].
+pub(crate) fn bytes_to_words(bytes: &[u8]) -> Vec<f32> {
+    let mut words = Vec::with_capacity(2 + bytes.len().div_ceil(3));
+    words.push((bytes.len() & 0xff_ffff) as f32);
+    words.push((bytes.len() >> 24) as f32);
+    for chunk in bytes.chunks(3) {
+        let mut v = 0u32;
+        for (i, &b) in chunk.iter().enumerate() {
+            v |= (b as u32) << (8 * i);
+        }
+        words.push(v as f32);
+    }
+    words
+}
+
+/// Inverse of [`bytes_to_words`]; errors on malformed word streams.
+pub(crate) fn words_to_bytes(words: &[f32]) -> Result<Vec<u8>, String> {
+    let word = |i: usize| -> Result<usize, String> {
+        let w = *words
+            .get(i)
+            .ok_or_else(|| "byte payload truncated".to_string())?;
+        if w < 0.0 || w.fract() != 0.0 || w >= (1u32 << 24) as f32 {
+            return Err(format!("byte payload word {i} is not a packed integer ({w})"));
+        }
+        Ok(w as usize)
+    };
+    let len = word(0)? | (word(1)? << 24);
+    if words.len() != 2 + len.div_ceil(3) {
+        return Err(format!(
+            "byte payload declares {len} bytes but has {} words",
+            words.len()
+        ));
+    }
+    let mut bytes = Vec::with_capacity(len);
+    for i in 0..len.div_ceil(3) {
+        let v = word(2 + i)? as u32;
+        for j in 0..3 {
+            if bytes.len() < len {
+                bytes.push((v >> (8 * j)) as u8);
+            }
+        }
+    }
+    Ok(bytes)
 }
 
 #[cfg(test)]
@@ -341,5 +633,115 @@ mod tests {
         for i in [0, 1, 255, 256, 257, 699] {
             assert_eq!(q.get(i), all[i]);
         }
+    }
+
+    #[test]
+    fn codec_roundtrips_exact_stored_representation() {
+        // encode∘decode is the identity on codes + scales for every
+        // quantizer — including lengths that leave a partial tail block
+        // and the empty tensor.
+        let mut rng = crate::util::rng::Pcg64::new(8, 0);
+        for n in [0usize, 1, 255, 256, 257, 700] {
+            let mut xs = vec![0f32; n];
+            rng.fill_normal(&mut xs, 1.5);
+            let q8 = Quantized8::quantize(&xs);
+            let l8 = LinearQ8::quantize(&xs);
+            let l4 = LinearQ4::quantize(&xs);
+            let mut buf = Vec::new();
+            q8.encode(&mut buf);
+            l8.encode(&mut buf);
+            l4.encode(&mut buf);
+            let mut r = Reader::new(&buf);
+            assert_eq!(Quantized8::decode(&mut r).unwrap(), q8, "n={n}");
+            assert_eq!(LinearQ8::decode(&mut r).unwrap(), l8, "n={n}");
+            assert_eq!(LinearQ4::decode(&mut r).unwrap(), l4, "n={n}");
+            assert!(r.done(), "n={n}: trailing bytes");
+        }
+    }
+
+    #[test]
+    fn codec_rejects_truncation_and_inconsistent_headers() {
+        let q = Quantized8::quantize(&vec![0.5f32; 300]);
+        let mut buf = Vec::new();
+        q.encode(&mut buf);
+        for cut in [0, 7, 8, 16, buf.len() / 2, buf.len() - 1] {
+            let mut r = Reader::new(&buf[..cut]);
+            assert!(
+                Quantized8::decode(&mut r).is_err(),
+                "truncation at {cut} decoded silently"
+            );
+        }
+        // Corrupt element count: the code-byte cross-check must fire.
+        let mut bad = buf.clone();
+        bad[0] ^= 0x01;
+        assert!(Quantized8::decode(&mut Reader::new(&bad)).is_err());
+        // Insane element count must error before allocating.
+        let mut insane = Vec::new();
+        crate::optim::ser::push_u64(&mut insane, u64::MAX);
+        crate::optim::ser::push_u64(&mut insane, u64::MAX);
+        assert!(Quantized8::decode(&mut Reader::new(&insane)).is_err());
+        // Scale-count mismatch: append one extra scale word to the framed
+        // scales vector by rebuilding the blob with a lying scale count.
+        let mut lying = Vec::new();
+        encode_blocks(&mut lying, 300, &q.codes, &q.scales[..1]);
+        assert!(Quantized8::decode(&mut Reader::new(&lying)).is_err());
+    }
+
+    #[test]
+    fn stored_tensor_roundtrips_all_kinds() {
+        let mut rng = crate::util::rng::Pcg64::new(9, 0);
+        let mut data = vec![0f32; 12 * 7];
+        rng.fill_normal(&mut data, 1.0);
+        let cases = vec![
+            StoredTensor::F32 {
+                rows: 12,
+                cols: 7,
+                data: data.clone(),
+            },
+            StoredTensor::Q8 {
+                rows: 12,
+                cols: 7,
+                q: LinearQ8::quantize(&data),
+            },
+            StoredTensor::Q4 {
+                rows: 12,
+                cols: 7,
+                q: LinearQ4::quantize(&data),
+            },
+        ];
+        for st in &cases {
+            let mut buf = Vec::new();
+            st.encode(&mut buf);
+            let mut r = Reader::new(&buf);
+            let back = StoredTensor::decode(&mut r).unwrap();
+            assert_eq!(&back, st);
+            assert!(r.done());
+            assert_eq!(back.rows(), 12);
+            assert_eq!(back.cols(), 7);
+            assert_eq!(back.materialize().len(), 12 * 7);
+        }
+        // Shape/payload mismatch is rejected.
+        let mut buf = Vec::new();
+        StoredTensor::F32 {
+            rows: 3,
+            cols: 3,
+            data: vec![0.0; 9],
+        }
+        .encode(&mut buf);
+        buf[1] ^= 0x01; // rows 3 -> 2
+        assert!(StoredTensor::decode(&mut Reader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn byte_word_packing_is_exact_inverse() {
+        for n in [0usize, 1, 2, 3, 4, 100, 257] {
+            let bytes: Vec<u8> = (0..n).map(|i| (i * 37 % 256) as u8).collect();
+            let words = bytes_to_words(&bytes);
+            assert!(words.iter().all(|w| w.is_finite() && w.fract() == 0.0));
+            assert_eq!(words_to_bytes(&words).unwrap(), bytes, "n={n}");
+        }
+        assert!(words_to_bytes(&[]).is_err());
+        assert!(words_to_bytes(&[3.0, 0.0]).is_err(), "missing payload words");
+        assert!(words_to_bytes(&[1.5, 0.0, 0.0]).is_err(), "non-integer word");
     }
 }

@@ -25,7 +25,7 @@
 //! mode-specific blobs are still accepted on import, but remain
 //! world-locked for FSDP and fail loudly on mismatch.
 
-use crate::checkpoint::canonical::CanonicalOptState;
+use crate::checkpoint::canonical::{CanonicalOptState, ImportOpts};
 use crate::dist::{DdpCluster, FsdpCluster, MemoryReport, ParamMeta, TransportKind};
 use crate::optim::spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};
 use crate::tensor::Matrix;
@@ -58,10 +58,37 @@ pub trait TrainEngine {
     /// on import instead of silently resetting).
     fn export_state(&self) -> Vec<u8>;
 
-    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String>;
+    /// Exact-only import: every restore is bitwise or a loud error.
+    /// Equivalent to [`TrainEngine::import_state_with`] under the default
+    /// [`ImportOpts`].
+    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.import_state_with(bytes, ImportOpts::default())
+    }
+
+    /// Import with an explicit policy: `opts.requantize` opts into the
+    /// lossy conversions (`--resume-requantize`) for state that cannot be
+    /// re-sliced exactly at this engine's mode/world — re-blocking
+    /// quantized adam8bit moments, merging/replicating adafactor's
+    /// factored cross-statistics.
+    fn import_state_with(&mut self, bytes: &[u8], opts: ImportOpts) -> Result<(), String>;
 
     /// Per-rank memory/traffic telemetry (None for single-process).
     fn memory_reports(&self) -> Option<Vec<MemoryReport>>;
+}
+
+/// Synthesize parameter metas from full parameter matrices — the geometry
+/// the canonical import conversions need when an engine (SingleEngine)
+/// holds no explicit meta table.
+fn metas_from_params(params: &[Matrix]) -> Vec<ParamMeta> {
+    params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ParamMeta {
+            name: format!("param{i}"),
+            rows: p.rows,
+            cols: p.cols,
+        })
+        .collect()
 }
 
 /// Single-process engine: one optimizer instance stepping in place.
@@ -124,14 +151,18 @@ impl TrainEngine for SingleEngine {
 
     fn export_state(&self) -> Vec<u8> {
         CanonicalOptState::from_full(self.opt.name(), self.codec, self.opt.export_state())
+            .expect("canonicalizing optimizer state")
             .encode()
     }
 
-    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+    fn import_state_with(&mut self, bytes: &[u8], opts: ImportOpts) -> Result<(), String> {
         if CanonicalOptState::sniff(bytes) {
             let c = CanonicalOptState::decode(bytes)?;
             c.expect_name(self.opt.name())?;
-            self.opt.as_opt().import_state(&c.to_full_for(self.codec)?)
+            let metas = metas_from_params(&self.params);
+            self.opt
+                .as_opt()
+                .import_state(&c.to_full_for(self.codec, &metas, opts)?)
         } else {
             // Legacy (v2) checkpoint: the raw single-process blob.
             self.opt.as_opt().import_state(bytes)
@@ -225,11 +256,11 @@ impl TrainEngine for FsdpEngine {
         .encode()
     }
 
-    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+    fn import_state_with(&mut self, bytes: &[u8], opts: ImportOpts) -> Result<(), String> {
         if CanonicalOptState::sniff(bytes) {
             let c = CanonicalOptState::decode(bytes)?;
             c.expect_name(self.cluster.optimizer_name())?;
-            let frames = c.fsdp_frames(self.cluster.world(), self.cluster.metas())?;
+            let frames = c.fsdp_frames(self.cluster.world(), self.cluster.metas(), opts)?;
             self.cluster.import_frames(frames)
         } else {
             // Legacy (v2) checkpoint: world-locked per-rank frames; the
@@ -329,14 +360,19 @@ impl TrainEngine for DdpEngine {
             self.codec,
             self.cluster.export_optimizer(),
         )
+        .expect("canonicalizing optimizer state")
         .encode()
     }
 
-    fn import_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+    fn import_state_with(&mut self, bytes: &[u8], opts: ImportOpts) -> Result<(), String> {
         if CanonicalOptState::sniff(bytes) {
             let c = CanonicalOptState::decode(bytes)?;
             c.expect_name(self.cluster.optimizer_name())?;
-            self.cluster.import_optimizer(&c.to_full_for(self.codec)?)
+            self.cluster.import_optimizer(&c.to_full_for(
+                self.codec,
+                self.cluster.metas(),
+                opts,
+            )?)
         } else {
             // Legacy (v2) checkpoint: the raw replicated blob.
             self.cluster.import_optimizer(bytes)

@@ -11,6 +11,7 @@ mod observer;
 mod pjrt_galore;
 mod trainer;
 
+pub use crate::checkpoint::canonical::ImportOpts;
 pub use engine::{DdpEngine, FsdpEngine, SingleEngine, TrainEngine};
 pub use observer::{StepEvent, StepObserver};
 pub use pjrt_galore::PjrtGaLore;

@@ -358,15 +358,20 @@ impl Trainer {
     /// into their workers) and optimizer state flows through
     /// [`TrainEngine::import_state`].
     ///
-    /// **Elastic**: a v3 checkpoint stores the canonical (world-agnostic)
+    /// **Elastic**: a v3+ checkpoint stores the canonical (world-agnostic)
     /// optimizer form, so the source run's `--parallel` mode and world
     /// size don't have to match this trainer's — FSDP moments are
-    /// re-sliced for the new world (`checkpoint::canonical`). Legacy v2
-    /// checkpoints remain world-locked under FSDP and fail loudly on a
-    /// mismatch. Note that changing the world also changes how microbatch
-    /// data is dealt across ranks, so only a same-world resume reproduces
-    /// the uninterrupted *loss* trajectory; optimizer state itself is
-    /// restored exactly either way (pinned in tests/resharding.rs).
+    /// re-sliced for the new world (`checkpoint::canonical`). State that
+    /// cannot be re-sliced exactly at this mode/world (misaligned
+    /// block-quantized adam8bit moments, adafactor's factored
+    /// cross-statistics) imports only behind the explicit
+    /// `--resume-requantize` / `[train] resume_requantize` opt-in — loud,
+    /// never silent. Legacy v2 checkpoints remain world-locked under FSDP
+    /// and fail loudly on a mismatch. Note that changing the world also
+    /// changes how microbatch data is dealt across ranks, so only a
+    /// same-world resume reproduces the uninterrupted *loss* trajectory;
+    /// optimizer state itself is restored exactly either way (pinned in
+    /// tests/resharding.rs).
     pub fn resume(&mut self, path: &Path) -> Result<u64> {
         let ckpt = Checkpoint::load(path)?;
         anyhow::ensure!(
@@ -374,8 +379,11 @@ impl Trainer {
             "checkpoint param count mismatch"
         );
         self.engine.init_params(&ckpt.params);
+        let opts = crate::train::ImportOpts {
+            requantize: self.cfg.resume_requantize,
+        };
         self.engine
-            .import_state(&ckpt.opt_state)
+            .import_state_with(&ckpt.opt_state, opts)
             .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
         self.start_step = ckpt.step;
         // Telemetry continuity: v4 checkpoints record the exact counter,

@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Regenerate the committed legacy checkpoint fixtures.
+
+These files pin the LEGACY format gates: `ckpt_v3_adamw.ckpt` is a
+version-3 checkpoint (canonical adamw state, no token counter) and
+`ckpt_v4_galore.ckpt` is a version-4 checkpoint (canonical galore state in
+the PRE-v5 blob layout: dequantized f32 projector behind explicit dims,
+leading step counter instead of the STATE_MAGIC2 gate). They are loaded by
+`tests/resharding.rs::committed_legacy_fixtures_migrate_to_v5`, which
+resumes them, cross-checks the continuation across modes bitwise, and
+asserts the re-saved file migrates to the current (v5) format.
+
+The byte layouts mirror rust/src/checkpoint/{mod,canonical}.rs and the
+pre-v5 optimizer blob layouts. The parameter/moment VALUES are synthetic
+(deterministic, well-formed) — the migration test compares resumed runs
+against each other, not against a recorded trajectory, so only structure
+and determinism matter. Regenerate with `python3 tests/fixtures/make_fixtures.py`
+only if the legacy layouts themselves need re-deriving; do NOT regenerate
+to track new state formats — the whole point is that these bytes stay old.
+"""
+import struct
+from pathlib import Path
+
+HERE = Path(__file__).parent
+
+# The resharding test suite's standard shapes: wide, tall, square, bias.
+SHAPES = [(8, 16), (16, 8), (6, 6), (1, 12)]
+
+PCG_MULT = 0x2360ED051FC65DA44385DF649FCCF645
+MASK128 = (1 << 128) - 1
+
+
+def pcg64_state(seed: int, stream: int) -> bytes:
+    """State bytes of Pcg64::new(seed, stream) (util/rng.rs write_state)."""
+    inc = ((stream << 1) | 1) & MASK128
+    state = 0
+    state = (state * PCG_MULT + inc) & MASK128  # next_u64
+    state = (state + seed) & MASK128
+    state = (state * PCG_MULT + inc) & MASK128  # next_u64
+    return state.to_bytes(16, "little") + inc.to_bytes(16, "little")
+
+
+def u64(x: int) -> bytes:
+    return struct.pack("<Q", x)
+
+
+def f32s(xs) -> bytes:
+    return u64(len(xs)) + b"".join(struct.pack("<f", x) for x in xs)
+
+
+def param_values(idx: int, n: int):
+    return [((idx * 131 + k * 7) % 97) * 0.01 - 0.45 for k in range(n)]
+
+
+def moment_m(idx: int, n: int):
+    return [0.001 * ((idx * 11 + k) % 13 + 1) for k in range(n)]
+
+
+def moment_v(idx: int, n: int):
+    return [0.0001 * ((idx * 5 + k) % 7 + 1) for k in range(n)]
+
+
+def canonical(name: bytes, blob: bytes) -> bytes:
+    out = b"GAL2OPT\x01" + u64(len(name)) + name
+    out += u64(0)  # FLAVOR_FULL
+    out += u64(len(blob)) + blob
+    return out
+
+
+def checkpoint(version: int, step: int, tokens, opt_state: bytes) -> bytes:
+    out = b"GAL2CKPT" + struct.pack("<I", version) + u64(step)
+    if version >= 4:
+        out += bytes([1 if tokens is not None else 0]) + u64(tokens or 0)
+    out += u64(len(SHAPES))
+    for idx, (rows, cols) in enumerate(SHAPES):
+        name = f"p{idx}".encode()
+        out += u64(len(name)) + name + u64(rows) + u64(cols)
+        out += b"".join(
+            struct.pack("<f", x) for x in param_values(idx, rows * cols)
+        )
+    out += u64(len(opt_state)) + opt_state
+    return out
+
+
+def adamw_blob(t: int) -> bytes:
+    # Pre-v5 == current adamw layout: [t][n] per state [idx][f32s m][f32s v].
+    out = u64(t) + u64(len(SHAPES))
+    for idx, (rows, cols) in enumerate(SHAPES):
+        n = rows * cols
+        out += u64(idx) + f32s(moment_m(idx, n)) + f32s(moment_v(idx, n))
+    return out
+
+
+def galore_v1_blob(t: int, rank: int) -> bytes:
+    # Pre-v5 galore layout: [t][refreshes][rng 32B][n] then per state
+    # [idx][tag]; low-rank: [last_refresh][side][p_rows][p_cols][f32s p]
+    # [f32s m][f32s v]; full: [f32s m][f32s v]. The projector is the
+    # DEQUANTIZED v1 representation (what this fixture exists to pin).
+    out = u64(t) + u64(9)  # t, refreshes (informational)
+    out += pcg64_state(21, 0x6A10)  # the resharding suite's SEED
+    out += u64(len(SHAPES))
+    for idx, (rows, cols) in enumerate(SHAPES):
+        out += u64(idx)
+        if min(rows, cols) < 2 or rank > min(rows, cols):
+            n = rows * cols
+            out += u64(0) + f32s(moment_m(idx, n)) + f32s(moment_v(idx, n))
+            continue
+        out += u64(1)
+        out += u64(3)  # last_refresh (t=3 with update_freq 3)
+        side = 0 if rows <= cols else 1  # Left for wide, Right for tall
+        out += u64(side)
+        d = rows if side == 0 else cols
+        out += u64(d) + u64(rank)
+        out += f32s(param_values(idx + 40, d * rank))
+        lm, ln = (rank, cols) if side == 0 else (rows, rank)
+        out += f32s(moment_m(idx, lm * ln)) + f32s(moment_v(idx, lm * ln))
+    return out
+
+
+def main():
+    v3 = checkpoint(3, 4, None, canonical(b"adamw", adamw_blob(3)))
+    (HERE / "ckpt_v3_adamw.ckpt").write_bytes(v3)
+    v4 = checkpoint(4, 6, 12_288, canonical(b"galore", galore_v1_blob(5, 4)))
+    (HERE / "ckpt_v4_galore.ckpt").write_bytes(v4)
+    print(f"ckpt_v3_adamw.ckpt: {len(v3)} bytes")
+    print(f"ckpt_v4_galore.ckpt: {len(v4)} bytes")
+
+
+if __name__ == "__main__":
+    main()

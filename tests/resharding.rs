@@ -19,21 +19,31 @@
 //! Identical per-rank microbatch gradients make trajectories bitwise
 //! comparable across worlds 1/2/4 (the tree-reduced average of w equal
 //! values is exact for power-of-two w — see dist/fsdp.rs tests).
-//! Q-GaLore's checkpoint boundary sits ON a refresh step: quantized
-//! projectors are re-derived from the restored sketch stream at the first
-//! refresh after resume, sidestepping the 1-ulp absmax wobble that
-//! re-quantizing a dequantized P can introduce (EXPERIMENTS.md §Resume).
+//!
+//! Since checkpoint v5, state blobs carry the exact STORED representation
+//! (codes + block scales): Q-GaLore checkpoints resume bit-exactly from
+//! ANY step — including mid refresh-cycle — and adam8bit joins the
+//! elastic matrix wherever shard boundaries land on 256-element
+//! quantization blocks, with an explicit `--resume-requantize`
+//! (`ImportOpts::requantize`) opt-in for everything inexact (misaligned
+//! adam8bit, adafactor's factored cross-statistics). Committed v3/v4
+//! fixture files pin the legacy gates against rot.
 
-use galore2::checkpoint::canonical::CanonicalOptState;
-use galore2::checkpoint::{Checkpoint, LEGACY_VERSION};
+use galore2::checkpoint::canonical::{CanonicalOptState, CanonicalTensor, OptPayload};
+use galore2::checkpoint::{Checkpoint, LEGACY_VERSION, VERSION};
 use galore2::dist::{set_worker_binary, FsdpCluster, TransportKind};
 use galore2::optim::{AdamCfg, GaLoreCfg, OptimizerSpec, ProjectionKind};
+use galore2::quant::Quantized8;
 use galore2::tensor::Matrix;
 use galore2::testing::fixtures;
-use galore2::train::{DdpEngine, FsdpEngine, SingleEngine, TrainEngine};
+use galore2::train::{DdpEngine, FsdpEngine, ImportOpts, SingleEngine, TrainEngine};
 
 /// Wide, tall, square, and bias-like (unprojected) parameters.
 const SHAPES: &[(usize, usize)] = &[(8, 16), (16, 8), (6, 6), (1, 12)];
+/// Shapes whose world-1/2/4 shard boundaries all land on 256-element
+/// quantization blocks: block-quantized (adam8bit) state gathers and
+/// re-slices EXACTLY across this matrix.
+const ALIGNED_SHAPES: &[(usize, usize)] = &[(512, 2), (2, 1024)];
 const LR: f32 = 0.03;
 const SEED: u64 = 21;
 
@@ -131,6 +141,14 @@ fn adamw_spec() -> OptimizerSpec {
     OptimizerSpec::AdamW(AdamCfg::default())
 }
 
+fn adam8bit_spec() -> OptimizerSpec {
+    OptimizerSpec::Adam8bit(AdamCfg::default())
+}
+
+fn adafactor_spec() -> OptimizerSpec {
+    OptimizerSpec::Adafactor { eps: 1e-30 }
+}
+
 /// The headline contract: train under FSDP world=2, checkpoint at
 /// `boundary`, resume under every other mode/world, and the continued
 /// trajectory is bitwise identical to the uninterrupted run.
@@ -182,18 +200,32 @@ fn adamw_fsdp2_checkpoint_resumes_anywhere() {
 
 #[test]
 fn qgalore_fsdp2_checkpoint_resumes_anywhere() {
-    // Boundary ON a refresh step (6 % 3 == 0): the quantized projector is
-    // re-derived from the restored stream before first use (see module
-    // docs for why quantized P transport pins this alignment).
+    // Boundary ON a refresh step (6 % 3 == 0) — the historically safe
+    // alignment; kept alongside the mid-cycle test below.
     elastic_from_fsdp2(qgalore_spec(), 6, 12);
+}
+
+#[test]
+fn qgalore_resume_crosses_non_refresh_boundary() {
+    // Boundary MID refresh-cycle (7 % 3 != 0; last refresh t=6, next
+    // t=9): the checkpoint must carry the quantized projector's exact
+    // stored representation (codes + block scales) for the continuation
+    // to stay bitwise. Before checkpoint v5 the projector was serialized
+    // dequantized and only refresh-aligned checkpoints resumed
+    // bit-exactly (re-quantizing a dequantized P can wobble a block's
+    // absmax scale by 1 ulp); this pins that the alignment requirement is
+    // gone.
+    elastic_from_fsdp2(qgalore_spec(), 7, 12);
 }
 
 #[test]
 fn quantized_galore_alias_checkpoint_resumes_anywhere() {
     // The other spec that answers to the "qgalore" name: plain GaLore
     // with a quantized projector (raw state layout everywhere). Its
-    // checkpoints must convert through the same canonical framing.
-    elastic_from_fsdp2(galore_q8_spec(), 6, 12);
+    // checkpoints must convert through the same canonical framing — and,
+    // with the stored-representation blobs, resume bitwise from a
+    // NON-refresh-aligned boundary too.
+    elastic_from_fsdp2(galore_q8_spec(), 7, 12);
 }
 
 #[test]
@@ -351,6 +383,347 @@ fn empty_shards_survive_checkpoint_and_resume() {
             &format!("empty-shard {mode}({world})"),
         );
     }
+}
+
+#[test]
+fn adam8bit_block_aligned_fsdp2_checkpoint_resumes_anywhere() {
+    // ALIGNED_SHAPES put every world-1/2/4 shard boundary on a
+    // 256-element quantization block, so each rank's block-quantized
+    // moments ARE a contiguous run of the full tensor's blocks: the
+    // canonical gather is byte-identical to a single-process export and
+    // the elastic matrix FSDP(2)→{FSDP(4), FSDP(1), DDP(2), Single} is
+    // bitwise — no re-quantization anywhere.
+    let spec = adam8bit_spec();
+    let shapes = ALIGNED_SHAPES;
+    let mut reference = build("single", 1, shapes, &spec, SEED);
+    drive(reference.as_mut(), shapes, 0, 10);
+
+    let mut src = build("fsdp", 2, shapes, &spec, SEED);
+    drive(src.as_mut(), shapes, 0, 5);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+
+    // The aligned gather really is canonical: same bytes as a
+    // single-process export of the same trajectory.
+    let mut single_src = build("single", 1, shapes, &spec, SEED);
+    drive(single_src.as_mut(), shapes, 0, 5);
+    assert_eq!(
+        blob,
+        single_src.export_state(),
+        "aligned adam8bit gather must match the single-process canonical bytes"
+    );
+
+    drive(src.as_mut(), shapes, 5, 10);
+    assert_params_eq(src.params(), reference.params(), "uninterrupted fsdp(2) adam8bit");
+
+    for (mode, world) in [("fsdp", 4), ("fsdp", 1), ("ddp", 2), ("single", 1)] {
+        let mut target = build(mode, world, shapes, &spec, 999);
+        target.init_params(&snapshot);
+        target
+            .import_state(&blob)
+            .unwrap_or_else(|e| panic!("{mode}({world}) import: {e}"));
+        drive(target.as_mut(), shapes, 5, 10);
+        assert_params_eq(
+            target.params(),
+            reference.params(),
+            &format!("resumed {mode}({world}) adam8bit"),
+        );
+    }
+}
+
+#[test]
+fn adam8bit_misaligned_state_requires_loud_requantize_opt_in() {
+    // SHAPES' small tensors cannot land shard boundaries on quantization
+    // blocks, so FSDP(2) adam8bit state stays world-locked per-rank:
+    // same-world resume is bitwise, every other target fails loudly
+    // WITHOUT `--resume-requantize` and continues deterministically (and
+    // finitely) WITH it.
+    let spec = adam8bit_spec();
+    let mut reference = build("fsdp", 2, SHAPES, &spec, SEED);
+    drive(reference.as_mut(), SHAPES, 0, 10);
+
+    let mut src = build("fsdp", 2, SHAPES, &spec, SEED);
+    drive(src.as_mut(), SHAPES, 0, 5);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+
+    let mut same = build("fsdp", 2, SHAPES, &spec, 999);
+    same.init_params(&snapshot);
+    same.import_state(&blob).unwrap();
+    drive(same.as_mut(), SHAPES, 5, 10);
+    assert_params_eq(same.params(), reference.params(), "same-world adam8bit resume");
+
+    for (mode, world) in [("fsdp", 4), ("fsdp", 1), ("ddp", 2), ("single", 1)] {
+        let mut target = build(mode, world, SHAPES, &spec, 999);
+        target.init_params(&snapshot);
+        let err = target.import_state(&blob).unwrap_err();
+        assert!(
+            err.contains("--resume-requantize"),
+            "{mode}({world}): error must name the opt-in flag: {err}"
+        );
+        let run = |seed: u64| {
+            let mut eng = build(mode, world, SHAPES, &spec, seed);
+            eng.init_params(&snapshot);
+            eng.import_state_with(&blob, ImportOpts::requantize())
+                .unwrap_or_else(|e| panic!("{mode}({world}) requantize import: {e}"));
+            drive(eng.as_mut(), SHAPES, 5, 10);
+            eng.params().to_vec()
+        };
+        let a = run(999);
+        let b = run(4242);
+        assert_params_eq(&a, &b, &format!("{mode}({world}) repeat requantize resume"));
+        for (idx, p) in a.iter().enumerate() {
+            assert!(
+                p.data.iter().all(|x| x.is_finite()),
+                "{mode}({world}) param {idx} non-finite after requantized resume"
+            );
+        }
+        // The requantized import restores real moments (the trajectory is
+        // approximate, not reset): continuing must actually move the
+        // parameters away from the checkpoint snapshot.
+        for (idx, (p, s)) in a.iter().zip(&snapshot).enumerate() {
+            assert_ne!(
+                p.data, s.data,
+                "{mode}({world}) param {idx} did not train after requantized resume"
+            );
+        }
+    }
+}
+
+#[test]
+fn adafactor_same_world_and_replicated_resumes_are_bitwise() {
+    // Adafactor's factored accumulators are rank-local statistics, so the
+    // exact cross-world story is narrower: same-world FSDP resume and the
+    // replicated family (single ↔ DDP ↔ FSDP(1)) are bitwise.
+    let spec = adafactor_spec();
+    // FSDP(2) → FSDP(2): per-rank frames pass through identically.
+    let mut reference = build("fsdp", 2, SHAPES, &spec, SEED);
+    drive(reference.as_mut(), SHAPES, 0, 10);
+    let mut src = build("fsdp", 2, SHAPES, &spec, SEED);
+    drive(src.as_mut(), SHAPES, 0, 5);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+    let mut same = build("fsdp", 2, SHAPES, &spec, 999);
+    same.init_params(&snapshot);
+    same.import_state(&blob).unwrap();
+    drive(same.as_mut(), SHAPES, 5, 10);
+    assert_params_eq(same.params(), reference.params(), "same-world adafactor resume");
+
+    // Single source → DDP(2) and FSDP(1): full-tensor state passes
+    // through exactly, trajectories match the uninterrupted single run.
+    let mut single_ref = build("single", 1, SHAPES, &spec, SEED);
+    drive(single_ref.as_mut(), SHAPES, 0, 10);
+    let mut single_src = build("single", 1, SHAPES, &spec, SEED);
+    drive(single_src.as_mut(), SHAPES, 0, 5);
+    let sblob = single_src.export_state();
+    let ssnapshot = single_src.params().to_vec();
+    for (mode, world) in [("ddp", 2), ("fsdp", 1), ("single", 1)] {
+        let mut target = build(mode, world, SHAPES, &spec, 999);
+        target.init_params(&ssnapshot);
+        target
+            .import_state(&sblob)
+            .unwrap_or_else(|e| panic!("{mode}({world}) import: {e}"));
+        drive(target.as_mut(), SHAPES, 5, 10);
+        assert_params_eq(
+            target.params(),
+            single_ref.params(),
+            &format!("single→{mode}({world}) adafactor"),
+        );
+    }
+}
+
+#[test]
+fn adafactor_cross_world_requires_loud_opt_in() {
+    // The factored cross-statistic cannot be re-sliced exactly: crossing
+    // worlds (either direction) fails loudly without the opt-in and runs
+    // deterministically with it.
+    let spec = adafactor_spec();
+
+    // Direction 1: single-process (full-tensor) state → FSDP(2).
+    let mut single_src = build("single", 1, SHAPES, &spec, SEED);
+    drive(single_src.as_mut(), SHAPES, 0, 5);
+    let sblob = single_src.export_state();
+    let ssnapshot = single_src.params().to_vec();
+    let mut sharded = build("fsdp", 2, SHAPES, &spec, 999);
+    sharded.init_params(&ssnapshot);
+    let err = sharded.import_state(&sblob).unwrap_err();
+    assert!(
+        err.contains("--resume-requantize"),
+        "single→fsdp(2): error must name the opt-in flag: {err}"
+    );
+
+    // Direction 2: FSDP(2) per-rank state → {FSDP(4), single}.
+    let mut src = build("fsdp", 2, SHAPES, &spec, SEED);
+    drive(src.as_mut(), SHAPES, 0, 5);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+    for (mode, world) in [("fsdp", 4), ("single", 1), ("fsdp", 2)] {
+        // fsdp(2) rides along as the exact control: the opt-in must not
+        // change the exact same-world path.
+        let run = |seed: u64, opts: ImportOpts| {
+            let mut eng = build(mode, world, SHAPES, &spec, seed);
+            eng.init_params(&snapshot);
+            eng.import_state_with(&blob, opts)
+                .unwrap_or_else(|e| panic!("{mode}({world}) import: {e}"));
+            drive(eng.as_mut(), SHAPES, 5, 10);
+            eng.params().to_vec()
+        };
+        if !(mode == "fsdp" && world == 2) {
+            let mut target = build(mode, world, SHAPES, &spec, 999);
+            target.init_params(&snapshot);
+            let err = target.import_state(&blob).unwrap_err();
+            assert!(
+                err.contains("--resume-requantize"),
+                "{mode}({world}): error must name the opt-in flag: {err}"
+            );
+        }
+        let a = run(999, ImportOpts::requantize());
+        let b = run(4242, ImportOpts::requantize());
+        assert_params_eq(&a, &b, &format!("{mode}({world}) repeat adafactor resume"));
+        for (idx, p) in a.iter().enumerate() {
+            assert!(
+                p.data.iter().all(|x| x.is_finite()),
+                "{mode}({world}) param {idx} non-finite after merged resume"
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupt_quantized_payloads_fail_loudly() {
+    // Structurally inconsistent quantized canonical state — lying block
+    // counts, scale-count mismatches, truncation anywhere — must ERROR on
+    // import, never panic or silently misparse. (Unit-level guards live
+    // in quant/ and checkpoint/canonical.rs; this pins the engine
+    // surface.)
+    let spec = adam8bit_spec();
+    let mut src = build("fsdp", 2, ALIGNED_SHAPES, &spec, SEED);
+    drive(src.as_mut(), ALIGNED_SHAPES, 0, 3);
+    let blob = src.export_state();
+    let snapshot = src.params().to_vec();
+    for cut in [9usize, 24, blob.len() / 3, blob.len() / 2, blob.len() - 1] {
+        let mut target = build("fsdp", 2, ALIGNED_SHAPES, &spec, 999);
+        target.init_params(&snapshot);
+        assert!(
+            target.import_state(&blob[..cut]).is_err(),
+            "truncation at {cut}/{} bytes imported silently",
+            blob.len()
+        );
+    }
+    // A hand-built payload whose scale count disagrees with its element
+    // count: the shared block parser's cross-check must reject it.
+    let lying = CanonicalOptState {
+        name: "adam8bit".into(),
+        payload: OptPayload::Quantized {
+            t: 2,
+            states: vec![(
+                0,
+                vec![
+                    CanonicalTensor::Q8(Quantized8 {
+                        codes: vec![0; 1024],
+                        scales: vec![1.0], // should be 4 blocks
+                        len: 1024,
+                    }),
+                    CanonicalTensor::Q8(Quantized8::quantize(&vec![0.1; 1024])),
+                ],
+            )],
+        },
+    }
+    .encode();
+    let mut target = build("fsdp", 2, ALIGNED_SHAPES, &spec, 999);
+    target.init_params(&snapshot);
+    let err = target.import_state(&lying).unwrap_err();
+    assert!(
+        err.contains("scales") || err.contains("blocks") || err.contains("elements"),
+        "unhelpful corrupt-payload error: {err}"
+    );
+}
+
+#[test]
+fn committed_legacy_fixtures_migrate_to_v5() {
+    // COMMITTED v3/v4 checkpoint files (tests/fixtures/, generated by
+    // make_fixtures.py against the pre-v5 layouts) pin the legacy gates:
+    // if the version gate, the canonical sniffing, or the pre-v5
+    // optimizer blob layouts rot, these loads fail — no silent skip
+    // (GALORE2_DENY_SKIP irrelevant: the files are in-tree).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+
+    // v3: adamw canonical state, no token counter. Resumes under FSDP(2),
+    // DDP(2) and single with IDENTICAL continuations.
+    let v3 = Checkpoint::load(dir.join("ckpt_v3_adamw.ckpt")).unwrap();
+    assert_eq!(v3.step, 4);
+    assert_eq!(v3.tokens_seen, None, "v3 carries no token counter");
+    assert!(CanonicalOptState::sniff(&v3.opt_state));
+    let spec = adamw_spec();
+    let mut runs: Vec<(String, Vec<Matrix>)> = Vec::new();
+    for (mode, world) in [("fsdp", 2), ("ddp", 2), ("single", 1)] {
+        let mut e = build(mode, world, SHAPES, &spec, 999);
+        e.init_params(&v3.params);
+        e.import_state(&v3.opt_state)
+            .unwrap_or_else(|err| panic!("v3 {mode}({world}) import: {err}"));
+        drive(e.as_mut(), SHAPES, v3.step, v3.step + 4);
+        runs.push((format!("v3 {mode}({world})"), e.params().to_vec()));
+    }
+    let base = runs[0].1.clone();
+    for (label, params) in &runs[1..] {
+        assert_params_eq(params, &base, label);
+    }
+
+    // v4: galore canonical state in the LEGACY (dequantized-projector)
+    // blob layout + exact token counter. Load → resume → re-save
+    // migrates to v5; the migrated file carries canonical state and
+    // re-slices to a different world, all bitwise on one trajectory.
+    let v4 = Checkpoint::load(dir.join("ckpt_v4_galore.ckpt")).unwrap();
+    assert_eq!(v4.step, 6);
+    assert_eq!(v4.tokens_seen, Some(12_288), "v4 carries the token counter");
+    let spec = galore_spec();
+    let mut single = build("single", 1, SHAPES, &spec, 999);
+    single.init_params(&v4.params);
+    single.import_state(&v4.opt_state).unwrap();
+    drive(single.as_mut(), SHAPES, 6, 12);
+
+    let mut migrator = build("fsdp", 2, SHAPES, &spec, 999);
+    migrator.init_params(&v4.params);
+    migrator.import_state(&v4.opt_state).unwrap();
+    let out = std::env::temp_dir().join(format!(
+        "galore2_fixture_migrated_{}.ckpt",
+        std::process::id()
+    ));
+    Checkpoint {
+        step: v4.step,
+        tokens_seen: v4.tokens_seen,
+        names: v4.names.clone(),
+        params: migrator.params().to_vec(),
+        opt_state: migrator.export_state(),
+    }
+    .save(&out)
+    .unwrap();
+    let bytes = std::fs::read(&out).unwrap();
+    assert_eq!(
+        u32::from_le_bytes(bytes[8..12].try_into().unwrap()),
+        VERSION,
+        "re-save must write the current (v5) version"
+    );
+    let migrated = Checkpoint::load(&out).unwrap();
+    assert!(CanonicalOptState::sniff(&migrated.opt_state));
+    assert_eq!(migrated.tokens_seen, Some(12_288));
+
+    drive(migrator.as_mut(), SHAPES, 6, 12);
+    assert_params_eq(
+        migrator.params(),
+        single.params(),
+        "v4 fixture: fsdp(2) vs single continuation",
+    );
+    let mut wide = build("fsdp", 4, SHAPES, &spec, 999);
+    wide.init_params(&migrated.params);
+    wide.import_state(&migrated.opt_state).unwrap();
+    drive(wide.as_mut(), SHAPES, 6, 12);
+    assert_params_eq(
+        wide.params(),
+        single.params(),
+        "migrated v5 file resumes elastically at world 4",
+    );
+    std::fs::remove_file(out).ok();
 }
 
 #[test]
@@ -547,4 +920,50 @@ fn process_transport_checkpoint_resumes_elastically_across_transports() {
         drive(target.as_mut(), SHAPES, 7, 12);
         assert_params_eq(target.params(), reference.params(), label);
     }
+}
+
+#[test]
+fn process_transport_adam8bit_canonical_bytes_match_threads() {
+    // The quantized canonical form is transport-independent too: worker
+    // PROCESSES export the exact bytes worker threads do (block-aligned
+    // geometry → the typed Quantized flavor), and the blob resumes under
+    // threaded single-process bitwise.
+    set_worker_binary(env!("CARGO_BIN_EXE_galore2"));
+    let spec = adam8bit_spec();
+    let shapes = ALIGNED_SHAPES;
+    let metas = fixtures::metas_for(shapes);
+    let mut proc: Box<dyn TrainEngine> = Box::new(
+        FsdpEngine::with_transport(
+            2,
+            metas,
+            spec.clone(),
+            SEED,
+            &init(shapes),
+            TransportKind::Process,
+        )
+        .unwrap(),
+    );
+    drive(proc.as_mut(), shapes, 0, 4);
+    let blob = proc.export_state();
+    let snapshot = proc.params().to_vec();
+
+    let mut threaded = build("fsdp", 2, shapes, &spec, SEED);
+    drive(threaded.as_mut(), shapes, 0, 4);
+    assert_eq!(
+        blob,
+        threaded.export_state(),
+        "adam8bit canonical bytes must not depend on the transport"
+    );
+
+    let mut reference = build("single", 1, shapes, &spec, SEED);
+    drive(reference.as_mut(), shapes, 0, 8);
+    let mut target = build("single", 1, shapes, &spec, 999);
+    target.init_params(&snapshot);
+    target.import_state(&blob).unwrap();
+    drive(target.as_mut(), shapes, 4, 8);
+    assert_params_eq(
+        target.params(),
+        reference.params(),
+        "process-transport adam8bit → single",
+    );
 }
