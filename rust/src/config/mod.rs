@@ -7,6 +7,7 @@
 
 use crate::dist::TransportKind;
 use crate::optim::{AdamCfg, GaLoreCfg, MomentHandling, OptimizerSpec, ProjectionKind};
+use crate::train::OnFailure;
 use crate::util::cli::Args;
 use crate::util::toml::TomlDoc;
 use anyhow::{bail, Context, Result};
@@ -103,6 +104,21 @@ pub struct TrainConfig {
     /// bitwise identical across transports (tests/transport.rs).
     pub transport: TransportKind,
     pub engine: Engine,
+    /// What to do when a worker rank dies mid-run (`[train] on_failure` /
+    /// `--on-failure abort|respawn|shrink`). Non-abort policies rebuild
+    /// the cluster and replay from the rolling in-memory snapshot (see
+    /// EXPERIMENTS.md §Fault tolerance).
+    pub on_failure: OnFailure,
+    /// Rolling in-memory snapshot cadence in steps for fault tolerance
+    /// (`[train] snapshot_every` / `--snapshot-every`; 0 is treated as 1).
+    /// Independent of the on-disk `checkpoint_every` cadence.
+    pub snapshot_every: u64,
+    /// Worker-loss recoveries allowed before the run fails anyway
+    /// (`[train] max_recoveries` / `--max-recoveries`).
+    pub max_recoveries: usize,
+    /// Process-transport spawn/handshake retries per rank before the
+    /// launch fails (`[dist] spawn_retries` / `--spawn-retries`).
+    pub spawn_retries: usize,
 
     pub seed: u64,
     pub corpus_tokens: usize,
@@ -141,6 +157,10 @@ impl Default for TrainConfig {
             threads: 0,
             transport: TransportKind::Threads,
             engine: Engine::Native,
+            on_failure: OnFailure::Abort,
+            snapshot_every: 50,
+            max_recoveries: 3,
+            spawn_retries: 2,
             seed: 42,
             corpus_tokens: 200_000,
             val_tokens: 20_000,
@@ -204,6 +224,17 @@ impl TrainConfig {
             transport: TransportKind::parse(&doc.str_or("dist", "transport", "threads"))
                 .map_err(|e| anyhow::anyhow!(e))?,
             engine: Engine::parse(&doc.str_or("train", "engine", "native"))?,
+            on_failure: OnFailure::parse(&doc.str_or("train", "on_failure", "abort"))
+                .map_err(|e| anyhow::anyhow!(e))?,
+            snapshot_every: doc
+                .i64_or("train", "snapshot_every", d.snapshot_every as i64)
+                .max(0) as u64,
+            max_recoveries: doc
+                .i64_or("train", "max_recoveries", d.max_recoveries as i64)
+                .max(0) as usize,
+            spawn_retries: doc
+                .i64_or("dist", "spawn_retries", d.spawn_retries as i64)
+                .max(0) as usize,
             seed: doc.i64_or("train", "seed", d.seed as i64) as u64,
             corpus_tokens: doc.i64_or("data", "corpus_tokens", d.corpus_tokens as i64)
                 as usize,
@@ -254,6 +285,12 @@ impl TrainConfig {
         if let Some(engine) = args.get("engine") {
             self.engine = Engine::parse(engine)?;
         }
+        if let Some(policy) = args.get("on-failure") {
+            self.on_failure = OnFailure::parse(policy).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        self.snapshot_every = args.u64_or("snapshot-every", self.snapshot_every);
+        self.max_recoveries = args.usize_or("max-recoveries", self.max_recoveries);
+        self.spawn_retries = args.usize_or("spawn-retries", self.spawn_retries);
         self.seed = args.u64_or("seed", self.seed);
         self.eval_every = args.u64_or("eval-every", self.eval_every);
         self.eval_batches = args.usize_or("eval-batches", self.eval_batches);
@@ -271,6 +308,13 @@ impl TrainConfig {
                 "transport {:?} needs distributed workers; use --parallel fsdp|ddp \
                  (single-process runs have no worker fabric to select)",
                 self.transport.name()
+            );
+        }
+        if self.on_failure != OnFailure::Abort && self.parallel == ParallelMode::Single {
+            bail!(
+                "--on-failure {} needs distributed workers to rebuild; use \
+                 --parallel fsdp|ddp (a single-process run has no cluster to recover)",
+                self.on_failure.name()
             );
         }
         Ok(())
@@ -447,6 +491,66 @@ transport = "process"
         c.parallel = ParallelMode::Ddp;
         assert!(c.validate().is_ok());
         assert!(TrainConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn fault_tolerance_knobs_parse_from_toml_and_cli() {
+        let d = TrainConfig::default();
+        assert_eq!(d.on_failure, OnFailure::Abort);
+        assert_eq!(d.snapshot_every, 50);
+        assert_eq!(d.max_recoveries, 3);
+        assert_eq!(d.spawn_retries, 2);
+        let path = write_sample(
+            "fault",
+            "[train]\non_failure = \"shrink\"\nsnapshot_every = 10\nmax_recoveries = 5\n\
+             \n[parallel]\nmode = \"fsdp\"\nworld = 4\n\n[dist]\nspawn_retries = 4\n",
+        );
+        let c = TrainConfig::from_toml(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.on_failure, OnFailure::Shrink);
+        assert_eq!(c.snapshot_every, 10);
+        assert_eq!(c.max_recoveries, 5);
+        assert_eq!(c.spawn_retries, 4);
+        assert!(c.validate().is_ok());
+        std::fs::remove_file(path).ok();
+        let mut c = TrainConfig::default();
+        let args = Args::parse(
+            "train --parallel ddp --on-failure respawn --snapshot-every 25 \
+             --max-recoveries 1 --spawn-retries 0"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_cli(&args).unwrap();
+        assert_eq!(c.on_failure, OnFailure::Respawn);
+        assert_eq!(c.snapshot_every, 25);
+        assert_eq!(c.max_recoveries, 1);
+        assert_eq!(c.spawn_retries, 0);
+        assert!(c.validate().is_ok());
+        // CLI/TOML parity: both reject unknown policies.
+        let mut c = TrainConfig::default();
+        let bad = Args::parse(
+            "train --on-failure retry".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        assert!(c.apply_cli(&bad).is_err());
+        let toml_bad = write_sample("badfailure", "[train]\non_failure = \"retry\"\n");
+        assert!(TrainConfig::from_toml(toml_bad.to_str().unwrap()).is_err());
+        std::fs::remove_file(toml_bad).ok();
+    }
+
+    #[test]
+    fn validate_rejects_recovery_without_distributed_workers() {
+        let mut c = TrainConfig {
+            on_failure: OnFailure::Respawn,
+            ..TrainConfig::default()
+        };
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("fsdp|ddp"), "unhelpful error: {err}");
+        c.parallel = ParallelMode::Fsdp;
+        assert!(c.validate().is_ok());
+        c.on_failure = OnFailure::Shrink;
+        c.parallel = ParallelMode::Ddp;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -31,6 +31,22 @@ impl StepObserver for ConsoleObserver {
             StepEvent::Checkpoint { step, path } => {
                 println!("  step {step:>6}  checkpoint → {}", path.display());
             }
+            StepEvent::WorkerLost { step, rank, cause } => {
+                println!("[recover] step {step}: worker rank {rank} lost — {cause}");
+            }
+            StepEvent::RecoveryStarted {
+                from_step,
+                old_world,
+                new_world,
+            } => {
+                println!(
+                    "[recover] rebuilding cluster: world {old_world} → {new_world}, \
+                     re-sharding snapshot from step {from_step}"
+                );
+            }
+            StepEvent::RecoveryComplete { resume_step, world } => {
+                println!("[recover] recovered — resuming at step {resume_step} on {world} rank(s)");
+            }
             StepEvent::Train { .. } => {}
         }
     }

@@ -32,7 +32,54 @@ use std::os::unix::net::UnixStream;
 use std::path::PathBuf;
 use std::process::Child;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+
+/// A worker rank died mid-run — the caught form of what used to be an
+/// unconditional coordinator panic. [`Cluster::try_step`] and friends
+/// return this so a supervisor (`train/supervisor.rs`) can tear the
+/// cluster down and recover; the panicking wrappers ([`Cluster::step`])
+/// keep the old prompt-failure behavior for everyone else.
+#[derive(Clone, Debug)]
+pub struct WorkerLoss {
+    /// The rank that failed FIRST (attributed via the shared failure
+    /// cell, the relay, or child exit statuses — not merely the rank
+    /// whose link the coordinator happened to read first).
+    pub rank: usize,
+    /// Human-readable cause (panic payload, exit status, or io error).
+    pub cause: String,
+}
+
+impl std::fmt::Display for WorkerLoss {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker rank {} lost: {}", self.rank, self.cause)
+    }
+}
+
+/// First-failure-wins record shared by the coordinator, the thread
+/// workers' panic handlers, and the process transport's relay: whoever
+/// observes a death first writes `(rank, cause)`; later writers are
+/// ignored. This is what lets the coordinator blame the rank that
+/// actually died rather than the first VICTIM it happens to poll.
+pub(crate) type FailureCell = Arc<Mutex<Option<(usize, String)>>>;
+
+pub(crate) fn record_failure(cell: &FailureCell, rank: usize, cause: String) {
+    let mut slot = cell.lock().unwrap_or_else(|e| e.into_inner());
+    if slot.is_none() {
+        *slot = Some((rank, cause));
+    }
+}
+
+/// Render a caught panic payload for failure attribution.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panicked (non-string payload)".to_string()
+    }
+}
 
 /// Which fabric connects the ranks of a cluster (`[dist] transport` /
 /// `--transport`). Both transports produce **bitwise identical**
@@ -250,12 +297,23 @@ pub(crate) fn handle_cmd<W: Worker>(w: &mut W, cmd: Cmd) -> Served {
     }
 }
 
-fn serve<W: Worker>(w: &mut W, rx: Receiver<Cmd>, tx: Sender<Reply>) {
+/// `crash_at`: thread-transport fault injection (the counterpart of the
+/// process transport's `GALORE2_TEST_CRASH_STEP_RANK` exit) — panic when
+/// serving a `Step` with `t >= crash_at`. Borrows the channel endpoints
+/// so a panic unwinding out of here does NOT drop them: the worker
+/// closure records the failure cause first, then drops the channels —
+/// the coordinator can only observe the death after it is attributable.
+fn serve<W: Worker>(w: &mut W, rx: &Receiver<Cmd>, tx: &Sender<Reply>, crash_at: Option<u64>) {
     loop {
         let cmd = match rx.recv() {
             Ok(cmd) => cmd,
             Err(_) => break,
         };
+        if let Cmd::Step { t, .. } = &cmd {
+            if crash_at.is_some_and(|n| *t >= n) {
+                panic!("injected test crash (step {t})");
+            }
+        }
         match handle_cmd(w, cmd) {
             Served::Reply(reply) => {
                 let _ = tx.send(reply);
@@ -287,9 +345,12 @@ enum Link {
 }
 
 impl Link {
-    fn send(&self, cmd: Cmd) {
+    /// Fallible send: `Err` (io-level cause) when the worker is gone.
+    fn try_send(&self, cmd: Cmd) -> Result<(), String> {
         match self {
-            Link::Thread { tx, .. } => tx.send(cmd).expect("worker alive"),
+            Link::Thread { tx, .. } => tx
+                .send(cmd)
+                .map_err(|_| "command channel closed (worker thread died)".to_string()),
             Link::Process {
                 control,
                 rank,
@@ -297,36 +358,50 @@ impl Link {
                 ..
             } => {
                 let frame = wire::encode_cmd(&cmd);
-                wire::write_frame(&mut &*control, &frame).unwrap_or_else(|e| {
-                    panic!(
+                wire::write_frame(&mut &*control, &frame).map_err(|e| {
+                    format!(
                         "{mode} worker process rank {rank} is gone ({e}) — \
                          check its stderr for the original failure"
                     )
-                });
+                })
             }
         }
     }
 
-    fn recv(&self) -> Reply {
+    /// Fallible receive: `Err` (io-level cause) when the worker died
+    /// mid-command or sent a malformed reply.
+    fn try_recv(&self) -> Result<Reply, String> {
         match self {
-            Link::Thread { rx, .. } => rx.recv().expect("worker alive"),
+            Link::Thread { rx, .. } => rx
+                .recv()
+                .map_err(|_| "reply channel closed (worker thread died)".to_string()),
             Link::Process {
                 control,
                 rank,
                 mode,
                 ..
             } => {
-                let frame = wire::read_frame(&mut &*control).unwrap_or_else(|e| {
-                    panic!(
+                let frame = wire::read_frame(&mut &*control).map_err(|e| {
+                    format!(
                         "{mode} worker process rank {rank} died mid-command ({e}) — \
                          check its stderr for the original failure"
                     )
-                });
-                wire::decode_reply(&frame).unwrap_or_else(|e| {
-                    panic!("{mode} worker process rank {rank} sent a malformed reply: {e}")
+                })?;
+                wire::decode_reply(&frame).map_err(|e| {
+                    format!("{mode} worker process rank {rank} sent a malformed reply: {e}")
                 })
             }
         }
+    }
+
+    fn send(&self, cmd: Cmd) {
+        self.try_send(cmd)
+            .unwrap_or_else(|e| panic!("worker link send failed: {e}"));
+    }
+
+    fn recv(&self) -> Reply {
+        self.try_recv()
+            .unwrap_or_else(|e| panic!("worker link recv failed: {e}"))
     }
 
     /// Best-effort shutdown notice (Drop path — the worker may be gone).
@@ -355,6 +430,9 @@ pub struct Cluster<W: Worker> {
     relay: Option<JoinHandle<()>>,
     socket_path: Option<PathBuf>,
     spec_name: &'static str,
+    /// First-failure-wins (rank, cause) record written by whichever party
+    /// observes a worker death first (thread panic handler, process relay).
+    failure: FailureCell,
     _mode: PhantomData<fn() -> W>,
 }
 
@@ -385,10 +463,16 @@ impl<W: Worker> Cluster<W> {
             spec.name()
         );
         let spec_name = spec.name();
+        let failure: FailureCell = Arc::new(Mutex::new(None));
         let (links, relay, socket_path) = match transport {
-            TransportKind::Threads => (spawn_threads::<W>(world, &metas, &spec, seed), None, None),
+            TransportKind::Threads => (
+                spawn_threads::<W>(world, &metas, &spec, seed, &failure),
+                None,
+                None,
+            ),
             TransportKind::Process => {
-                let spawned = process::spawn_world(W::MODE, world, &metas, &spec, seed)?;
+                let spawned =
+                    process::spawn_world(W::MODE, world, &metas, &spec, seed, failure.clone())?;
                 let links = spawned
                     .controls
                     .into_iter()
@@ -412,6 +496,7 @@ impl<W: Worker> Cluster<W> {
             relay,
             socket_path,
             spec_name,
+            failure,
             _mode: PhantomData,
         })
     }
@@ -460,8 +545,23 @@ impl<W: Worker> Cluster<W> {
 
     /// One synchronous training step. `per_rank[r]` holds rank r's
     /// microbatch gradients in full (unsharded) shapes. Blocks until all
-    /// ranks finish.
+    /// ranks finish. Panics on worker death (the PR 4 prompt-failure
+    /// contract); [`Cluster::try_step`] is the caught form.
     pub fn step(&mut self, t: u64, per_rank: Vec<Vec<Matrix>>, lr: f32) {
+        self.try_step(t, per_rank, lr)
+            .unwrap_or_else(|loss| panic!("{loss}"));
+    }
+
+    /// [`Cluster::step`], but a worker death comes back as
+    /// `Err(WorkerLoss)` naming the rank that failed FIRST — the hook the
+    /// recovery supervisor catches. Coordinator-side shape validation
+    /// still panics: bad inputs are coordinator bugs, not worker deaths.
+    pub fn try_step(
+        &mut self,
+        t: u64,
+        per_rank: Vec<Vec<Matrix>>,
+        lr: f32,
+    ) -> Result<(), WorkerLoss> {
         assert_eq!(per_rank.len(), self.world, "need one gradient set per rank");
         // Validate shapes HERE, not in the workers: a worker dying between
         // rendezvous waves would strand its peers in the collective.
@@ -476,14 +576,58 @@ impl<W: Worker> Cluster<W> {
                 );
             }
         }
-        for (link, grads) in self.links.iter().zip(per_rank) {
-            link.send(Cmd::Step { t, lr, grads });
-        }
-        for link in &self.links {
-            match link.recv() {
-                Reply::StepDone => {}
-                _ => unreachable!("protocol error: expected StepDone"),
+        let mut first_err: Option<(usize, String)> = None;
+        for (rank, grads) in per_rank.into_iter().enumerate() {
+            if let Err(e) = self.links[rank].try_send(Cmd::Step { t, lr, grads }) {
+                first_err.get_or_insert((rank, e));
             }
+        }
+        // Drain EVERY reply even after a failure: victims die promptly
+        // (barrier poison / relay socket drop), so their links close
+        // rather than hang, and skipping them would desynchronize the
+        // protocol for any rank that did survive.
+        for (rank, link) in self.links.iter().enumerate() {
+            match link.try_recv() {
+                Ok(Reply::StepDone) => {}
+                Ok(_) => unreachable!("protocol error: expected StepDone"),
+                Err(e) => {
+                    first_err.get_or_insert((rank, e));
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some((rank, cause)) => Err(self.classify(rank, cause)),
+        }
+    }
+
+    /// Attribute a link-level failure to the rank that actually died:
+    /// the shared failure cell (thread panics, relay observations) wins,
+    /// then a non-success child exit status, then the io-errored link.
+    fn classify(&mut self, io_rank: usize, io_cause: String) -> WorkerLoss {
+        if let Some((rank, cause)) = self
+            .failure
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+        {
+            return WorkerLoss { rank, cause };
+        }
+        for link in &mut self.links {
+            if let Link::Process { child, rank, .. } = link {
+                if let Ok(Some(status)) = child.try_wait() {
+                    if !status.success() {
+                        return WorkerLoss {
+                            rank: *rank,
+                            cause: format!("worker process exited: {status}"),
+                        };
+                    }
+                }
+            }
+        }
+        WorkerLoss {
+            rank: io_rank,
+            cause: io_cause,
         }
     }
 
@@ -508,6 +652,42 @@ impl<W: Worker> Cluster<W> {
         match self.links[rank].recv() {
             Reply::Params(p) => p,
             _ => unreachable!("protocol error: expected Params"),
+        }
+    }
+
+    /// [`Cluster::params_per_rank`] with worker death caught and
+    /// attributed, for the recovery path.
+    pub fn try_params_per_rank(&mut self) -> Result<Vec<Vec<Matrix>>, WorkerLoss> {
+        let mut first_err: Option<(usize, String)> = None;
+        for (rank, link) in self.links.iter().enumerate() {
+            if let Err(e) = link.try_send(Cmd::Params) {
+                first_err.get_or_insert((rank, e));
+            }
+        }
+        let mut out = Vec::with_capacity(self.world);
+        for (rank, link) in self.links.iter().enumerate() {
+            match link.try_recv() {
+                Ok(Reply::Params(p)) => out.push(p),
+                Ok(_) => unreachable!("protocol error: expected Params"),
+                Err(e) => {
+                    first_err.get_or_insert((rank, e));
+                }
+            }
+        }
+        match first_err {
+            None => Ok(out),
+            Some((rank, cause)) => Err(self.classify(rank, cause)),
+        }
+    }
+
+    /// [`Cluster::rank_params`] with worker death caught and attributed.
+    pub fn try_rank_params(&mut self, rank: usize) -> Result<Vec<Matrix>, WorkerLoss> {
+        let sent = self.links[rank].try_send(Cmd::Params);
+        let got = sent.and_then(|()| self.links[rank].try_recv());
+        match got {
+            Ok(Reply::Params(p)) => Ok(p),
+            Ok(_) => unreachable!("protocol error: expected Params"),
+            Err(e) => Err(self.classify(rank, e)),
         }
     }
 
@@ -584,7 +764,11 @@ fn spawn_threads<W: Worker>(
     metas: &[ParamMeta],
     spec: &OptimizerSpec,
     seed: u64,
+    failure: &FailureCell,
 ) -> Vec<Link> {
+    // Consume the step-crash plan ONCE per world spawn: the world spawned
+    // after a recovery must not re-inject the same crash.
+    let step_crash = process::take_step_crash();
     let comms = Comm::create_world(world);
     comms
         .into_iter()
@@ -594,6 +778,8 @@ fn spawn_threads<W: Worker>(
             let (rtx, rrx) = channel::<Reply>();
             let metas = metas.to_vec();
             let spec = spec.clone();
+            let failure = failure.clone();
+            let crash_at = step_crash.and_then(|(r, at)| (r == rank).then_some(at));
             let handle = std::thread::Builder::new()
                 .name(format!("{}-worker-{rank}", W::MODE))
                 .spawn(move || {
@@ -602,7 +788,18 @@ fn spawn_threads<W: Worker>(
                     // budget instead of each resolving the full machine.
                     crate::parallel::set_thread_share(world);
                     let mut w = W::new(rank, world, comm, metas, spec, seed);
-                    serve(&mut w, crx, rtx);
+                    // Ordering on the death path matters: record the cause
+                    // FIRST, then drop `w` (poisoning the barrier wakes the
+                    // victims), then let the channels close (what the
+                    // coordinator blocks on). Every observer of the death
+                    // finds the culprit already attributed.
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        serve(&mut w, &crx, &rtx, crash_at)
+                    }));
+                    if let Err(payload) = r {
+                        record_failure(&failure, rank, panic_message(payload.as_ref()));
+                    }
+                    drop(w);
                 })
                 .unwrap_or_else(|e| panic!("spawning {} worker thread: {e}", W::MODE));
             Link::Thread {
@@ -623,14 +820,13 @@ impl<W: Worker> Drop for Cluster<W> {
         for link in &mut self.links {
             match link {
                 Link::Thread { handle, .. } => {
-                    if panicking {
-                        // A dead worker strands its peers inside a Barrier
-                        // (std barriers don't poison); joining them here
-                        // would turn the panic into a permanent hang. Leak
-                        // the threads and let the panic surface as a
-                        // diagnostic instead.
-                        continue;
-                    }
+                    // ALWAYS join, even when a worker died: the transport's
+                    // barrier poisons on worker drop (`dist/comm.rs`), so a
+                    // dead rank's peers panic out of their collective
+                    // instead of blocking forever — joining cannot hang,
+                    // and reaping here is what keeps repeated
+                    // kill→recover cycles leak-free (PR 4 used to leak
+                    // these threads on the panic path).
                     if let Some(h) = handle.take() {
                         let _ = h.join();
                     }

@@ -25,7 +25,7 @@
 //! particular transport happens to move.
 
 use std::cell::{Cell, RefCell};
-use std::sync::{Arc, Barrier, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 /// A rendezvous fabric connecting the ranks of one world.
 ///
@@ -52,13 +52,86 @@ pub trait Transport: Send {
     fn barrier(&mut self);
 }
 
+/// A reusable barrier that — unlike `std::sync::Barrier` — can be
+/// **poisoned** by a departing rank. A worker that panics mid-collective
+/// drops its [`ThreadTransport`], which poisons the barrier and wakes
+/// every peer parked inside `wait`; they see `Err(departed_rank)` instead
+/// of blocking forever. This is the primitive that turns a thread-mode
+/// worker death from a permanent hang into a prompt, attributable
+/// failure (`dist/cluster.rs` records it; `train/supervisor.rs` recovers
+/// from it).
+struct PoisonBarrier {
+    state: Mutex<BarrierState>,
+    cvar: Condvar,
+}
+
+struct BarrierState {
+    /// Ranks parked in the current generation.
+    waiting: usize,
+    /// Incremented each time a full generation releases.
+    generation: u64,
+    /// First rank that departed (dropped its transport); sticky.
+    departed: Option<usize>,
+}
+
+impl PoisonBarrier {
+    fn new() -> PoisonBarrier {
+        PoisonBarrier {
+            state: Mutex::new(BarrierState {
+                waiting: 0,
+                generation: 0,
+                departed: None,
+            }),
+            cvar: Condvar::new(),
+        }
+    }
+
+    /// Park until all `world` ranks arrive. `Err(rank)` if any rank
+    /// departed (before or during the wait) — the barrier can never
+    /// complete again once poisoned.
+    fn wait(&self, world: usize) -> Result<(), usize> {
+        let mut s = self.state.lock().unwrap();
+        if let Some(r) = s.departed {
+            return Err(r);
+        }
+        s.waiting += 1;
+        if s.waiting == world {
+            s.waiting = 0;
+            s.generation += 1;
+            self.cvar.notify_all();
+            return Ok(());
+        }
+        let gen = s.generation;
+        while s.generation == gen && s.departed.is_none() {
+            s = self.cvar.wait(s).unwrap();
+        }
+        match s.departed {
+            // Departure wins even on a race with a release: a poisoned
+            // group is tearing down either way.
+            Some(r) if s.generation == gen => Err(r),
+            _ => Ok(()),
+        }
+    }
+
+    /// Mark `rank` as departed (first departure wins) and wake all
+    /// waiters. Called from [`ThreadTransport`]'s `Drop` — on clean
+    /// shutdown nobody is waiting and this is a no-op in effect.
+    fn poison(&self, rank: usize) {
+        let mut s = self.state.lock().unwrap();
+        if s.departed.is_none() {
+            s.departed = Some(rank);
+        }
+        self.cvar.notify_all();
+    }
+}
+
 struct Shared {
     world: usize,
     /// RwLock, not Mutex: the barrier waves already separate the write
     /// phase (each rank deposits its own slot) from the read phase, so
     /// ranks compute their reductions concurrently under read locks.
     slots: RwLock<Vec<Vec<f32>>>,
-    barrier: Barrier,
+    barrier: PoisonBarrier,
 }
 
 /// In-process transport: all handles of a world share a slot table + a
@@ -79,7 +152,7 @@ impl ThreadTransport {
         let shared = Arc::new(Shared {
             world,
             slots: RwLock::new(vec![Vec::new(); world]),
-            barrier: Barrier::new(world),
+            barrier: PoisonBarrier::new(),
         });
         (0..world)
             .map(|rank| ThreadTransport {
@@ -87,6 +160,28 @@ impl ThreadTransport {
                 shared: shared.clone(),
             })
             .collect()
+    }
+
+    /// Barrier wave that converts a peer's departure into a prompt,
+    /// attributable panic (which exits this worker thread) instead of a
+    /// permanent hang.
+    fn wait_or_die(&self) {
+        if let Err(dead) = self.shared.barrier.wait(self.shared.world) {
+            panic!(
+                "rank {}: peer rank {dead} died mid-collective",
+                self.rank
+            );
+        }
+    }
+}
+
+impl Drop for ThreadTransport {
+    fn drop(&mut self) {
+        // A departing rank (panic unwind or clean shutdown) poisons the
+        // barrier so peers parked in a collective wake and fail instead
+        // of hanging — the lockstep protocol guarantees nobody is waiting
+        // when a CLEAN shutdown drops its transport.
+        self.shared.barrier.poison(self.rank);
     }
 }
 
@@ -105,18 +200,18 @@ impl Transport for ThreadTransport {
         reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
     ) -> Vec<f32> {
         self.shared.slots.write().unwrap()[self.rank] = data;
-        self.shared.barrier.wait();
+        self.wait_or_die();
         let result = {
             let slots = self.shared.slots.read().unwrap();
             reduce(&slots)
         };
         // Second barrier wave: after this, slots may be overwritten.
-        self.shared.barrier.wait();
+        self.wait_or_die();
         result
     }
 
     fn barrier(&mut self) {
-        self.shared.barrier.wait();
+        self.wait_or_die();
     }
 }
 

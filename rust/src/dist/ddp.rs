@@ -127,6 +127,12 @@ impl Cluster<DdpWorker> {
         self.rank_params(0)
     }
 
+    /// [`rank0_params`](Cluster::rank0_params) with worker death caught
+    /// and attributed, for the recovery supervisor.
+    pub fn try_rank0_params(&mut self) -> Result<Vec<Matrix>, super::WorkerLoss> {
+        self.try_rank_params(0)
+    }
+
     /// Rank 0's replica — after asserting every rank's replica is bitwise
     /// identical. A divergence means a non-deterministic reduction or
     /// optimizer, which would silently corrupt any real DDP run.

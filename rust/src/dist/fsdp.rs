@@ -262,6 +262,21 @@ impl Cluster<FsdpWorker> {
             .collect()
     }
 
+    /// [`gather_params`](Cluster::gather_params) with worker death caught
+    /// and attributed, for the recovery supervisor.
+    pub fn try_gather_params(&mut self) -> Result<Vec<Matrix>, super::WorkerLoss> {
+        let per_rank = self.try_params_per_rank()?;
+        Ok(self
+            .metas()
+            .iter()
+            .enumerate()
+            .map(|(idx, meta)| {
+                let shards: Vec<&Matrix> = per_rank.iter().map(|r| &r[idx]).collect();
+                assemble(meta, &shards)
+            })
+            .collect())
+    }
+
     /// Serialized optimizer state of rank 0 (shard-local; diagnostic use —
     /// checkpoints go through the canonical form in
     /// `checkpoint::canonical`).

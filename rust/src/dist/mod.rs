@@ -42,11 +42,13 @@ mod fsdp;
 mod process;
 mod wire;
 
-pub use cluster::{Cluster, MemoryReport, ParamMeta, TransportKind, Worker};
+pub use cluster::{Cluster, MemoryReport, ParamMeta, TransportKind, Worker, WorkerLoss};
 pub use comm::{Comm, ThreadTransport, Transport};
 pub use ddp::{run_ddp, DdpCluster, DdpWorker};
 pub use fsdp::{FsdpCluster, FsdpWorker};
-pub use process::{run_worker, set_test_crash_hooks, set_worker_binary, WORKER_BIN_ENV};
+pub use process::{
+    run_worker, set_spawn_retries, set_test_crash_hooks, set_worker_binary, WORKER_BIN_ENV,
+};
 
 pub(crate) use cluster::{shard_axis, shard_bounds, ShardAxis};
 

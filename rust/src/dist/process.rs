@@ -34,7 +34,7 @@
 //! instead of hanging (`dist/cluster.rs::Link`). On a coordinator panic,
 //! `Cluster::drop` kills and reaps the children.
 
-use super::cluster::{handle_cmd, Cmd, ParamMeta, Served, Worker};
+use super::cluster::{handle_cmd, record_failure, Cmd, FailureCell, ParamMeta, Served, Worker};
 use super::comm::{Comm, Transport};
 use super::{wire, OptimizerSpec};
 use std::io::{Read, Write};
@@ -81,30 +81,109 @@ fn worker_bin_override() -> &'static RwLock<Option<PathBuf>> {
 /// Test-only fault injection: a worker whose rank matches the value exits
 /// before answering `Ready` (handshake failure path) …
 const CRASH_SETUP_ENV: &str = "GALORE2_TEST_CRASH_SETUP_RANK";
-/// … or exits on its first `Step` command (mid-run failure path).
+/// … or exits when serving `Step` (mid-run failure path). The value is
+/// either a plain rank `R` (crash on the first step) or `R@N` (crash when
+/// serving a step with `t >= N`).
 const CRASH_STEP_ENV: &str = "GALORE2_TEST_CRASH_STEP_RANK";
 
-/// Test-only fault injection (see tests/transport.rs): ranks that should
-/// die during setup / on their first Step. The values are injected into
-/// the worker environments at spawn time via `Command::env`, so setting
-/// them is thread-safe — no `std::env::set_var` in the coordinator.
+/// The coordinator-side fault-injection plan (see tests/transport.rs and
+/// tests/fault_tolerance.rs). Both transports consume it: process spawns
+/// inject it into worker environments via `Command::env`; thread spawns
+/// read the step plan directly (`take_step_crash`). Setting it is
+/// thread-safe — no `std::env::set_var` in the coordinator.
+struct CrashPlan {
+    /// Crash rank R during setup, up to CREDITS times: each spawn of that
+    /// rank burns one credit, so `(r, 1)` is a transient failure the spawn
+    /// retry loop should absorb and `(r, u32::MAX)` a persistent one.
+    setup: Option<(usize, u32)>,
+    /// Crash rank R when it serves a `Step` with `t >= N`. Consumed by the
+    /// FIRST world spawned after it is set — a world rebuilt during
+    /// recovery must not re-inject the same crash.
+    step: Option<(usize, u64)>,
+}
+
+/// Schedule test crashes: `setup = (rank, credits)` kills that rank during
+/// the spawn handshake for the next CREDITS spawns of it; `step = (rank,
+/// at_step)` kills it when serving a step with `t >= at_step` (first
+/// spawned world only). Thread transport honors `step` via an injected
+/// panic; `setup` is process-transport-only (thread spawning has no
+/// fallible handshake to exercise).
 #[doc(hidden)]
-pub fn set_test_crash_hooks(setup_rank: Option<usize>, step_rank: Option<usize>) {
-    *test_crash_hooks().write().unwrap() = (setup_rank, step_rank);
+pub fn set_test_crash_hooks(setup: Option<(usize, u32)>, step: Option<(usize, u64)>) {
+    *crash_plan().write().unwrap() = CrashPlan { setup, step };
 }
 
-fn test_crash_hooks() -> &'static RwLock<(Option<usize>, Option<usize>)> {
-    static HOOKS: RwLock<(Option<usize>, Option<usize>)> = RwLock::new((None, None));
-    &HOOKS
+fn crash_plan() -> &'static RwLock<CrashPlan> {
+    static PLAN: RwLock<CrashPlan> = RwLock::new(CrashPlan {
+        setup: None,
+        step: None,
+    });
+    &PLAN
 }
 
-/// Worker-process side of the hooks: reads its OWN environment (set at
-/// exec, no concurrent mutation).
+/// Burn one setup-crash credit for this spawn of `rank`. Called once per
+/// `Command` built, so retries of a transiently-failing rank see the
+/// credit pool shrink.
+fn consume_setup_crash(rank: usize) -> bool {
+    let mut plan = crash_plan().write().unwrap();
+    match &mut plan.setup {
+        Some((r, credits)) if *r == rank && *credits > 0 => {
+            *credits -= 1;
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Take the step-crash plan for the world being spawned (both transports
+/// call this exactly once per world spawn).
+pub(crate) fn take_step_crash() -> Option<(usize, u64)> {
+    crash_plan().write().unwrap().step.take()
+}
+
+/// Worker-process side of the setup hook: reads its OWN environment (set
+/// at exec, no concurrent mutation).
 fn crash_hook(var: &str, rank: usize) -> bool {
     std::env::var(var)
         .ok()
         .and_then(|v| v.trim().parse::<usize>().ok())
         == Some(rank)
+}
+
+/// Worker-process side of the step hook: `R@N` crashes rank R serving a
+/// step with `t >= N`; a bare `R` means `R@0`.
+fn step_crash_hit(rank: usize, t: u64) -> bool {
+    let Ok(v) = std::env::var(CRASH_STEP_ENV) else {
+        return false;
+    };
+    let v = v.trim();
+    let (r, at) = match v.split_once('@') {
+        Some((r, at)) => (r.trim().parse::<usize>().ok(), at.trim().parse::<u64>().ok()),
+        None => (v.parse::<usize>().ok(), Some(0)),
+    };
+    r == Some(rank) && at.is_some_and(|n| t >= n)
+}
+
+/// Bounded retry budget for a failed process spawn/handshake, per rank
+/// (`[dist] spawn_retries` / `--spawn-retries`): a rank may be respawned
+/// up to this many times (with capped backoff) before the whole spawn
+/// fails naming the rank and attempt count.
+pub fn set_spawn_retries(n: usize) {
+    *spawn_retries_cell().write().unwrap() = n;
+}
+
+fn spawn_retries() -> usize {
+    *spawn_retries_cell().read().unwrap()
+}
+
+fn spawn_retries_cell() -> &'static RwLock<usize> {
+    static RETRIES: RwLock<usize> = RwLock::new(2);
+    &RETRIES
+}
+
+/// Capped exponential backoff before respawning a failed rank.
+fn spawn_backoff(attempt: usize) -> Duration {
+    Duration::from_millis((50u64 << attempt.min(4)).min(1000))
 }
 
 /// Socket filename inside the per-cluster private directory.
@@ -174,6 +253,7 @@ pub(crate) fn spawn_world(
     metas: &[ParamMeta],
     spec: &OptimizerSpec,
     seed: u64,
+    failure: FailureCell,
 ) -> Result<SpawnedWorld, String> {
     let path = fresh_socket_dir()?.join(SOCKET_NAME);
     let listener = UnixListener::bind(&path)
@@ -187,7 +267,7 @@ pub(crate) fn spawn_world(
             cleanup_socket(&path);
             let relay = std::thread::Builder::new()
                 .name(format!("{mode}-relay"))
-                .spawn(move || relay_loop(comm_streams))
+                .spawn(move || relay_loop(comm_streams, failure))
                 .map_err(|e| {
                     for c in &mut children {
                         let _ = c.kill();
@@ -214,8 +294,82 @@ pub(crate) fn spawn_world(
     }
 }
 
-/// Spawn + accept + hello + setup + ready. Children are pushed into
-/// `children` as they spawn so the caller can clean up on error.
+/// Spawn one worker process for `rank`, injecting any test crash plan.
+#[allow(clippy::too_many_arguments)]
+fn spawn_rank(
+    mode: &str,
+    bin: &PathBuf,
+    path: &std::path::Path,
+    world: usize,
+    rank: usize,
+    step_crash: Option<(usize, u64)>,
+) -> Result<Child, String> {
+    let mut cmd = Command::new(bin);
+    cmd.arg("worker")
+        .arg("--mode")
+        .arg(mode)
+        .arg("--rank")
+        .arg(rank.to_string())
+        .arg("--world")
+        .arg(world.to_string())
+        .arg("--endpoint")
+        .arg(path)
+        // Keep worker compute budgets identical to the thread
+        // transport: each worker divides the coordinator's resolved
+        // pool default by the world size (`set_thread_share`).
+        .env(
+            "GALORE2_THREADS",
+            crate::parallel::default_threads().to_string(),
+        )
+        .stdin(Stdio::null());
+    if consume_setup_crash(rank) {
+        cmd.env(CRASH_SETUP_ENV, rank.to_string());
+    }
+    if let Some((r, at)) = step_crash {
+        if r == rank {
+            cmd.env(CRASH_STEP_ENV, format!("{r}@{at}"));
+        }
+    }
+    cmd.spawn().map_err(|e| {
+        format!(
+            "spawning {mode} worker rank {rank} via {:?}: {e} — when the \
+             coordinator is not the galore2 binary itself, point at the \
+             built one ({WORKER_BIN_ENV} in the environment, or \
+             dist::set_worker_binary from in-process harnesses)",
+            bin
+        )
+    })
+}
+
+/// Kill/reap a failed rank, drop its stale connections, back off, and
+/// spawn its replacement. The caller has already checked the retry budget.
+#[allow(clippy::too_many_arguments)]
+fn respawn_rank(
+    mode: &str,
+    bin: &PathBuf,
+    path: &std::path::Path,
+    world: usize,
+    rank: usize,
+    step_crash: Option<(usize, u64)>,
+    children: &mut [Child],
+    controls: &mut [Option<UnixStream>],
+    comms: &mut [Option<UnixStream>],
+    attempts: &mut [usize],
+) -> Result<(), String> {
+    let _ = children[rank].kill();
+    let _ = children[rank].wait();
+    controls[rank] = None;
+    comms[rank] = None;
+    std::thread::sleep(spawn_backoff(attempts[rank]));
+    children[rank] = spawn_rank(mode, bin, path, world, rank, step_crash)?;
+    attempts[rank] += 1;
+    Ok(())
+}
+
+/// Spawn + accept + hello + setup + ready, retrying a failed rank up to
+/// `spawn_retries` times (capped backoff) before surfacing the error with
+/// the rank and attempt count. Children live in `children` (rank-indexed)
+/// so the caller can clean up on error.
 #[allow(clippy::too_many_arguments)]
 fn establish(
     mode: &str,
@@ -231,121 +385,143 @@ fn establish(
     let setup = wire::encode_setup(metas, spec, seed)?;
 
     let bin = worker_binary();
-    let (crash_setup, crash_step) = *test_crash_hooks().read().unwrap();
+    let retries = spawn_retries();
+    // Consumed ONCE per world: a world respawned during recovery must not
+    // re-inject the same step crash.
+    let step_crash = take_step_crash();
     for rank in 0..world {
-        let mut cmd = Command::new(&bin);
-        cmd.arg("worker")
-            .arg("--mode")
-            .arg(mode)
-            .arg("--rank")
-            .arg(rank.to_string())
-            .arg("--world")
-            .arg(world.to_string())
-            .arg("--endpoint")
-            .arg(path)
-            // Keep worker compute budgets identical to the thread
-            // transport: each worker divides the coordinator's resolved
-            // pool default by the world size (`set_thread_share`).
-            .env("GALORE2_THREADS", crate::parallel::default_threads().to_string())
-            .stdin(Stdio::null());
-        if let Some(r) = crash_setup {
-            cmd.env(CRASH_SETUP_ENV, r.to_string());
-        }
-        if let Some(r) = crash_step {
-            cmd.env(CRASH_STEP_ENV, r.to_string());
-        }
-        let child = cmd.spawn().map_err(|e| {
-            format!(
-                "spawning {mode} worker rank {rank} via {:?}: {e} — when the \
-                 coordinator is not the galore2 binary itself, point at the \
-                 built one ({WORKER_BIN_ENV} in the environment, or \
-                 dist::set_worker_binary from in-process harnesses)",
-                bin
-            )
-        })?;
-        children.push(child);
+        children.push(spawn_rank(mode, &bin, path, world, rank, step_crash)?);
     }
+    let mut attempts: Vec<usize> = vec![1; world];
 
-    // Accept 2·world connections (control + comm per rank), watching the
-    // children: a worker that exits before connecting is an error now, not
-    // a 30-second timeout later.
     listener
         .set_nonblocking(true)
         .map_err(|e| format!("configuring rendezvous listener: {e}"))?;
     let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
     let mut controls: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
     let mut comms: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
-    let mut connected = 0usize;
-    while connected < 2 * world {
-        match listener.accept() {
-            Ok((mut stream, _)) => {
-                stream
-                    .set_nonblocking(false)
-                    .map_err(|e| format!("configuring worker connection: {e}"))?;
-                // Bound the hello read so a rogue connector can't stall us.
-                let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
-                let (kind, rank) = read_hello(&mut stream)
-                    .map_err(|e| format!("reading worker hello: {e}"))?;
-                let _ = stream.set_read_timeout(None);
-                if rank >= world {
-                    return Err(format!("worker hello claims rank {rank} in world {world}"));
+    let mut ready: Vec<bool> = vec![false; world];
+
+    'handshake: loop {
+        // Accept phase: fill every missing connection slot (control + comm
+        // per rank), watching the children — a worker that exits before
+        // connecting is retried (or an error) now, not a 30-second timeout
+        // later.
+        while !(0..world).all(|r| controls[r].is_some() && comms[r].is_some()) {
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    stream
+                        .set_nonblocking(false)
+                        .map_err(|e| format!("configuring worker connection: {e}"))?;
+                    // Bound the hello read so a rogue connector can't stall us.
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                    let (kind, rank) = read_hello(&mut stream)
+                        .map_err(|e| format!("reading worker hello: {e}"))?;
+                    let _ = stream.set_read_timeout(None);
+                    if rank >= world {
+                        return Err(format!("worker hello claims rank {rank} in world {world}"));
+                    }
+                    let slot = match kind {
+                        CONN_CONTROL => &mut controls[rank],
+                        CONN_COMM => &mut comms[rank],
+                        other => return Err(format!("worker hello with unknown kind {other}")),
+                    };
+                    if slot.is_some() {
+                        return Err(format!("rank {rank} connected twice with the same kind"));
+                    }
+                    *slot = Some(stream);
                 }
-                let slot = match kind {
-                    CONN_CONTROL => &mut controls[rank],
-                    CONN_COMM => &mut comms[rank],
-                    other => return Err(format!("worker hello with unknown kind {other}")),
-                };
-                if slot.is_some() {
-                    return Err(format!("rank {rank} connected twice with the same kind"));
-                }
-                *slot = Some(stream);
-                connected += 1;
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                if Instant::now() > deadline {
-                    return Err(format!(
-                        "{mode} worker handshake timed out after {HANDSHAKE_TIMEOUT:?} \
-                         ({connected}/{} connections)",
-                        2 * world
-                    ));
-                }
-                for (rank, child) in children.iter_mut().enumerate() {
-                    if let Ok(Some(status)) = child.try_wait() {
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() > deadline {
+                        let connected = (0..world)
+                            .map(|r| controls[r].is_some() as usize + comms[r].is_some() as usize)
+                            .sum::<usize>();
                         return Err(format!(
-                            "{mode} worker rank {rank} exited during the handshake \
-                             ({status}) — check its stderr"
+                            "{mode} worker handshake timed out after {HANDSHAKE_TIMEOUT:?} \
+                             ({connected}/{} connections)",
+                            2 * world
                         ));
                     }
+                    for rank in 0..world {
+                        if let Ok(Some(status)) = children[rank].try_wait() {
+                            if attempts[rank] > retries {
+                                return Err(format!(
+                                    "{mode} worker rank {rank} exited during the handshake \
+                                     ({status}) — check its stderr; gave up after {} attempts \
+                                     ([dist] spawn_retries = {retries})",
+                                    attempts[rank]
+                                ));
+                            }
+                            respawn_rank(
+                                mode,
+                                &bin,
+                                path,
+                                world,
+                                rank,
+                                step_crash,
+                                children,
+                                &mut controls,
+                                &mut comms,
+                                &mut attempts,
+                            )?;
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
                 }
-                std::thread::sleep(Duration::from_millis(2));
+                Err(e) => return Err(format!("accepting worker connection: {e}")),
             }
-            Err(e) => return Err(format!("accepting worker connection: {e}")),
         }
-    }
-    let mut controls: Vec<UnixStream> = controls.into_iter().map(|s| s.unwrap()).collect();
-    let comms: Vec<UnixStream> = comms.into_iter().map(|s| s.unwrap()).collect();
 
-    // Ship the setup and wait for every rank's Ready. Timeout-bounded: a
-    // worker that dies building its state must error out, not hang.
-    for (rank, control) in controls.iter_mut().enumerate() {
-        wire::write_frame(control, &setup)
-            .map_err(|e| format!("sending setup to {mode} worker rank {rank}: {e}"))?;
-    }
-    for (rank, control) in controls.iter_mut().enumerate() {
-        let _ = control.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
-        let frame = wire::read_frame(control).map_err(|e| {
-            format!(
-                "{mode} worker rank {rank} failed during setup ({e}) — \
-                 check its stderr"
-            )
-        })?;
-        let _ = control.set_read_timeout(None);
-        if frame != READY {
-            return Err(format!(
-                "{mode} worker rank {rank} sent a malformed ready frame"
-            ));
+        // Setup/ready phase: ship the setup and wait for each remaining
+        // rank's Ready. Timeout-bounded; a rank that dies building its
+        // state loops back through the accept phase as a respawn.
+        for rank in 0..world {
+            if ready[rank] {
+                continue;
+            }
+            let control = controls[rank].as_mut().unwrap();
+            let result = (|| -> Result<(), String> {
+                wire::write_frame(control, &setup).map_err(|e| format!("sending setup: {e}"))?;
+                let _ = control.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+                let frame = wire::read_frame(control)
+                    .map_err(|e| format!("failed during setup ({e}) — check its stderr"))?;
+                let _ = control.set_read_timeout(None);
+                if frame != READY {
+                    return Err("sent a malformed ready frame".to_string());
+                }
+                Ok(())
+            })();
+            match result {
+                Ok(()) => ready[rank] = true,
+                Err(cause) => {
+                    if attempts[rank] > retries {
+                        return Err(format!(
+                            "{mode} worker rank {rank}: {cause}; gave up after {} attempts \
+                             ([dist] spawn_retries = {retries})",
+                            attempts[rank]
+                        ));
+                    }
+                    respawn_rank(
+                        mode,
+                        &bin,
+                        path,
+                        world,
+                        rank,
+                        step_crash,
+                        children,
+                        &mut controls,
+                        &mut comms,
+                        &mut attempts,
+                    )?;
+                    continue 'handshake;
+                }
+            }
         }
+        break;
     }
+
+    let controls: Vec<UnixStream> = controls.into_iter().map(|s| s.unwrap()).collect();
+    let comms: Vec<UnixStream> = comms.into_iter().map(|s| s.unwrap()).collect();
     Ok((controls, comms))
 }
 
@@ -354,19 +530,33 @@ fn establish(
 /// write the full slot table to every rank. Exits on the first socket
 /// error/EOF, DROPPING every stream: that is what unblocks surviving
 /// workers when one rank dies (their reads fail instead of waiting
-/// forever).
-fn relay_loop(mut streams: Vec<UnixStream>) {
+/// forever). The errored rank is recorded into the shared failure cell
+/// FIRST, so the coordinator blames the rank that actually died rather
+/// than the first victim whose control link it happens to poll.
+fn relay_loop(mut streams: Vec<UnixStream>, failure: FailureCell) {
     loop {
         let mut frames: Vec<Vec<u8>> = Vec::with_capacity(streams.len());
-        for s in &mut streams {
+        for (rank, s) in streams.iter_mut().enumerate() {
             match wire::read_frame(s) {
                 Ok(f) => frames.push(f),
-                Err(_) => return,
+                Err(e) => {
+                    record_failure(
+                        &failure,
+                        rank,
+                        format!("comm socket lost mid-collective ({e}) — check its stderr"),
+                    );
+                    return;
+                }
             }
         }
-        for s in &mut streams {
+        for (rank, s) in streams.iter_mut().enumerate() {
             for f in &frames {
-                if wire::write_frame(s, f).is_err() {
+                if let Err(e) = wire::write_frame(s, f) {
+                    record_failure(
+                        &failure,
+                        rank,
+                        format!("comm socket lost mid-collective ({e}) — check its stderr"),
+                    );
                     return;
                 }
             }
@@ -492,10 +682,12 @@ fn serve_worker<W: Worker>(rank: usize, world: usize, endpoint: &str) -> Result<
             format!("rank {rank}: control connection lost ({e})")
         })?;
         let cmd = wire::decode_cmd(&frame)?;
-        if matches!(cmd, Cmd::Step { .. }) && crash_hook(CRASH_STEP_ENV, rank) {
-            // Test hook: die mid-run so the coordinator and the relay
-            // exercise their no-hang failure paths.
-            std::process::exit(62);
+        if let Cmd::Step { t, .. } = &cmd {
+            if step_crash_hit(rank, *t) {
+                // Test hook: die mid-run so the coordinator and the relay
+                // exercise their no-hang failure paths.
+                std::process::exit(62);
+            }
         }
         match handle_cmd(&mut worker, cmd) {
             Served::Reply(reply) => {
@@ -560,7 +752,8 @@ mod tests {
             .collect();
         let serves: Vec<UnixStream> = (0..world).map(|_| listener.accept().unwrap().0).collect();
         cleanup_socket(&path);
-        let relay = std::thread::spawn(move || relay_loop(serves));
+        let cell: FailureCell = std::sync::Arc::new(std::sync::Mutex::new(None));
+        let relay = std::thread::spawn(move || relay_loop(serves, cell));
         let workers: Vec<std::thread::JoinHandle<Vec<Vec<f32>>>> = clients
             .into_iter()
             .enumerate()

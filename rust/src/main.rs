@@ -71,6 +71,10 @@ USAGE: galore2 <train|eval|memory|svd|presets> [flags]
           --parallel single|fsdp|ddp --world N --threads N
           --transport threads|process (worker fabric for fsdp/ddp)
           --engine native|pjrt --eval-batches N
+          --on-failure abort|respawn|shrink (worker death mid-run:
+            fail fast, rebuild at same world, or continue on world-1)
+          --snapshot-every N (in-memory restore-point cadence)
+          --max-recoveries N --spawn-retries N
           --resume CKPT (elastic: any source mode/world/transport)
           [--resume-requantize] (opt into lossy adam8bit/adafactor
             re-slicing when the new world is not block-aligned)

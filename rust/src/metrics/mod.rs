@@ -136,7 +136,12 @@ impl crate::train::StepObserver for Metrics {
                 tokens_seen,
                 wall_secs,
             } => self.log("val", *step, *tokens_seen, *loss, *lr, *wall_secs),
-            StepEvent::Checkpoint { .. } => {}
+            // Lifecycle events (checkpoints, worker loss/recovery) carry
+            // no loss point; the console observer narrates them.
+            StepEvent::Checkpoint { .. }
+            | StepEvent::WorkerLost { .. }
+            | StepEvent::RecoveryStarted { .. }
+            | StepEvent::RecoveryComplete { .. } => {}
         }
     }
 }

@@ -26,7 +26,7 @@
 //! world-locked for FSDP and fail loudly on mismatch.
 
 use crate::checkpoint::canonical::{CanonicalOptState, ImportOpts};
-use crate::dist::{DdpCluster, FsdpCluster, MemoryReport, ParamMeta, TransportKind};
+use crate::dist::{DdpCluster, FsdpCluster, MemoryReport, ParamMeta, TransportKind, WorkerLoss};
 use crate::optim::spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};
 use crate::tensor::Matrix;
 
@@ -50,7 +50,23 @@ pub trait TrainEngine {
 
     /// One synchronous optimizer step. `per_rank_grads[r]` holds rank r's
     /// microbatch gradients in full shapes; `lr` is the scheduled rate.
-    fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32);
+    /// Panics on worker death (the PR 4 prompt-failure contract);
+    /// [`TrainEngine::try_step`] is the caught form.
+    fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32) {
+        self.try_step(t, per_rank_grads, lr)
+            .unwrap_or_else(|loss| panic!("{loss}"));
+    }
+
+    /// [`TrainEngine::step`], but a worker rank dying mid-step comes back
+    /// as `Err(WorkerLoss)` naming the rank that failed first — the hook
+    /// the recovery supervisor (`train/supervisor.rs`) catches. Single-
+    /// process engines never fail this way.
+    fn try_step(
+        &mut self,
+        t: u64,
+        per_rank_grads: Vec<Vec<Matrix>>,
+        lr: f32,
+    ) -> Result<(), WorkerLoss>;
 
     /// Serialized optimizer state in the canonical (world-agnostic) form:
     /// round-trips through `import_state` on an engine of ANY mode and
@@ -137,7 +153,12 @@ impl TrainEngine for SingleEngine {
         &self.params
     }
 
-    fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32) {
+    fn try_step(
+        &mut self,
+        t: u64,
+        per_rank_grads: Vec<Vec<Matrix>>,
+        lr: f32,
+    ) -> Result<(), WorkerLoss> {
         assert_eq!(per_rank_grads.len(), 1, "single engine takes one rank");
         let grads = per_rank_grads.into_iter().next().unwrap();
         assert_eq!(grads.len(), self.params.len(), "grad/param count");
@@ -147,6 +168,7 @@ impl TrainEngine for SingleEngine {
             opt.step_param(idx, &mut self.params[idx], &grad, lr);
             // grad dropped here — per-layer update semantics.
         }
+        Ok(())
     }
 
     fn export_state(&self) -> Vec<u8> {
@@ -237,9 +259,15 @@ impl TrainEngine for FsdpEngine {
         &self.params
     }
 
-    fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32) {
-        self.cluster.step(t, per_rank_grads, lr);
-        self.params = self.cluster.gather_params();
+    fn try_step(
+        &mut self,
+        t: u64,
+        per_rank_grads: Vec<Vec<Matrix>>,
+        lr: f32,
+    ) -> Result<(), WorkerLoss> {
+        self.cluster.try_step(t, per_rank_grads, lr)?;
+        self.params = self.cluster.try_gather_params()?;
+        Ok(())
     }
 
     fn export_state(&self) -> Vec<u8> {
@@ -341,12 +369,18 @@ impl TrainEngine for DdpEngine {
         &self.params
     }
 
-    fn step(&mut self, t: u64, per_rank_grads: Vec<Vec<Matrix>>, lr: f32) {
-        self.cluster.step(t, per_rank_grads, lr);
+    fn try_step(
+        &mut self,
+        t: u64,
+        per_rank_grads: Vec<Vec<Matrix>>,
+        lr: f32,
+    ) -> Result<(), WorkerLoss> {
+        self.cluster.try_step(t, per_rank_grads, lr)?;
         // Cheap per-step view: replicas are identical by construction, so
         // one rank's copy suffices (full equality is asserted at
         // checkpoint time and by DdpCluster::gather_params users).
-        self.params = self.cluster.rank0_params();
+        self.params = self.cluster.try_rank0_params()?;
+        Ok(())
     }
 
     fn export_state(&self) -> Vec<u8> {

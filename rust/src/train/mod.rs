@@ -5,14 +5,21 @@
 //!   [`FsdpEngine`], [`DdpEngine`]); one trait per mode, one optimizer
 //!   construction path (`OptimizerSpec::build`) behind all of them.
 //! * [`StepObserver`] / [`StepEvent`] — the trainer's event stream.
+//! * [`Supervisor`] — fault tolerance: rolling in-memory snapshots, and
+//!   worker deaths converted into rebuild-at-world → re-shard → replay
+//!   cycles per [`OnFailure`] (`--on-failure abort|respawn|shrink`).
 
 mod engine;
 mod observer;
 mod pjrt_galore;
+mod supervisor;
 mod trainer;
 
 pub use crate::checkpoint::canonical::ImportOpts;
 pub use engine::{DdpEngine, FsdpEngine, SingleEngine, TrainEngine};
 pub use observer::{StepEvent, StepObserver};
 pub use pjrt_galore::PjrtGaLore;
+pub use supervisor::{
+    EngineFactory, OnFailure, RecoveryPolicy, Snapshot, Supervised, Supervisor,
+};
 pub use trainer::{TrainOutcome, Trainer};

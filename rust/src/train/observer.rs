@@ -31,6 +31,22 @@ pub enum StepEvent {
     },
     /// A checkpoint was written.
     Checkpoint { step: u64, path: PathBuf },
+    /// A worker rank died mid-run (`step` is the step being served when
+    /// the loss was detected; `rank`/`cause` name the rank that failed
+    /// first, not the first victim observed).
+    WorkerLost { step: u64, rank: usize, cause: String },
+    /// Recovery began: the dead cluster is torn down and rebuilt at
+    /// `new_world`, then state re-shards from the step-`from_step`
+    /// snapshot (`--on-failure respawn` keeps `new_world == old_world`;
+    /// `shrink` reduces it).
+    RecoveryStarted {
+        from_step: u64,
+        old_world: usize,
+        new_world: usize,
+    },
+    /// Recovery finished: training resumes at `resume_step` on a healthy
+    /// `world`-rank cluster (replaying `resume_step..` from the snapshot).
+    RecoveryComplete { resume_step: u64, world: usize },
 }
 
 /// Subscriber to the trainer's event stream; register with

@@ -1,0 +1,311 @@
+//! Fault-tolerant training supervision: snapshot → re-shard → continue.
+//!
+//! GaLore 2's headline pre-training horizon (Llama 7B, 500B tokens under
+//! FSDP) makes worker failure a certainty, not an edge case. PRs 3–5
+//! built the two halves a recovery path needs — world-agnostic canonical
+//! optimizer state (`checkpoint::canonical`) and transport-abstracted
+//! clusters whose worker deaths surface as prompt, attributable
+//! coordinator errors. The [`Supervisor`] composes them:
+//!
+//! 1. **Snapshot** — a rolling in-memory [`Snapshot`] (full params +
+//!    canonical optimizer bytes + the exact `tokens_seen` counter) is
+//!    captured every `snapshot_every` steps ([`Supervisor::maybe_snapshot`],
+//!    `[train] snapshot_every` / `--snapshot-every`). Nothing touches
+//!    disk; the checkpoint cadence stays independent.
+//! 2. **Catch** — [`Supervisor::step`] drives
+//!    [`TrainEngine::try_step`]; a [`WorkerLoss`] (thread panic, child
+//!    exit, socket drop — either transport) becomes a recovery event, not
+//!    a crash.
+//! 3. **Rebuild** — the dead cluster is dropped (its Drop reaps every
+//!    worker; the poisoned barrier / dropped relay guarantee no hang) and
+//!    an engine factory builds a fresh one at the same world
+//!    (`--on-failure respawn`) or one rank fewer (`shrink`); `abort`
+//!    preserves PR 4's fail-fast contract.
+//! 4. **Re-shard + replay** — the snapshot re-imports through the
+//!    canonical machinery (exact for elastic codecs at any world) and the
+//!    caller rewinds its step loop to the snapshot step. The
+//!    deterministic data path + exact token counter make the recovered
+//!    run **bitwise identical** to an uninterrupted run launched at the
+//!    target world from the same snapshot (pinned in
+//!    tests/fault_tolerance.rs).
+
+use crate::checkpoint::canonical::ImportOpts;
+use crate::dist::WorkerLoss;
+use crate::tensor::Matrix;
+use crate::train::{StepEvent, TrainEngine};
+
+/// What to do when a worker rank dies mid-run
+/// (`[train] on_failure` / `--on-failure abort|respawn|shrink`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OnFailure {
+    /// Fail the run promptly with the dead rank named (PR 4 behavior).
+    #[default]
+    Abort,
+    /// Rebuild the cluster at the SAME world size and replay from the
+    /// snapshot.
+    Respawn,
+    /// Rebuild at `world - 1` (floor 1) — elastic training on the
+    /// surviving capacity — and re-shard the snapshot into it.
+    Shrink,
+}
+
+impl OnFailure {
+    /// Shared by TOML and CLI parsing so the two can never drift.
+    pub fn parse(s: &str) -> Result<OnFailure, String> {
+        match s {
+            "abort" => Ok(OnFailure::Abort),
+            "respawn" => Ok(OnFailure::Respawn),
+            "shrink" => Ok(OnFailure::Shrink),
+            other => Err(format!(
+                "unknown on-failure policy {other:?} (abort|respawn|shrink)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OnFailure::Abort => "abort",
+            OnFailure::Respawn => "respawn",
+            OnFailure::Shrink => "shrink",
+        }
+    }
+}
+
+/// Recovery knobs, bundled so the trainer config maps onto one value.
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryPolicy {
+    pub on_failure: OnFailure,
+    /// Snapshot cadence in steps (0 is treated as 1). Smaller = cheaper
+    /// replay after a failure, pricier steady state.
+    pub snapshot_every: u64,
+    /// Total worker-loss recoveries allowed before the run fails anyway —
+    /// a flapping cluster must not loop forever.
+    pub max_recoveries: usize,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> RecoveryPolicy {
+        RecoveryPolicy {
+            on_failure: OnFailure::Abort,
+            snapshot_every: 50,
+            max_recoveries: 3,
+        }
+    }
+}
+
+/// A rolling in-memory restore point: everything needed to rebuild the
+/// run's state on a FRESH cluster of any world size. `step`/`tokens_seen`
+/// are the values *before* step `step` ran — resuming means replaying
+/// steps `step..`.
+#[derive(Clone)]
+pub struct Snapshot {
+    pub step: u64,
+    pub tokens_seen: u64,
+    /// Full (unsharded) parameters.
+    pub params: Vec<Matrix>,
+    /// Canonical (world-agnostic) optimizer bytes
+    /// ([`TrainEngine::export_state`]).
+    pub opt_state: Vec<u8>,
+}
+
+/// What one supervised step produced.
+pub enum Supervised {
+    /// The step applied normally.
+    Stepped,
+    /// A worker died; the cluster was rebuilt at `new_world` and restored
+    /// from the snapshot. The caller must rewind its loop to
+    /// `resume_step`, reset its token counter to `tokens_seen`, and emit
+    /// `events` to its observers (in order).
+    Recovered {
+        resume_step: u64,
+        tokens_seen: u64,
+        new_world: usize,
+        events: Vec<StepEvent>,
+    },
+}
+
+/// Builds a replacement engine at a given world size. Invoked only after
+/// the dead engine has been fully dropped (workers reaped, sockets
+/// closed), so respawning at the same world cannot collide with leaked
+/// resources.
+pub type EngineFactory = Box<dyn FnMut(usize) -> Result<Box<dyn TrainEngine>, String>>;
+
+/// Owns the engine on behalf of a training loop and turns worker deaths
+/// into snapshot-restore cycles per its [`RecoveryPolicy`].
+pub struct Supervisor {
+    /// `None` only transiently inside [`Supervisor::recover`], between
+    /// dropping the dead engine and installing its replacement.
+    engine: Option<Box<dyn TrainEngine>>,
+    factory: EngineFactory,
+    policy: RecoveryPolicy,
+    /// Import policy for restoring the snapshot into the rebuilt engine
+    /// (`--resume-requantize` flows through here like any other import).
+    import_opts: ImportOpts,
+    snapshot: Option<Snapshot>,
+    recoveries: usize,
+}
+
+impl Supervisor {
+    pub fn new(
+        engine: Box<dyn TrainEngine>,
+        factory: EngineFactory,
+        policy: RecoveryPolicy,
+        import_opts: ImportOpts,
+    ) -> Supervisor {
+        Supervisor {
+            engine: Some(engine),
+            factory,
+            policy,
+            import_opts,
+            snapshot: None,
+            recoveries: 0,
+        }
+    }
+
+    pub fn engine(&self) -> &dyn TrainEngine {
+        self.engine.as_deref().expect("supervisor holds an engine")
+    }
+
+    pub fn engine_mut(&mut self) -> &mut dyn TrainEngine {
+        self.engine
+            .as_deref_mut()
+            .expect("supervisor holds an engine")
+    }
+
+    pub fn policy(&self) -> &RecoveryPolicy {
+        &self.policy
+    }
+
+    /// Recoveries performed so far.
+    pub fn recoveries(&self) -> usize {
+        self.recoveries
+    }
+
+    /// Step of the current restore point, if one has been captured.
+    pub fn snapshot_step(&self) -> Option<u64> {
+        self.snapshot.as_ref().map(|s| s.step)
+    }
+
+    /// Whether worker loss is survivable (anything but `abort`).
+    pub fn supervising(&self) -> bool {
+        self.policy.on_failure != OnFailure::Abort
+    }
+
+    /// Capture a restore point if the cadence (or a missing first
+    /// snapshot) calls for one. Call at the TOP of the step loop, before
+    /// step `t`'s microbatches are drawn: `tokens_seen` must be the
+    /// counter value before step `t`. No-op under `--on-failure abort` —
+    /// the run would die anyway, so the copies would be pure overhead.
+    pub fn maybe_snapshot(&mut self, t: u64, tokens_seen: u64) {
+        if !self.supervising() {
+            return;
+        }
+        let due = self.snapshot.is_none() || t % self.policy.snapshot_every.max(1) == 0;
+        if !due {
+            return;
+        }
+        let engine = self.engine();
+        self.snapshot = Some(Snapshot {
+            step: t,
+            tokens_seen,
+            params: engine.params().to_vec(),
+            opt_state: engine.export_state(),
+        });
+    }
+
+    /// Drive one engine step, converting a worker death into a rebuild +
+    /// restore per the policy. `Err` means the run is over: `abort`
+    /// policy, recovery budget exhausted, no snapshot yet, or the rebuild
+    /// itself failed — every message names the dead rank.
+    pub fn step(
+        &mut self,
+        t: u64,
+        per_rank: Vec<Vec<Matrix>>,
+        lr: f32,
+    ) -> Result<Supervised, String> {
+        match self.engine_mut().try_step(t, per_rank, lr) {
+            Ok(()) => Ok(Supervised::Stepped),
+            Err(loss) => self.recover(t, loss),
+        }
+    }
+
+    fn recover(&mut self, t: u64, loss: WorkerLoss) -> Result<Supervised, String> {
+        let old_world = self.engine().world();
+        if !self.supervising() {
+            return Err(format!(
+                "worker rank {} died at step {t}: {} (--on-failure abort)",
+                loss.rank, loss.cause
+            ));
+        }
+        if self.recoveries >= self.policy.max_recoveries {
+            return Err(format!(
+                "worker rank {} died at step {t}: {} — recovery budget exhausted \
+                 ({} of max {})",
+                loss.rank, loss.cause, self.recoveries, self.policy.max_recoveries
+            ));
+        }
+        let Some(snap) = self.snapshot.clone() else {
+            return Err(format!(
+                "worker rank {} died at step {t}: {} — no snapshot captured yet",
+                loss.rank, loss.cause
+            ));
+        };
+        self.recoveries += 1;
+        let new_world = match self.policy.on_failure {
+            OnFailure::Respawn => old_world,
+            OnFailure::Shrink => (old_world - 1).max(1),
+            OnFailure::Abort => unreachable!("abort handled above"),
+        };
+        let mut events = vec![
+            StepEvent::WorkerLost {
+                step: t,
+                rank: loss.rank,
+                cause: loss.cause.clone(),
+            },
+            StepEvent::RecoveryStarted {
+                from_step: snap.step,
+                old_world,
+                new_world,
+            },
+        ];
+        // Tear the dead cluster down BEFORE building its replacement: its
+        // Drop joins/reaps every worker (the poisoned barrier / dropped
+        // relay guarantee none is stuck in a collective), so the new world
+        // starts from a clean slate of threads, processes, and sockets.
+        drop(self.engine.take());
+        let mut engine = (self.factory)(new_world)
+            .map_err(|e| format!("rebuilding cluster at world {new_world}: {e}"))?;
+        engine.init_params(&snap.params);
+        engine
+            .import_state_with(&snap.opt_state, self.import_opts)
+            .map_err(|e| format!("re-sharding snapshot into world {new_world}: {e}"))?;
+        self.engine = Some(engine);
+        events.push(StepEvent::RecoveryComplete {
+            resume_step: snap.step,
+            world: new_world,
+        });
+        Ok(Supervised::Recovered {
+            resume_step: snap.step,
+            tokens_seen: snap.tokens_seen,
+            new_world,
+            events,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn on_failure_parses_and_rejects() {
+        assert_eq!(OnFailure::parse("abort").unwrap(), OnFailure::Abort);
+        assert_eq!(OnFailure::parse("respawn").unwrap(), OnFailure::Respawn);
+        assert_eq!(OnFailure::parse("shrink").unwrap(), OnFailure::Shrink);
+        for v in [OnFailure::Abort, OnFailure::Respawn, OnFailure::Shrink] {
+            assert_eq!(OnFailure::parse(v.name()).unwrap(), v);
+        }
+        let err = OnFailure::parse("retry").unwrap_err();
+        assert!(err.contains("abort|respawn|shrink"), "unhelpful: {err}");
+    }
+}

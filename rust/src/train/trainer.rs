@@ -29,7 +29,8 @@ use crate::optim::lr::Schedule;
 use crate::runtime::{Executable, HostTensor, Manifest, Runtime};
 use crate::tensor::Matrix;
 use crate::train::{
-    DdpEngine, FsdpEngine, SingleEngine, StepEvent, StepObserver, TrainEngine,
+    DdpEngine, EngineFactory, FsdpEngine, RecoveryPolicy, SingleEngine, StepEvent,
+    StepObserver, Supervised, Supervisor, TrainEngine,
 };
 use crate::util::Timer;
 use anyhow::{Context, Result};
@@ -45,7 +46,9 @@ pub struct Trainer {
     pub loader: DataLoader,
     pub schedule: Schedule,
     pub metrics: Metrics,
-    engine: Box<dyn TrainEngine>,
+    /// Owns the engine; converts worker deaths into snapshot-restore
+    /// cycles per `--on-failure` (train/supervisor.rs).
+    supervisor: Supervisor,
     observers: Vec<Box<dyn StepObserver>>,
     pub tokens_seen: u64,
     start_step: u64,
@@ -69,6 +72,9 @@ impl Trainer {
         cfg.validate()?;
         // Pin the compute pool before any kernel runs; 0 keeps auto-detect.
         crate::parallel::set_default_threads(cfg.threads);
+        // Spawn/handshake retry budget for the process transport
+        // (`[dist] spawn_retries` / `--spawn-retries`).
+        crate::dist::set_spawn_retries(cfg.spawn_retries);
         let llama = LlamaCfg::preset(&cfg.preset)
             .with_context(|| format!("unknown preset {:?}", cfg.preset))?;
         let manifest = Manifest::load(
@@ -124,7 +130,13 @@ impl Trainer {
                 }
             })
             .collect();
-        let engine: Box<dyn TrainEngine> = match cfg.parallel {
+        // Build the engine AND a factory that can rebuild it at any world
+        // size after a worker death — the supervisor's recovery path
+        // re-installs the snapshot into the factory's product, so the
+        // init params passed here are placeholders of the right shapes.
+        let seed = cfg.seed;
+        let transport = cfg.transport;
+        let (engine, factory): (Box<dyn TrainEngine>, EngineFactory) = match cfg.parallel {
             ParallelMode::Single => {
                 let pjrt = if cfg.engine == Engine::Pjrt {
                     Some(PjrtResources {
@@ -135,34 +147,81 @@ impl Trainer {
                 } else {
                     None
                 };
-                Box::new(
+                let engine: Box<dyn TrainEngine> = Box::new(
                     SingleEngine::new(&spec, cfg.seed, pjrt.as_ref(), params)
                         .map_err(anyhow::Error::msg)?,
-                )
+                );
+                // No worker fabric to rebuild; validate() rejects
+                // --on-failure respawn|shrink for single mode, so this
+                // factory can only be reached by a bug.
+                let factory: EngineFactory = Box::new(|_| {
+                    Err("single-process engine cannot be rebuilt".to_string())
+                });
+                (engine, factory)
             }
-            ParallelMode::Fsdp => Box::new(
-                FsdpEngine::with_transport(
-                    cfg.world.max(1),
-                    metas,
-                    spec,
-                    cfg.seed,
-                    &params,
-                    cfg.transport,
-                )
-                .map_err(anyhow::Error::msg)?,
-            ),
-            ParallelMode::Ddp => Box::new(
-                DdpEngine::with_transport(
-                    cfg.world.max(1),
-                    metas,
-                    spec,
-                    cfg.seed,
-                    &params,
-                    cfg.transport,
-                )
-                .map_err(anyhow::Error::msg)?,
-            ),
+            ParallelMode::Fsdp => {
+                let engine: Box<dyn TrainEngine> = Box::new(
+                    FsdpEngine::with_transport(
+                        cfg.world.max(1),
+                        metas.clone(),
+                        spec.clone(),
+                        seed,
+                        &params,
+                        transport,
+                    )
+                    .map_err(anyhow::Error::msg)?,
+                );
+                let factory: EngineFactory = Box::new(move |world| {
+                    FsdpEngine::with_transport(
+                        world,
+                        metas.clone(),
+                        spec.clone(),
+                        seed,
+                        &params,
+                        transport,
+                    )
+                    .map(|e| Box::new(e) as Box<dyn TrainEngine>)
+                });
+                (engine, factory)
+            }
+            ParallelMode::Ddp => {
+                let engine: Box<dyn TrainEngine> = Box::new(
+                    DdpEngine::with_transport(
+                        cfg.world.max(1),
+                        metas.clone(),
+                        spec.clone(),
+                        seed,
+                        &params,
+                        transport,
+                    )
+                    .map_err(anyhow::Error::msg)?,
+                );
+                let factory: EngineFactory = Box::new(move |world| {
+                    DdpEngine::with_transport(
+                        world,
+                        metas.clone(),
+                        spec.clone(),
+                        seed,
+                        &params,
+                        transport,
+                    )
+                    .map(|e| Box::new(e) as Box<dyn TrainEngine>)
+                });
+                (engine, factory)
+            }
         };
+        let supervisor = Supervisor::new(
+            engine,
+            factory,
+            RecoveryPolicy {
+                on_failure: cfg.on_failure,
+                snapshot_every: cfg.snapshot_every,
+                max_recoveries: cfg.max_recoveries,
+            },
+            crate::train::ImportOpts {
+                requantize: cfg.resume_requantize,
+            },
+        );
 
         Ok(Trainer {
             cfg,
@@ -173,7 +232,7 @@ impl Trainer {
             loader,
             schedule,
             metrics: Metrics::new(),
-            engine,
+            supervisor,
             observers: Vec::new(),
             tokens_seen: 0,
             start_step: 0,
@@ -183,12 +242,17 @@ impl Trainer {
 
     /// Current full parameters (the engine's authoritative view).
     pub fn params(&self) -> &[Matrix] {
-        self.engine.params()
+        self.supervisor.engine().params()
     }
 
     /// The execution engine (mode name, world size, telemetry).
     pub fn engine(&self) -> &dyn TrainEngine {
-        self.engine.as_ref()
+        self.supervisor.engine()
+    }
+
+    /// The fault-tolerance supervisor (recovery count, snapshot step).
+    pub fn supervisor(&self) -> &Supervisor {
+        &self.supervisor
     }
 
     /// Subscribe to the trainer's [`StepEvent`] stream. [`Metrics`] is
@@ -210,7 +274,7 @@ impl Trainer {
             .manifest
             .params
             .iter()
-            .zip(self.engine.params())
+            .zip(self.supervisor.engine().params())
             .map(|(spec, m)| {
                 if spec.shape.len() == 1 {
                     HostTensor::from_vec1(&m.data)
@@ -241,11 +305,12 @@ impl Trainer {
         Ok((loss, grads))
     }
 
-    /// One optimizer step; returns the mean training loss over this step's
-    /// per-rank microbatches (one microbatch for single-process engines).
-    pub fn train_step(&mut self, t: u64) -> Result<f32> {
+    /// Draw step `t`'s per-rank microbatches and run fwd_bwd on each:
+    /// (lr, per-microbatch losses, per-rank grads). Increments
+    /// `tokens_seen` — a recovery rewinds the counter via the snapshot.
+    fn step_inputs(&mut self, t: u64) -> Result<(f32, Vec<f32>, Vec<Vec<Matrix>>)> {
         let lr = self.schedule.lr(t);
-        let world = self.engine.world();
+        let world = self.supervisor.engine().world();
         let batches = self.loader.train_microbatches_at(t, world);
         let mut losses = Vec::with_capacity(world);
         let mut per_rank = Vec::with_capacity(world);
@@ -255,7 +320,16 @@ impl Trainer {
             losses.push(l);
             per_rank.push(g);
         }
-        self.engine.step(t, per_rank, lr);
+        Ok((lr, losses, per_rank))
+    }
+
+    /// One optimizer step; returns the mean training loss over this step's
+    /// per-rank microbatches (one microbatch for single-process engines).
+    /// Panics on worker death — the supervised path lives in [`Trainer::run`].
+    pub fn train_step(&mut self, t: u64) -> Result<f32> {
+        let (lr, losses, per_rank) = self.step_inputs(t)?;
+        let world = losses.len().max(1);
+        self.supervisor.engine_mut().step(t, per_rank, lr);
         Ok(losses.iter().sum::<f32>() / world as f32)
     }
 
@@ -272,12 +346,43 @@ impl Trainer {
     }
 
     /// Full training run with event emission / eval / checkpoints.
+    ///
+    /// Fault tolerance: under `--on-failure respawn|shrink` the loop
+    /// captures a rolling in-memory snapshot every
+    /// `[train] snapshot_every` steps, and a worker death mid-step
+    /// rewinds to that snapshot on a freshly rebuilt cluster instead of
+    /// crashing the run (see train/supervisor.rs).
     pub fn run(&mut self) -> Result<TrainOutcome> {
         let steps = self.cfg.steps;
         let mut last_train = f64::NAN;
         let mut last_val: Option<(u64, f64)> = None;
-        for t in self.start_step..steps {
-            let loss = self.train_step(t)? as f64;
+        let mut t = self.start_step;
+        while t < steps {
+            // BEFORE the microbatches are drawn: the snapshot's
+            // step/tokens_seen mean "step t has not run yet".
+            self.supervisor.maybe_snapshot(t, self.tokens_seen);
+            let (lr, losses, per_rank) = self.step_inputs(t)?;
+            match self
+                .supervisor
+                .step(t, per_rank, lr)
+                .map_err(anyhow::Error::msg)?
+            {
+                Supervised::Recovered {
+                    resume_step,
+                    tokens_seen,
+                    events,
+                    ..
+                } => {
+                    for e in events {
+                        self.emit(e);
+                    }
+                    self.tokens_seen = tokens_seen;
+                    t = resume_step;
+                    continue;
+                }
+                Supervised::Stepped => {}
+            }
+            let loss = (losses.iter().sum::<f32>() / losses.len().max(1) as f32) as f64;
             last_train = loss;
             if t % self.cfg.log_every == 0 || t + 1 == steps {
                 self.emit(StepEvent::Train {
@@ -312,6 +417,7 @@ impl Trainer {
                 let path = self.save_checkpoint(t + 1)?;
                 self.emit(StepEvent::Checkpoint { step: t + 1, path });
             }
+            t += 1;
         }
         // The eval cadence already sweeps validation on the final step;
         // reuse it rather than paying a second identical sweep.
@@ -346,8 +452,8 @@ impl Trainer {
                 .iter()
                 .map(|p| p.name.clone())
                 .collect(),
-            params: self.engine.params().to_vec(),
-            opt_state: self.engine.export_state(),
+            params: self.supervisor.engine().params().to_vec(),
+            opt_state: self.supervisor.engine().export_state(),
         }
         .save(&path)?;
         Ok(path)
@@ -375,14 +481,15 @@ impl Trainer {
     pub fn resume(&mut self, path: &Path) -> Result<u64> {
         let ckpt = Checkpoint::load(path)?;
         anyhow::ensure!(
-            ckpt.params.len() == self.engine.params().len(),
+            ckpt.params.len() == self.supervisor.engine().params().len(),
             "checkpoint param count mismatch"
         );
-        self.engine.init_params(&ckpt.params);
+        self.supervisor.engine_mut().init_params(&ckpt.params);
         let opts = crate::train::ImportOpts {
             requantize: self.cfg.resume_requantize,
         };
-        self.engine
+        self.supervisor
+            .engine_mut()
             .import_state_with(&ckpt.opt_state, opts)
             .map_err(|e| anyhow::anyhow!("optimizer state: {e}"))?;
         self.start_step = ckpt.step;
@@ -391,15 +498,16 @@ impl Trainer {
         // tokens-per-step) reports the true token axis. Pre-v4 files
         // don't carry it; reconstruct from THIS run's consumption rate —
         // exact for a same-world resume, a documented rescaling otherwise.
-        self.tokens_seen = ckpt.tokens_seen.unwrap_or_else(|| {
-            ckpt.step * self.engine.world() as u64 * self.loader.tokens_per_batch() as u64
-        });
+        let world = self.supervisor.engine().world() as u64;
+        self.tokens_seen = ckpt
+            .tokens_seen
+            .unwrap_or_else(|| ckpt.step * world * self.loader.tokens_per_batch() as u64);
         Ok(ckpt.step)
     }
 
     /// Per-rank memory/traffic reports (FSDP and DDP engines).
     pub fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
-        self.engine.memory_reports()
+        self.supervisor.engine().memory_reports()
     }
 
     pub fn runtime(&self) -> Arc<Runtime> {

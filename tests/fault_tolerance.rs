@@ -1,0 +1,591 @@
+//! Fault-tolerant elastic training: kill a worker rank mid-run and the
+//! supervised loop must snapshot → re-shard → continue, ending **bitwise
+//! identical** to an uninterrupted run launched at the post-recovery
+//! world from the same snapshot step.
+//!
+//! The claims pinned here:
+//!
+//! * an injected rank crash at step N — both transports, FSDP and DDP,
+//!   galore + adamw + qgalore — recovers automatically under
+//!   `--on-failure respawn|shrink`, with final parameters AND canonical
+//!   optimizer bytes equal to a clean reference: original world to the
+//!   snapshot step, canonical export/import into the post-recovery
+//!   world, then the remaining steps;
+//! * the exact `tokens_seen` counter survives the rollback (the
+//!   recovered run re-counts replayed tokens, so the total is what an
+//!   uninterrupted run would report);
+//! * `--on-failure abort` still fails promptly with the dead rank named
+//!   — no hang — on both transports, as do an exhausted recovery budget
+//!   and a crash before the first snapshot;
+//! * a transient spawn-time crash is retried within `[dist]
+//!   spawn_retries`; a persistent one fails naming the rank and the
+//!   attempt count;
+//! * repeated kill→recover cycles leak no worker threads (thread
+//!   transport) and no rendezvous socket directories (process
+//!   transport).
+//!
+//! Fixtures mirror tests/transport.rs: every rank feeds rank 0's
+//! gradient stream, so shard averages are exact and runs stay
+//! comparable across world sizes. The suite serializes on a mutex
+//! because the crash hooks and worker-binary override are
+//! process-global. CI runs it with `GALORE2_DENY_SKIP=1`; nothing here
+//! needs compiled artifacts.
+
+use galore2::dist::{set_test_crash_hooks, set_worker_binary, OptimizerSpec, TransportKind};
+use galore2::optim::{AdamCfg, GaLoreCfg, ProjectionKind};
+use galore2::tensor::Matrix;
+use galore2::testing::fixtures;
+use galore2::train::{
+    DdpEngine, FsdpEngine, ImportOpts, OnFailure, RecoveryPolicy, StepEvent, Supervised,
+    Supervisor, TrainEngine,
+};
+use std::sync::Mutex;
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn use_real_worker_bin() {
+    set_worker_binary(env!("CARGO_BIN_EXE_galore2"));
+}
+
+/// Wide, tall, square, and bias-like (unprojected) parameters.
+const SHAPES: &[(usize, usize)] = &[(8, 16), (16, 8), (6, 6), (1, 12)];
+const LR: f32 = 0.03;
+const SEED: u64 = 21;
+const STEPS: u64 = 9;
+const SNAP_EVERY: u64 = 4;
+const TOKENS_PER_STEP: u64 = 64;
+
+fn grads(t: u64) -> Vec<Matrix> {
+    fixtures::rank_grads(SHAPES, t, 0, 0.1)
+}
+
+fn init() -> Vec<Matrix> {
+    fixtures::randn_set(SHAPES, 0.5, 7, 0)
+}
+
+fn galore_spec() -> OptimizerSpec {
+    OptimizerSpec::GaLore {
+        galore: GaLoreCfg {
+            rank: 4,
+            update_freq: 3,
+            alpha: 1.0,
+            projection: ProjectionKind::RandSvd,
+            ..GaLoreCfg::default()
+        },
+        adam: AdamCfg::default(),
+    }
+}
+
+fn adamw_spec() -> OptimizerSpec {
+    OptimizerSpec::AdamW(AdamCfg::default())
+}
+
+fn qgalore_spec() -> OptimizerSpec {
+    OptimizerSpec::QGaLore {
+        galore: GaLoreCfg {
+            rank: 4,
+            update_freq: 3,
+            alpha: 1.0,
+            projection: ProjectionKind::RandSvd,
+            ..GaLoreCfg::default()
+        },
+        adam: AdamCfg::default(),
+        similarity_threshold: 0.9,
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Fsdp,
+    Ddp,
+}
+
+impl Mode {
+    fn name(self) -> &'static str {
+        match self {
+            Mode::Fsdp => "fsdp",
+            Mode::Ddp => "ddp",
+        }
+    }
+}
+
+fn build(
+    mode: Mode,
+    world: usize,
+    spec: &OptimizerSpec,
+    transport: TransportKind,
+) -> Result<Box<dyn TrainEngine>, String> {
+    Ok(match mode {
+        Mode::Fsdp => Box::new(FsdpEngine::with_transport(
+            world,
+            fixtures::metas_for(SHAPES),
+            spec.clone(),
+            SEED,
+            &init(),
+            transport,
+        )?) as Box<dyn TrainEngine>,
+        Mode::Ddp => Box::new(DdpEngine::with_transport(
+            world,
+            fixtures::metas_for(SHAPES),
+            spec.clone(),
+            SEED,
+            &init(),
+            transport,
+        )?),
+    })
+}
+
+fn factory(
+    mode: Mode,
+    spec: &OptimizerSpec,
+    transport: TransportKind,
+) -> galore2::train::EngineFactory {
+    let spec = spec.clone();
+    Box::new(move |world| build(mode, world, &spec, transport))
+}
+
+struct RunOutcome {
+    params: Vec<Matrix>,
+    opt_state: Vec<u8>,
+    world: usize,
+    recoveries: usize,
+}
+
+/// Drive a supervised run to `STEPS` with rank `crash.0` scheduled to die
+/// at step `crash.1` (the plan is consumed by the FIRST world spawned, so
+/// the rebuilt world comes up clean). Mimics the trainer's loop:
+/// snapshot at the top of the step, count tokens, rewind on recovery.
+fn supervised_run(
+    mode: Mode,
+    spec: &OptimizerSpec,
+    transport: TransportKind,
+    world: usize,
+    on_failure: OnFailure,
+    crash: (usize, u64),
+) -> Result<RunOutcome, String> {
+    set_test_crash_hooks(None, Some(crash));
+    let engine = build(mode, world, spec, transport);
+    // The spawn above consumed the step plan; clear the hooks so a
+    // failure in `build` can't leak the plan into later tests either.
+    set_test_crash_hooks(None, None);
+    let mut sup = Supervisor::new(
+        engine?,
+        factory(mode, spec, transport),
+        RecoveryPolicy {
+            on_failure,
+            snapshot_every: SNAP_EVERY,
+            max_recoveries: 3,
+        },
+        ImportOpts::default(),
+    );
+    let mut tokens: u64 = 0;
+    let mut t: u64 = 0;
+    while t < STEPS {
+        sup.maybe_snapshot(t, tokens);
+        tokens += TOKENS_PER_STEP;
+        let w = sup.engine().world();
+        match sup.step(t, vec![grads(t); w], LR)? {
+            Supervised::Stepped => t += 1,
+            Supervised::Recovered {
+                resume_step,
+                tokens_seen,
+                new_world,
+                events,
+            } => {
+                assert!(
+                    matches!(events.first(), Some(StepEvent::WorkerLost { .. })),
+                    "recovery must lead with WorkerLost"
+                );
+                assert!(
+                    matches!(events.last(), Some(StepEvent::RecoveryComplete { .. })),
+                    "recovery must end with RecoveryComplete"
+                );
+                assert_eq!(new_world, sup.engine().world(), "reported world mismatch");
+                t = resume_step;
+                tokens = tokens_seen;
+            }
+        }
+    }
+    assert_eq!(
+        tokens,
+        STEPS * TOKENS_PER_STEP,
+        "token counter must survive the rollback exactly"
+    );
+    Ok(RunOutcome {
+        params: sup.engine().params().to_vec(),
+        opt_state: sup.engine().export_state(),
+        world: sup.engine().world(),
+        recoveries: sup.recoveries(),
+    })
+}
+
+/// The uninterrupted reference a recovered run must match bitwise: run
+/// the ORIGINAL world to the snapshot step, export canonical state, then
+/// import into a fresh engine at the POST-recovery world and finish the
+/// schedule there. Always over threads — canonical bytes are
+/// transport-independent (pinned in tests/transport.rs), so this also
+/// cross-checks the process-transport recoveries against threads.
+fn reference_run(
+    mode: Mode,
+    spec: &OptimizerSpec,
+    start_world: usize,
+    end_world: usize,
+    crash_step: u64,
+) -> (Vec<Matrix>, Vec<u8>) {
+    // Snapshots land at the top of every SNAP_EVERY-th step, so a crash
+    // at `crash_step` restores the largest cadence multiple <= it.
+    let snap_step = crash_step - crash_step % SNAP_EVERY;
+    let mut first = build(mode, start_world, spec, TransportKind::Threads).unwrap();
+    for t in 0..snap_step {
+        first.step(t, vec![grads(t); start_world], LR);
+    }
+    let params = first.params().to_vec();
+    let state = first.export_state();
+    drop(first);
+    let mut second = build(mode, end_world, spec, TransportKind::Threads).unwrap();
+    second.init_params(&params);
+    second
+        .import_state_with(&state, ImportOpts::default())
+        .unwrap();
+    for t in snap_step..STEPS {
+        second.step(t, vec![grads(t); end_world], LR);
+    }
+    (second.params().to_vec(), second.export_state())
+}
+
+fn assert_bitwise(got: &RunOutcome, want: &(Vec<Matrix>, Vec<u8>), label: &str) {
+    assert_eq!(got.params.len(), want.0.len(), "{label}: param count");
+    for (idx, (a, b)) in got.params.iter().zip(&want.0).enumerate() {
+        assert_eq!(a.data, b.data, "{label}: param {idx} diverged");
+    }
+    assert_eq!(
+        got.opt_state, want.1,
+        "{label}: canonical optimizer bytes diverged"
+    );
+}
+
+/// One recover-and-compare case: crash `rank` at `step`, expect exactly
+/// one recovery landing on `end_world`, bitwise equal to the reference.
+fn check_recovery(
+    mode: Mode,
+    spec: &OptimizerSpec,
+    transport: TransportKind,
+    start_world: usize,
+    on_failure: OnFailure,
+    crash: (usize, u64),
+) {
+    let end_world = match on_failure {
+        OnFailure::Respawn => start_world,
+        OnFailure::Shrink => (start_world - 1).max(1),
+        OnFailure::Abort => unreachable!("recovery cases never use abort"),
+    };
+    let label = format!(
+        "{} {} world {start_world}→{end_world} ({}, rank {} dies at step {})",
+        spec.name(),
+        mode.name(),
+        on_failure.name(),
+        crash.0,
+        crash.1
+    );
+    let out = supervised_run(mode, spec, transport, start_world, on_failure, crash)
+        .unwrap_or_else(|e| panic!("{label}: supervised run failed: {e}"));
+    assert_eq!(out.recoveries, 1, "{label}: expected exactly one recovery");
+    assert_eq!(out.world, end_world, "{label}: wrong post-recovery world");
+    let want = reference_run(mode, spec, start_world, end_world, crash.1);
+    assert_bitwise(&out, &want, &label);
+}
+
+#[test]
+fn threads_fsdp_galore_respawn_recovers_bitwise() {
+    let _g = lock();
+    check_recovery(
+        Mode::Fsdp,
+        &galore_spec(),
+        TransportKind::Threads,
+        2,
+        OnFailure::Respawn,
+        (1, 5),
+    );
+}
+
+#[test]
+fn threads_fsdp_adamw_shrink_recovers_bitwise() {
+    let _g = lock();
+    // World 3 → 2: exercises a non-power-of-two source world and a real
+    // re-shard (different shard boundaries on both sides).
+    check_recovery(
+        Mode::Fsdp,
+        &adamw_spec(),
+        TransportKind::Threads,
+        3,
+        OnFailure::Shrink,
+        (2, 6),
+    );
+}
+
+#[test]
+fn threads_fsdp_qgalore_shrink_recovers_bitwise() {
+    let _g = lock();
+    // Crash at step 3 with cadence 4: the only restore point is the
+    // step-0 snapshot, so the WHOLE run replays on the shrunken world.
+    // Q-GaLore's quantized-projector state rides the elastic galore
+    // codec, so the re-shard stays exact (adam8bit's world-locked shards
+    // would not — that combination is rejected at import, not here).
+    check_recovery(
+        Mode::Fsdp,
+        &qgalore_spec(),
+        TransportKind::Threads,
+        2,
+        OnFailure::Shrink,
+        (0, 3),
+    );
+}
+
+#[test]
+fn threads_ddp_galore_shrink_recovers_bitwise() {
+    let _g = lock();
+    check_recovery(
+        Mode::Ddp,
+        &galore_spec(),
+        TransportKind::Threads,
+        2,
+        OnFailure::Shrink,
+        (1, 5),
+    );
+}
+
+#[test]
+fn process_fsdp_galore_respawn_recovers_bitwise() {
+    let _g = lock();
+    use_real_worker_bin();
+    let dirs_before = worker_tmp_dirs();
+    check_recovery(
+        Mode::Fsdp,
+        &galore_spec(),
+        TransportKind::Process,
+        2,
+        OnFailure::Respawn,
+        (1, 5),
+    );
+    assert_eq!(
+        worker_tmp_dirs(),
+        dirs_before,
+        "kill→recover must not leak rendezvous socket directories"
+    );
+}
+
+#[test]
+fn process_fsdp_adamw_shrink_recovers_bitwise() {
+    let _g = lock();
+    use_real_worker_bin();
+    // Rank 0 (the relay's first socket) dies before the first cadence
+    // boundary: restore from the step-0 snapshot onto a single rank.
+    check_recovery(
+        Mode::Fsdp,
+        &adamw_spec(),
+        TransportKind::Process,
+        2,
+        OnFailure::Shrink,
+        (0, 2),
+    );
+}
+
+#[test]
+fn process_ddp_adamw_respawn_recovers_bitwise() {
+    let _g = lock();
+    use_real_worker_bin();
+    // Crash at step 4, right AFTER the step-4 snapshot was captured: the
+    // rollback distance is zero steps, the smallest possible replay.
+    check_recovery(
+        Mode::Ddp,
+        &adamw_spec(),
+        TransportKind::Process,
+        2,
+        OnFailure::Respawn,
+        (1, 4),
+    );
+}
+
+#[test]
+fn abort_fails_promptly_naming_rank_threads() {
+    let _g = lock();
+    let err = supervised_run(
+        Mode::Fsdp,
+        &adamw_spec(),
+        TransportKind::Threads,
+        2,
+        OnFailure::Abort,
+        (1, 2),
+    )
+    .err()
+    .expect("abort policy must fail the run");
+    assert!(err.contains("rank 1"), "error must name the dead rank: {err}");
+    assert!(
+        err.contains("--on-failure abort"),
+        "error must point at the policy knob: {err}"
+    );
+}
+
+#[test]
+fn abort_fails_promptly_naming_rank_process() {
+    let _g = lock();
+    use_real_worker_bin();
+    let err = supervised_run(
+        Mode::Ddp,
+        &adamw_spec(),
+        TransportKind::Process,
+        2,
+        OnFailure::Abort,
+        (1, 2),
+    )
+    .err()
+    .expect("abort policy must fail the run");
+    assert!(err.contains("rank 1"), "error must name the dead rank: {err}");
+}
+
+#[test]
+fn exhausted_budget_and_missing_snapshot_fail_with_rank_named() {
+    let _g = lock();
+    let spec = adamw_spec();
+    // Budget of zero: the very first (otherwise survivable) loss fails.
+    set_test_crash_hooks(None, Some((0, 1)));
+    let engine = build(Mode::Fsdp, 2, &spec, TransportKind::Threads);
+    set_test_crash_hooks(None, None);
+    let mut sup = Supervisor::new(
+        engine.unwrap(),
+        factory(Mode::Fsdp, &spec, TransportKind::Threads),
+        RecoveryPolicy {
+            on_failure: OnFailure::Respawn,
+            snapshot_every: 1,
+            max_recoveries: 0,
+        },
+        ImportOpts::default(),
+    );
+    sup.maybe_snapshot(0, 0);
+    assert!(matches!(
+        sup.step(0, vec![grads(0); 2], LR),
+        Ok(Supervised::Stepped)
+    ));
+    sup.maybe_snapshot(1, TOKENS_PER_STEP);
+    let err = sup
+        .step(1, vec![grads(1); 2], LR)
+        .err()
+        .expect("budget of 0 must turn the loss into a failure");
+    assert!(err.contains("rank 0"), "error must name the dead rank: {err}");
+    assert!(
+        err.contains("recovery budget exhausted"),
+        "error must say WHY recovery was refused: {err}"
+    );
+    drop(sup);
+    // A crash before any snapshot exists is equally unrecoverable.
+    set_test_crash_hooks(None, Some((1, 0)));
+    let engine = build(Mode::Fsdp, 2, &spec, TransportKind::Threads);
+    set_test_crash_hooks(None, None);
+    let mut sup = Supervisor::new(
+        engine.unwrap(),
+        factory(Mode::Fsdp, &spec, TransportKind::Threads),
+        RecoveryPolicy {
+            on_failure: OnFailure::Respawn,
+            snapshot_every: SNAP_EVERY,
+            max_recoveries: 3,
+        },
+        ImportOpts::default(),
+    );
+    // Deliberately no maybe_snapshot.
+    let err = sup
+        .step(0, vec![grads(0); 2], LR)
+        .err()
+        .expect("a loss before the first snapshot must fail");
+    assert!(err.contains("rank 1"), "error must name the dead rank: {err}");
+    assert!(
+        err.contains("no snapshot captured yet"),
+        "error must say WHY recovery was refused: {err}"
+    );
+}
+
+#[test]
+fn transient_spawn_crash_is_retried_within_budget() {
+    let _g = lock();
+    use_real_worker_bin();
+    // ONE setup-crash credit: rank 1's first process dies during setup,
+    // its respawn comes up clean, and the cluster must still reach a
+    // bitwise-correct result (default [dist] spawn_retries = 2).
+    set_test_crash_hooks(Some((1, 1)), None);
+    let result = build(Mode::Fsdp, 2, &galore_spec(), TransportKind::Process);
+    set_test_crash_hooks(None, None);
+    let mut engine = result.expect("one transient setup crash must be retried, not fatal");
+    for t in 0..3 {
+        engine.step(t, vec![grads(t); 2], LR);
+    }
+    let mut want = build(Mode::Fsdp, 2, &galore_spec(), TransportKind::Threads).unwrap();
+    for t in 0..3 {
+        want.step(t, vec![grads(t); 2], LR);
+    }
+    for (idx, (a, b)) in engine.params().iter().zip(want.params()).enumerate() {
+        assert_eq!(a.data, b.data, "param {idx} diverged after a retried spawn");
+    }
+}
+
+#[test]
+fn persistent_spawn_crash_names_rank_and_attempts() {
+    let _g = lock();
+    use_real_worker_bin();
+    set_test_crash_hooks(Some((1, u32::MAX)), None);
+    let result = build(Mode::Fsdp, 2, &galore_spec(), TransportKind::Process);
+    set_test_crash_hooks(None, None);
+    let err = result
+        .err()
+        .expect("a rank that dies on every spawn attempt must fail the build");
+    assert!(err.contains("rank 1"), "error must name the dead rank: {err}");
+    assert!(
+        err.contains("attempts") && err.contains("spawn_retries"),
+        "error must report the attempt count and the retry knob: {err}"
+    );
+}
+
+fn thread_count() -> usize {
+    std::fs::read_dir("/proc/self/task")
+        .map(|d| d.count())
+        .unwrap_or(0)
+}
+
+fn worker_tmp_dirs() -> usize {
+    let prefix = format!("g2w-{}-", std::process::id());
+    std::fs::read_dir(std::env::temp_dir())
+        .map(|d| {
+            d.filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().starts_with(&prefix))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[test]
+fn repeated_kill_recover_cycles_leak_no_threads() {
+    let _g = lock();
+    let spec = adamw_spec();
+    let baseline = thread_count();
+    for cycle in 0..3 {
+        let out = supervised_run(
+            Mode::Fsdp,
+            &spec,
+            TransportKind::Threads,
+            2,
+            OnFailure::Respawn,
+            (1, 5),
+        )
+        .unwrap_or_else(|e| panic!("cycle {cycle}: {e}"));
+        assert_eq!(out.recoveries, 1, "cycle {cycle}");
+    }
+    // Each leaked panicked worker would add `world` threads per cycle;
+    // allow a little slack for the test harness's own thread churn.
+    let after = thread_count();
+    assert!(
+        after <= baseline + 2,
+        "worker threads leaked across kill→recover cycles: {baseline} → {after}"
+    );
+}

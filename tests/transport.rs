@@ -252,7 +252,10 @@ fn rendezvous_socket_is_unlinked() {
 fn worker_crash_during_setup_is_an_error_not_a_hang() {
     let _g = lock();
     use_real_worker_bin();
-    set_test_crash_hooks(Some(1), None);
+    // Persistent setup crash (u32::MAX credits): the rank dies on EVERY
+    // respawn attempt, so the retry budget must run out and the final
+    // error must still name the culprit.
+    set_test_crash_hooks(Some((1, u32::MAX)), None);
     let result = FsdpEngine::with_transport(
         2,
         fixtures::metas_for(SHAPES),
@@ -273,7 +276,7 @@ fn worker_crash_during_setup_is_an_error_not_a_hang() {
 fn worker_crash_mid_step_panics_promptly_without_hanging() {
     let _g = lock();
     use_real_worker_bin();
-    set_test_crash_hooks(None, Some(0));
+    set_test_crash_hooks(None, Some((0, 0)));
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         let mut cluster = FsdpCluster::with_transport(
             2,
