@@ -1,0 +1,291 @@
+//! String/comment-aware token scanner for the invariant linter.
+//!
+//! Deliberately NOT a Rust parser (no `syn`, no dependency): the lint
+//! rules (`analysis/rules.rs`) only need identifier/punctuation tokens
+//! with line numbers, plus the text of `//` comments (where the
+//! `lint: allow` escape hatch lives). What the scanner must get exactly
+//! right is what it *skips* — string literals (including raw and byte
+//! strings), char literals vs lifetimes, and nested block comments — so
+//! a rule can never fire on the word `unwrap` inside an error message,
+//! and a banned call can never hide inside what the scanner mistakes for
+//! a string.
+
+/// One scanned token. Identifiers (including keywords and numeric
+/// literals — the rules treat both as plain words) carry their full
+/// text; everything else is a single punctuation character.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Token {
+    pub text: String,
+    pub line: u32,
+    pub is_ident: bool,
+}
+
+/// A `//` comment (line or doc), with the text after the slashes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+}
+
+/// Scan result: code tokens plus the line comments (for allow parsing).
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Scan `src` into tokens and comments. Never fails: unterminated
+/// strings/comments simply consume the rest of the file (the rustc build
+/// running alongside the linter reports those as what they are).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut tokens = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers /// and //! doc comments).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && b[j] != '\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                line,
+                text: b[start..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // String-literal family. Check the prefixed forms BEFORE generic
+        // ident scanning, so `r"..."`/`br#"..."#`/`b"..."`/`b'x'` are
+        // skipped as literals rather than read as idents.
+        if c == '"' {
+            i = skip_string(&b, i + 1, &mut line, true);
+            continue;
+        }
+        if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+            i = skip_string(&b, i + 2, &mut line, true);
+            continue;
+        }
+        if c == 'b' && i + 1 < n && b[i + 1] == '\'' {
+            i = skip_char_literal(&b, i + 1);
+            continue;
+        }
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            let after_prefix = if c == 'r' { i + 1 } else { i + 2 };
+            let mut j = after_prefix;
+            while j < n && b[j] == '#' {
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let hashes = j - after_prefix;
+                i = skip_raw_string(&b, j + 1, hashes, &mut line);
+                continue;
+            }
+            // Fall through: an ordinary ident starting with r/b.
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                i = skip_char_literal(&b, i);
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // 'x'
+                i += 3;
+                continue;
+            }
+            // Lifetime or loop label: consume the quote + ident chars.
+            i += 1;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            continue;
+        }
+        if is_ident_char(c) {
+            let start = i;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            tokens.push(Token {
+                text: b[start..i].iter().collect(),
+                line,
+                is_ident: true,
+            });
+            continue;
+        }
+        tokens.push(Token {
+            text: c.to_string(),
+            line,
+            is_ident: false,
+        });
+        i += 1;
+    }
+    Lexed { tokens, comments }
+}
+
+/// Skip past a (possibly multi-line) quoted literal starting AFTER the
+/// opening quote; returns the index after the closing quote.
+fn skip_string(b: &[char], mut i: usize, line: &mut u32, escapes: bool) -> usize {
+    let n = b.len();
+    while i < n {
+        match b[i] {
+            '\\' if escapes => i += 2,
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    n
+}
+
+/// Skip a raw string body (after the opening quote): ends at `"` followed
+/// by `hashes` `#` characters. No escapes inside.
+fn skip_raw_string(b: &[char], mut i: usize, hashes: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    while i < n {
+        if b[i] == '\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == '"' {
+            let mut k = 0usize;
+            while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+    n
+}
+
+/// Skip a char/byte-char literal starting AT the opening quote; returns
+/// the index after the closing quote. Handles `'\''`, `'\\'`, `'\u{..}'`.
+fn skip_char_literal(b: &[char], mut i: usize) -> usize {
+    let n = b.len();
+    i += 1; // opening quote
+    if i < n && b[i] == '\\' {
+        i += 2; // backslash + escaped char (or the u of \u{...})
+        while i < n && b[i] != '\'' {
+            i += 1;
+        }
+        return (i + 1).min(n);
+    }
+    i += 1; // the literal char
+    if i < n && b[i] == '\'' {
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.is_ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_invisible() {
+        let src = r##"
+            // from_le_bytes in a comment
+            /* unwrap() in a /* nested */ block */
+            let s = "from_le_bytes unwrap()";
+            let r = r#"to_le_bytes "quoted" panic!"#;
+            let by = b"from_le_bytes";
+            call(x);
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|t| t.contains("bytes")), "{ids:?}");
+        assert!(!ids.iter().any(|t| t == "unwrap"), "{ids:?}");
+        assert!(ids.contains(&"call".to_string()));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let q = '\\''; let c = 'x'; 'outer: loop { break 'outer; } g(); }";
+        let ids = idents(src);
+        // The lifetime/label names are consumed with their quote, not
+        // emitted as idents; quoted chars never start a string.
+        assert!(ids.contains(&"g".to_string()));
+        assert!(!ids.contains(&"outer".to_string()));
+        assert!(!ids.contains(&"a".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_constructs() {
+        let src = "let a = \"line\none\";\nlet b = 1; // trailing\nunwrap();\n";
+        let lexed = lex(src);
+        let unwrap_tok = lexed
+            .tokens
+            .iter()
+            .find(|t| t.text == "unwrap")
+            .expect("unwrap token");
+        assert_eq!(unwrap_tok.line, 4);
+        let trailing = lexed
+            .comments
+            .iter()
+            .find(|c| c.text.contains("trailing"))
+            .expect("comment");
+        assert_eq!(trailing.line, 3);
+    }
+
+    #[test]
+    fn byte_char_and_raw_prefix_idents_do_not_misfire() {
+        // `rank` starts with r, `br` could look like a raw-string prefix:
+        // both must stay ordinary idents; `b'R'` is a literal.
+        let ids = idents("let rank = br0; let x = b'R'; let broke = 1;");
+        assert!(ids.contains(&"rank".to_string()));
+        assert!(ids.contains(&"br0".to_string()));
+        assert!(ids.contains(&"broke".to_string()));
+    }
+}

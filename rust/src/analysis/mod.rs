@@ -1,0 +1,180 @@
+//! Project-invariant static analysis (`galore2 lint`).
+//!
+//! A dependency-free, lexer-based pass over the crate's own sources that
+//! enforces the conventions every bitwise-parity claim in this repo
+//! rests on: one hardened byte parser, checked parser allocations,
+//! non-panicking dist error paths, no wall clocks or unordered maps in
+//! serialization/collective code, and no lock guard held across a
+//! collective. See `rules.rs` for the catalogue and the
+//! `// lint: allow(<rule>): <reason>` escape hatch, and EXPERIMENTS.md
+//! §Static analysis for which parity test each rule protects.
+//!
+//! Wired up twice: as the `galore2 lint [--json] [--root DIR]`
+//! subcommand (blocking CI step) and as the `tests/invariants.rs` tier
+//! (self-scan must be clean, rule fixtures must fire).
+
+mod lexer;
+mod rules;
+
+pub use rules::{check_file as lint_source, Finding, ALLOW_HYGIENE, RULES};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Result of linting a tree.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable rendering: one `file:line rule message` per
+    /// finding (the format the acceptance criteria and CI logs key on).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "rust/src/{}:{}: [{}] {}\n",
+                f.file, f.line, f.rule, f.message
+            ));
+        }
+        out.push_str(&format!(
+            "lint: {} finding(s) across {} file(s)\n",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        out
+    }
+
+    /// Machine-readable rendering (`galore2 lint --json`).
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\n  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+                json_escape(&format!("rust/src/{}", f.file)),
+                f.line,
+                json_escape(f.rule),
+                json_escape(&f.message)
+            ));
+        }
+        if !self.findings.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str(&format!(
+            "],\n  \"files_scanned\": {},\n  \"clean\": {}\n}}\n",
+            self.files_scanned,
+            self.clean()
+        ));
+        out
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lint every `.rs` file under `<root>/rust/src`, in sorted path order
+/// (deterministic output regardless of directory-entry order).
+pub fn lint_root(root: &Path) -> io::Result<Report> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src_root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(path)?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok(Report {
+        findings,
+        files_scanned: files.len(),
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("lint root has no rust/src tree: {}", dir.display()),
+        ));
+    }
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_text_names_file_line_and_rule() {
+        let report = Report {
+            findings: lint_source(
+                "runtime/mod.rs",
+                "fn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }",
+            ),
+            files_scanned: 1,
+        };
+        let text = report.render_text();
+        assert!(
+            text.contains("rust/src/runtime/mod.rs:1: [single-parser]"),
+            "{text}"
+        );
+        assert!(!report.clean());
+    }
+
+    #[test]
+    fn render_json_escapes_and_reports_clean() {
+        let report = Report {
+            findings: vec![],
+            files_scanned: 3,
+        };
+        let json = report.render_json();
+        assert!(json.contains("\"clean\": true"), "{json}");
+        assert!(json.contains("\"files_scanned\": 3"), "{json}");
+        let dirty = Report {
+            findings: lint_source(
+                "runtime/mod.rs",
+                "fn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }",
+            ),
+            files_scanned: 1,
+        };
+        let json = dirty.render_json();
+        assert!(json.contains("\"rule\": \"single-parser\""), "{json}");
+        assert!(json.contains("\"clean\": false"), "{json}");
+    }
+}

@@ -1,0 +1,681 @@
+//! The five project-invariant rules, plus the `lint: allow` escape hatch.
+//!
+//! Each rule is deny-by-default and suppressable only by an inline
+//! comment of the form
+//!
+//! ```text
+//! // lint: allow(<rule>): <non-empty reason>
+//! ```
+//!
+//! placed on the offending line or on its own line directly above the
+//! offending code. A malformed directive, an unknown rule name, an empty
+//! reason, or a directive that precedes no code is itself a finding
+//! (rule `allow-hygiene`) — the escape hatch cannot rot silently.
+//!
+//! Rule catalogue (scopes are module paths relative to `rust/src/`):
+//!
+//! - `single-parser`: raw `from_le_bytes`/`to_le_bytes` byte-layout code
+//!   is confined to `optim::ser` (the `mod ser` block of `optim/mod.rs`),
+//!   `dist/wire.rs`, and `quant/`. Everything else goes through the
+//!   hardened `ser::Reader`/push helpers, so there is exactly one place
+//!   where a length field is trusted.
+//! - `checked-alloc`: in parser modules (`dist/wire.rs`, `quant/`,
+//!   `checkpoint/`, `optim/mod.rs`), a function that parses raw bytes
+//!   (uses `Reader`, `from_le_bytes`, `read_exact`, or `read_to_end`)
+//!   and allocates (`with_capacity`, `vec![…]`) must carry a visible
+//!   bound: `remaining`, `checked_mul`, `checked_add`, or `take`.
+//! - `no-panic-dist`: inside `dist/` worker serve loops, the process
+//!   relay, collective/transport bodies, and `Drop` impls, `unwrap`,
+//!   `expect`, `panic!`-family macros, and slice indexing are banned —
+//!   a death must flow through `FailureCell`, never a panic that could
+//!   strand a peer in `PoisonBarrier`.
+//! - `determinism`: no `HashMap`/`HashSet`, `Instant`/`SystemTime` in
+//!   serialization/collective modules (`dist/`, `quant/`, `checkpoint/`,
+//!   `optim/`), and no `std::env::set_var` anywhere in the crate.
+//! - `lock-across-collective`: a lock-guard binding (`.lock()`,
+//!   `.read()`, `.write()`) still live at a `barrier`/`all_reduce`/
+//!   `exchange`-family call in the same function is deadlock bait.
+
+use super::lexer::{lex, Lexed, Token};
+use std::collections::BTreeSet;
+
+/// The enforceable rules, in catalogue order.
+pub const RULES: [&str; 5] = [
+    "single-parser",
+    "checked-alloc",
+    "no-panic-dist",
+    "determinism",
+    "lock-across-collective",
+];
+
+/// Meta-rule for broken `lint: allow` directives; never suppressable.
+pub const ALLOW_HYGIENE: &str = "allow-hygiene";
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Lint one source file (path relative to `rust/src/`, `/`-separated).
+/// Returns the unsuppressed findings, sorted by line.
+pub fn check_file(rel: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let toks = &lexed.tokens;
+    let mut raw: Vec<Finding> = Vec::new();
+    rule_single_parser(rel, toks, &mut raw);
+    rule_checked_alloc(rel, toks, &mut raw);
+    rule_no_panic_dist(rel, toks, &mut raw);
+    rule_determinism(rel, toks, &mut raw);
+    rule_lock_across_collective(rel, toks, &mut raw);
+
+    // Nested fn regions can double-report a site; keep the first.
+    let mut seen: BTreeSet<(u32, &'static str, String)> = BTreeSet::new();
+    raw.retain(|f| seen.insert((f.line, f.rule, f.message.clone())));
+
+    let (allows, mut findings) = parse_allows(rel, &lexed);
+    findings.extend(
+        raw.into_iter()
+            .filter(|f| !allows.iter().any(|a| a.rule == f.rule && a.effective_line == Some(f.line))),
+    );
+    findings.sort_by_key(|f| (f.line, f.rule));
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// token helpers
+
+fn is_id(t: &Token, s: &str) -> bool {
+    t.is_ident && t.text == s
+}
+
+fn is_p(t: &Token, s: &str) -> bool {
+    !t.is_ident && t.text == s
+}
+
+/// Index just past the `}` matching the `{` at `open`.
+fn match_brace(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        if is_p(&toks[i], "{") {
+            depth += 1;
+        } else if is_p(&toks[i], "}") {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// A contiguous token range `[start, end)` with an identifying name.
+struct Region {
+    name: String,
+    start: usize,
+    end: usize,
+}
+
+/// All `fn <name> … { … }` bodies (headers included, nested fns too).
+fn fn_regions(toks: &[Token]) -> Vec<Region> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_id(&toks[i], "fn") && i + 1 < toks.len() && toks[i + 1].is_ident {
+            let name = toks[i + 1].text.clone();
+            let mut j = i + 2;
+            while j < toks.len() && !is_p(&toks[j], "{") && !is_p(&toks[j], ";") {
+                j += 1;
+            }
+            if j < toks.len() && is_p(&toks[j], "{") {
+                out.push(Region {
+                    name,
+                    start: i,
+                    end: match_brace(toks, j),
+                });
+            }
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Bodies of `impl … Drop … for … { … }` blocks.
+fn drop_impl_regions(toks: &[Token]) -> Vec<Region> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_id(&toks[i], "impl") {
+            let mut j = i + 1;
+            let mut saw_drop = false;
+            let mut saw_for = false;
+            while j < toks.len() && !is_p(&toks[j], "{") && !is_p(&toks[j], ";") {
+                saw_drop |= is_id(&toks[j], "Drop");
+                saw_for |= is_id(&toks[j], "for");
+                j += 1;
+            }
+            if saw_drop && saw_for && j < toks.len() && is_p(&toks[j], "{") {
+                out.push(Region {
+                    name: "Drop impl".into(),
+                    start: i,
+                    end: match_brace(toks, j),
+                });
+                i = j + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// The token range of `mod <name> { … }`, if present.
+fn mod_region(toks: &[Token], name: &str) -> Option<(usize, usize)> {
+    for i in 0..toks.len() {
+        if is_id(&toks[i], "mod")
+            && i + 2 < toks.len()
+            && is_id(&toks[i + 1], name)
+            && is_p(&toks[i + 2], "{")
+        {
+            return Some((i, match_brace(toks, i + 2)));
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// rules
+
+/// Modules whose whole files are the sanctioned byte-layout home.
+fn single_parser_exempt(rel: &str) -> bool {
+    rel == "dist/wire.rs" || rel.starts_with("quant/")
+}
+
+fn rule_single_parser(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    if single_parser_exempt(rel) {
+        return;
+    }
+    let ser = if rel == "optim/mod.rs" {
+        mod_region(toks, "ser")
+    } else {
+        None
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if !(is_id(t, "from_le_bytes") || is_id(t, "to_le_bytes")) {
+            continue;
+        }
+        if let Some((s, e)) = ser {
+            if i >= s && i < e {
+                continue;
+            }
+        }
+        out.push(Finding {
+            file: rel.into(),
+            line: t.line,
+            rule: "single-parser",
+            message: format!(
+                "raw `{}` outside optim::ser / dist/wire.rs / quant/ — route byte layout through the hardened codec",
+                t.text
+            ),
+        });
+    }
+}
+
+/// Parser modules where the checked-alloc rule applies.
+fn checked_alloc_scope(rel: &str) -> bool {
+    rel == "dist/wire.rs"
+        || rel.starts_with("quant/")
+        || rel.starts_with("checkpoint/")
+        || rel == "optim/mod.rs"
+}
+
+const PARSE_MARKERS: [&str; 4] = ["Reader", "from_le_bytes", "read_exact", "read_to_end"];
+const ALLOC_GUARDS: [&str; 4] = ["remaining", "checked_mul", "checked_add", "take"];
+
+fn rule_checked_alloc(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    if !checked_alloc_scope(rel) {
+        return;
+    }
+    // `mod tests` builds fixture buffers with `vec![…]` and parses bytes
+    // it just wrote itself — untrusted-length hardening is a production
+    // concern, so test regions are out of scope.
+    let tests = mod_region(toks, "tests");
+    for r in fn_regions(toks) {
+        if let Some((s, e)) = tests {
+            if r.start >= s && r.end <= e {
+                continue;
+            }
+        }
+        let body = &toks[r.start..r.end];
+        let has = |names: &[&str]| body.iter().any(|t| t.is_ident && names.contains(&t.text.as_str()));
+        if !has(&PARSE_MARKERS) || has(&ALLOC_GUARDS) {
+            continue;
+        }
+        for (k, t) in body.iter().enumerate() {
+            let vec_macro =
+                is_id(t, "vec") && k + 1 < body.len() && is_p(&body[k + 1], "!");
+            if is_id(t, "with_capacity") || vec_macro {
+                out.push(Finding {
+                    file: rel.into(),
+                    line: t.line,
+                    rule: "checked-alloc",
+                    message: format!(
+                        "allocation in parser fn `{}` with no visible `remaining`/`checked_mul`/`take` bound — a corrupt length field controls this size",
+                        r.name
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// dist/ functions that are serve loops, the relay, collective/transport
+/// bodies, or synchronization primitives — the no-hang contract's scope.
+const SERVE_FNS: [&str; 10] = [
+    "serve",
+    "serve_worker",
+    "relay_loop",
+    "handle_cmd",
+    "run_worker",
+    "exchange",
+    "barrier",
+    "wait",
+    "wait_or_die",
+    "poison",
+];
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+/// Idents that legitimately precede `[` in type position (`&mut [f32]`,
+/// `Box<dyn Fn…>`); indexing through them is not expressible.
+const PRE_BRACKET_KEYWORDS: [&str; 6] = ["mut", "ref", "dyn", "in", "as", "return"];
+
+fn rule_no_panic_dist(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    if !rel.starts_with("dist/") {
+        return;
+    }
+    let mut regions: Vec<Region> = fn_regions(toks)
+        .into_iter()
+        .filter(|r| SERVE_FNS.contains(&r.name.as_str()))
+        .collect();
+    regions.extend(drop_impl_regions(toks));
+    for r in &regions {
+        for i in r.start..r.end {
+            let t = &toks[i];
+            if is_id(t, "unwrap") || is_id(t, "expect") {
+                out.push(Finding {
+                    file: rel.into(),
+                    line: t.line,
+                    rule: "no-panic-dist",
+                    message: format!(
+                        "`{}()` in dist no-panic region `{}` — record the death into FailureCell and return",
+                        t.text, r.name
+                    ),
+                });
+                continue;
+            }
+            if t.is_ident
+                && PANIC_MACROS.contains(&t.text.as_str())
+                && i + 1 < r.end
+                && is_p(&toks[i + 1], "!")
+            {
+                out.push(Finding {
+                    file: rel.into(),
+                    line: t.line,
+                    rule: "no-panic-dist",
+                    message: format!(
+                        "`{}!` in dist no-panic region `{}` — deaths must flow through FailureCell",
+                        t.text, r.name
+                    ),
+                });
+                continue;
+            }
+            if is_p(t, "[") && i > r.start {
+                let p = &toks[i - 1];
+                let indexes = (p.is_ident && !PRE_BRACKET_KEYWORDS.contains(&p.text.as_str()))
+                    || is_p(p, ")")
+                    || is_p(p, "]");
+                if indexes {
+                    out.push(Finding {
+                        file: rel.into(),
+                        line: t.line,
+                        rule: "no-panic-dist",
+                        message: format!(
+                            "slice indexing in dist no-panic region `{}` — use `get()` or prove the bound with an allow",
+                            r.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Serialization/collective modules where wall clocks and unordered
+/// iteration would silently break bitwise parity.
+fn determinism_scope(rel: &str) -> bool {
+    rel.starts_with("dist/")
+        || rel.starts_with("quant/")
+        || rel.starts_with("checkpoint/")
+        || rel.starts_with("optim/")
+}
+
+const NONDET_TYPES: [&str; 4] = ["HashMap", "HashSet", "Instant", "SystemTime"];
+
+fn rule_determinism(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    for t in toks {
+        if is_id(t, "set_var") {
+            out.push(Finding {
+                file: rel.into(),
+                line: t.line,
+                rule: "determinism",
+                message: "`set_var` mutates process-global env (racy, and a hidden input to spawned workers) — thread configuration explicitly".into(),
+            });
+            continue;
+        }
+        if determinism_scope(rel) && t.is_ident && NONDET_TYPES.contains(&t.text.as_str()) {
+            out.push(Finding {
+                file: rel.into(),
+                line: t.line,
+                rule: "determinism",
+                message: format!(
+                    "`{}` in a serialization/collective module — unordered iteration / wall-clock time breaks bitwise parity",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+const LOCK_METHODS: [&str; 3] = ["lock", "read", "write"];
+const COLLECTIVES: [&str; 6] = [
+    "barrier",
+    "all_reduce_sum",
+    "reduce_scatter_sum",
+    "all_gather",
+    "broadcast",
+    "exchange",
+];
+
+fn rule_lock_across_collective(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    for r in fn_regions(toks) {
+        let end = r.end;
+        let mut i = r.start;
+        while i < end {
+            if !is_id(&toks[i], "let") {
+                i += 1;
+                continue;
+            }
+            let mut j = i + 1;
+            if j < end && is_id(&toks[j], "mut") {
+                j += 1;
+            }
+            // Simple binding only: `let [mut] name =` / `let [mut] name :`.
+            // Destructuring (`let Some(g)`, `let (a, b)`) is skipped — the
+            // zero-arg `.lock()`-family call below wouldn't bind a guard
+            // name we could track through `drop(name)` anyway.
+            if !(j + 1 < end && toks[j].is_ident && (is_p(&toks[j + 1], "=") || is_p(&toks[j + 1], ":")))
+            {
+                i += 1;
+                continue;
+            }
+            let name = toks[j].text.clone();
+            let bind_line = toks[j].line;
+            // Statement end: `;` at bracket depth 0.
+            let mut depth = 0i32;
+            let mut k = j + 1;
+            let mut stmt_end = end;
+            while k < end {
+                let t = &toks[k];
+                if is_p(t, "(") || is_p(t, "[") || is_p(t, "{") {
+                    depth += 1;
+                } else if is_p(t, ")") || is_p(t, "]") || is_p(t, "}") {
+                    depth -= 1;
+                } else if is_p(t, ";") && depth == 0 {
+                    stmt_end = k;
+                    break;
+                }
+                k += 1;
+            }
+            // Guard acquisition: a zero-arg `.lock()`/`.read()`/`.write()`
+            // call in the initializer (`read(&mut buf)` has arguments and
+            // does not match).
+            let acquires = (j..stmt_end).any(|m| {
+                m + 2 < end
+                    && toks[m].is_ident
+                    && LOCK_METHODS.contains(&toks[m].text.as_str())
+                    && is_p(&toks[m + 1], "(")
+                    && is_p(&toks[m + 2], ")")
+            });
+            if !acquires {
+                i = stmt_end + 1;
+                continue;
+            }
+            // Guard is live from the end of the let-statement until
+            // `drop(name)` or the end of the function.
+            let mut m = stmt_end;
+            while m < end {
+                if is_id(&toks[m], "drop")
+                    && m + 3 < end
+                    && is_p(&toks[m + 1], "(")
+                    && is_id(&toks[m + 2], &name)
+                    && is_p(&toks[m + 3], ")")
+                {
+                    break;
+                }
+                if toks[m].is_ident
+                    && COLLECTIVES.contains(&toks[m].text.as_str())
+                    && m + 1 < end
+                    && is_p(&toks[m + 1], "(")
+                    && !(m > 0 && is_id(&toks[m - 1], "fn"))
+                {
+                    out.push(Finding {
+                        file: rel.into(),
+                        line: toks[m].line,
+                        rule: "lock-across-collective",
+                        message: format!(
+                            "`{}` called while lock guard `{}` (bound line {}) is live — drop the guard first or a poisoned peer deadlocks the collective",
+                            toks[m].text, name, bind_line
+                        ),
+                    });
+                }
+                m += 1;
+            }
+            i = stmt_end + 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// allow directives
+
+struct Allow {
+    rule: &'static str,
+    /// Line the allow suppresses; `None` if it precedes no code.
+    effective_line: Option<u32>,
+}
+
+/// Parse every `lint:` comment. Returns the well-formed allows and the
+/// hygiene findings for malformed/unknown/empty-reason/dangling ones.
+fn parse_allows(rel: &str, lexed: &Lexed) -> (Vec<Allow>, Vec<Finding>) {
+    let code_lines: BTreeSet<u32> = lexed.tokens.iter().map(|t| t.line).collect();
+    let mut allows = Vec::new();
+    let mut findings = Vec::new();
+    for c in &lexed.comments {
+        let text = c.text.trim();
+        let Some(rest) = text.strip_prefix("lint:") else {
+            continue;
+        };
+        let bad = |msg: String| Finding {
+            file: rel.into(),
+            line: c.line,
+            rule: ALLOW_HYGIENE,
+            message: msg,
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix("allow(") else {
+            findings.push(bad(format!(
+                "malformed lint directive `{text}` — expected `lint: allow(<rule>): <reason>`"
+            )));
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            findings.push(bad("unclosed `allow(` in lint directive".into()));
+            continue;
+        };
+        let rule_name = rest[..close].trim();
+        let Some(&rule) = RULES.iter().find(|r| **r == rule_name) else {
+            findings.push(bad(format!(
+                "unknown rule `{rule_name}` in lint allow (known: {})",
+                RULES.join(", ")
+            )));
+            continue;
+        };
+        let after = rest[close + 1..].trim_start();
+        let Some(reason) = after.strip_prefix(':') else {
+            findings.push(bad(format!(
+                "lint allow for `{rule_name}` missing `: <reason>`"
+            )));
+            continue;
+        };
+        if reason.trim().is_empty() {
+            findings.push(bad(format!(
+                "lint allow for `{rule_name}` has an empty reason — say why the invariant holds here"
+            )));
+            continue;
+        }
+        let effective_line = if code_lines.contains(&c.line) {
+            Some(c.line)
+        } else {
+            code_lines.range(c.line + 1..).next().copied()
+        };
+        if effective_line.is_none() {
+            findings.push(bad(format!(
+                "lint allow for `{rule_name}` precedes no code — dead directive"
+            )));
+        }
+        allows.push(Allow {
+            rule,
+            effective_line,
+        });
+    }
+    (allows, findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn single_parser_fires_outside_sanctioned_modules() {
+        let src = "fn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }";
+        let f = check_file("runtime/mod.rs", src);
+        assert_eq!(rules_of(&f), vec!["single-parser"]);
+        assert!(check_file("dist/wire.rs", src).is_empty());
+        assert!(check_file("quant/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn single_parser_respects_mod_ser_region() {
+        let src = "mod ser { fn g(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) } }\nfn h(x: u64) -> [u8; 8] { x.to_le_bytes() }";
+        let f = check_file("optim/mod.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn checked_alloc_wants_a_visible_bound() {
+        let bad = "fn parse(r: &mut Reader) -> Vec<u8> { let n = r.u64_raw(); Vec::with_capacity(n as usize) }";
+        let good = "fn parse(r: &mut Reader) -> Vec<u8> { let n = r.u64_raw(); if n > r.remaining() { return Vec::new(); } Vec::with_capacity(n as usize) }";
+        assert_eq!(rules_of(&check_file("checkpoint/mod.rs", bad)), vec!["checked-alloc"]);
+        assert!(check_file("checkpoint/mod.rs", good).is_empty());
+        // Out of scope: same code elsewhere is not a parser module. The
+        // `Reader` marker alone triggers nothing outside the scope list.
+        assert!(check_file("runtime/mod.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn no_panic_dist_bans_unwrap_panic_and_indexing() {
+        let src = "fn serve(x: &[f32], i: usize) { let v = x[i]; maybe().unwrap(); panic!(\"boom {v}\"); }";
+        let f = check_file("dist/comm.rs", src);
+        assert_eq!(
+            rules_of(&f),
+            vec!["no-panic-dist", "no-panic-dist", "no-panic-dist"]
+        );
+        // Same body under a non-serve name: out of the no-hang scope.
+        let free = "fn helper(x: &[f32], i: usize) { let v = x[i]; maybe().unwrap(); panic!(\"boom {v}\"); }";
+        assert!(check_file("dist/comm.rs", free).is_empty());
+        // Type-position brackets don't count as indexing.
+        let ty = "fn serve(bufs: &mut [Vec<f32>]) -> Vec<f32> { bufs.concat() }";
+        assert!(check_file("dist/comm.rs", ty).is_empty());
+    }
+
+    #[test]
+    fn no_panic_dist_covers_drop_impls() {
+        let src = "impl Drop for Cluster { fn drop(&mut self) { self.h.join().unwrap(); } }";
+        let f = check_file("dist/cluster.rs", src);
+        assert_eq!(rules_of(&f), vec!["no-panic-dist"]);
+    }
+
+    #[test]
+    fn determinism_bans_clocks_maps_and_set_var() {
+        let f = check_file("dist/process.rs", "fn t() { let t0 = Instant::now(); }");
+        assert_eq!(rules_of(&f), vec!["determinism"]);
+        // HashMap fine outside the serialization scope, set_var banned anywhere.
+        assert!(check_file("runtime/mod.rs", "fn t(m: &HashMap<u32, u32>) {}").is_empty());
+        let f = check_file("runtime/mod.rs", "fn t() { std::env::set_var(\"A\", \"1\"); }");
+        assert_eq!(rules_of(&f), vec!["determinism"]);
+    }
+
+    #[test]
+    fn lock_guard_live_across_collective() {
+        let bad = "fn step(&self) { let g = self.state.lock(); self.comm.barrier(); }";
+        let f = check_file("optim/galore.rs", bad);
+        assert_eq!(rules_of(&f), vec!["lock-across-collective"]);
+        let dropped = "fn step(&self) { let g = self.state.lock(); drop(g); self.comm.barrier(); }";
+        assert!(check_file("optim/galore.rs", dropped).is_empty());
+        // `read(&mut buf)` takes an argument: io read, not a guard.
+        let io = "fn step(&self) { let n = sock.read(&mut buf); self.comm.barrier(); }";
+        assert!(check_file("optim/galore.rs", io).is_empty());
+    }
+
+    #[test]
+    fn allow_suppresses_exactly_its_rule_and_line() {
+        let src = "// lint: allow(single-parser): fixed 8-byte tag, length-checked by caller\nfn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }";
+        assert!(check_file("runtime/mod.rs", src).is_empty());
+        // Wrong rule name in the allow: original finding survives AND the
+        // directive itself is flagged.
+        let wrong = "// lint: allow(no-panic-dist): wrong rule\nfn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }";
+        let f = check_file("runtime/mod.rs", wrong);
+        assert_eq!(rules_of(&f), vec!["single-parser"]);
+    }
+
+    #[test]
+    fn allow_hygiene_findings() {
+        let empty = "// lint: allow(single-parser):\nfn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }";
+        let f = check_file("runtime/mod.rs", empty);
+        assert_eq!(rules_of(&f), vec![ALLOW_HYGIENE, "single-parser"]);
+        let unknown = "// lint: allow(no-such-rule): reason\nfn g() {}";
+        let f = check_file("runtime/mod.rs", unknown);
+        assert_eq!(rules_of(&f), vec![ALLOW_HYGIENE]);
+        let dangling = "fn g() {}\n// lint: allow(determinism): nothing follows";
+        let f = check_file("runtime/mod.rs", dangling);
+        assert_eq!(rules_of(&f), vec![ALLOW_HYGIENE]);
+    }
+
+    #[test]
+    fn same_line_allow_works() {
+        let src = "fn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) } // lint: allow(single-parser): fixture tag decode";
+        assert!(check_file("runtime/mod.rs", src).is_empty());
+    }
+}

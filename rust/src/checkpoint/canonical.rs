@@ -631,7 +631,7 @@ fn concat_vecs(
 /// Whether a blob leads with the stored-representation format gate
 /// (`optim::ser::STATE_MAGIC2`); legacy blobs lead with a small counter.
 fn sniff_magic2(bytes: &[u8]) -> bool {
-    bytes.len() >= 8 && u64::from_le_bytes(bytes[..8].try_into().unwrap()) == STATE_MAGIC2
+    crate::optim::ser::sniff_magic2(bytes)
 }
 
 enum GaloreParamState {
@@ -1740,7 +1740,9 @@ mod tests {
         ));
         // Legacy blobs start with a small little-endian counter (a step or
         // a world size), never the magic.
-        assert!(!CanonicalOptState::sniff(&7u64.to_le_bytes()));
+        let mut legacy = Vec::new();
+        push_u64(&mut legacy, 7);
+        assert!(!CanonicalOptState::sniff(&legacy));
         assert!(!CanonicalOptState::sniff(b"GAL"));
         assert!(!CanonicalOptState::sniff(&[]));
     }

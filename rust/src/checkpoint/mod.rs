@@ -38,9 +38,9 @@
 
 pub mod canonical;
 
+use crate::optim::ser;
 use crate::tensor::Matrix;
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"GAL2CKPT";
@@ -78,77 +78,89 @@ impl Checkpoint {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
-        f.write_all(MAGIC)?;
-        f.write_all(&version.to_le_bytes())?;
-        f.write_all(&self.step.to_le_bytes())?;
+        // Byte layout lives in optim::ser's push helpers (single-parser
+        // invariant); the resulting bytes are identical to what the old
+        // direct `to_le_bytes` writes produced, so committed v3/v4
+        // fixtures and the migration smoke are unaffected.
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        ser::push_u32(&mut out, version);
+        ser::push_u64(&mut out, self.step);
         if version >= TOKENS_SEEN_VERSION {
-            f.write_all(&[self.tokens_seen.is_some() as u8])?;
-            f.write_all(&self.tokens_seen.unwrap_or(0).to_le_bytes())?;
+            out.push(self.tokens_seen.is_some() as u8);
+            ser::push_u64(&mut out, self.tokens_seen.unwrap_or(0));
         }
-        f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+        ser::push_u64(&mut out, self.params.len() as u64);
         for (name, p) in self.names.iter().zip(&self.params) {
-            f.write_all(&(name.len() as u64).to_le_bytes())?;
-            f.write_all(name.as_bytes())?;
-            f.write_all(&(p.rows as u64).to_le_bytes())?;
-            f.write_all(&(p.cols as u64).to_le_bytes())?;
-            for &x in &p.data {
-                f.write_all(&x.to_le_bytes())?;
-            }
+            ser::push_u64(&mut out, name.len() as u64);
+            out.extend_from_slice(name.as_bytes());
+            ser::push_u64(&mut out, p.rows as u64);
+            ser::push_u64(&mut out, p.cols as u64);
+            ser::push_f32s_raw(&mut out, &p.data);
         }
-        f.write_all(&(self.opt_state.len() as u64).to_le_bytes())?;
-        f.write_all(&self.opt_state)?;
-        Ok(())
+        ser::push_u64(&mut out, self.opt_state.len() as u64);
+        out.extend_from_slice(&self.opt_state);
+        std::fs::write(path.as_ref(), &out)
+            .with_context(|| format!("writing checkpoint {:?}", path.as_ref()))
     }
 
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(path.as_ref())
-                .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?,
-        );
-        let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?;
+        if bytes.get(..MAGIC.len()) != Some(MAGIC.as_slice()) {
             bail!("not a galore2 checkpoint");
         }
-        let version = read_u32(&mut f)?;
+        // Whole file in memory, parsed through the hardened ser::Reader:
+        // every length field is range-checked against the REAL remaining
+        // bytes before any allocation, so a corrupt header costs an error,
+        // not a multi-GiB allocation (pinned by tests/invariants.rs).
+        let mut r = ser::Reader::new(&bytes[MAGIC.len()..]);
+        let trunc = |e: String| anyhow::anyhow!("truncated checkpoint: {e}");
+        let version = r.u32().map_err(trunc)?;
         if !(LEGACY_VERSION..=VERSION).contains(&version) {
             bail!(
                 "unsupported checkpoint version {version} (this build reads \
                  v{LEGACY_VERSION}–v{VERSION} checkpoints)"
             );
         }
-        let step = read_u64(&mut f)?;
+        let step = r.u64().map_err(trunc)?;
         let tokens_seen = if version >= TOKENS_SEEN_VERSION {
-            let mut has = [0u8; 1];
-            f.read_exact(&mut has)?;
-            let tokens = read_u64(&mut f)?;
-            (has[0] != 0).then_some(tokens)
+            let has = r.bytes(1).map_err(trunc)?[0];
+            let tokens = r.u64().map_err(trunc)?;
+            (has != 0).then_some(tokens)
         } else {
             None
         };
-        let n = read_u64(&mut f)? as usize;
+        let n = r.u64().map_err(trunc)? as usize;
+        // Each param costs at least 24 header bytes; a count claiming more
+        // params than the file could possibly hold is corruption, caught
+        // BEFORE the with_capacity allocations below.
+        if n > r.remaining() / 24 {
+            bail!("corrupt checkpoint: claims {n} params in {} bytes", r.remaining());
+        }
         let mut names = Vec::with_capacity(n);
         let mut params = Vec::with_capacity(n);
         for _ in 0..n {
-            let name_len = read_u64(&mut f)? as usize;
-            let mut name = vec![0u8; name_len];
-            f.read_exact(&mut name)?;
+            let name_len = r.u64().map_err(trunc)? as usize;
+            let name = r.bytes(name_len).map_err(trunc)?.to_vec();
             names.push(String::from_utf8(name).context("bad name")?);
-            let rows = read_u64(&mut f)? as usize;
-            let cols = read_u64(&mut f)? as usize;
-            let mut data = vec![0f32; rows * cols];
-            let mut buf = vec![0u8; rows * cols * 4];
-            f.read_exact(&mut buf)?;
-            for (i, c) in buf.chunks_exact(4).enumerate() {
-                data[i] = f32::from_le_bytes(c.try_into().unwrap());
-            }
+            let rows = r.u64().map_err(trunc)? as usize;
+            let cols = r.u64().map_err(trunc)? as usize;
+            let count = rows
+                .checked_mul(cols)
+                .ok_or_else(|| anyhow::anyhow!("corrupt checkpoint: shape {rows}x{cols}"))?;
+            let data = r.f32s_exact(count).map_err(trunc)?;
             params.push(Matrix::from_vec(rows, cols, data));
         }
-        let blob_len = read_u64(&mut f)? as usize;
-        let mut opt_state = vec![0u8; blob_len];
-        f.read_exact(&mut opt_state)
-            .context("truncated checkpoint: optimizer state shorter than its header claims")?;
+        let blob_len = r.u64().map_err(trunc)? as usize;
+        let opt_state = r
+            .bytes(blob_len)
+            .map_err(|_| {
+                anyhow::anyhow!(
+                    "truncated checkpoint: optimizer state shorter than its header claims"
+                )
+            })?
+            .to_vec();
         Ok(Checkpoint {
             step,
             tokens_seen,
@@ -157,18 +169,6 @@ impl Checkpoint {
             opt_state,
         })
     }
-}
-
-fn read_u32(f: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(f: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    f.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
 }
 
 #[cfg(test)]

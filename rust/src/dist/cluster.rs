@@ -311,6 +311,7 @@ fn serve<W: Worker>(w: &mut W, rx: &Receiver<Cmd>, tx: &Sender<Reply>, crash_at:
         };
         if let Cmd::Step { t, .. } = &cmd {
             if crash_at.is_some_and(|n| *t >= n) {
+                // lint: allow(no-panic-dist): test-only injected death — flows through the worker closure's catch_unwind into FailureCell by design
                 panic!("injected test crash (step {t})");
             }
         }

@@ -90,7 +90,13 @@ impl PoisonBarrier {
     /// departed (before or during the wait) — the barrier can never
     /// complete again once poisoned.
     fn wait(&self, world: usize) -> Result<(), usize> {
-        let mut s = self.state.lock().unwrap();
+        // Poison-tolerant locking (here and below): a worker that panics
+        // while holding the state mutex poisons it, but BarrierState is
+        // always internally consistent (single-field mutations), and the
+        // departing rank separately poisons the *barrier* via Drop. An
+        // `unwrap()` here would escalate a recoverable peer death into
+        // this rank's own panic.
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(r) = s.departed {
             return Err(r);
         }
@@ -103,7 +109,7 @@ impl PoisonBarrier {
         }
         let gen = s.generation;
         while s.generation == gen && s.departed.is_none() {
-            s = self.cvar.wait(s).unwrap();
+            s = self.cvar.wait(s).unwrap_or_else(|e| e.into_inner());
         }
         match s.departed {
             // Departure wins even on a race with a release: a poisoned
@@ -117,7 +123,10 @@ impl PoisonBarrier {
     /// waiters. Called from [`ThreadTransport`]'s `Drop` — on clean
     /// shutdown nobody is waiting and this is a no-op in effect.
     fn poison(&self, rank: usize) {
-        let mut s = self.state.lock().unwrap();
+        // Runs from Drop, possibly DURING a panic unwind: recovering a
+        // poisoned mutex here is mandatory — an `unwrap()` panic inside
+        // Drop-under-unwind would abort the whole process.
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
         if s.departed.is_none() {
             s.departed = Some(rank);
         }
@@ -167,6 +176,7 @@ impl ThreadTransport {
     /// permanent hang.
     fn wait_or_die(&self) {
         if let Err(dead) = self.shared.barrier.wait(self.shared.world) {
+            // lint: allow(no-panic-dist): this panic IS the thread-mode death signal — serve()'s catch_unwind records it into FailureCell
             panic!(
                 "rank {}: peer rank {dead} died mid-collective",
                 self.rank
@@ -199,10 +209,15 @@ impl Transport for ThreadTransport {
         data: Vec<f32>,
         reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
     ) -> Vec<f32> {
-        self.shared.slots.write().unwrap()[self.rank] = data;
+        // Poison-tolerant for the same reason as PoisonBarrier: slot
+        // writes are rank-disjoint, so a peer's panic never leaves OUR
+        // slot half-written, and the barrier (not the lock) carries the
+        // departure signal.
+        // lint: allow(no-panic-dist): rank < world is asserted at construction; slots is sized to world
+        self.shared.slots.write().unwrap_or_else(|e| e.into_inner())[self.rank] = data;
         self.wait_or_die();
         let result = {
-            let slots = self.shared.slots.read().unwrap();
+            let slots = self.shared.slots.read().unwrap_or_else(|e| e.into_inner());
             reduce(&slots)
         };
         // Second barrier wave: after this, slots may be overwritten.

@@ -292,9 +292,9 @@ impl Cluster<FsdpWorker> {
     pub fn export_optimizers(&self) -> Vec<u8> {
         let frames = self.export_frames();
         let mut out = Vec::new();
-        out.extend_from_slice(&(self.world() as u64).to_le_bytes());
+        crate::optim::ser::push_u64(&mut out, self.world() as u64);
         for b in &frames {
-            out.extend_from_slice(&(b.len() as u64).to_le_bytes());
+            crate::optim::ser::push_u64(&mut out, b.len() as u64);
             out.extend_from_slice(b);
         }
         out

@@ -35,12 +35,12 @@
 //! canonical form (and re-slices it for any target world on resume) —
 //! transport-independent by construction.
 
-mod cluster;
+pub(crate) mod cluster;
 mod comm;
 mod ddp;
 mod fsdp;
 mod process;
-mod wire;
+pub(crate) mod wire;
 
 pub use cluster::{Cluster, MemoryReport, ParamMeta, TransportKind, Worker, WorkerLoss};
 pub use comm::{Comm, ThreadTransport, Transport};

@@ -44,6 +44,7 @@ use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 use std::thread::JoinHandle;
+// lint: allow(determinism): Instant only bounds the spawn/handshake deadline — never on the collective step path
 use std::time::{Duration, Instant};
 
 /// Hello tags: which of a worker's two connections this is.
@@ -397,6 +398,7 @@ fn establish(
     listener
         .set_nonblocking(true)
         .map_err(|e| format!("configuring rendezvous listener: {e}"))?;
+    // lint: allow(determinism): wall-clock handshake deadline, pre-training-loop only
     let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
     let mut controls: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
     let mut comms: Vec<Option<UnixStream>> = (0..world).map(|_| None).collect();
@@ -432,6 +434,7 @@ fn establish(
                     *slot = Some(stream);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    // lint: allow(determinism): wall-clock handshake deadline, pre-training-loop only
                     if Instant::now() > deadline {
                         let connected = (0..world)
                             .map(|r| controls[r].is_some() as usize + comms[r].is_some() as usize)
@@ -565,19 +568,15 @@ fn relay_loop(mut streams: Vec<UnixStream>, failure: FailureCell) {
 }
 
 fn send_hello(stream: &mut UnixStream, kind: u8, rank: usize) -> Result<(), String> {
-    let mut hello = [0u8; 9];
-    hello[0] = kind;
-    hello[1..9].copy_from_slice(&(rank as u64).to_le_bytes());
     stream
-        .write_all(&hello)
+        .write_all(&wire::encode_hello(kind, rank))
         .map_err(|e| format!("sending hello: {e}"))
 }
 
 fn read_hello(stream: &mut UnixStream) -> std::io::Result<(u8, usize)> {
-    let mut hello = [0u8; 9];
+    let mut hello = [0u8; wire::HELLO_LEN];
     stream.read_exact(&mut hello)?;
-    let rank = u64::from_le_bytes(hello[1..9].try_into().unwrap()) as usize;
-    Ok((hello[0], rank))
+    Ok(wire::decode_hello(&hello))
 }
 
 /// The worker half of an exchange: ship this rank's contribution to the
@@ -605,6 +604,7 @@ impl Transport for ProcessTransport {
         reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
     ) -> Vec<f32> {
         wire::write_frame(&mut self.stream, &wire::f32s_to_bytes(&data)).unwrap_or_else(|e| {
+            // lint: allow(no-panic-dist): worker-process exit IS the death signal — the relay sees EOF and records the rank into the coordinator's FailureCell
             panic!(
                 "rank {}: collective send failed ({e}) — coordinator or a peer died",
                 self.rank
@@ -614,12 +614,14 @@ impl Transport for ProcessTransport {
         let mut slots: Vec<Vec<f32>> = Vec::with_capacity(self.world);
         for _ in 0..self.world {
             let frame = wire::read_frame(&mut self.stream).unwrap_or_else(|e| {
+                // lint: allow(no-panic-dist): worker-process exit IS the death signal — the relay sees EOF and records the rank into the coordinator's FailureCell
                 panic!(
                     "rank {}: collective receive failed ({e}) — coordinator or a peer died",
                     self.rank
                 )
             });
             slots.push(wire::bytes_to_f32s(&frame).unwrap_or_else(|e| {
+                // lint: allow(no-panic-dist): worker-process exit IS the death signal (relay EOF → FailureCell); corrupt frame has no recovery inside a collective
                 panic!("rank {}: corrupt collective frame: {e}", self.rank)
             }));
         }

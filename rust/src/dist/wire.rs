@@ -43,8 +43,18 @@ pub(crate) fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
             format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"),
         ));
     }
-    let mut buf = vec![0u8; len as usize];
-    r.read_exact(&mut buf)?;
+    // Allocation tracks bytes actually received (`take` + `read_to_end`)
+    // instead of trusting the prefix up front: a torn length under the
+    // cap costs at most the real bytes on the socket, and EOF mid-frame
+    // surfaces as the short-read error below.
+    let mut buf = Vec::new();
+    let got = r.by_ref().take(len).read_to_end(&mut buf)?;
+    if got as u64 != len {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            format!("torn frame: length prefix {len}, got {got} bytes"),
+        ));
+    }
     Ok(buf)
 }
 
@@ -63,6 +73,24 @@ pub(crate) fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>, String> {
     Ok(b.chunks_exact(4)
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect())
+}
+
+/// Connection preamble a worker sends on each of its two sockets:
+/// `[kind u8][rank u64 LE]`. Encoded/decoded here (not in process.rs) so
+/// the byte layout lives with every other wire layout.
+pub(crate) const HELLO_LEN: usize = 9;
+
+pub(crate) fn encode_hello(kind: u8, rank: usize) -> [u8; HELLO_LEN] {
+    let mut hello = [0u8; HELLO_LEN];
+    hello[0] = kind;
+    hello[1..9].copy_from_slice(&(rank as u64).to_le_bytes());
+    hello
+}
+
+pub(crate) fn decode_hello(hello: &[u8; HELLO_LEN]) -> (u8, usize) {
+    let mut rank = [0u8; 8];
+    rank.copy_from_slice(&hello[1..9]);
+    (hello[0], u64::from_le_bytes(rank) as usize)
 }
 
 fn push_u8(out: &mut Vec<u8>, x: u8) {
@@ -459,6 +487,14 @@ mod tests {
         let mut cursor = std::io::Cursor::new(buf);
         let err = read_frame(&mut cursor).unwrap_err();
         assert!(err.to_string().contains("cap"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn hello_roundtrips() {
+        for (kind, rank) in [(0u8, 0usize), (1, 7), (0, usize::MAX >> 1)] {
+            let (k, r) = decode_hello(&encode_hello(kind, rank));
+            assert_eq!((k, r), (kind, rank));
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //!   hot-spot (projection + fused low-rank Adam update), lowered into the
 //!   same artifacts and also loadable as standalone executables.
 
+pub mod analysis;
 pub mod bench;
 pub mod checkpoint;
 pub mod config;

@@ -5,6 +5,7 @@
 //!   eval     run the downstream suite on a checkpoint
 //!   memory   print the analytic per-GPU memory table (Table 1 / §1)
 //!   svd      time full vs randomized SVD (§4.1.2's 15× claim)
+//!   lint     project-invariant static analysis over rust/src (CI gate)
 //!   presets  list model presets
 //!   worker   (internal) one process-transport rank — the coordinator
 //!            self-execs this binary per rank under `--transport process`
@@ -34,6 +35,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "memory" => cmd_memory(&args),
         "svd" => cmd_svd(&args),
+        "lint" => cmd_lint(&args),
         "worker" => cmd_worker(&args),
         "presets" => {
             for name in LlamaCfg::preset_names() {
@@ -64,7 +66,7 @@ fn main() -> Result<()> {
 }
 
 const HELP: &str = "galore2 — GaLore 2 pre-training framework
-USAGE: galore2 <train|eval|memory|svd|presets> [flags]
+USAGE: galore2 <train|eval|memory|svd|lint|presets> [flags]
   train   --config FILE | --preset P --optimizer O --steps N --lr X
           --weight-decay W --rank R --update-freq T --alpha A
           --projection KIND --moments keep|reset|project
@@ -82,6 +84,9 @@ USAGE: galore2 <train|eval|memory|svd|presets> [flags]
   eval    --config FILE --checkpoint CKPT [--questions N]
   memory  --preset P [--seq N] [--world N]
   svd     [--m N] [--n N] [--rank R] [--iters K]
+  lint    [--json] [--root DIR] (scan rust/src for invariant
+          violations: single-parser, checked-alloc, no-panic-dist,
+          determinism, lock-across-collective; exit 1 on findings)
   presets
   worker  (internal) --mode fsdp|ddp --rank N --world N --endpoint PATH";
 
@@ -137,6 +142,24 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .context("--endpoint required for worker")?
         .to_string();
     galore2::dist::run_worker(&mode, rank, world, &endpoint).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Project-invariant static analysis over the crate's own sources.
+/// Exits non-zero when the tree has unexplained findings — run as a
+/// blocking CI step next to clippy/fmt.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = std::path::PathBuf::from(args.str_or("root", "."));
+    let report = galore2::analysis::lint_root(&root)
+        .with_context(|| format!("lint scan failed under {}", root.display()))?;
+    if args.has("json") {
+        print!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if !report.clean() {
+        bail!("lint: {} finding(s) — see output above", report.findings.len());
+    }
+    Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {

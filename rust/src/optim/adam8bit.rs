@@ -201,9 +201,8 @@ mod tests {
             a.step_param(0, &mut wa, &g, 0.05);
         }
         let blob = a.export_state();
-        assert_eq!(
-            u64::from_le_bytes(blob[..8].try_into().unwrap()),
-            crate::optim::ser::STATE_MAGIC2,
+        assert!(
+            crate::optim::ser::sniff_magic2(&blob),
             "stored-representation blob must lead with the format gate"
         );
         let mut b = Adam8bit::new(AdamCfg::default());

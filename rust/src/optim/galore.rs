@@ -787,9 +787,8 @@ mod tests {
         assert!(w.data.iter().all(|x| x.is_finite()));
         assert!(w.max_abs() > 0.0, "legacy state did not drive an update");
         let out = opt.export_state();
-        assert_eq!(
-            u64::from_le_bytes(out[..8].try_into().unwrap()),
-            ser::STATE_MAGIC2,
+        assert!(
+            ser::sniff_magic2(&out),
             "re-export must migrate to the v2 layout"
         );
         // Corrupt state counts error before allocating.

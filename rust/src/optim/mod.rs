@@ -98,11 +98,33 @@ pub(crate) mod ser {
     /// and old checkpoints keep loading through the legacy branch.
     pub const STATE_MAGIC2: u64 = u64::from_le_bytes(*b"GALSTAT\x02");
 
+    /// True when `bytes` begins with [`STATE_MAGIC2`]. The one sanctioned
+    /// way to sniff the format gate — callers must not reimplement the
+    /// byte-layout comparison (single-parser invariant).
+    pub fn sniff_magic2(bytes: &[u8]) -> bool {
+        match bytes.get(..8) {
+            Some(head) => {
+                let mut b = [0u8; 8];
+                b.copy_from_slice(head);
+                u64::from_le_bytes(b) == STATE_MAGIC2
+            }
+            None => false,
+        }
+    }
+
     pub fn push_u64(out: &mut Vec<u8>, x: u64) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    pub fn push_u32(out: &mut Vec<u8>, x: u32) {
         out.extend_from_slice(&x.to_le_bytes());
     }
     pub fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
         push_u64(out, xs.len() as u64);
+        push_f32s_raw(out, xs);
+    }
+    /// f32 payload with NO length prefix — for formats whose element
+    /// count lives in already-written header fields (checkpoint params).
+    pub fn push_f32s_raw(out: &mut Vec<u8>, xs: &[f32]) {
         for &x in xs {
             out.extend_from_slice(&x.to_le_bytes());
         }
@@ -121,8 +143,19 @@ pub(crate) mod ser {
             self.pos = end;
             Ok(u64::from_le_bytes(bytes.try_into().unwrap()))
         }
+        pub fn u32(&mut self) -> Result<u32, String> {
+            let end = self.pos + 4;
+            let bytes = self.buf.get(self.pos..end).ok_or("truncated state")?;
+            self.pos = end;
+            Ok(u32::from_le_bytes(bytes.try_into().unwrap()))
+        }
         pub fn f32s(&mut self) -> Result<Vec<f32>, String> {
             let n = self.u64()? as usize;
+            self.f32s_exact(n)
+        }
+        /// Exactly `n` f32 values, no length prefix (counterpart of
+        /// `push_f32s_raw`; `n` comes from validated header fields).
+        pub fn f32s_exact(&mut self, n: usize) -> Result<Vec<f32>, String> {
             // Checked: a corrupt length must error, not overflow (debug)
             // or wrap (release) before the range check catches it.
             let nbytes = n.checked_mul(4).ok_or("truncated state")?;

@@ -1,0 +1,121 @@
+//! Corrupt-input entry points for the parser property tests.
+//!
+//! The wire/quant decoders are deliberately `pub(crate)` — the single-parser
+//! invariant (`galore2 lint`) keeps their byte layouts private to the crate.
+//! The integration suite (`tests/invariants.rs`) still needs to throw
+//! corrupted bytes at exactly those decoders, so this module re-exports them
+//! behind result-only wrappers: callers learn *whether* a frame parsed, never
+//! the layout. Each sample frame here is a valid encoding the fuzz tests
+//! mutate byte-by-byte.
+
+use crate::dist::cluster::{Cmd, Reply};
+use crate::dist::{wire, MemoryReport, OptimizerSpec, ParamMeta};
+use crate::optim::ser::Reader;
+use crate::optim::AdamCfg;
+use crate::quant::{LinearQ8, StoredTensor};
+use crate::tensor::Matrix;
+
+/// Decode a cluster command frame; `Ok(())` iff it parses.
+pub fn decode_cmd_frame(bytes: &[u8]) -> Result<(), String> {
+    wire::decode_cmd(bytes).map(|_| ())
+}
+
+/// Decode a cluster reply frame; `Ok(())` iff it parses.
+pub fn decode_reply_frame(bytes: &[u8]) -> Result<(), String> {
+    wire::decode_reply(bytes).map(|_| ())
+}
+
+/// Decode a worker setup frame; `Ok(())` iff it parses.
+pub fn decode_setup_frame(bytes: &[u8]) -> Result<(), String> {
+    wire::decode_setup(bytes).map(|_| ())
+}
+
+/// Decode a stored-tensor payload (quantized projector codec).
+pub fn decode_stored_tensor(bytes: &[u8]) -> Result<(), String> {
+    let mut r = Reader::new(bytes);
+    StoredTensor::decode(&mut r).map(|_| ())
+}
+
+/// Run the transport framer (`[len u64][payload]`) over an in-memory byte
+/// stream; `Ok` carries the payload length so tests can sanity-check it.
+pub fn read_frame_bytes(bytes: &[u8]) -> Result<usize, String> {
+    let mut cursor = std::io::Cursor::new(bytes);
+    wire::read_frame(&mut cursor)
+        .map(|payload| payload.len())
+        .map_err(|e| e.to_string())
+}
+
+/// Wrap a payload in the transport framing (length prefix + bytes).
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    wire::write_frame(&mut out, payload).expect("Vec write cannot fail");
+    out
+}
+
+/// A valid `Cmd::Step` frame with matrix payloads — the richest command.
+pub fn sample_cmd_frame() -> Vec<u8> {
+    wire::encode_cmd(&Cmd::Step {
+        t: 42,
+        lr: 0.125,
+        grads: vec![
+            Matrix::from_vec(2, 3, vec![1.0, -2.0, 3.5, 0.0, -0.0, f32::NAN]),
+            Matrix::from_vec(1, 4, vec![4.0; 4]),
+        ],
+    })
+}
+
+/// A valid `Reply::Params` frame — nested count + matrix payloads, the
+/// reply variant with the most length fields to corrupt.
+pub fn sample_reply_frame() -> Vec<u8> {
+    wire::encode_reply(&Reply::Params(vec![Matrix::from_vec(
+        3,
+        2,
+        vec![1.0, 2.0, -3.0, 0.5, -0.5, 9.0],
+    )]))
+}
+
+/// A valid `Reply::Report` frame (all-integer payload — any byte pattern
+/// decodes, so it only participates in the no-panic properties).
+pub fn sample_report_frame() -> Vec<u8> {
+    wire::encode_reply(&Reply::Report(MemoryReport {
+        rank: 3,
+        param_shard_bytes: 1024,
+        optimizer_bytes: 2048,
+        peak_transient_bytes: 4096,
+        traffic_elems: 123_456,
+    }))
+}
+
+/// A valid setup frame (param metas + optimizer spec + seed).
+pub fn sample_setup_frame() -> Vec<u8> {
+    wire::encode_setup(
+        &[
+            ParamMeta {
+                name: "blocks.0.wq".into(),
+                rows: 8,
+                cols: 4,
+            },
+            ParamMeta {
+                name: "embed".into(),
+                rows: 1,
+                cols: 16,
+            },
+        ],
+        &OptimizerSpec::AdamW(AdamCfg::default()),
+        0xdead_beef,
+    )
+    .expect("AdamW spec is always encodable")
+}
+
+/// A valid quantized stored-tensor payload (Q8 blocks + scales).
+pub fn sample_stored_tensor() -> Vec<u8> {
+    let xs: Vec<f32> = (0..96).map(|i| (i as f32 - 48.0) * 0.25).collect();
+    let stored = StoredTensor::Q8 {
+        rows: 6,
+        cols: 16,
+        q: LinearQ8::quantize(&xs),
+    };
+    let mut out = Vec::new();
+    stored.encode(&mut out);
+    out
+}

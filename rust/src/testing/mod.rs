@@ -17,6 +17,7 @@
 //! `PROP_SEED=<seed> cargo test <name>`.
 
 pub mod fixtures;
+pub mod fuzz;
 
 pub mod prop {
     use crate::util::rng::Pcg64;

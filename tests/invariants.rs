@@ -1,0 +1,437 @@
+//! Project invariants, CI-gated:
+//!
+//! 1. **Self-scan** — `galore2::analysis::lint_root` over this repo's own
+//!    `rust/src` reports zero findings: every byte-layout site is either in
+//!    a sanctioned parser module or carries a justified
+//!    `// lint: allow(<rule>): <reason>`.
+//! 2. **Rule fixtures** — each lint rule fires on a seeded violation and
+//!    allow-comment hygiene is itself enforced, so a regression in the
+//!    lint engine can't silently green the gate.
+//! 3. **CLI contract** — `galore2 lint` exits non-zero naming file:line
+//!    and rule on a dirty tree, zero on the merged tree.
+//! 4. **Corrupt-input properties** — every parser behind the single-parser
+//!    invariant (wire cmd/reply/setup frames, quantized stored tensors,
+//!    transport framing, checkpoint files) returns `Err` on truncation and
+//!    length-field corruption, never panics on single-byte mutations, and
+//!    never lets a corrupt length field drive a huge allocation (enforced
+//!    by a wrapping global allocator that records the largest single
+//!    allocation request).
+
+use galore2::analysis::{lint_root, lint_source, ALLOW_HYGIENE};
+use galore2::checkpoint::Checkpoint;
+use galore2::tensor::Matrix;
+use galore2::testing::{fuzz, prop};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+// ------------------------------------------------------------ alloc guard
+
+/// Pass-through allocator that records the largest single allocation
+/// request made by this test binary. Parsers fed corrupt length fields
+/// must error out *before* allocating, so nothing in this suite has any
+/// business requesting more than [`ALLOC_CAP`] bytes at once.
+struct CapAlloc;
+
+static LARGEST_ALLOC: AtomicUsize = AtomicUsize::new(0);
+
+/// 16 MiB: orders of magnitude above anything these tests legitimately
+/// allocate (source files, tiny matrices, sample frames), orders of
+/// magnitude below what a trusted 0xFF…FF length prefix would request.
+const ALLOC_CAP: usize = 1 << 24;
+
+unsafe impl GlobalAlloc for CapAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        LARGEST_ALLOC.fetch_max(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        LARGEST_ALLOC.fetch_max(new_size, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CapAlloc = CapAlloc;
+
+fn assert_allocations_bounded(context: &str) {
+    let largest = LARGEST_ALLOC.load(Ordering::Relaxed);
+    assert!(
+        largest <= ALLOC_CAP,
+        "{context}: some allocation requested {largest} bytes (cap {ALLOC_CAP}) — \
+         a parser trusted a corrupt length field"
+    );
+}
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+// -------------------------------------------------------------- self-scan
+
+#[test]
+fn lint_self_scan_is_clean() {
+    let report = lint_root(repo_root()).expect("lint scan must read rust/src");
+    assert!(
+        report.files_scanned > 20,
+        "scan only saw {} files — wrong root?",
+        report.files_scanned
+    );
+    assert!(
+        report.clean(),
+        "the tree must lint clean; findings:\n{}",
+        report.render_text()
+    );
+}
+
+// ----------------------------------------------------------- rule fixtures
+
+#[test]
+fn each_rule_fires_on_a_seeded_violation() {
+    let cases: &[(&str, &str, &str)] = &[
+        (
+            "single-parser",
+            "dist/bad.rs",
+            "fn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }",
+        ),
+        (
+            "checked-alloc",
+            "quant/bad.rs",
+            "fn d(r: &mut Reader) -> Vec<u8> {\n    let n = r.u64().unwrap_or(0) as usize;\n    Vec::with_capacity(n)\n}",
+        ),
+        (
+            "no-panic-dist",
+            "dist/bad.rs",
+            "fn serve(x: Option<u64>) -> u64 { x.unwrap() }",
+        ),
+        (
+            "determinism",
+            "optim/bad.rs",
+            "use std::collections::HashMap;",
+        ),
+        (
+            "lock-across-collective",
+            "train/bad.rs",
+            "fn f(m: &M, c: &C) {\n    let g = m.lock();\n    c.barrier();\n    drop(g);\n}",
+        ),
+    ];
+    for (rule, file, src) in cases {
+        let findings = lint_source(file, src);
+        assert!(
+            findings.iter().any(|f| f.rule == *rule),
+            "rule {rule} did not fire on its fixture; got: {:?}",
+            findings
+                .iter()
+                .map(|f| (f.rule, f.line))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn justified_allow_suppresses_and_bad_allows_are_findings() {
+    // A justified allow silences exactly its rule.
+    let allowed = "// lint: allow(single-parser): fixture — fixed-width tag, caller length-checks\n\
+                   fn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }";
+    assert!(
+        lint_source("dist/bad.rs", allowed).is_empty(),
+        "a justified allow must suppress its finding"
+    );
+    // A dangling allow (no code after it) is itself a finding.
+    let dangling = "// lint: allow(single-parser): nothing follows this comment\n";
+    assert!(
+        lint_source("dist/bad.rs", dangling)
+            .iter()
+            .any(|f| f.rule == ALLOW_HYGIENE),
+        "dangling allow must be an allow-hygiene finding"
+    );
+    // An allow naming an unknown rule never suppresses anything.
+    let unknown = "// lint: allow(definitely-not-a-rule): why\n\
+                   fn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }";
+    let findings = lint_source("dist/bad.rs", unknown);
+    assert!(findings.iter().any(|f| f.rule == ALLOW_HYGIENE));
+    assert!(findings.iter().any(|f| f.rule == "single-parser"));
+    // An empty reason is rejected: allows must say *why*.
+    let unreasoned = "// lint: allow(single-parser):\n\
+                      fn f(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) }";
+    assert!(lint_source("dist/bad.rs", unreasoned)
+        .iter()
+        .any(|f| f.rule == ALLOW_HYGIENE));
+}
+
+// ------------------------------------------------------------ CLI contract
+
+fn write_fixture_tree(root: &Path) {
+    let src = root.join("rust").join("src");
+    std::fs::create_dir_all(src.join("dist")).unwrap();
+    std::fs::create_dir_all(src.join("quant")).unwrap();
+    // One file seeding four of the five rules…
+    std::fs::write(
+        src.join("dist").join("bad.rs"),
+        "use std::collections::HashMap;\n\
+         \n\
+         fn serve(x: Option<u64>) -> u64 {\n\
+         \x20   let v = x.unwrap();\n\
+         \x20   u64::from_le_bytes([0u8; 8]) + v\n\
+         }\n\
+         \n\
+         fn sync(m: &std::sync::Mutex<u64>, c: &Comm) {\n\
+         \x20   let g = m.lock();\n\
+         \x20   c.barrier();\n\
+         \x20   drop(g);\n\
+         }\n",
+    )
+    .unwrap();
+    // …and one seeding the fifth (checked-alloc is parser-module scoped).
+    std::fs::write(
+        src.join("quant").join("bad.rs"),
+        "fn d(r: &mut Reader) -> Vec<u8> {\n\
+         \x20   let n = r.u64().unwrap_or(0) as usize;\n\
+         \x20   Vec::with_capacity(n)\n\
+         }\n",
+    )
+    .unwrap();
+}
+
+#[test]
+fn lint_cli_fails_on_seeded_violations_and_passes_on_real_tree() {
+    let dir = std::env::temp_dir().join(format!("galore2_lint_fixture_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_fixture_tree(&dir);
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_galore2"))
+        .args(["lint", "--root"])
+        .arg(&dir)
+        .output()
+        .expect("running galore2 lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        !out.status.success(),
+        "lint must exit non-zero on a dirty tree; stdout:\n{stdout}"
+    );
+    // Findings name file:line and rule for every seeded rule.
+    for rule in galore2::analysis::RULES {
+        assert!(
+            stdout.contains(&format!("[{rule}]")),
+            "seeded {rule} violation missing from output:\n{stdout}"
+        );
+    }
+    assert!(
+        stdout.contains("rust/src/dist/bad.rs:4:"),
+        "findings must carry file:line; stdout:\n{stdout}"
+    );
+    assert!(stdout.contains("rust/src/quant/bad.rs:"), "{stdout}");
+
+    // JSON mode renders the same findings machine-readably.
+    let json_out = std::process::Command::new(env!("CARGO_BIN_EXE_galore2"))
+        .args(["lint", "--json", "--root"])
+        .arg(&dir)
+        .output()
+        .expect("running galore2 lint --json");
+    let json = String::from_utf8_lossy(&json_out.stdout);
+    assert!(!json_out.status.success());
+    assert!(json.contains("\"clean\": false"), "{json}");
+    assert!(json.contains("\"rule\": \"no-panic-dist\""), "{json}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // The merged tree itself must pass through the same CLI path.
+    let clean = std::process::Command::new(env!("CARGO_BIN_EXE_galore2"))
+        .args(["lint", "--root"])
+        .arg(repo_root())
+        .output()
+        .expect("running galore2 lint on the repo");
+    let clean_stdout = String::from_utf8_lossy(&clean.stdout);
+    assert!(
+        clean.status.success(),
+        "repo tree must lint clean; stdout:\n{clean_stdout}"
+    );
+    assert!(clean_stdout.contains("0 finding(s)"), "{clean_stdout}");
+}
+
+// --------------------------------------------- corrupt-input property tests
+
+type Decoder = fn(&[u8]) -> Result<(), String>;
+
+fn parser_samples() -> Vec<(&'static str, Vec<u8>, Decoder)> {
+    vec![
+        ("cmd", fuzz::sample_cmd_frame(), fuzz::decode_cmd_frame as Decoder),
+        ("reply", fuzz::sample_reply_frame(), fuzz::decode_reply_frame as Decoder),
+        ("report", fuzz::sample_report_frame(), fuzz::decode_reply_frame as Decoder),
+        ("setup", fuzz::sample_setup_frame(), fuzz::decode_setup_frame as Decoder),
+        ("stored-tensor", fuzz::sample_stored_tensor(), fuzz::decode_stored_tensor as Decoder),
+    ]
+}
+
+#[test]
+fn every_strict_prefix_of_every_frame_errors() {
+    for (name, frame, decode) in parser_samples() {
+        assert!(decode(&frame).is_ok(), "{name} sample must be valid");
+        for cut in 0..frame.len() {
+            assert!(
+                decode(&frame[..cut]).is_err(),
+                "{name} truncated to {cut}/{} bytes decoded silently",
+                frame.len()
+            );
+        }
+    }
+    assert_allocations_bounded("prefix truncation");
+}
+
+#[test]
+fn corrupt_length_fields_error_without_huge_allocations() {
+    // Transport framing: an all-ones length prefix trips the frame cap.
+    let framed = fuzz::frame(b"payload");
+    let mut torn = framed.clone();
+    for b in torn.iter_mut().take(8) {
+        *b = 0xFF;
+    }
+    let err = fuzz::read_frame_bytes(&torn).unwrap_err();
+    assert!(err.contains("cap"), "unhelpful torn-frame error: {err}");
+    // A plausible-but-lying length prefix (claims more than arrives) is a
+    // torn frame, not a hang and not a trusted allocation.
+    let mut lying = framed.clone();
+    lying[0] = 0xEE; // claims ~238 bytes; only 7 follow
+    let err = fuzz::read_frame_bytes(&lying).unwrap_err();
+    assert!(err.contains("torn frame"), "{err}");
+    assert_eq!(fuzz::read_frame_bytes(&framed).unwrap(), 7);
+
+    // Inner length/count fields: overwrite every u64-sized window with
+    // 0xFF and require no panic and no huge allocation (windows that only
+    // touch payload values — f32 data, free-form counters — may stay
+    // decodable).
+    for (_, frame, decode) in parser_samples() {
+        for start in 0..frame.len().saturating_sub(8) {
+            let mut corrupt = frame.clone();
+            for b in corrupt[start..start + 8].iter_mut() {
+                *b = 0xFF;
+            }
+            let _ = decode(&corrupt);
+        }
+    }
+    // The canonical corruption — an all-ones count/length field — must be
+    // *rejected*, loudly. Offsets: cmd's grads count sits after
+    // [tag u8][t u64][lr f32]; reply's matrix count after [tag u8]; setup
+    // leads with its meta count; a stored tensor's rows follow its tag.
+    let must_fail: &[(&str, usize)] =
+        &[("cmd", 13), ("reply", 1), ("setup", 0), ("stored-tensor", 1)];
+    let samples = parser_samples();
+    for (name, offset) in must_fail {
+        let (_, frame, decode) = samples
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .expect("sample present");
+        let mut corrupt = frame.clone();
+        for b in corrupt[*offset..offset + 8].iter_mut() {
+            *b = 0xFF;
+        }
+        assert!(
+            decode(&corrupt).is_err(),
+            "{name} with an all-ones count at offset {offset} decoded silently"
+        );
+    }
+    assert_allocations_bounded("length-field corruption");
+}
+
+#[test]
+fn random_single_byte_mutations_never_panic() {
+    let samples = parser_samples();
+    prop::check("single-byte frame mutations never panic", 400, |g| {
+        let sample = g.choose(&samples);
+        let mut bytes = sample.1.clone();
+        let pos = g.usize_in(0, bytes.len() - 1);
+        bytes[pos] ^= (1 + g.usize_in(0, 254)) as u8;
+        // The result may legitimately be Ok (payload-byte flips) — the
+        // property is "no panic, no huge allocation".
+        let _ = (sample.2)(&bytes);
+        Ok(())
+    });
+    assert_allocations_bounded("random mutation");
+}
+
+// -------------------------------------------------- checkpoint corruption
+
+fn sample_checkpoint_bytes(dir: &Path) -> (PathBuf, Vec<u8>) {
+    let ck = Checkpoint {
+        step: 7,
+        tokens_seen: Some(1234),
+        names: vec!["blocks.0.wq".into(), "embed".into()],
+        params: vec![
+            Matrix::from_vec(2, 3, vec![1.0, -2.0, 3.5, 0.0, -0.0, 42.0]),
+            Matrix::from_vec(1, 4, vec![0.25; 4]),
+        ],
+        opt_state: vec![9u8; 24],
+    };
+    let path = dir.join("sample.ckpt");
+    ck.save(&path).expect("writing sample checkpoint");
+    let bytes = std::fs::read(&path).expect("reading sample checkpoint back");
+    (path, bytes)
+}
+
+#[test]
+fn corrupt_checkpoints_error_never_panic() {
+    let dir = std::env::temp_dir().join(format!("galore2_invariants_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (path, bytes) = sample_checkpoint_bytes(&dir);
+    assert!(Checkpoint::load(&path).is_ok(), "sample must load");
+
+    // Every strict prefix must fail loudly.
+    let cut_path = dir.join("cut.ckpt");
+    for cut in 0..bytes.len() {
+        std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+        assert!(
+            Checkpoint::load(&cut_path).is_err(),
+            "checkpoint truncated to {cut}/{} bytes loaded silently",
+            bytes.len()
+        );
+    }
+
+    // All-ones overwrites of the header's gate/count/length fields must be
+    // rejected before any allocation trusts them. Offsets per the format
+    // doc at the top of checkpoint/mod.rs (v5 layout, 8-byte magic):
+    //   8 → version, 29 → n_params, 37 → first name_len.
+    for field_off in [8usize, 29, 37] {
+        let mut corrupt = bytes.clone();
+        for b in corrupt[field_off..field_off + 8].iter_mut() {
+            *b = 0xFF;
+        }
+        std::fs::write(&cut_path, &corrupt).unwrap();
+        assert!(
+            Checkpoint::load(&cut_path).is_err(),
+            "checkpoint with 0xFF…FF at offset {field_off} loaded silently"
+        );
+    }
+
+    // Random single-byte mutations: Err or Ok, never a panic or a huge
+    // allocation. (Mutating f32 payload or the step counter can stay Ok.)
+    let mut_path = dir.join("mut.ckpt");
+    prop::check("checkpoint byte mutations never panic", 120, |g| {
+        let mut corrupt = bytes.clone();
+        let pos = g.usize_in(0, corrupt.len() - 1);
+        corrupt[pos] ^= (1 + g.usize_in(0, 254)) as u8;
+        std::fs::write(&mut_path, &corrupt).map_err(|e| e.to_string())?;
+        let _ = Checkpoint::load(&mut_path);
+        Ok(())
+    });
+
+    let _ = std::fs::remove_dir_all(&dir);
+    assert_allocations_bounded("checkpoint corruption");
+}
+
+/// The committed pre-refactor fixtures pin that routing the checkpoint
+/// codec through `optim::ser` changed no bytes on the read side.
+#[test]
+fn committed_legacy_fixtures_still_load() {
+    for (name, version) in [("ckpt_v3_adamw.ckpt", 3u32), ("ckpt_v4_galore.ckpt", 4)] {
+        let path = repo_root().join("tests").join("fixtures").join(name);
+        let ck = Checkpoint::load(&path)
+            .unwrap_or_else(|e| panic!("committed fixture {name} must load: {e}"));
+        assert!(!ck.params.is_empty(), "{name} has no params");
+        if version < 4 {
+            assert_eq!(ck.tokens_seen, None, "v3 files predate tokens_seen");
+        }
+    }
+}
