@@ -8,9 +8,15 @@
 //!   3. parallel GEMM scaling on the paper's 1024-rank projection +
 //!      reprojection shapes (1, 2, 4 threads vs serial) — summarized into
 //!      BENCH_throughput.json for EXPERIMENTS.md §Perf;
+//!   3b. persistent pool vs scoped spawning: region dispatch cost and the
+//!      llama-micro projection pair that sat below the OLD 4e6 serial
+//!      cutover — the evidence behind the re-tuned `PAR_MIN_FLOPS`
+//!      (`pool_vs_scoped` in BENCH_throughput.json, grepped by CI);
 //!   4. collectives throughput (all-reduce / reduce-scatter / all-gather);
 //!   5. full train-step wall time per optimizer (artifact execution +
-//!      optimizer) — the headline table in EXPERIMENTS.md §Perf.
+//!      optimizer, one untimed warmup step so one-time pool/thread startup
+//!      stays out of the per-step figures) — the headline table in
+//!      EXPERIMENTS.md §Perf.
 
 use galore2::bench::Bench;
 use galore2::config::TrainConfig;
@@ -18,6 +24,7 @@ use galore2::dist::{Comm, FsdpCluster, TransportKind};
 use galore2::optim::{
     Adam8bit, AdamCfg, AdamW, GaLore, GaLoreCfg, Optimizer, ProjectionKind,
 };
+use galore2::parallel;
 use galore2::tensor::{matmul_at_b_with_plan, matmul_with_plan, Matrix, MatmulPlan};
 use galore2::testing::fixtures;
 use galore2::train::Trainer;
@@ -71,6 +78,27 @@ fn write_report(b: &Bench, speedup_4t: Option<f64>, hidden: usize, rank: usize) 
                 Json::str(format!("{hidden}x{rank} / {hidden}x{hidden}")),
             );
     }
+    // §3b summary: pool-vs-scoped dispatch cost and the sub-old-cutover
+    // micro projection pair. CI greps BENCH_throughput.json for this key.
+    let mut pool = Json::obj();
+    for (key, bench) in [
+        ("dispatch_pool_ns", "pool_dispatch_noop_t4"),
+        ("dispatch_scoped_ns", "scoped_dispatch_noop_t4"),
+        ("micro_t1_ns", "gemm_projpair_micro128r32_t1"),
+        ("micro_pool_t4_ns", "gemm_projpair_micro128r32_pool_t4"),
+        ("micro_scoped_t4_ns", "gemm_projpair_micro128r32_scoped_t4"),
+    ] {
+        if let Some(mean) = mean_of(b, bench) {
+            pool.set(key, Json::num(mean));
+        }
+    }
+    if let (Some(t1), Some(t4)) = (
+        mean_of(b, "gemm_projpair_micro128r32_t1"),
+        mean_of(b, "gemm_projpair_micro128r32_pool_t4"),
+    ) {
+        pool.set("micro_pool_speedup_4t", Json::num(t1 / t4));
+    }
+    report.set("pool_vs_scoped", pool);
     std::fs::write("BENCH_throughput.json", report.to_pretty())?;
     println!("machine-readable report -> BENCH_throughput.json");
     Ok(())
@@ -79,8 +107,10 @@ fn write_report(b: &Bench, speedup_4t: Option<f64>, hidden: usize, rank: usize) 
 fn main() -> anyhow::Result<()> {
     let mut b = Bench::new();
     // `cargo bench --bench throughput -- --quick` (CI smoke) or BENCH_QUICK=1.
+    // `quick_from_env` treats `BENCH_QUICK=0`/empty as off — the old
+    // `env::var(..).is_ok()` gate silently shortened benches on those.
     let quick =
-        std::env::var("BENCH_QUICK").is_ok() || std::env::args().any(|a| a == "--quick");
+        galore2::bench::quick_from_env() || std::env::args().any(|a| a == "--quick");
 
     println!("== 1. optimizer step time (4 micro-shaped layers) ==");
     bench_optimizer(&mut b, "adamw", &mut AdamW::new(AdamCfg::default()));
@@ -180,6 +210,56 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    println!("\n== 3b. persistent pool vs scoped spawning ==");
+    // (a) Pure region dispatch cost: 4 one-byte chunks, trivial body. The
+    // pool row measures queue-push + condvar wake + join; the scoped row
+    // measures 4 OS-thread spawns + joins. Their gap is the overhead the
+    // `PAR_MIN_FLOPS` cutover has to amortize.
+    let mut noop = vec![0u8; 4];
+    b.run("pool_dispatch_noop_t4", || {
+        parallel::par_chunks_mut(&mut noop, 1, 4, |_, c| c[0] = c[0].wrapping_add(1));
+        noop[0]
+    });
+    parallel::set_pool_enabled(false);
+    b.run("scoped_dispatch_noop_t4", || {
+        parallel::par_chunks_mut(&mut noop, 1, 4, |_, c| c[0] = c[0].wrapping_add(1));
+        noop[0]
+    });
+    parallel::set_pool_enabled(true);
+    // (b) The llama-micro projection pair (128x352 layer, rank 32):
+    // ~2.9 MFLOP per GEMM — below the OLD 4e6 cutover, so the scoped era
+    // ran it serial. Under the pool it parallelizes and must win; the
+    // scoped row shows why the old threshold was right for scoped spawn.
+    let (mh, mw, mr) = (128usize, 352usize, 32usize);
+    let mut rng3 = Pcg64::new(4, 0);
+    let mp = Matrix::randn(mh, mr, 1.0, &mut rng3);
+    let mg = Matrix::randn(mh, mw, 1.0, &mut rng3);
+    let mn = Matrix::randn(mr, mw, 1.0, &mut rng3);
+    let micro_flops = 2.0 * (mh * mr * mw) as f64 * 2.0; // proj + reproj
+    for (name, threads, pooled) in [
+        ("gemm_projpair_micro128r32_t1", 1usize, true),
+        ("gemm_projpair_micro128r32_pool_t4", 4, true),
+        ("gemm_projpair_micro128r32_scoped_t4", 4, false),
+    ] {
+        parallel::set_pool_enabled(pooled);
+        b.run_with_throughput(name, Some((micro_flops, "flop")), || {
+            let plan = MatmulPlan::with_threads(threads);
+            let r = matmul_at_b_with_plan(&mp, &mg, plan); // projection
+            let back = matmul_with_plan(&mp, &mn, plan); // reprojection
+            (r, back)
+        });
+    }
+    parallel::set_pool_enabled(true);
+    if let (Some(t1), Some(t4)) = (
+        mean_of(&b, "gemm_projpair_micro128r32_t1"),
+        mean_of(&b, "gemm_projpair_micro128r32_pool_t4"),
+    ) {
+        println!(
+            "\nmicro projection pair (sub-old-cutover) pool speedup @4 threads: {:.2}x",
+            t1 / t4
+        );
+    }
+
     println!("\n== 4. collectives (world 4, 1 MiB payloads) ==");
     let elems = 256 * 1024usize;
     for op in ["all_reduce", "reduce_scatter", "all_gather"] {
@@ -253,7 +333,8 @@ fn main() -> anyhow::Result<()> {
             out_dir: std::env::temp_dir().join("galore2_bench"),
             optimizer: optimizer.into(),
             lr: 0.01,
-            steps,
+            // +1 budgets the untimed warmup step below.
+            steps: steps + 1,
             galore_rank: 16,
             galore_update_freq: 10,
             eval_every: 0,
@@ -263,8 +344,13 @@ fn main() -> anyhow::Result<()> {
         };
         let mut trainer = Trainer::new(cfg)?;
         let flops = trainer.llama.step_flops();
+        // One untimed warmup step: the first step pays one-time costs
+        // (pool worker spawn, corpus/cache touch) that would otherwise be
+        // folded into every per-step figure and skew pool-vs-scoped
+        // comparisons. `steps` timed steps follow.
+        trainer.train_step(0)?;
         let timer = galore2::util::Timer::start();
-        for t in 0..steps {
+        for t in 1..=steps {
             trainer.train_step(t)?;
         }
         let per_step = timer.elapsed_secs() / steps as f64;

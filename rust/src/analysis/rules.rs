@@ -31,7 +31,11 @@
 //!   strand a peer in `PoisonBarrier`.
 //! - `determinism`: no `HashMap`/`HashSet`, `Instant`/`SystemTime` in
 //!   serialization/collective modules (`dist/`, `quant/`, `checkpoint/`,
-//!   `optim/`), and no `std::env::set_var` anywhere in the crate.
+//!   `optim/`), no `std::env::set_var` anywhere in the crate, and no
+//!   `env::var` reads in `parallel/` — the kernel hot path resolves
+//!   `GALORE2_THREADS` exactly once into a `OnceLock` (a per-call
+//!   `getenv` racing a concurrent env mutation is UB; the one-time init
+//!   carries a justified allow).
 //! - `lock-across-collective`: a lock-guard binding (`.lock()`,
 //!   `.read()`, `.write()`) still live at a `barrier`/`all_reduce`/
 //!   `exchange`-family call in the same function is deadlock bait.
@@ -369,7 +373,29 @@ fn determinism_scope(rel: &str) -> bool {
 const NONDET_TYPES: [&str; 4] = ["HashMap", "HashSet", "Instant", "SystemTime"];
 
 fn rule_determinism(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
-    for t in toks {
+    for (i, t) in toks.iter().enumerate() {
+        // In `parallel/`, reading the environment at all is banned: the
+        // thread-budget env var is resolved ONCE into a OnceLock (that
+        // init site carries a justified allow); anything else would put a
+        // `getenv` back on the kernel hot path, where it races any
+        // concurrent env mutation (the UB class scrubbed from dist/).
+        // Matched as the token tail `env :: var` (the lexer emits `::` as
+        // two `:` punct tokens).
+        if rel.starts_with("parallel/")
+            && is_id(t, "var")
+            && i >= 3
+            && is_id(&toks[i - 3], "env")
+            && is_p(&toks[i - 2], ":")
+            && is_p(&toks[i - 1], ":")
+        {
+            out.push(Finding {
+                file: rel.into(),
+                line: t.line,
+                rule: "determinism",
+                message: "`env::var` in parallel/ — the hot path must not touch the environment; resolve once via the OnceLock in parallel::env_threads".into(),
+            });
+            continue;
+        }
         if is_id(t, "set_var") {
             out.push(Finding {
                 file: rel.into(),
@@ -635,6 +661,20 @@ mod tests {
         assert!(check_file("runtime/mod.rs", "fn t(m: &HashMap<u32, u32>) {}").is_empty());
         let f = check_file("runtime/mod.rs", "fn t() { std::env::set_var(\"A\", \"1\"); }");
         assert_eq!(rules_of(&f), vec!["determinism"]);
+    }
+
+    #[test]
+    fn determinism_bans_env_var_on_the_parallel_hot_path() {
+        let hot = "fn t() -> Option<usize> { std::env::var(\"T\").ok()?.parse().ok() }";
+        let f = check_file("parallel/mod.rs", hot);
+        assert_eq!(rules_of(&f), vec!["determinism"]);
+        // Same read elsewhere is out of this facet's scope…
+        assert!(check_file("runtime/mod.rs", hot).is_empty());
+        // …and the one-time OnceLock init is exactly what the allow is for.
+        let init = "// lint: allow(determinism): resolved once into a OnceLock at first use\nfn t() -> Option<usize> { std::env::var(\"T\").ok()?.parse().ok() }";
+        assert!(check_file("parallel/mod.rs", init).is_empty());
+        // An unrelated local named `var` must not trip the token matcher.
+        assert!(check_file("parallel/mod.rs", "fn t(var: usize) -> usize { var }").is_empty());
     }
 
     #[test]

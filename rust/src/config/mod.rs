@@ -98,6 +98,11 @@ pub struct TrainConfig {
     /// Worker threads for the GEMM/SVD hot path; 0 = auto
     /// (`GALORE2_THREADS` or the hardware parallelism).
     pub threads: usize,
+    /// Dispatch parallel regions through the persistent park/unpark pool
+    /// (`[parallel] pool` / `--pool`; default true). `false` falls back to
+    /// per-call scoped spawning — same bitwise results, higher dispatch
+    /// cost; kept for debugging and A/B benchmarking.
+    pub pool: bool,
     /// Fabric connecting distributed ranks (`[dist] transport` /
     /// `--transport`): in-process worker threads (default) or self-exec'd
     /// worker OS processes over Unix-domain sockets. Trajectories are
@@ -155,6 +160,7 @@ impl Default for TrainConfig {
             parallel: ParallelMode::Single,
             world: 1,
             threads: 0,
+            pool: true,
             transport: TransportKind::Threads,
             engine: Engine::Native,
             on_failure: OnFailure::Abort,
@@ -221,6 +227,7 @@ impl TrainConfig {
             world: doc.i64_or("parallel", "world", d.world as i64) as usize,
             // Clamp: a negative value would wrap to a huge usize thread count.
             threads: doc.i64_or("parallel", "threads", d.threads as i64).max(0) as usize,
+            pool: doc.bool_or("parallel", "pool", d.pool),
             transport: TransportKind::parse(&doc.str_or("dist", "transport", "threads"))
                 .map_err(|e| anyhow::anyhow!(e))?,
             engine: Engine::parse(&doc.str_or("train", "engine", "native"))?,
@@ -276,6 +283,7 @@ impl TrainConfig {
         self.galore_moments = args.str_or("moments", &self.galore_moments);
         self.world = args.usize_or("world", self.world);
         self.threads = args.usize_or("threads", self.threads);
+        self.pool = args.bool_or("pool", self.pool);
         if let Some(mode) = args.get("parallel") {
             self.parallel = ParallelMode::parse(mode)?;
         }
@@ -425,6 +433,7 @@ similarity_threshold = 0.7
 mode = "fsdp"
 world = 4
 threads = 2
+pool = false
 
 [dist]
 transport = "process"
@@ -451,8 +460,20 @@ transport = "process"
         assert_eq!(c.parallel, ParallelMode::Fsdp);
         assert_eq!(c.world, 4);
         assert_eq!(c.threads, 2);
+        assert!(!c.pool, "[parallel] pool = false must disable the pool");
+        assert!(TrainConfig::default().pool, "pool defaults on");
         assert_eq!(c.transport, TransportKind::Process);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn pool_flag_parses_from_cli() {
+        let mut c = TrainConfig::default();
+        assert!(c.pool);
+        let args =
+            Args::parse("train --pool false".split_whitespace().map(String::from)).unwrap();
+        c.apply_cli(&args).unwrap();
+        assert!(!c.pool, "--pool false must select the scoped fallback");
     }
 
     #[test]

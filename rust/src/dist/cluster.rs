@@ -787,6 +787,9 @@ fn spawn_threads<W: Worker>(
                     // This thread is one of `world` concurrent compute
                     // workers: nested GEMM/SVD kernels split the core
                     // budget instead of each resolving the full machine.
+                    // The persistent pool is process-wide, so `world`
+                    // ranks submitting width-(budget/world) regions keep
+                    // total pool demand at ~one machine's worth.
                     crate::parallel::set_thread_share(world);
                     let mut w = W::new(rank, world, comm, metas, spec, seed);
                     // Ordering on the death path matters: record the cause

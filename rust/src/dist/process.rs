@@ -317,7 +317,10 @@ fn spawn_rank(
         .arg(path)
         // Keep worker compute budgets identical to the thread
         // transport: each worker divides the coordinator's resolved
-        // pool default by the world size (`set_thread_share`).
+        // pool default by the world size (`set_thread_share`). Set via
+        // `Command::env` at spawn — the child resolves it exactly once
+        // into `parallel`'s OnceLock, so there is no getenv after
+        // threads exist on either side.
         .env(
             "GALORE2_THREADS",
             crate::parallel::default_threads().to_string(),

@@ -15,7 +15,7 @@
 //!
 //! The tall-matrix products (A·Ω, A·Qz, Aᵀ·Q) dominate the refresh cost at
 //! gradient scale; they run through the multi-threaded GEMM kernels
-//! (`tensor::matmul`), which fan row-panels across the scoped worker pool
+//! (`tensor::matmul`), which fan row-panels across the persistent worker pool
 //! above the size cutover while staying bitwise identical to serial — so
 //! `deterministic_given_rng_state` holds for every thread count.
 

@@ -1,4 +1,4 @@
-//! Scoped worker pool for the compute hot path (std-only, no rayon).
+//! Persistent worker pool for the compute hot path (std-only, no rayon).
 //!
 //! The GEMM kernels, the randomized-SVD range finder and the FSDP engine
 //! all fan work out through this module. Work units are *disjoint* `&mut`
@@ -11,19 +11,53 @@
 //!   1. an explicit per-call request (`MatmulPlan::threads` > 0),
 //!   2. a process-wide override via [`set_default_threads`]
 //!      (`[parallel] threads` in the config / `--threads` on the CLI),
-//!   3. the `GALORE2_THREADS` environment variable,
+//!   3. the `GALORE2_THREADS` environment variable (read ONCE, at first
+//!      resolution, into a `OnceLock` — never on the hot path),
 //!   4. `std::thread::available_parallelism()`.
 //!
-//! Threads are spawned with `std::thread::scope`, so borrowing inputs from
-//! the caller's stack needs no `Arc`s; spawn overhead (~tens of µs) is
-//! amortized by the serial-fallback size thresholds at the call sites.
+//! Execution goes through the persistent park/unpark pool in [`pool`]:
+//! long-lived workers are created lazily on first demand (and grow on
+//! demand after [`set_default_threads`] raises the budget), park on a
+//! condvar between parallel regions, and borrow the caller's stack through
+//! a bounded-lifetime region handoff — so `par_chunks_mut` keeps its
+//! scoped-borrow signature and call sites are unchanged. Dispatch costs a
+//! queue push + condvar wake (single-digit µs) instead of the ~tens-of-µs
+//! per-call `thread::scope` spawn the previous revision paid; the serial
+//! cutover at the call sites (`PAR_MIN_FLOPS` in `tensor/matmul.rs`) is
+//! re-tuned accordingly. [`set_pool_enabled`]`(false)` (config
+//! `[parallel] pool = false` / CLI `--pool false`) falls back to the
+//! scoped spawner, kept as [`par_chunks_mut_scoped`] both as an escape
+//! hatch and as the reference implementation benches compare against.
+
+mod pool;
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Process-wide thread-count override; 0 means "not set".
 static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether `par_chunks_mut` dispatches through the persistent pool
+/// (default) or the scoped per-call spawner.
+static POOL_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// `GALORE2_THREADS`, parsed exactly once per process. Re-reading the
+/// environment per call put a `getenv` on every kernel invocation — and a
+/// `getenv` racing a concurrent env mutation is the UB class the dist
+/// layer was scrubbed of (see `dist/process.rs`: children receive the
+/// value via `Command::env` at spawn, before this cell is first read).
+static ENV_THREADS: OnceLock<Option<usize>> = OnceLock::new();
+
+fn env_threads() -> Option<usize> {
+    *ENV_THREADS.get_or_init(|| {
+        // lint: allow(determinism): GALORE2_THREADS is resolved exactly once into a OnceLock at first use; set_default_threads is the only runtime override (hot-path getenv is what the rule bans)
+        std::env::var("GALORE2_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+    })
+}
 
 thread_local! {
     /// How many sibling compute threads share the machine with this one.
@@ -35,7 +69,9 @@ thread_local! {
 /// Declare that the *current thread* is one of `siblings` concurrent
 /// compute threads (e.g. an FSDP worker in a world of that size). Auto
 /// thread resolution on this thread divides the hardware budget
-/// accordingly; explicit per-call requests are unaffected.
+/// accordingly; explicit per-call requests are unaffected. The pool is
+/// process-wide, so the division keeps a world of workers submitting
+/// regions at a combined width of ~one machine's worth of threads.
 pub fn set_thread_share(siblings: usize) {
     THREAD_SHARE.with(|c| c.set(siblings.max(1)));
 }
@@ -48,8 +84,38 @@ pub fn available() -> usize {
 }
 
 /// Set the process-wide default worker count. 0 restores auto-detection.
+/// Raising the budget needs no pool restart: workers are spawned on
+/// demand, so the next parallel region grows the pool to the new width.
 pub fn set_default_threads(n: usize) {
     DEFAULT_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Route `par_chunks_mut` through the persistent pool (`true`, default)
+/// or the scoped per-call spawner (`false`). Both produce bitwise
+/// identical results; the knob exists for debugging and for benchmarking
+/// the dispatch cost difference (throughput §3b).
+pub fn set_pool_enabled(enabled: bool) {
+    POOL_ENABLED.store(enabled, Ordering::Relaxed);
+}
+
+/// Whether the persistent pool is the active dispatch path.
+pub fn pool_enabled() -> bool {
+    POOL_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Number of live pool workers (parked or busy). Zero until the first
+/// pooled region demands one, and again after [`shutdown_pool`].
+pub fn pool_size() -> usize {
+    pool::size()
+}
+
+/// Join every pool worker and return the process to its no-threads state.
+/// Safe to call at any time (in-flight regions finish first; concurrent
+/// submitters fall back to running serially); the pool restarts lazily on
+/// the next demand. Tests use this to pin exact `/proc/self/task` counts
+/// across kill→recover cycles.
+pub fn shutdown_pool() {
+    pool::shutdown();
 }
 
 /// The default worker count: override > `GALORE2_THREADS` > hardware,
@@ -61,11 +127,7 @@ pub fn default_threads() -> usize {
         if forced > 0 {
             forced
         } else {
-            std::env::var("GALORE2_THREADS")
-                .ok()
-                .and_then(|s| s.trim().parse::<usize>().ok())
-                .filter(|&n| n > 0)
-                .unwrap_or_else(available)
+            env_threads().unwrap_or_else(available)
         }
     };
     let share = THREAD_SHARE.with(|c| c.get()).max(1);
@@ -83,9 +145,11 @@ pub fn resolve(requested: usize) -> usize {
 
 /// Run `f(chunk_index, chunk)` over consecutive disjoint `chunk_len`-sized
 /// chunks of `data` (the last chunk may be short), using up to `threads`
-/// scoped OS threads. Chunks are handed out through a shared queue so
-/// uneven chunks still balance; since every chunk is an independent pure
-/// function of its index, scheduling order cannot affect the result.
+/// workers from the persistent pool (the calling thread is one of them).
+/// Chunks are handed out through a shared queue so uneven chunks still
+/// balance; since every chunk is an independent pure function of its
+/// index, scheduling order cannot affect the result — output is bitwise
+/// identical to serial for any thread count and either dispatch path.
 pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, threads: usize, f: F)
 where
     T: Send,
@@ -95,7 +159,7 @@ where
         return;
     }
     assert!(chunk_len > 0, "par_chunks_mut: chunk_len must be > 0");
-    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let n_chunks = data.len().div_ceil(chunk_len);
     let workers = threads.max(1).min(n_chunks);
     if workers <= 1 {
         for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
@@ -103,14 +167,47 @@ where
         }
         return;
     }
+    if !pool_enabled() {
+        par_chunks_mut_scoped(data, chunk_len, workers, f);
+        return;
+    }
+    // Region handoff: the chunk queue and `f` stay on this stack frame;
+    // the submitter and up to `workers - 1` pool workers all drain the
+    // queue. `run_region` does not return until every worker that touched
+    // this region is done with it, so the borrows below stay valid.
+    let queue = Mutex::new(data.chunks_mut(chunk_len).enumerate());
+    let f = &f;
+    let drain = move || loop {
+        // Hold the lock only for the hand-off, not the work.
+        let next = queue.lock().unwrap_or_else(|e| e.into_inner()).next();
+        match next {
+            Some((i, chunk)) => f(i, chunk),
+            None => break,
+        }
+    };
+    pool::run_region(&drain, workers - 1);
+}
+
+/// The pre-pool implementation: spawn `workers` scoped OS threads for this
+/// one region. Same chunk queue, same determinism guarantee; ~tens of µs
+/// of per-call spawn/join cost. Kept as the `pool = false` fallback and as
+/// the baseline throughput §3b measures the pool against.
+pub fn par_chunks_mut_scoped<T, F>(data: &mut [T], chunk_len: usize, workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "par_chunks_mut: chunk_len must be > 0");
     let queue = Mutex::new(data.chunks_mut(chunk_len).enumerate());
     let queue = &queue;
     let f = &f;
     std::thread::scope(|s| {
-        for _ in 0..workers {
+        for _ in 0..workers.max(1) {
             s.spawn(move || loop {
-                // Hold the lock only for the hand-off, not the work.
-                let next = queue.lock().unwrap().next();
+                let next = queue.lock().unwrap_or_else(|e| e.into_inner()).next();
                 match next {
                     Some((i, chunk)) => f(i, chunk),
                     None => break,
@@ -163,6 +260,84 @@ mod tests {
     fn empty_input_is_a_noop() {
         let mut data: Vec<u8> = Vec::new();
         par_chunks_mut(&mut data, 8, 4, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn pool_and_scoped_paths_agree_bitwise() {
+        // Same work, both dispatchers, byte-for-byte equal output. f32
+        // accumulation with a chunk-dependent seed would expose any
+        // reordering of per-chunk work.
+        let run = |scoped: bool| -> Vec<f32> {
+            let mut data = vec![0f32; 2048];
+            let body = |i: usize, chunk: &mut [f32]| {
+                let mut acc = (i as f32 + 1.0) * 0.37;
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    acc = acc * 1.000_1 + (j as f32) * 0.01;
+                    *x = acc;
+                }
+            };
+            if scoped {
+                par_chunks_mut_scoped(&mut data, 100, 4, body);
+            } else {
+                par_chunks_mut(&mut data, 100, 4, body);
+            }
+            data
+        };
+        let pooled = run(false);
+        let scoped = run(true);
+        assert_eq!(
+            pooled.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            scoped.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn pool_workers_park_and_are_reused() {
+        let mut data = vec![0u64; 4096];
+        par_chunks_mut(&mut data, 32, 4, |i, chunk| {
+            for x in chunk.iter_mut() {
+                *x = i as u64;
+            }
+        });
+        let after_first = pool_size();
+        assert!(after_first >= 1, "pooled region must have spawned workers");
+        for _ in 0..8 {
+            par_chunks_mut(&mut data, 32, 4, |i, chunk| {
+                for x in chunk.iter_mut() {
+                    *x += i as u64;
+                }
+            });
+        }
+        // Sequential same-width regions reuse the parked workers instead
+        // of growing the pool. (Other tests in this binary may run pooled
+        // regions concurrently, so allow growth up to their demand too —
+        // but never unbounded: cap at this binary's test-thread budget
+        // times the per-region width.)
+        assert!(
+            pool_size() >= after_first,
+            "pool must not shrink without shutdown"
+        );
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter_and_pool_survives() {
+        let caught = std::panic::catch_unwind(|| {
+            let mut data = vec![0u8; 1024];
+            par_chunks_mut(&mut data, 8, 4, |i, _| {
+                if i == 63 {
+                    panic!("boom in chunk 63");
+                }
+            });
+        });
+        assert!(caught.is_err(), "a chunk panic must reach the caller");
+        // The pool must still be serviceable afterwards.
+        let mut data = vec![0u32; 512];
+        par_chunks_mut(&mut data, 16, 4, |_, chunk| {
+            for x in chunk.iter_mut() {
+                *x = 7;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 7));
     }
 
     #[test]

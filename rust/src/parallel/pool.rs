@@ -1,0 +1,277 @@
+//! Persistent park/unpark worker pool behind [`super::par_chunks_mut`].
+//!
+//! The scoped predecessor spawned fresh OS threads for every parallel
+//! region — a ~tens-of-µs tax per GEMM/SVD call that forced a high serial
+//! cutover (`PAR_MIN_FLOPS`) and left GaLore's mid-sized projections
+//! single-threaded. Here workers are spawned lazily on first demand, then
+//! PARK on a condvar between regions; dispatching a region costs a queue
+//! push plus a wake (single-digit µs, measured by `pool_dispatch_noop_t4`
+//! in benches/throughput.rs §3b).
+//!
+//! ## Region protocol
+//!
+//! A *region* is one `par_chunks_mut` call. The caller's closure and the
+//! chunk queue live on the caller's stack; the pool only ever sees a
+//! type-erased `&'static (dyn Fn() + Sync)` pointing at them. That
+//! lifetime is a lie the [`RegionGuard`] makes true: the submitter
+//! enqueues a ticket with `extra` claimable worker slots, runs the task
+//! itself (so a region ALWAYS completes, even if no worker is free or the
+//! pool is shutting down), then — in the guard's `Drop`, so a panicking
+//! task cannot skip it — removes any unclaimed slots and blocks until
+//! every worker that DID claim the ticket has reported finished. Only
+//! then can the borrowed frame unwind, so a claimed pointer never
+//! dangles.
+//!
+//! ## Determinism
+//!
+//! The pool moves WHO executes a chunk, never WHAT a chunk computes:
+//! chunks remain independent pure functions of their index, handed out
+//! through the same mutex-serialized queue as the scoped version, so
+//! results stay bitwise identical to serial for any thread count and any
+//! scheduling (tests/determinism.rs pins this end to end).
+//!
+//! ## Shutdown
+//!
+//! [`shutdown`] parks no corpses: it flags the pool, wakes everyone, and
+//! JOINS every worker (in-flight regions finish first — workers only
+//! check the flag between regions). The pool restarts lazily on the next
+//! region, so kill→recover cycles and test harnesses can bound
+//! `/proc/self/task` exactly (tests/fault_tolerance.rs).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+/// Type-erased region task. The `'static` is synthesized by
+/// [`run_region`]; validity is guaranteed by the guard protocol above —
+/// a worker may only call it between claiming a ticket and incrementing
+/// `finished`, and must never touch it after.
+type Task = &'static (dyn Fn() + Sync);
+
+/// Per-region completion state, shared between the submitter and every
+/// claimant (heap-allocated, so it safely outlives queue removal).
+#[derive(Default)]
+struct RegionSync {
+    /// Workers that claimed a slot for this region. Incremented under the
+    /// pool mutex (so it can no longer grow once the ticket has left the
+    /// queue), read by the submitter after dequeue — hence atomic rather
+    /// than folded into `m`, which claimants touch without the pool lock.
+    claimed: AtomicUsize,
+    m: Mutex<RegionState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct RegionState {
+    finished: usize,
+    /// First worker panic, re-thrown on the submitting thread.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+/// A queued region with `slots` worker seats still unclaimed.
+struct Ticket {
+    task: Task,
+    sync: Arc<RegionSync>,
+    slots: usize,
+}
+
+#[derive(Default)]
+struct PoolState {
+    /// Set by [`shutdown`]; workers exit between regions, submitters stop
+    /// enqueuing (their regions run on the submitting thread alone).
+    shutdown: bool,
+    /// Workers currently executing a region task (claim → finish).
+    busy: usize,
+    queue: VecDeque<Ticket>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+#[derive(Default)]
+struct Shared {
+    m: Mutex<PoolState>,
+    /// Parked workers wait here for queue activity or shutdown.
+    work: Condvar,
+}
+
+static SHARED: OnceLock<Shared> = OnceLock::new();
+
+fn shared() -> &'static Shared {
+    SHARED.get_or_init(Shared::default)
+}
+
+/// Poison-tolerant lock: a panic inside a region task is caught and
+/// re-thrown on the submitter, so observing a poisoned mutex here is
+/// benign — the protected state is still consistent.
+fn lock(m: &Mutex<PoolState>) -> MutexGuard<'_, PoolState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `task` on the calling thread while up to `extra` pool workers run
+/// it concurrently. Every participant executes the same closure (which
+/// drains a shared chunk queue), so the region completes no matter how
+/// many workers actually pick it up. Worker panics are re-thrown here.
+pub(super) fn run_region(task: &(dyn Fn() + Sync), extra: usize) {
+    if extra == 0 {
+        task();
+        return;
+    }
+    let sync = Arc::new(RegionSync::default());
+    // Erase the stack lifetime. Sound because `RegionGuard` (dropped at
+    // the end of this function, panic or not) removes unclaimed slots and
+    // waits for all claimants before the frame can unwind.
+    let task: Task = unsafe {
+        std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync + 'static)>(task)
+    };
+    let enqueued = enqueue(task, &sync, extra);
+    let _guard = RegionGuard {
+        sync: &sync,
+        enqueued,
+    };
+    task();
+}
+
+/// Queue a ticket and make sure enough workers exist to claim it; returns
+/// false (nothing queued) when the pool is shutting down.
+fn enqueue(task: Task, sync: &Arc<RegionSync>, slots: usize) -> bool {
+    let sh = shared();
+    let mut st = lock(&sh.m);
+    if st.shutdown {
+        return false;
+    }
+    st.queue.push_back(Ticket {
+        task,
+        sync: Arc::clone(sync),
+        slots,
+    });
+    // Grow to current demand: every queued slot plus every busy worker
+    // wants a thread. Demand — not cumulative use — bounds the pool, and
+    // `set_thread_share` bounds demand at ~one machine's worth of threads
+    // across a distributed world.
+    let demand = st.queue.iter().map(|t| t.slots).sum::<usize>() + st.busy;
+    while st.handles.len() < demand {
+        let name = format!("galore2-pool-{}", st.handles.len());
+        match std::thread::Builder::new().name(name).spawn(worker_loop) {
+            Ok(h) => st.handles.push(h),
+            // Thread exhaustion: run the region with fewer workers.
+            Err(_) => break,
+        }
+    }
+    drop(st);
+    if slots == 1 {
+        sh.work.notify_one();
+    } else {
+        sh.work.notify_all();
+    }
+    true
+}
+
+fn worker_loop() {
+    let sh = shared();
+    loop {
+        let (task, sync) = {
+            let mut st = lock(&sh.m);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if !st.queue.is_empty() {
+                    break;
+                }
+                st = sh.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            let exhausted;
+            let (task, sync) = {
+                // Queue invariant: every queued ticket has slots > 0.
+                let t = st.queue.front_mut().expect("checked non-empty");
+                t.slots -= 1;
+                exhausted = t.slots == 0;
+                // Under the pool lock — see `RegionSync::claimed`.
+                t.sync.claimed.fetch_add(1, Ordering::SeqCst);
+                (t.task, Arc::clone(&t.sync))
+            };
+            if exhausted {
+                st.queue.pop_front();
+            }
+            st.busy += 1;
+            (task, sync)
+        };
+        // Run outside every lock. A panic in the region closure must kill
+        // neither this worker nor (silently) the region: capture it, hand
+        // it to the submitter.
+        let result = catch_unwind(AssertUnwindSafe(task));
+        // `task` must not be used past this point: once `finished` is
+        // published the submitter's frame may unwind.
+        {
+            let mut st = lock(&sh.m);
+            st.busy -= 1;
+        }
+        let mut rs = sync.m.lock().unwrap_or_else(|e| e.into_inner());
+        if let Err(payload) = result {
+            rs.panic.get_or_insert(payload);
+        }
+        rs.finished += 1;
+        sync.cv.notify_all();
+    }
+}
+
+/// Closes a region: pulls unclaimed slots out of the queue, waits for
+/// every claimant, then re-throws the first worker panic. Runs in `Drop`
+/// so a panic in the submitter's own share of the work still blocks until
+/// workers have released their borrows into the submitter's frame.
+struct RegionGuard<'a> {
+    sync: &'a Arc<RegionSync>,
+    enqueued: bool,
+}
+
+impl Drop for RegionGuard<'_> {
+    fn drop(&mut self) {
+        let sh = shared();
+        if self.enqueued {
+            let mut st = lock(&sh.m);
+            st.queue.retain(|t| !Arc::ptr_eq(&t.sync, self.sync));
+        }
+        // The ticket is out of the queue (or was never in it): `claimed`
+        // is final. Wait for the in-flight claimants.
+        let target = self.sync.claimed.load(Ordering::SeqCst);
+        let mut rs = self.sync.m.lock().unwrap_or_else(|e| e.into_inner());
+        while rs.finished < target {
+            rs = self.sync.cv.wait(rs).unwrap_or_else(|e| e.into_inner());
+        }
+        let worker_panic = rs.panic.take();
+        drop(rs);
+        if let Some(payload) = worker_panic {
+            if !std::thread::panicking() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
+/// Workers currently alive (parked or busy). Grows with demand, shrinks
+/// only via [`shutdown`].
+pub(super) fn size() -> usize {
+    lock(&shared().m).handles.len()
+}
+
+/// Stop and JOIN every pool worker. In-flight regions complete first
+/// (workers re-check the flag only between regions; submitters always
+/// drain their own queue). Regions submitted while the shutdown flag is
+/// up simply run on their submitting thread. The pool restarts lazily on
+/// the next demand after the join completes.
+pub(super) fn shutdown() {
+    let sh = shared();
+    let handles = {
+        let mut st = lock(&sh.m);
+        st.shutdown = true;
+        std::mem::take(&mut st.handles)
+    };
+    sh.work.notify_all();
+    for h in handles {
+        let _ = h.join();
+    }
+    let mut st = lock(&sh.m);
+    st.shutdown = false;
+    st.busy = 0;
+}

@@ -3,7 +3,7 @@
 //! The GaLore projection (R = PᵀG) and reprojection (G̃ = P·N) are BLAS-3
 //! calls on every layer every step — the L3 native-engine hot path. The
 //! kernels here use cache blocking + an 8-wide inner loop the compiler can
-//! vectorize, and partition disjoint row-panels of C across the scoped
+//! vectorize, and partition disjoint row-panels of C across the persistent
 //! worker pool (`crate::parallel`). Each thread writes its own `&mut`
 //! panel and accumulates every output element in exactly the serial order,
 //! so parallel results are **bitwise identical** to the single-threaded
@@ -18,9 +18,15 @@
 use super::Matrix;
 use crate::parallel;
 
-/// Below this many FLOPs (2·m·k·n) the kernels stay serial: thread spawn
-/// costs ~tens of µs, which only amortizes on matrices at least this big.
-const PAR_MIN_FLOPS: f64 = 4.0e6;
+/// Below this many FLOPs (2·m·k·n) the kernels stay serial. With the
+/// persistent pool, dispatching a region costs a queue push + condvar wake
+/// (single-digit µs, measured by throughput §3b `pool_dispatch_noop`) —
+/// down from the ~tens-of-µs scoped spawn that forced the old 4e6 cutover.
+/// At ~10 GFLOP/s serial, 3e5 FLOPs ≈ 30 µs of work, comfortably above
+/// the dispatch cost; the llama-micro projection pair (~2.9 MFLOP each)
+/// that the old threshold kept serial now parallelizes (throughput §3,
+/// EXPERIMENTS.md §Perf).
+const PAR_MIN_FLOPS: f64 = 3.0e5;
 
 /// Tuning parameters for the blocked GEMM. Block defaults were selected by
 /// the perf sweep in `benches/throughput.rs` (see EXPERIMENTS.md §Perf).

@@ -72,6 +72,9 @@ impl Trainer {
         cfg.validate()?;
         // Pin the compute pool before any kernel runs; 0 keeps auto-detect.
         crate::parallel::set_default_threads(cfg.threads);
+        // `--pool false` routes kernels through the scoped per-call
+        // spawner instead of the persistent pool (bitwise identical).
+        crate::parallel::set_pool_enabled(cfg.pool);
         // Spawn/handshake retry budget for the process transport
         // (`[dist] spawn_retries` / `--spawn-retries`).
         crate::dist::set_spawn_retries(cfg.spawn_retries);

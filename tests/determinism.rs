@@ -28,7 +28,9 @@ fn lock() -> std::sync::MutexGuard<'static, ()> {
 
 #[test]
 fn gemm_kernels_bitwise_identical_across_thread_counts() {
-    // Sizes above the parallel cutover (2·m·k·n ≥ 4e6 FLOP).
+    let _g = lock();
+    // Sizes above the parallel cutover (2·m·k·n ≥ PAR_MIN_FLOPS = 3e5),
+    // so every multi-thread row below runs through the persistent pool.
     let mut rng = Pcg64::new(21, 0);
     let a = Matrix::randn(320, 256, 1.0, &mut rng);
     let b = Matrix::randn(256, 288, 1.0, &mut rng);
@@ -55,6 +57,82 @@ fn gemm_kernels_bitwise_identical_across_thread_counts() {
             matmul_a_bt_with_plan(&x, &y, plan).data,
             serial_abt.data,
             "matmul_a_bt differs at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn sub_cutover_projection_gemms_parallelize_bitwise_through_pool() {
+    let _g = lock();
+    // llama-micro's 128x352 layer at rank 32: ~2.9 MFLOP per GEMM — the
+    // class the old scoped-spawn cutover (4e6) kept serial. With the
+    // persistent pool the cutover is 3e5, so these now parallelize; the
+    // bits must not notice, and the pool must actually engage.
+    let mut rng = Pcg64::new(23, 0);
+    let p = Matrix::randn(128, 32, 1.0, &mut rng);
+    let g = Matrix::randn(128, 352, 1.0, &mut rng);
+    let n = Matrix::randn(32, 352, 1.0, &mut rng);
+    let proj1 = matmul_at_b_with_plan(&p, &g, MatmulPlan::serial()); // R = PᵀG
+    let back1 = matmul_with_plan(&p, &n, MatmulPlan::serial()); // G̃ = P·N
+    for threads in [2usize, 4] {
+        let plan = MatmulPlan::with_threads(threads);
+        assert_eq!(
+            matmul_at_b_with_plan(&p, &g, plan).data,
+            proj1.data,
+            "micro projection differs at {threads} threads"
+        );
+        assert_eq!(
+            matmul_with_plan(&p, &n, plan).data,
+            back1.data,
+            "micro reprojection differs at {threads} threads"
+        );
+    }
+    assert!(
+        parallel::pool_size() >= 1,
+        "sub-old-cutover projection GEMMs must engage the persistent pool"
+    );
+}
+
+#[test]
+fn pool_workers_are_reused_across_sequential_engines() {
+    let _g = lock();
+    // Two identical FSDP runs back to back: the second must reuse the
+    // parked workers the first spawned, not grow the pool — and reuse
+    // must not perturb a single bit.
+    parallel::shutdown_pool();
+    assert_eq!(parallel::pool_size(), 0, "shutdown must leave no workers");
+    let first = run_fsdp_galore(4);
+    let after_first = parallel::pool_size();
+    assert!(after_first >= 1, "pooled FSDP run must spawn workers");
+    let second = run_fsdp_galore(4);
+    let after_second = parallel::pool_size();
+    // World 2 splitting a 4-thread budget needs at most 1 extra worker
+    // per rank; demand-driven growth must never exceed that.
+    assert!(
+        after_second <= 2,
+        "pool grew past the world-2 budget: {after_second} workers"
+    );
+    assert!(after_second >= after_first, "pool shrank without shutdown");
+    for (idx, (x, y)) in first.iter().zip(&second).enumerate() {
+        assert_eq!(x.data, y.data, "param {idx}: pool reuse perturbed bits");
+    }
+}
+
+#[test]
+fn thread_share_splits_pool_budget_under_fsdp_process_transport() {
+    let _g = lock();
+    // Process-transport children inherit the coordinator's 4-thread
+    // budget via GALORE2_THREADS at spawn (resolved once into their
+    // OnceLock) and split it by world (`set_thread_share(2)`), so each
+    // child runs width-2 kernels through its own persistent pool. The
+    // result must match a serial thread-transport run bit for bit.
+    set_worker_binary(env!("CARGO_BIN_EXE_galore2"));
+    let serial = run_fsdp_galore(1);
+    let pooled_process = run_fsdp_galore_over(4, TransportKind::Process);
+    for (idx, (x, y)) in serial.iter().zip(&pooled_process).enumerate() {
+        assert_eq!(
+            x.data, y.data,
+            "param {idx}: pooled process run diverged from serial threads run"
         );
     }
 }

@@ -22,7 +22,10 @@
 //!   attempt count;
 //! * repeated kill→recover cycles leak no worker threads (thread
 //!   transport) and no rendezvous socket directories (process
-//!   transport).
+//!   transport), with the persistent compute pool shut down on both
+//!   sides of the measurement so cluster threads are counted exactly;
+//! * `parallel::shutdown_pool` joins every pool worker (OS thread count
+//!   returns to baseline) and the pool restarts lazily afterwards.
 //!
 //! Fixtures mirror tests/transport.rs: every rank feeds rank 0's
 //! gradient stream, so shard averages are exact and runs stay
@@ -568,6 +571,12 @@ fn worker_tmp_dirs() -> usize {
 fn repeated_kill_recover_cycles_leak_no_threads() {
     let _g = lock();
     let spec = adamw_spec();
+    // Park no compute workers on either side of the measurement: the
+    // persistent pool is process-global and grows on demand, so joining
+    // it here pins the count to CLUSTER threads only — a leaked worker
+    // can't hide behind pool growth, and parked pool workers from other
+    // tests can't inflate the baseline.
+    galore2::parallel::shutdown_pool();
     let baseline = thread_count();
     for cycle in 0..3 {
         let out = supervised_run(
@@ -581,6 +590,12 @@ fn repeated_kill_recover_cycles_leak_no_threads() {
         .unwrap_or_else(|e| panic!("cycle {cycle}: {e}"));
         assert_eq!(out.recoveries, 1, "cycle {cycle}");
     }
+    galore2::parallel::shutdown_pool();
+    assert_eq!(
+        galore2::parallel::pool_size(),
+        0,
+        "pool shutdown must join every compute worker"
+    );
     // Each leaked panicked worker would add `world` threads per cycle;
     // allow a little slack for the test harness's own thread churn.
     let after = thread_count();
@@ -588,4 +603,46 @@ fn repeated_kill_recover_cycles_leak_no_threads() {
         after <= baseline + 2,
         "worker threads leaked across kill→recover cycles: {baseline} → {after}"
     );
+}
+
+#[test]
+fn pool_shutdown_joins_all_workers_and_pool_restarts() {
+    let _g = lock();
+    // Force the pool up with a wide parallel region, shut it down, and
+    // require the OS thread count to return to the pre-pool level — then
+    // prove the pool restarts lazily and still computes correctly.
+    galore2::parallel::shutdown_pool();
+    let baseline = thread_count();
+    let work = |data: &mut Vec<u64>| {
+        galore2::parallel::par_chunks_mut(data, 64, 4, |i, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (i * 1_000 + j) as u64;
+            }
+        });
+    };
+    let mut data = vec![0u64; 4096];
+    work(&mut data);
+    assert!(
+        galore2::parallel::pool_size() >= 1,
+        "wide region must spawn pool workers"
+    );
+    assert!(thread_count() > baseline, "pool workers must be real OS threads");
+    galore2::parallel::shutdown_pool();
+    assert_eq!(galore2::parallel::pool_size(), 0);
+    // Same slack as the kill→recover leak test: the harness's own test
+    // threads come and go; what may NOT remain is the pool's workers.
+    let after_shutdown = thread_count();
+    assert!(
+        after_shutdown <= baseline + 2,
+        "shutdown must JOIN pool workers, not abandon them: {baseline} → {after_shutdown}"
+    );
+    // Lazy restart: the same call works again and spawns fresh workers.
+    let mut again = vec![0u64; 4096];
+    work(&mut again);
+    assert_eq!(data, again, "pool restart must not change results");
+    assert!(
+        galore2::parallel::pool_size() >= 1,
+        "pool must restart on demand after shutdown"
+    );
+    galore2::parallel::shutdown_pool();
 }

@@ -113,6 +113,11 @@ fn each_rule_fires_on_a_seeded_violation() {
             "use std::collections::HashMap;",
         ),
         (
+            "determinism",
+            "parallel/bad.rs",
+            "fn t() -> Option<usize> { std::env::var(\"T\").ok()?.parse().ok() }",
+        ),
+        (
             "lock-across-collective",
             "train/bad.rs",
             "fn f(m: &M, c: &C) {\n    let g = m.lock();\n    c.barrier();\n    drop(g);\n}",
