@@ -13,6 +13,12 @@
 //!      cutover — the evidence behind the re-tuned `PAR_MIN_FLOPS`
 //!      (`pool_vs_scoped` in BENCH_throughput.json, grepped by CI);
 //!   4. collectives throughput (all-reduce / reduce-scatter / all-gather);
+//!   4b. cluster step over threads vs process transport (FSDP world 2) —
+//!      the gap is the per-step socket overhead (EXPERIMENTS.md §Transport);
+//!   4c. overlapped vs serial collectives: the same FSDP step at worlds
+//!      2/4 over both transports with the per-layer reduce pipeline on
+//!      vs off (`overlap_vs_serial` in BENCH_throughput.json, grepped by
+//!      CI) — the gap is hidden communication time (§Perf);
 //!   5. full train-step wall time per optimizer (artifact execution +
 //!      optimizer, one untimed warmup step so one-time pool/thread startup
 //!      stays out of the per-step figures) — the headline table in
@@ -99,6 +105,24 @@ fn write_report(b: &Bench, speedup_4t: Option<f64>, hidden: usize, rank: usize) 
         pool.set("micro_pool_speedup_4t", Json::num(t1 / t4));
     }
     report.set("pool_vs_scoped", pool);
+    // §4c summary: per-step wall time with the comm pipeline on vs off.
+    // Trajectories are bitwise identical either way, so speedup > 1 is
+    // pure hidden communication. CI greps for this key.
+    let mut overlap = Json::obj();
+    for world in [2usize, 4] {
+        for transport in ["threads", "process"] {
+            let serial = mean_of(b, &format!("clusterstep_fsdp{world}_{transport}_serial"));
+            let over = mean_of(b, &format!("clusterstep_fsdp{world}_{transport}_overlap"));
+            if let (Some(s), Some(o)) = (serial, over) {
+                let mut row = Json::obj();
+                row.set("serial_ns", Json::num(s))
+                    .set("overlap_ns", Json::num(o))
+                    .set("speedup", Json::num(s / o));
+                overlap.set(&format!("fsdp{world}_{transport}"), row);
+            }
+        }
+    }
+    report.set("overlap_vs_serial", overlap);
     std::fs::write("BENCH_throughput.json", report.to_pretty())?;
     println!("machine-readable report -> BENCH_throughput.json");
     Ok(())
@@ -317,6 +341,41 @@ fn main() -> anyhow::Result<()> {
     // The gap between the two rows IS the socket overhead per step
     // (serialize grads + relayed collectives) — paste per-host figures
     // into EXPERIMENTS.md §Transport.
+
+    println!("\n== 4c. overlapped vs serial collectives (FSDP worlds 2/4) ==");
+    // Same step, two schedules: serial runs every per-layer reduce inline
+    // on the worker; overlapped issues layer k+1's reduce to the rank's
+    // comm thread while layer k feeds the optimizer (dist/pipeline.rs).
+    // Bitwise-identical trajectories (tests/determinism.rs), so the gap
+    // between the rows is pure hidden communication time. The knob must
+    // be set BEFORE the cluster spawns — workers capture it at
+    // construction (process children via the GALORE2_OVERLAP env).
+    for world in [2usize, 4] {
+        for transport in [TransportKind::Threads, TransportKind::Process] {
+            for (mode, overlap) in [("serial", false), ("overlap", true)] {
+                galore2::dist::set_overlap_enabled(overlap);
+                let mut cluster = FsdpCluster::with_transport(
+                    world,
+                    fixtures::metas_for(cluster_shapes),
+                    galore2::dist::OptimizerSpec::AdamW(AdamCfg::default()),
+                    7,
+                    transport,
+                )
+                .expect("spawning overlap bench cluster");
+                cluster.init_params(&fixtures::randn_set(cluster_shapes, 0.1, 3, 0));
+                let mut t = 0u64;
+                b.run(
+                    &format!("clusterstep_fsdp{world}_{}_{mode}", transport.name()),
+                    || {
+                        let grads = fixtures::rank_grads(cluster_shapes, t, 0, 0.05);
+                        cluster.step(t, vec![grads; world], 1e-3);
+                        t += 1;
+                    },
+                );
+            }
+        }
+    }
+    galore2::dist::set_overlap_enabled(true);
 
     println!("\n== 5. full train step (llama-nano, artifact + optimizer) ==");
     if !artifacts.join("manifest_llama-nano.json").exists() {

@@ -108,6 +108,12 @@ pub struct TrainConfig {
     /// worker OS processes over Unix-domain sockets. Trajectories are
     /// bitwise identical across transports (tests/transport.rs).
     pub transport: TransportKind,
+    /// Overlap per-layer collectives with optimizer compute via each
+    /// rank's comm thread (`[dist] overlap` / `--overlap`; default true).
+    /// `false` keeps every collective inline on the worker — the serial
+    /// bitwise reference. Same trajectory either way
+    /// (tests/determinism.rs pins overlap-on == overlap-off).
+    pub overlap: bool,
     pub engine: Engine,
     /// What to do when a worker rank dies mid-run (`[train] on_failure` /
     /// `--on-failure abort|respawn|shrink`). Non-abort policies rebuild
@@ -162,6 +168,7 @@ impl Default for TrainConfig {
             threads: 0,
             pool: true,
             transport: TransportKind::Threads,
+            overlap: true,
             engine: Engine::Native,
             on_failure: OnFailure::Abort,
             snapshot_every: 50,
@@ -230,6 +237,7 @@ impl TrainConfig {
             pool: doc.bool_or("parallel", "pool", d.pool),
             transport: TransportKind::parse(&doc.str_or("dist", "transport", "threads"))
                 .map_err(|e| anyhow::anyhow!(e))?,
+            overlap: doc.bool_or("dist", "overlap", d.overlap),
             engine: Engine::parse(&doc.str_or("train", "engine", "native"))?,
             on_failure: OnFailure::parse(&doc.str_or("train", "on_failure", "abort"))
                 .map_err(|e| anyhow::anyhow!(e))?,
@@ -284,6 +292,7 @@ impl TrainConfig {
         self.world = args.usize_or("world", self.world);
         self.threads = args.usize_or("threads", self.threads);
         self.pool = args.bool_or("pool", self.pool);
+        self.overlap = args.bool_or("overlap", self.overlap);
         if let Some(mode) = args.get("parallel") {
             self.parallel = ParallelMode::parse(mode)?;
         }
@@ -437,6 +446,7 @@ pool = false
 
 [dist]
 transport = "process"
+overlap = false
 "#;
 
     fn write_sample(name: &str, body: &str) -> std::path::PathBuf {
@@ -463,6 +473,8 @@ transport = "process"
         assert!(!c.pool, "[parallel] pool = false must disable the pool");
         assert!(TrainConfig::default().pool, "pool defaults on");
         assert_eq!(c.transport, TransportKind::Process);
+        assert!(!c.overlap, "[dist] overlap = false must select serial");
+        assert!(TrainConfig::default().overlap, "overlap defaults on");
         std::fs::remove_file(path).ok();
     }
 
@@ -474,6 +486,16 @@ transport = "process"
             Args::parse("train --pool false".split_whitespace().map(String::from)).unwrap();
         c.apply_cli(&args).unwrap();
         assert!(!c.pool, "--pool false must select the scoped fallback");
+    }
+
+    #[test]
+    fn overlap_flag_parses_from_cli() {
+        let mut c = TrainConfig::default();
+        assert!(c.overlap);
+        let args =
+            Args::parse("train --overlap false".split_whitespace().map(String::from)).unwrap();
+        c.apply_cli(&args).unwrap();
+        assert!(!c.overlap, "--overlap false must select serial collectives");
     }
 
     #[test]

@@ -47,7 +47,9 @@ impl StepObserver for ConsoleObserver {
             StepEvent::RecoveryComplete { resume_step, world } => {
                 println!("[recover] recovered — resuming at step {resume_step} on {world} rank(s)");
             }
-            StepEvent::Train { .. } => {}
+            // Train points go through Metrics; the per-step timing
+            // firehose is too chatty for the console.
+            StepEvent::Train { .. } | StepEvent::StepTimed { .. } => {}
         }
     }
 }

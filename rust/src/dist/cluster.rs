@@ -71,7 +71,7 @@ pub(crate) fn record_failure(cell: &FailureCell, rank: usize, cause: String) {
 }
 
 /// Render a caught panic payload for failure attribution.
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -134,6 +134,18 @@ pub struct MemoryReport {
     pub peak_transient_bytes: usize,
     /// f32 elements moved through collectives by this rank.
     pub traffic_elems: u64,
+}
+
+/// Per-step timing one rank measured while serving a `Step` command —
+/// the payload of `StepEvent::StepTimed` and the overlap benches.
+/// `comm_ns` is *worker-blocked* communication time (the comm cost the
+/// pipeline failed to hide; under the serial schedule, full collective
+/// latency); `compute_ns` is the rest of the step wall time.
+/// Observability only — never feeds back into the trajectory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    pub comm_ns: u64,
+    pub compute_ns: u64,
 }
 
 /// Which dimension a parameter is sharded along (always the *longer* one —
@@ -247,6 +259,12 @@ pub trait Worker: 'static {
     fn import_state(&mut self, bytes: &[u8]) -> Result<(), String>;
 
     fn report(&self) -> MemoryReport;
+
+    /// Timing of this rank's most recent step (default: all zeros, for
+    /// workers that do not measure).
+    fn last_step_timing(&self) -> StepTiming {
+        StepTiming::default()
+    }
 }
 
 pub(crate) enum Cmd {
@@ -262,7 +280,7 @@ pub(crate) enum Cmd {
 }
 
 pub(crate) enum Reply {
-    StepDone,
+    StepDone { comm_ns: u64, compute_ns: u64 },
     Params(Vec<Matrix>),
     OptState(Vec<u8>),
     ImportDone(Result<(), String>),
@@ -287,7 +305,11 @@ pub(crate) fn handle_cmd<W: Worker>(w: &mut W, cmd: Cmd) -> Served {
         }
         Cmd::Step { t, lr, grads } => {
             w.step(t, lr, grads);
-            Served::Reply(Reply::StepDone)
+            let timing = w.last_step_timing();
+            Served::Reply(Reply::StepDone {
+                comm_ns: timing.comm_ns,
+                compute_ns: timing.compute_ns,
+            })
         }
         Cmd::Params => Served::Reply(Reply::Params(w.params())),
         Cmd::ExportOpt => Served::Reply(Reply::OptState(w.export_state())),
@@ -434,6 +456,9 @@ pub struct Cluster<W: Worker> {
     /// First-failure-wins (rank, cause) record written by whichever party
     /// observes a worker death first (thread panic handler, process relay).
     failure: FailureCell,
+    /// Rank-max timing of the most recent successful step (None before
+    /// the first step).
+    last_timing: Option<StepTiming>,
     _mode: PhantomData<fn() -> W>,
 }
 
@@ -498,6 +523,7 @@ impl<W: Worker> Cluster<W> {
             socket_path,
             spec_name,
             failure,
+            last_timing: None,
             _mode: PhantomData,
         })
     }
@@ -587,9 +613,18 @@ impl<W: Worker> Cluster<W> {
         // (barrier poison / relay socket drop), so their links close
         // rather than hang, and skipping them would desynchronize the
         // protocol for any rank that did survive.
+        let mut timing = StepTiming::default();
         for (rank, link) in self.links.iter().enumerate() {
             match link.try_recv() {
-                Ok(Reply::StepDone) => {}
+                Ok(Reply::StepDone {
+                    comm_ns,
+                    compute_ns,
+                }) => {
+                    // Rank-max of each component: the step is lockstep, so
+                    // the slowest rank's stall is the step's stall.
+                    timing.comm_ns = timing.comm_ns.max(comm_ns);
+                    timing.compute_ns = timing.compute_ns.max(compute_ns);
+                }
                 Ok(_) => unreachable!("protocol error: expected StepDone"),
                 Err(e) => {
                     first_err.get_or_insert((rank, e));
@@ -597,9 +632,19 @@ impl<W: Worker> Cluster<W> {
             }
         }
         match first_err {
-            None => Ok(()),
+            None => {
+                self.last_timing = Some(timing);
+                Ok(())
+            }
             Some((rank, cause)) => Err(self.classify(rank, cause)),
         }
+    }
+
+    /// Timing of the most recent successful [`Cluster::step`] /
+    /// [`Cluster::try_step`] (rank-max per component); `None` before the
+    /// first step.
+    pub fn last_step_timing(&self) -> Option<StepTiming> {
+        self.last_timing
     }
 
     /// Attribute a link-level failure to the rank that actually died:

@@ -24,7 +24,8 @@
 //! accounting; they count the modeled wire cost, not the bytes a
 //! particular transport happens to move.
 
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 /// A rendezvous fabric connecting the ranks of one world.
@@ -42,10 +43,22 @@ pub trait Transport: Send {
     /// Collective rendezvous. `reduce` sees every rank's contribution in
     /// rank order; its return value becomes this rank's result. The slot
     /// table may be reused afterwards — `reduce` must copy what it keeps.
+    ///
+    /// `need` is a per-rank *delivery hint*: `Some((lo, hi))` promises
+    /// that this rank's `reduce` only reads elements `[lo, hi)` of every
+    /// contribution, so the transport may deliver just that subrange —
+    /// the slices handed to `reduce` are then the `[lo, hi)` windows
+    /// (length `hi − lo`), re-indexed from 0. `None` delivers the full
+    /// contributions. Purely an optimization: the *elements* any reduce
+    /// reads, and the order it combines them in, are identical either
+    /// way, so results stay bitwise independent of the hint. The process
+    /// transport uses it to ship reduce-scatter replies at the ring-model
+    /// byte cost instead of the full w·n slot table.
     fn exchange(
         &mut self,
         data: Vec<f32>,
-        reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
+        need: Option<(usize, usize)>,
+        reduce: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
     ) -> Vec<f32>;
 
     /// Pure synchronization point: returns once every rank has entered.
@@ -207,7 +220,8 @@ impl Transport for ThreadTransport {
     fn exchange(
         &mut self,
         data: Vec<f32>,
-        reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
+        need: Option<(usize, usize)>,
+        reduce: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
     ) -> Vec<f32> {
         // Poison-tolerant for the same reason as PoisonBarrier: slot
         // writes are rank-disjoint, so a peer's panic never leaves OUR
@@ -218,7 +232,12 @@ impl Transport for ThreadTransport {
         self.wait_or_die();
         let result = {
             let slots = self.shared.slots.read().unwrap_or_else(|e| e.into_inner());
-            reduce(&slots)
+            let views: Vec<&[f32]> = match need {
+                // lint: allow(no-panic-dist): ranged exchanges are issued in lockstep with equal-length deposits — Comm asserts offsets cover the vector before issuing
+                Some((lo, hi)) => slots.iter().map(|s| &s[lo..hi]).collect(),
+                None => slots.iter().map(|s| s.as_slice()).collect(),
+            };
+            reduce(&views)
         };
         // Second barrier wave: after this, slots may be overwritten.
         self.wait_or_die();
@@ -228,6 +247,18 @@ impl Transport for ThreadTransport {
     fn barrier(&mut self) {
         self.wait_or_die();
     }
+}
+
+/// One reified collective request — the unit `dist/pipeline.rs` queues so
+/// a dedicated comm thread can run layer k+1's exchange while the worker
+/// consumes layer k's result. Running a `Collective` through [`Comm::run`]
+/// performs exactly the call the matching `Comm` method would, so queuing
+/// changes WHEN a collective executes, never WHAT it computes.
+pub(crate) enum Collective {
+    AllReduceSum(Vec<f32>),
+    ReduceScatterSum(Vec<f32>, Vec<usize>),
+    AllGather(Vec<f32>),
+    Broadcast(usize, Option<Vec<f32>>),
 }
 
 /// A worker's handle onto the collective group. Cheap to move into its
@@ -240,8 +271,10 @@ pub struct Comm {
     /// loop borrows its shards mutably alongside the comm handle); a Comm
     /// is owned by exactly one worker and never shared by reference.
     transport: RefCell<Box<dyn Transport>>,
-    /// Elements moved per rank (ring-collective cost model).
-    traffic: Cell<u64>,
+    /// Elements moved per rank (ring-collective cost model). Shared
+    /// (`Arc`) so a worker can keep reading its counters after handing
+    /// the Comm itself to a pipeline comm thread ([`Comm::traffic_probe`]).
+    traffic: Arc<AtomicU64>,
 }
 
 impl Comm {
@@ -264,7 +297,7 @@ impl Comm {
             rank,
             world,
             transport: RefCell::new(transport),
-            traffic: Cell::new(0),
+            traffic: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -278,19 +311,43 @@ impl Comm {
 
     /// Elements this rank has moved through collectives so far.
     pub fn traffic_elems(&self) -> u64 {
-        self.traffic.get()
+        self.traffic.load(Ordering::Relaxed)
+    }
+
+    /// A handle onto the traffic counter that stays readable after the
+    /// Comm moves into a pipeline comm thread. Reads are synchronized by
+    /// the pipeline's result handoff (a worker only reports counters
+    /// between steps, with the pipeline drained).
+    pub(crate) fn traffic_probe(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.traffic)
     }
 
     fn add_traffic(&self, elems: u64) {
-        self.traffic.set(self.traffic.get() + elems);
+        self.traffic.fetch_add(elems, Ordering::Relaxed);
+    }
+
+    /// Execute one reified collective request (the pipeline comm thread's
+    /// single entry point). Dispatches to the exact method a serial caller
+    /// would have invoked — traffic accounting and reduction order
+    /// included.
+    pub(crate) fn run(&self, c: Collective) -> Vec<f32> {
+        match c {
+            Collective::AllReduceSum(data) => self.all_reduce_sum(data),
+            Collective::ReduceScatterSum(data, offsets) => {
+                self.reduce_scatter_sum(data, &offsets)
+            }
+            Collective::AllGather(data) => self.all_gather(data),
+            Collective::Broadcast(root, data) => self.broadcast(root, data),
+        }
     }
 
     fn exchange(
         &self,
         data: Vec<f32>,
-        reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
+        need: Option<(usize, usize)>,
+        reduce: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
     ) -> Vec<f32> {
-        self.transport.borrow_mut().exchange(data, reduce)
+        self.transport.borrow_mut().exchange(data, need, reduce)
     }
 
     /// Elementwise sum of every rank's `data` in fixed tree order; all
@@ -298,11 +355,11 @@ impl Comm {
     pub fn all_reduce_sum(&self, data: Vec<f32>) -> Vec<f32> {
         let n = data.len();
         let w = self.world;
-        let mut reduce = |slots: &[Vec<f32>]| {
+        let mut reduce = |slots: &[&[f32]]| {
             debug_assert!(slots.iter().all(|s| s.len() == n), "ragged all_reduce");
-            tree_sum(slots, 0, n)
+            tree_sum(slots)
         };
-        let result = self.exchange(data, &mut reduce);
+        let result = self.exchange(data, None, &mut reduce);
         self.add_traffic((2 * (w - 1) * n / w.max(1)) as u64);
         result
     }
@@ -310,14 +367,20 @@ impl Comm {
     /// Sum across ranks, then return only this rank's shard. `offsets` has
     /// world+1 entries (element boundaries); rank r receives
     /// `[offsets[r], offsets[r+1])` of the reduced vector.
+    ///
+    /// Issued as a *ranged* exchange: the transport only has to deliver
+    /// `[lo, hi)` of each contribution, so the tree sum runs directly over
+    /// this rank's windows — same elements, same fixed combination order,
+    /// bitwise identical to summing full vectors and slicing after.
     pub fn reduce_scatter_sum(&self, data: Vec<f32>, offsets: &[usize]) -> Vec<f32> {
         let n = data.len();
         let w = self.world;
         assert_eq!(offsets.len(), w + 1, "offsets must have world+1 entries");
         assert_eq!(offsets[w], n, "offsets must cover the full vector");
         let (lo, hi) = (offsets[self.rank], offsets[self.rank + 1]);
-        let mut reduce = |slots: &[Vec<f32>]| tree_sum(slots, lo, hi);
-        let result = self.exchange(data, &mut reduce);
+        assert!(lo <= hi && hi <= n, "offsets must be monotone within the vector");
+        let mut reduce = |slots: &[&[f32]]| tree_sum(slots);
+        let result = self.exchange(data, Some((lo, hi)), &mut reduce);
         self.add_traffic(((w - 1) * n / w.max(1)) as u64);
         result
     }
@@ -326,7 +389,7 @@ impl Comm {
     /// identical concatenation. Shards may have different lengths.
     pub fn all_gather(&self, shard: Vec<f32>) -> Vec<f32> {
         let own = shard.len();
-        let mut concat = |slots: &[Vec<f32>]| {
+        let mut concat = |slots: &[&[f32]]| {
             let total: usize = slots.iter().map(|s| s.len()).sum();
             let mut out = Vec::with_capacity(total);
             for s in slots.iter() {
@@ -334,7 +397,7 @@ impl Comm {
             }
             out
         };
-        let result = self.exchange(shard, &mut concat);
+        let result = self.exchange(shard, None, &mut concat);
         self.add_traffic((result.len() - own) as u64);
         result
     }
@@ -348,8 +411,8 @@ impl Comm {
             self.rank == root,
             "broadcast: exactly the root provides data"
         );
-        let mut pick = |slots: &[Vec<f32>]| slots[root].clone();
-        let result = self.exchange(data.unwrap_or_default(), &mut pick);
+        let mut pick = |slots: &[&[f32]]| slots[root].to_vec();
+        let result = self.exchange(data.unwrap_or_default(), None, &mut pick);
         if self.rank != root {
             self.add_traffic(result.len() as u64);
         }
@@ -362,14 +425,14 @@ impl Comm {
     }
 }
 
-/// Sum `slots[r][e0..e1]` over ranks r with a fixed stride-doubling tree:
+/// Sum `slots[r]` over ranks r with a fixed stride-doubling tree:
 /// pass 1 combines (0,1), (2,3), …; pass 2 combines (0,2), (4,6), …; and
 /// so on. Every caller runs the identical FP operation sequence, so the
 /// reduction is associativity-safe: bitwise reproducible regardless of
 /// which rank computes first — and regardless of the transport that
 /// delivered the slots.
-fn tree_sum(slots: &[Vec<f32>], e0: usize, e1: usize) -> Vec<f32> {
-    let mut bufs: Vec<Vec<f32>> = slots.iter().map(|s| s[e0..e1].to_vec()).collect();
+fn tree_sum(slots: &[&[f32]]) -> Vec<f32> {
+    let mut bufs: Vec<Vec<f32>> = slots.iter().map(|s| s.to_vec()).collect();
     let mut stride = 1;
     while stride < bufs.len() {
         let mut i = 0;

@@ -18,8 +18,9 @@
 //! plus the replica-specific surface; [`run_ddp`] remains as the
 //! closure-driven harness the dist tests use.
 
-use super::cluster::{Cluster, MemoryReport, ParamMeta, Worker};
-use super::comm::Comm;
+use super::cluster::{Cluster, MemoryReport, ParamMeta, StepTiming, Worker};
+use super::comm::{Collective, Comm};
+use super::pipeline::{monotonic_ns, overlap_enabled, CommDriver};
 use super::{BuildTarget, OptimizerSpec, WorkerOpt};
 use crate::tensor::Matrix;
 
@@ -31,10 +32,13 @@ pub type DdpCluster = Cluster<DdpWorker>;
 pub struct DdpWorker {
     world: usize,
     rank: usize,
-    comm: Comm,
+    comm: CommDriver,
     opt: WorkerOpt,
     params: Vec<Matrix>,
     peak_transient: usize,
+    /// Timing of the most recent step (worker-blocked comm vs the rest),
+    /// surfaced through `Worker::last_step_timing`.
+    last_timing: StepTiming,
 }
 
 impl Worker for DdpWorker {
@@ -63,10 +67,11 @@ impl Worker for DdpWorker {
         DdpWorker {
             world,
             rank,
-            comm,
+            comm: CommDriver::new(comm, overlap_enabled()),
             opt,
             params: Vec::new(),
             peak_transient: 0,
+            last_timing: StepTiming::default(),
         }
     }
 
@@ -76,20 +81,47 @@ impl Worker for DdpWorker {
 
     fn step(&mut self, t: u64, lr: f32, grads: Vec<Matrix>) {
         assert_eq!(grads.len(), self.params.len(), "init_params before step");
+        let wall0 = monotonic_ns();
         self.opt.as_opt().begin_step(t);
         let scale = 1.0 / self.world as f32;
-        for (idx, g) in grads.into_iter().enumerate() {
+        // Issue-ahead + consume-in-order: layer idx+1's all-reduce is in
+        // flight while layer idx's averaged gradient feeds `step_param`
+        // (`dist/pipeline.rs`; fixed-tree order within each layer is
+        // untouched, so the overlap is bitwise invisible). The in-flight
+        // layer's buffer is charged to `peak_transient` identically in
+        // serial and overlapped mode.
+        let sizes: Vec<usize> = grads.iter().map(|g| g.data.len()).collect();
+        let mut grads = grads.into_iter();
+        if let Some(g) = grads.next() {
+            self.comm.issue(Collective::AllReduceSum(g.data));
+        }
+        for idx in 0..sizes.len() {
+            let extra = if idx + 1 < sizes.len() {
+                if let Some(g) = grads.next() {
+                    self.comm.issue(Collective::AllReduceSum(g.data));
+                }
+                sizes[idx + 1] * 4
+            } else {
+                0
+            };
             let (r, c) = self.params[idx].shape();
             // Per-layer fused update: the reduced gradient is consumed and
-            // dropped before the next layer's all-reduce (Fig. 2).
-            self.peak_transient = self.peak_transient.max(2 * g.data.len() * 4);
-            let mut avg = self.comm.all_reduce_sum(g.data);
+            // dropped before the NEXT-next layer's all-reduce (Fig. 2, with
+            // one layer of lookahead).
+            self.peak_transient = self.peak_transient.max(2 * sizes[idx] * 4 + extra);
+            let mut avg = self.comm.wait();
             for x in avg.iter_mut() {
                 *x *= scale;
             }
             let avg = Matrix::from_vec(r, c, avg);
             self.opt.as_opt().step_param(idx, &mut self.params[idx], &avg, lr);
         }
+        let comm_ns = self.comm.take_comm_ns();
+        let wall = monotonic_ns() - wall0;
+        self.last_timing = StepTiming {
+            comm_ns,
+            compute_ns: wall.saturating_sub(comm_ns),
+        };
     }
 
     fn params(&self) -> Vec<Matrix> {
@@ -115,6 +147,10 @@ impl Worker for DdpWorker {
             peak_transient_bytes: self.peak_transient,
             traffic_elems: self.comm.traffic_elems(),
         }
+    }
+
+    fn last_step_timing(&self) -> StepTiming {
+        self.last_timing
     }
 }
 

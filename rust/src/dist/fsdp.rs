@@ -7,9 +7,17 @@
 //!   wide  W (m ≤ n): P is m×r (left), shard columns → R = Pᵀ·G_shard
 //!   tall  W (m > n): P is n×r (right), shard rows   → R = G_shard·P
 //!
-//! Per-layer fused update (Fig. 2): each layer's gradient is reduced and
-//! consumed immediately, so at most one full-size gradient buffer is live
-//! per worker at a time (tracked in `peak_transient_bytes`).
+//! Per-layer fused update (Fig. 2), pipelined: the step loop issues layer
+//! k+1's reduce to the rank's comm thread (`dist/pipeline.rs`) before
+//! consuming layer k's shard in `step_param`, hiding collective latency
+//! behind optimizer compute. Consumption stays strictly in issue order and
+//! the fixed-tree order within each layer is untouched, so the schedule
+//! change is bitwise invisible; at most TWO full-size gradient buffers are
+//! live per worker (the consumed layer plus the in-flight one — the extra
+//! buffer is charged in `peak_transient_bytes` identically in serial and
+//! overlapped mode). Refresh layers gate the lookahead: their subspace
+//! broadcast must be the next collective in FIFO order, so the following
+//! layer is issued only after the broadcast completes.
 //!
 //! Subspace refreshes (§4.3): on refresh steps the full averaged gradient
 //! is materialized on every rank (all-reduce), the leader computes the
@@ -26,13 +34,15 @@
 
 use super::cluster::{
     assemble, shard_axis, shard_bounds, slice_shard, Cluster, MemoryReport, ParamMeta, ShardAxis,
-    Worker,
+    StepTiming, Worker,
 };
-use super::comm::Comm;
+use super::comm::{Collective, Comm};
+use super::pipeline::{monotonic_ns, overlap_enabled, CommDriver};
 use super::{BuildTarget, OptimizerSpec, WorkerOpt};
 use crate::optim::{Projector, ProjectorSide};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg64;
+use std::collections::VecDeque;
 
 /// A world of persistent workers (threads or processes, per
 /// [`super::TransportKind`]) with sharded optimizer state.
@@ -42,7 +52,7 @@ pub type FsdpCluster = Cluster<FsdpWorker>;
 pub struct FsdpWorker {
     rank: usize,
     world: usize,
-    comm: Comm,
+    comm: CommDriver,
     metas: Vec<ParamMeta>,
     galore: Option<crate::optim::GaLoreCfg>,
     opt: WorkerOpt,
@@ -51,6 +61,9 @@ pub struct FsdpWorker {
     /// order is fixed by the step/param loop).
     svd_rng: Pcg64,
     peak_transient: usize,
+    /// Timing of the most recent step (worker-blocked comm vs the rest),
+    /// surfaced through `Worker::last_step_timing`.
+    last_timing: StepTiming,
 }
 
 impl Worker for FsdpWorker {
@@ -78,7 +91,7 @@ impl Worker for FsdpWorker {
         FsdpWorker {
             rank,
             world,
-            comm,
+            comm: CommDriver::new(comm, overlap_enabled()),
             metas,
             galore,
             opt,
@@ -88,6 +101,7 @@ impl Worker for FsdpWorker {
             // bitwise (tests/engine_parity.rs pins this).
             svd_rng: Pcg64::new(seed, 0x6a10),
             peak_transient: 0,
+            last_timing: StepTiming::default(),
         }
     }
 
@@ -116,104 +130,61 @@ impl Worker for FsdpWorker {
 
     fn step(&mut self, t: u64, lr: f32, grads: Vec<Matrix>) {
         assert_eq!(grads.len(), self.shards.len(), "init_params before step");
+        let wall0 = monotonic_ns();
         self.opt.as_opt().begin_step(t);
         let scale = 1.0 / self.world as f32;
-        for (idx, grad) in grads.into_iter().enumerate() {
-            let (m, n) = (self.metas[idx].rows, self.metas[idx].cols);
-            assert_eq!(grad.shape(), (m, n), "{}: bad grad shape", self.metas[idx].name);
-            let axis = shard_axis(m, n);
-            let len = match axis {
-                ShardAxis::Rows => m,
-                ShardAxis::Cols => n,
-            };
-            let (lo, hi) = shard_bounds(len, self.world, self.rank);
 
-            let projects = self.galore.map_or(false, |g| g.projects(m, n));
-            let refresh = projects
-                && (t % self.galore.unwrap().update_freq == 0
-                    || !self.opt.has_projector(idx));
+        // The whole step's refresh schedule, decided up front (needed to
+        // gate the lookahead below). Valid to precompute: layer idx's
+        // `preset_projector` only ever changes `has_projector(idx)` for
+        // idx itself, and the serial schedule checks before installing.
+        let refresh: Vec<bool> = (0..grads.len())
+            .map(|idx| {
+                let (m, n) = (self.metas[idx].rows, self.metas[idx].cols);
+                let projects = self.galore.map_or(false, |g| g.projects(m, n));
+                projects
+                    && (t % self.galore.unwrap().update_freq == 0
+                        || !self.opt.has_projector(idx))
+            })
+            .collect();
 
-            let mut transient;
-            let shard_grad = if refresh {
-                // Refresh step: materialize the full averaged gradient on
-                // every rank, leader computes the SVD, P is broadcast.
-                let mut full =
-                    Matrix::from_vec(m, n, self.comm.all_reduce_sum(grad.data));
-                full.scale(scale);
-                transient = full.numel() * 4;
-                let g = self.galore.unwrap();
-                let side = if m <= n {
-                    ProjectorSide::Left
-                } else {
-                    ProjectorSide::Right
-                };
-                // The wire carries the projector's exact stored
-                // representation (codes + block scales for quantized
-                // kinds) so every rank installs the leader's P
-                // bit-for-bit — re-quantizing dequantized values would
-                // let replicas drift from a single-process run.
-                let proj = if self.rank == 0 {
-                    let proj =
-                        Projector::from_gradient(&full, g.rank, g.projection, &mut self.svd_rng);
-                    self.comm.broadcast(0, Some(proj.encode_wire()));
-                    proj
-                } else {
-                    let words = self.comm.broadcast(0, None);
-                    Projector::decode_wire(&words, side, g.projection)
-                };
-                transient += proj.nbytes();
-                if let Some(gal) = self.opt.galore_mut() {
-                    gal.preset_projector(idx, proj);
-                }
-                slice_shard(&full, axis, lo, hi)
-            } else {
-                match axis {
-                    ShardAxis::Rows => {
-                        // Row shards are contiguous in row-major order —
-                        // a true reduce-scatter, no full buffer needed.
-                        let offsets: Vec<usize> = (0..=self.world)
-                            .map(|r| (r * m / self.world) * n)
-                            .collect();
-                        let mut sh = self.comm.reduce_scatter_sum(grad.data, &offsets);
-                        for x in sh.iter_mut() {
-                            *x *= scale;
-                        }
-                        transient = sh.len() * 4;
-                        Matrix::from_vec(hi - lo, n, sh)
-                    }
-                    ShardAxis::Cols => {
-                        // Column shards interleave in row-major memory, but
-                        // the TRANSPOSED gradient makes them contiguous
-                        // rows — so a true reduce-scatter applies here too,
-                        // cutting this path from the all-reduce's
-                        // 2·(w−1)/w·n traffic to (w−1)/w·n like the row
-                        // path. Bitwise-safe: the fixed-tree sum is
-                        // elementwise across ranks, so transposing first
-                        // only permutes element POSITIONS, never any
-                        // element's cross-rank summation order.
-                        let gt = grad.transpose();
-                        drop(grad);
-                        let offsets: Vec<usize> = (0..=self.world)
-                            .map(|r| (r * n / self.world) * m)
-                            .collect();
-                        let mut sh = self.comm.reduce_scatter_sum(gt.data, &offsets);
-                        for x in sh.iter_mut() {
-                            *x *= scale;
-                        }
-                        // The full-size transpose copy is still the peak
-                        // buffer on this path (traffic shrank; memory
-                        // didn't).
-                        transient = m * n * 4;
-                        Matrix::from_vec(hi - lo, m, sh).transpose()
-                    }
-                }
-            };
-            self.peak_transient = self.peak_transient.max(transient + shard_grad.numel() * 4);
-            // Per-layer fused update: step now, drop the gradient buffers.
-            self.opt
-                .as_opt()
-                .step_param(idx, &mut self.shards[idx], &shard_grad, lr);
+        // Issue-ahead + consume-in-order: layer k+1's reduce is in flight
+        // while layer k's shard feeds `step_param`. Identical issue order
+        // on every rank (the refresh flags are deterministic and
+        // lockstep), so pipelined collectives pair up rank-for-rank.
+        let mut queue: VecDeque<(usize, Matrix)> = grads.into_iter().enumerate().collect();
+        let mut issued: VecDeque<Pending> = VecDeque::new();
+        if let Some((idx, grad)) = queue.pop_front() {
+            issued.push_back(self.issue_layer(idx, grad, refresh[idx]));
         }
+        while let Some(p) = issued.pop_front() {
+            // A refresh layer's subspace broadcast must be the next
+            // collective in FIFO order — defer the lookahead until after
+            // the broadcast has run (inside consume_layer).
+            if !p.refresh {
+                if let Some((idx, grad)) = queue.pop_front() {
+                    issued.push_back(self.issue_layer(idx, grad, refresh[idx]));
+                }
+            }
+            // The in-flight layer's gradient is buffered in the pipeline
+            // while this layer is consumed — charge it. `issued` holds at
+            // most one entry here (queue depth 2), and the charge is
+            // schedule-determined, so serial mode reports identical peaks.
+            let extra: usize = issued.iter().map(|q| q.bytes).sum();
+            self.consume_layer(&p, extra, scale, lr);
+            if p.refresh {
+                if let Some((idx, grad)) = queue.pop_front() {
+                    issued.push_back(self.issue_layer(idx, grad, refresh[idx]));
+                }
+            }
+        }
+
+        let comm_ns = self.comm.take_comm_ns();
+        let wall = monotonic_ns() - wall0;
+        self.last_timing = StepTiming {
+            comm_ns,
+            compute_ns: wall.saturating_sub(comm_ns),
+        };
     }
 
     fn params(&self) -> Vec<Matrix> {
@@ -245,6 +216,157 @@ impl Worker for FsdpWorker {
             peak_transient_bytes: self.peak_transient,
             traffic_elems: self.comm.traffic_elems(),
         }
+    }
+
+    fn last_step_timing(&self) -> StepTiming {
+        self.last_timing
+    }
+}
+
+/// One issued-but-not-yet-consumed layer: everything `consume_layer` needs
+/// to interpret the comm thread's eventual reply.
+struct Pending {
+    idx: usize,
+    refresh: bool,
+    axis: ShardAxis,
+    m: usize,
+    n: usize,
+    lo: usize,
+    hi: usize,
+    /// Full-gradient footprint held by the pipeline while the reduce is in
+    /// flight, charged to the consuming layer's transient peak.
+    bytes: usize,
+}
+
+impl FsdpWorker {
+    /// Issue layer `idx`'s reduce to the comm pipeline and record what the
+    /// eventual reply means. The collective CHOICE here is exactly the
+    /// serial schedule's; only the await moves to `consume_layer`.
+    fn issue_layer(&self, idx: usize, grad: Matrix, refresh: bool) -> Pending {
+        let (m, n) = (self.metas[idx].rows, self.metas[idx].cols);
+        assert_eq!(grad.shape(), (m, n), "{}: bad grad shape", self.metas[idx].name);
+        let axis = shard_axis(m, n);
+        let len = match axis {
+            ShardAxis::Rows => m,
+            ShardAxis::Cols => n,
+        };
+        let (lo, hi) = shard_bounds(len, self.world, self.rank);
+        let bytes = m * n * 4;
+        if refresh {
+            // Refresh step: materialize the full averaged gradient on every
+            // rank (the leader SVDs it and broadcasts P in consume_layer).
+            self.comm.issue(Collective::AllReduceSum(grad.data));
+        } else {
+            match axis {
+                ShardAxis::Rows => {
+                    // Row shards are contiguous in row-major order — a true
+                    // reduce-scatter, no full buffer needed.
+                    let offsets: Vec<usize> = (0..=self.world)
+                        .map(|r| (r * m / self.world) * n)
+                        .collect();
+                    self.comm
+                        .issue(Collective::ReduceScatterSum(grad.data, offsets));
+                }
+                ShardAxis::Cols => {
+                    // Column shards interleave in row-major memory, but the
+                    // TRANSPOSED gradient makes them contiguous rows — so a
+                    // true reduce-scatter applies here too, cutting this
+                    // path from the all-reduce's 2·(w−1)/w·n traffic to
+                    // (w−1)/w·n like the row path. Bitwise-safe: the
+                    // fixed-tree sum is elementwise across ranks, so
+                    // transposing first only permutes element POSITIONS,
+                    // never any element's cross-rank summation order.
+                    let gt = grad.transpose();
+                    drop(grad);
+                    let offsets: Vec<usize> = (0..=self.world)
+                        .map(|r| (r * n / self.world) * m)
+                        .collect();
+                    self.comm
+                        .issue(Collective::ReduceScatterSum(gt.data, offsets));
+                }
+            }
+        }
+        Pending {
+            idx,
+            refresh,
+            axis,
+            m,
+            n,
+            lo,
+            hi,
+            bytes,
+        }
+    }
+
+    /// Await layer `p`'s reduced result, finish the local math, and run the
+    /// fused optimizer update. `extra` charges the in-flight lookahead
+    /// layer's gradient buffer to this layer's transient peak.
+    fn consume_layer(&mut self, p: &Pending, extra: usize, scale: f32, lr: f32) {
+        let (m, n) = (p.m, p.n);
+        let mut transient;
+        let shard_grad = if p.refresh {
+            let mut full = Matrix::from_vec(m, n, self.comm.wait());
+            full.scale(scale);
+            transient = full.numel() * 4;
+            let g = self.galore.unwrap();
+            let side = if m <= n {
+                ProjectorSide::Left
+            } else {
+                ProjectorSide::Right
+            };
+            // The wire carries the projector's exact stored
+            // representation (codes + block scales for quantized
+            // kinds) so every rank installs the leader's P
+            // bit-for-bit — re-quantizing dequantized values would
+            // let replicas drift from a single-process run. The
+            // pipeline queue is drained here (refresh layers defer
+            // the lookahead), so `run` issues the broadcast as the
+            // next collective in FIFO order on every rank.
+            let proj = if self.rank == 0 {
+                let proj =
+                    Projector::from_gradient(&full, g.rank, g.projection, &mut self.svd_rng);
+                self.comm
+                    .run(Collective::Broadcast(0, Some(proj.encode_wire())));
+                proj
+            } else {
+                let words = self.comm.run(Collective::Broadcast(0, None));
+                Projector::decode_wire(&words, side, g.projection)
+            };
+            transient += proj.nbytes();
+            if let Some(gal) = self.opt.galore_mut() {
+                gal.preset_projector(p.idx, proj);
+            }
+            slice_shard(&full, p.axis, p.lo, p.hi)
+        } else {
+            match p.axis {
+                ShardAxis::Rows => {
+                    let mut sh = self.comm.wait();
+                    for x in sh.iter_mut() {
+                        *x *= scale;
+                    }
+                    transient = sh.len() * 4;
+                    Matrix::from_vec(p.hi - p.lo, n, sh)
+                }
+                ShardAxis::Cols => {
+                    let mut sh = self.comm.wait();
+                    for x in sh.iter_mut() {
+                        *x *= scale;
+                    }
+                    // The full-size transpose copy made at issue time is
+                    // still the peak buffer on this path (traffic shrank;
+                    // memory didn't).
+                    transient = m * n * 4;
+                    Matrix::from_vec(p.hi - p.lo, m, sh).transpose()
+                }
+            }
+        };
+        self.peak_transient = self
+            .peak_transient
+            .max(transient + shard_grad.numel() * 4 + extra);
+        // Per-layer fused update: step now, drop the gradient buffers.
+        self.opt
+            .as_opt()
+            .step_param(p.idx, &mut self.shards[p.idx], &shard_grad, lr);
     }
 }
 

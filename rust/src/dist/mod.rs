@@ -39,13 +39,17 @@ pub(crate) mod cluster;
 mod comm;
 mod ddp;
 mod fsdp;
+mod pipeline;
 mod process;
 pub(crate) mod wire;
 
-pub use cluster::{Cluster, MemoryReport, ParamMeta, TransportKind, Worker, WorkerLoss};
+pub use cluster::{
+    Cluster, MemoryReport, ParamMeta, StepTiming, TransportKind, Worker, WorkerLoss,
+};
 pub use comm::{Comm, ThreadTransport, Transport};
 pub use ddp::{run_ddp, DdpCluster, DdpWorker};
 pub use fsdp::{FsdpCluster, FsdpWorker};
+pub use pipeline::set_overlap_enabled;
 pub use process::{
     run_worker, set_spawn_retries, set_test_crash_hooks, set_worker_binary, WORKER_BIN_ENV,
 };

@@ -1,0 +1,454 @@
+//! Depth-2 per-layer collective pipeline: hide gradient traffic behind
+//! compute.
+//!
+//! The serial FSDP/DDP step interleaves one collective and one optimizer
+//! update per layer, so every rank idles for the full (w−1)/w·n transfer
+//! of every layer. Layers are independent tensors, which makes the fix
+//! purely a *scheduling* change: give each rank a dedicated comm thread
+//! (the condvar park/unpark pattern of `parallel/pool.rs`) draining a
+//! bounded FIFO of [`Collective`] requests, and let the worker issue
+//! layer k+1's reduce while it consumes layer k's shard in `step_param`.
+//!
+//! ## Determinism
+//!
+//! The pipeline moves WHEN a collective executes, never WHAT it computes.
+//! Requests run strictly FIFO on one thread per rank, each through the
+//! exact `Comm` collective the serial schedule would have run, with the
+//! fixed-tree reduction order within each layer untouched — so results
+//! are bitwise identical to the serial schedule for every optimizer,
+//! world size, and transport (tests/determinism.rs pins this end to end).
+//! Queue depth [`DEPTH`] = 2 bounds the extra live gradient to one layer
+//! (charged in `peak_transient` by the workers).
+//!
+//! ## Failure model
+//!
+//! A peer death surfaces inside the comm thread (poisoned barrier on the
+//! thread transport, socket EOF on the process transport). The serve loop
+//! catches it, parks the message in the shared state, and wakes the
+//! worker, whose next `issue`/`wait` re-raises it — the same prompt named
+//! death signal the serial path produces, never a hang. Dropping the
+//! pipeline joins the comm thread: any in-flight exchange either
+//! completes (healthy peers run the same deterministic issue schedule, so
+//! they match every request a dead rank managed to issue) or dies
+//! promptly once the peer's transport poisons/closes.
+
+use super::cluster::panic_message;
+use super::comm::{Collective, Comm};
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, RwLock};
+use std::thread::JoinHandle;
+// lint: allow(determinism): Instant is confined to monotonic_ns below — timing is observability-only, never control flow
+use std::time::Instant;
+
+/// Maximum collectives issued but not yet consumed. Two means layer k+1's
+/// reduce is in flight while layer k's shard is consumed — more depth
+/// buys nothing (the wire is already saturated) and costs a gradient
+/// buffer per slot.
+const DEPTH: usize = 2;
+
+/// Nanoseconds since an arbitrary process-local origin. All step timing
+/// (worker-blocked comm time, step wall time) reads this one clock, so
+/// every `Instant` in the distributed runtime lives on these two lines.
+pub(crate) fn monotonic_ns() -> u64 {
+    // lint: allow(determinism): monotonic origin for observability-only step timing
+    static START: OnceLock<Instant> = OnceLock::new();
+    // lint: allow(determinism): timing feeds StepTimed events and benches, never control flow
+    START.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Process-wide overlap knob (`[dist] overlap` / `--overlap`, default
+/// on). Thread-safe like `process::set_spawn_retries` — no `env::set_var`
+/// involved; the process transport forwards it to worker processes via a
+/// spawn-time environment variable instead.
+pub fn set_overlap_enabled(enabled: bool) {
+    *overlap_cell().write().unwrap() = enabled;
+}
+
+pub(crate) fn overlap_enabled() -> bool {
+    *overlap_cell().read().unwrap()
+}
+
+fn overlap_cell() -> &'static RwLock<bool> {
+    static OVERLAP: RwLock<bool> = RwLock::new(true);
+    &OVERLAP
+}
+
+struct PipeState {
+    requests: VecDeque<Collective>,
+    results: VecDeque<Vec<f32>>,
+    /// Issued but not yet consumed by [`CommPipeline::wait`] (counts both
+    /// queued requests and finished-but-unclaimed results).
+    in_flight: usize,
+    shutdown: bool,
+    /// First comm-thread death, re-raised on the worker thread.
+    failed: Option<String>,
+}
+
+struct PipeShared {
+    m: Mutex<PipeState>,
+    /// Comm thread parks here for requests or shutdown.
+    work: Condvar,
+    /// Worker parks here for results, free depth, or failure.
+    done: Condvar,
+}
+
+/// Poison-tolerant lock: a panic while holding the pipe mutex leaves the
+/// queues consistent (every transition is a single push/pop).
+fn lock(m: &Mutex<PipeState>) -> MutexGuard<'_, PipeState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One rank's comm thread plus the queue feeding it. The `Comm` moves
+/// into the thread; the worker keeps only this handle.
+struct CommPipeline {
+    shared: Arc<PipeShared>,
+    handle: Option<JoinHandle<()>>,
+    rank: usize,
+}
+
+impl CommPipeline {
+    fn spawn(comm: Comm) -> CommPipeline {
+        let rank = comm.rank();
+        let shared = Arc::new(PipeShared {
+            m: Mutex::new(PipeState {
+                requests: VecDeque::new(),
+                results: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+                failed: None,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let shared2 = Arc::clone(&shared);
+        let handle = std::thread::Builder::new()
+            .name(format!("g2-comm-{rank}"))
+            .spawn(move || serve(comm, shared2))
+            // Thread exhaustion at worker construction — before any
+            // collective is in flight — is an ordinary fatal resource
+            // error, reported through the same death-signal path.
+            .unwrap_or_else(|e| panic!("rank {rank}: spawning comm thread failed: {e}"));
+        CommPipeline {
+            shared,
+            handle: Some(handle),
+            rank,
+        }
+    }
+
+    /// Enqueue a collective; blocks while [`DEPTH`] requests are already
+    /// outstanding (bounding extra live gradients to one layer).
+    fn issue(&self, c: Collective) {
+        let mut st = lock(&self.shared.m);
+        loop {
+            if let Some(msg) = &st.failed {
+                let (msg, rank) = (msg.clone(), self.rank);
+                drop(st);
+                // lint: allow(no-panic-dist): re-raising the comm thread's death IS the death signal — cluster::serve catches it and records the rank into the FailureCell
+                panic!("rank {rank}: comm pipeline failed: {msg}");
+            }
+            if st.in_flight < DEPTH {
+                break;
+            }
+            st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.in_flight += 1;
+        st.requests.push_back(c);
+        drop(st);
+        self.shared.work.notify_one();
+    }
+
+    /// Claim the oldest finished collective's result (strict FIFO with
+    /// [`CommPipeline::issue`]); blocks until it lands or the comm thread
+    /// reports a death.
+    fn wait(&self) -> Vec<f32> {
+        let mut st = lock(&self.shared.m);
+        loop {
+            if let Some(r) = st.results.pop_front() {
+                st.in_flight -= 1;
+                drop(st);
+                // A depth slot freed: an issue blocked on DEPTH may go.
+                self.shared.done.notify_all();
+                return r;
+            }
+            if let Some(msg) = &st.failed {
+                let (msg, rank) = (msg.clone(), self.rank);
+                drop(st);
+                // lint: allow(no-panic-dist): re-raising the comm thread's death IS the death signal — cluster::serve catches it and records the rank into the FailureCell
+                panic!("rank {rank}: comm pipeline failed: {msg}");
+            }
+            st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+impl Drop for CommPipeline {
+    /// Joins the comm thread. In-flight requests finish first (peers run
+    /// the same deterministic issue schedule, so every issued exchange
+    /// gets matched — or dies promptly when a dead peer's transport
+    /// poisons/closes); queued-but-unstarted requests are abandoned.
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.m);
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The comm thread's whole life: pop a request, run it OUTSIDE the lock,
+/// publish the result; on a caught collective panic (peer death), park
+/// the message for the worker and exit. Dropping `comm` on exit releases
+/// the transport (poisoning the thread-transport barrier / closing the
+/// process-transport socket), which is what unblocks any peers still
+/// inside a collective.
+fn serve(comm: Comm, shared: Arc<PipeShared>) {
+    loop {
+        let req = {
+            let mut st = lock(&shared.m);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(r) = st.requests.pop_front() {
+                    break r;
+                }
+                st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| comm.run(req)));
+        let mut st = lock(&shared.m);
+        match result {
+            Ok(v) => {
+                st.results.push_back(v);
+                drop(st);
+                shared.done.notify_all();
+            }
+            Err(payload) => {
+                st.failed.get_or_insert(panic_message(payload.as_ref()));
+                drop(st);
+                shared.done.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// The worker-facing issue/await surface over a `Comm`, in one of two
+/// modes sharing one API so the FSDP/DDP step loops have a single
+/// issue-ahead/consume-in-order shape:
+///
+/// * **Serial** (`--overlap false`, and the bitwise reference in tests):
+///   `issue` runs the collective inline and buffers the result; `wait`
+///   pops it. Exactly the pre-pipeline schedule.
+/// * **Overlapped** (default): requests go to the rank's comm thread;
+///   `issue` returns as soon as a depth slot is free.
+///
+/// Also accumulates *worker-blocked* communication time: serial mode
+/// counts full collective latency, overlapped mode counts only the time
+/// the worker actually stalled in `issue`/`wait` — i.e. the comm cost the
+/// pipeline failed to hide, which is exactly the number the overlap
+/// benches and `StepTimed` events want.
+pub(crate) struct CommDriver {
+    kind: DriverKind,
+    comm_ns: Cell<u64>,
+}
+
+enum DriverKind {
+    Serial {
+        comm: Comm,
+        ready: RefCell<VecDeque<Vec<f32>>>,
+    },
+    Overlapped {
+        pipe: CommPipeline,
+        rank: usize,
+        world: usize,
+        traffic: Arc<AtomicU64>,
+    },
+}
+
+impl CommDriver {
+    pub(crate) fn new(comm: Comm, overlap: bool) -> CommDriver {
+        let kind = if overlap && comm.world() > 1 {
+            DriverKind::Overlapped {
+                rank: comm.rank(),
+                world: comm.world(),
+                traffic: comm.traffic_probe(),
+                pipe: CommPipeline::spawn(comm),
+            }
+        } else {
+            DriverKind::Serial {
+                comm,
+                ready: RefCell::new(VecDeque::new()),
+            }
+        };
+        CommDriver {
+            kind,
+            comm_ns: Cell::new(0),
+        }
+    }
+
+    pub(crate) fn rank(&self) -> usize {
+        match &self.kind {
+            DriverKind::Serial { comm, .. } => comm.rank(),
+            DriverKind::Overlapped { rank, .. } => *rank,
+        }
+    }
+
+    pub(crate) fn world(&self) -> usize {
+        match &self.kind {
+            DriverKind::Serial { comm, .. } => comm.world(),
+            DriverKind::Overlapped { world, .. } => *world,
+        }
+    }
+
+    /// Elements moved through collectives so far (the modeled,
+    /// transport-uniform counter — identical in both modes).
+    pub(crate) fn traffic_elems(&self) -> u64 {
+        match &self.kind {
+            DriverKind::Serial { comm, .. } => comm.traffic_elems(),
+            DriverKind::Overlapped { traffic, .. } => {
+                traffic.load(std::sync::atomic::Ordering::Relaxed)
+            }
+        }
+    }
+
+    /// Submit the next collective of this rank's fixed per-step schedule.
+    pub(crate) fn issue(&self, c: Collective) {
+        let t0 = monotonic_ns();
+        match &self.kind {
+            DriverKind::Serial { comm, ready } => ready.borrow_mut().push_back(comm.run(c)),
+            DriverKind::Overlapped { pipe, .. } => pipe.issue(c),
+        }
+        self.comm_ns.set(self.comm_ns.get() + (monotonic_ns() - t0));
+    }
+
+    /// Consume the oldest issued collective's result (strict FIFO).
+    pub(crate) fn wait(&self) -> Vec<f32> {
+        let t0 = monotonic_ns();
+        let r = match &self.kind {
+            DriverKind::Serial { ready, .. } => ready
+                .borrow_mut()
+                .pop_front()
+                // lint: allow(no-panic-dist): wait-without-issue is a schedule bug on THIS rank, caught in tests — not a peer-death path
+                .expect("CommDriver::wait called with nothing issued"),
+            DriverKind::Overlapped { pipe, .. } => pipe.wait(),
+        };
+        self.comm_ns.set(self.comm_ns.get() + (monotonic_ns() - t0));
+        r
+    }
+
+    /// Issue-and-wait in one call, for collectives that are ordering
+    /// barriers in the step schedule anyway (the SVD-refresh subspace
+    /// broadcast). Callers guarantee the queue is drained at this point,
+    /// keeping the FIFO trivially aligned.
+    pub(crate) fn run(&self, c: Collective) -> Vec<f32> {
+        self.issue(c);
+        self.wait()
+    }
+
+    /// Worker-blocked communication nanoseconds since the last call
+    /// (read-and-reset; the workers call this once per step).
+    pub(crate) fn take_comm_ns(&self) -> u64 {
+        self.comm_ns.replace(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drivers(world: usize, overlap: bool) -> Vec<CommDriver> {
+        Comm::create_world(world)
+            .into_iter()
+            .map(|c| CommDriver::new(c, overlap))
+            .collect()
+    }
+
+    /// The pipeline is a scheduling change only: the workers' issue-one-
+    /// ahead/consume-in-order loop gives bitwise the results of the serial
+    /// inline schedule. (Issuing MORE than [`DEPTH`] ahead of the waits
+    /// would block by design — the depth bound is what caps the extra
+    /// live gradient at one layer.)
+    #[test]
+    fn pipelined_collectives_match_serial() {
+        let layers: Vec<Vec<f32>> = (0..5)
+            .map(|l| (0..8).map(|i| (l * 8 + i) as f32 * 0.37 + 0.1).collect())
+            .collect();
+        let run = |overlap: bool| -> Vec<Vec<Vec<f32>>> {
+            let world = 2;
+            let layers = layers.clone();
+            std::thread::scope(|s| {
+                let handles: Vec<_> = drivers(world, overlap)
+                    .into_iter()
+                    .map(|d| {
+                        let layers = layers.clone();
+                        s.spawn(move || {
+                            let mk = |l: usize| {
+                                let data: Vec<f32> =
+                                    layers[l].iter().map(|x| x + d.rank() as f32).collect();
+                                if l % 2 == 0 {
+                                    Collective::AllReduceSum(data)
+                                } else {
+                                    Collective::ReduceScatterSum(data, vec![0, 3, 8])
+                                }
+                            };
+                            // The production shape: layer l+1's reduce is
+                            // issued before layer l's result is consumed.
+                            d.issue(mk(0));
+                            let mut out = Vec::with_capacity(layers.len());
+                            for l in 0..layers.len() {
+                                if l + 1 < layers.len() {
+                                    d.issue(mk(l + 1));
+                                }
+                                out.push(d.wait());
+                            }
+                            out
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        let overlapped = run(true);
+        let serial = run(false);
+        for (rank, (o, s)) in overlapped.iter().zip(&serial).enumerate() {
+            for (l, (a, b)) in o.iter().zip(s).enumerate() {
+                let (a, b): (Vec<u32>, Vec<u32>) = (
+                    a.iter().map(|x| x.to_bits()).collect(),
+                    b.iter().map(|x| x.to_bits()).collect(),
+                );
+                assert_eq!(a, b, "rank {rank} layer {l}: overlap changed bits");
+            }
+        }
+    }
+
+    /// A peer dying mid-pipeline turns into a prompt named panic on the
+    /// survivor's next wait — never a hang — and dropping the survivor's
+    /// driver joins its comm thread cleanly.
+    #[test]
+    fn failed_peer_turns_into_prompt_error() {
+        let mut ds = drivers(2, true);
+        let survivor = ds.remove(0);
+        let dead = ds.remove(0);
+        // The peer issues nothing and dies: its Drop joins an idle comm
+        // thread, and the released transport poisons the shared barrier.
+        drop(dead);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            survivor.issue(Collective::AllReduceSum(vec![1.0, 2.0]));
+            survivor.wait()
+        }))
+        .expect_err("survivor must not succeed after peer death");
+        let msg = panic_message(err.as_ref());
+        assert!(
+            msg.contains("comm pipeline failed"),
+            "unattributed death: {msg}"
+        );
+        drop(survivor);
+    }
+}

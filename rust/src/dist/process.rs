@@ -10,10 +10,14 @@
 //!   cluster protocol (`dist/wire.rs`), driven by the coordinator, and
 //! * a **comm** connection carrying collective payloads, serviced by a
 //!   dedicated relay thread in the coordinator process: per exchange it
-//!   reads one frame from every rank and writes the full slot table back
-//!   to every rank. The worker-side [`ProcessTransport`] then runs the
-//!   same fixed-tree reduction the threaded transport runs, so results
-//!   are **bitwise identical** to `--transport threads`.
+//!   reads one headered frame from every rank, then writes each sender's
+//!   contribution back to every rank — sliced down to the receiver's
+//!   requested element window for ranged exchanges (reduce-scatter asks
+//!   only for its own slot range, cutting reply bytes from w·n to n), or
+//!   whole for full exchanges. The worker-side [`ProcessTransport`] then
+//!   runs the same fixed-tree reduction the threaded transport runs over
+//!   the delivered windows, so results are **bitwise identical** to
+//!   `--transport threads`.
 //!
 //! Spawn handshake (deadline-bounded, child-exit aware — a worker that
 //! dies or never connects is an error, not a hang):
@@ -78,6 +82,11 @@ fn worker_bin_override() -> &'static RwLock<Option<PathBuf>> {
     static OVERRIDE: RwLock<Option<PathBuf>> = RwLock::new(None);
     &OVERRIDE
 }
+
+/// Propagates the coordinator's overlap knob (`[dist] overlap` /
+/// `--overlap`) into worker processes: set via `Command::env` at spawn,
+/// read exactly once by `serve_worker` before any comm thread exists.
+const OVERLAP_ENV: &str = "GALORE2_OVERLAP";
 
 /// Test-only fault injection: a worker whose rank matches the value exits
 /// before answering `Ready` (handshake failure path) …
@@ -325,6 +334,16 @@ fn spawn_rank(
             "GALORE2_THREADS",
             crate::parallel::default_threads().to_string(),
         )
+        // Workers must run the same schedule (pipelined or serial) as a
+        // thread-transport world would — the knob rides the environment.
+        .env(
+            OVERLAP_ENV,
+            if super::pipeline::overlap_enabled() {
+                "1"
+            } else {
+                "0"
+            },
+        )
         .stdin(Stdio::null());
     if consume_setup_crash(rank) {
         cmd.env(CRASH_SETUP_ENV, rank.to_string());
@@ -532,19 +551,26 @@ fn establish(
 }
 
 /// The coordinator-side collective hub: one round per exchange — read one
-/// frame from every rank (rank order; sockets buffer early senders), then
-/// write the full slot table to every rank. Exits on the first socket
-/// error/EOF, DROPPING every stream: that is what unblocks surviving
-/// workers when one rank dies (their reads fail instead of waiting
-/// forever). The errored rank is recorded into the shared failure cell
-/// FIRST, so the coordinator blames the rank that actually died rather
-/// than the first victim whose control link it happens to poll.
+/// headered frame from every rank (rank order; sockets buffer early
+/// senders), then write every sender's contribution back to each rank,
+/// sliced down to that receiver's requested element window (ranged
+/// exchanges carry `[lo, hi)` in their header; full exchanges get the
+/// whole body). Slicing happens hub-side, so a reduce-scatter reply costs
+/// n elements instead of w·n — and because each rank still receives the
+/// windows of ALL ranks in rank order, the fixed-tree reduction order is
+/// untouched and results stay bitwise identical. Exits on the first
+/// socket error/EOF, DROPPING every stream: that is what unblocks
+/// surviving workers when one rank dies (their reads fail instead of
+/// waiting forever). The errored rank is recorded into the shared failure
+/// cell FIRST, so the coordinator blames the rank that actually died
+/// rather than the first victim whose control link it happens to poll.
 fn relay_loop(mut streams: Vec<UnixStream>, failure: FailureCell) {
     loop {
         let mut frames: Vec<Vec<u8>> = Vec::with_capacity(streams.len());
+        let mut needs: Vec<Option<(usize, usize)>> = Vec::with_capacity(streams.len());
         for (rank, s) in streams.iter_mut().enumerate() {
-            match wire::read_frame(s) {
-                Ok(f) => frames.push(f),
+            let frame = match wire::read_frame(s) {
+                Ok(f) => f,
                 Err(e) => {
                     record_failure(
                         &failure,
@@ -553,11 +579,42 @@ fn relay_loop(mut streams: Vec<UnixStream>, failure: FailureCell) {
                     );
                     return;
                 }
+            };
+            match wire::decode_comm_header(&frame) {
+                Ok((need, _)) => needs.push(need),
+                Err(e) => {
+                    record_failure(
+                        &failure,
+                        rank,
+                        format!("malformed collective frame ({e}) — check its stderr"),
+                    );
+                    return;
+                }
             }
+            frames.push(frame);
         }
-        for (rank, s) in streams.iter_mut().enumerate() {
+        for (rank, (s, need)) in streams.iter_mut().zip(&needs).enumerate() {
             for f in &frames {
-                if let Err(e) = wire::write_frame(s, f) {
+                // Receiver windows index into peer bodies; ranks issue
+                // collectives in lockstep with equal-length payloads, so a
+                // miss means a corrupt/desynced peer — a named error.
+                let (a, b) = match need {
+                    Some((lo, hi)) => (wire::COMM_HDR_LEN + lo * 4, wire::COMM_HDR_LEN + hi * 4),
+                    None => (wire::COMM_HDR_LEN, f.len()),
+                };
+                let Some(reply) = f.get(a..b) else {
+                    record_failure(
+                        &failure,
+                        rank,
+                        format!(
+                            "collective window [{a}, {b}) exceeds a peer's {}-byte frame — \
+                             ranks desynced",
+                            f.len()
+                        ),
+                    );
+                    return;
+                };
+                if let Err(e) = wire::write_frame(s, reply) {
                     record_failure(
                         &failure,
                         rank,
@@ -582,14 +639,20 @@ fn read_hello(stream: &mut UnixStream) -> std::io::Result<(u8, usize)> {
     Ok(wire::decode_hello(&hello))
 }
 
-/// The worker half of an exchange: ship this rank's contribution to the
-/// relay, read back the full slot table, reduce locally. Socket failures
-/// panic — in a worker process that exits the process with a diagnostic,
-/// which is exactly the EOF signal the coordinator and relay react to.
+/// The worker half of an exchange: ship this rank's headered contribution
+/// to the relay, read back each peer's (possibly range-sliced) window,
+/// reduce locally. Socket failures panic — in a worker process that exits
+/// the process with a diagnostic, which is exactly the EOF signal the
+/// coordinator and relay react to.
 struct ProcessTransport {
     rank: usize,
     world: usize,
     stream: UnixStream,
+    /// Actual reply bytes read off the comm socket — pins the hub-side
+    /// scatter-range slicing (a ranged exchange costs w·(hi−lo)·4, not
+    /// w·n·4). Distinct from `Comm`'s modeled traffic counters, which
+    /// stay transport-uniform.
+    reply_bytes: u64,
 }
 
 impl Transport for ProcessTransport {
@@ -604,15 +667,17 @@ impl Transport for ProcessTransport {
     fn exchange(
         &mut self,
         data: Vec<f32>,
-        reduce: &mut dyn FnMut(&[Vec<f32>]) -> Vec<f32>,
+        need: Option<(usize, usize)>,
+        reduce: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
     ) -> Vec<f32> {
-        wire::write_frame(&mut self.stream, &wire::f32s_to_bytes(&data)).unwrap_or_else(|e| {
-            // lint: allow(no-panic-dist): worker-process exit IS the death signal — the relay sees EOF and records the rank into the coordinator's FailureCell
-            panic!(
-                "rank {}: collective send failed ({e}) — coordinator or a peer died",
-                self.rank
-            )
-        });
+        wire::write_frame(&mut self.stream, &wire::encode_comm_frame(need, &data))
+            .unwrap_or_else(|e| {
+                // lint: allow(no-panic-dist): worker-process exit IS the death signal — the relay sees EOF and records the rank into the coordinator's FailureCell
+                panic!(
+                    "rank {}: collective send failed ({e}) — coordinator or a peer died",
+                    self.rank
+                )
+            });
         drop(data);
         let mut slots: Vec<Vec<f32>> = Vec::with_capacity(self.world);
         for _ in 0..self.world {
@@ -623,17 +688,19 @@ impl Transport for ProcessTransport {
                     self.rank
                 )
             });
+            self.reply_bytes += frame.len() as u64;
             slots.push(wire::bytes_to_f32s(&frame).unwrap_or_else(|e| {
                 // lint: allow(no-panic-dist): worker-process exit IS the death signal (relay EOF → FailureCell); corrupt frame has no recovery inside a collective
                 panic!("rank {}: corrupt collective frame: {e}", self.rank)
             }));
         }
-        reduce(&slots)
+        let views: Vec<&[f32]> = slots.iter().map(|s| s.as_slice()).collect();
+        reduce(&views)
     }
 
     fn barrier(&mut self) {
-        let mut noop = |_: &[Vec<f32>]| Vec::new();
-        let _ = self.exchange(Vec::new(), &mut noop);
+        let mut noop = |_: &[&[f32]]| Vec::new();
+        let _ = self.exchange(Vec::new(), None, &mut noop);
     }
 }
 
@@ -672,10 +739,16 @@ fn serve_worker<W: Worker>(rank: usize, world: usize, endpoint: &str) -> Result<
 
     // Same core-budget split as a worker thread in a world of this size.
     crate::parallel::set_thread_share(world);
+    // Adopt the coordinator's overlap setting (set at exec; read once,
+    // before any comm thread exists — no getenv on the step path).
+    if let Ok(v) = std::env::var(OVERLAP_ENV) {
+        super::pipeline::set_overlap_enabled(v.trim() != "0");
+    }
     let comm = Comm::from_transport(Box::new(ProcessTransport {
         rank,
         world,
         stream: comm_stream,
+        reply_bytes: 0,
     }));
     let mut worker = W::new(rank, world, comm, metas, spec, seed);
     wire::write_frame(&mut control, READY)
@@ -768,14 +841,15 @@ mod tests {
                         rank,
                         world,
                         stream,
+                        reply_bytes: 0,
                     };
                     let mut out = Vec::new();
                     for round in 0..4 {
                         let data = vec![(rank * 10 + round) as f32; 2 + round];
-                        let mut collect = |slots: &[Vec<f32>]| -> Vec<f32> {
+                        let mut collect = |slots: &[&[f32]]| -> Vec<f32> {
                             slots.iter().map(|s| s[0]).collect()
                         };
-                        out.push(t.exchange(data, &mut collect));
+                        out.push(t.exchange(data, None, &mut collect));
                     }
                     t.barrier();
                     out
@@ -794,6 +868,69 @@ mod tests {
             }
         }
         // Workers hung up: the relay must exit on EOF, not spin.
+        relay.join().unwrap();
+    }
+
+    /// The satellite pin for hub-side scatter slicing: a ranged exchange's
+    /// replies cost exactly w·(hi−lo)·4 bytes on the wire (not w·n·4), a
+    /// full exchange exactly w·n·4, and the delivered windows preserve
+    /// rank order and element values.
+    #[test]
+    fn relay_ships_only_requested_ranges() {
+        let world = 3usize;
+        let n = 6usize;
+        let path = fresh_socket_dir().unwrap().join(SOCKET_NAME);
+        let listener = UnixListener::bind(&path).unwrap();
+        let clients: Vec<UnixStream> = (0..world)
+            .map(|_| UnixStream::connect(&path).unwrap())
+            .collect();
+        let serves: Vec<UnixStream> = (0..world).map(|_| listener.accept().unwrap().0).collect();
+        cleanup_socket(&path);
+        let cell: FailureCell = std::sync::Arc::new(std::sync::Mutex::new(None));
+        let relay = std::thread::spawn(move || relay_loop(serves, cell));
+        let handles: Vec<std::thread::JoinHandle<()>> = clients
+            .into_iter()
+            .enumerate()
+            .map(|(rank, stream)| {
+                std::thread::spawn(move || {
+                    let mut t = ProcessTransport {
+                        rank,
+                        world,
+                        stream,
+                        reply_bytes: 0,
+                    };
+                    // Rank r contributes [r*100, r*100+1, …]; every rank
+                    // asks only for its own 2-element slot window.
+                    let data: Vec<f32> = (0..n).map(|i| (rank * 100 + i) as f32).collect();
+                    let (lo, hi) = (rank * 2, rank * 2 + 2);
+                    let mut collect = |slots: &[&[f32]]| -> Vec<f32> {
+                        // Each delivered window is exactly [lo, hi) of one
+                        // peer, in rank order.
+                        assert_eq!(slots.len(), world);
+                        for (r, s) in slots.iter().enumerate() {
+                            let expect: Vec<f32> =
+                                (lo..hi).map(|i| (r * 100 + i) as f32).collect();
+                            assert_eq!(s, &expect.as_slice(), "wrong window from rank {r}");
+                        }
+                        slots.iter().map(|s| s[0]).collect()
+                    };
+                    let _ = t.exchange(data.clone(), Some((lo, hi)), &mut collect);
+                    assert_eq!(
+                        t.reply_bytes,
+                        (world * (hi - lo) * 4) as u64,
+                        "ranged replies must ship only the requested window"
+                    );
+                    // A full exchange still ships whole bodies.
+                    let before = t.reply_bytes;
+                    let mut noop = |_: &[&[f32]]| Vec::new();
+                    let _ = t.exchange(data, None, &mut noop);
+                    assert_eq!(t.reply_bytes - before, (world * n * 4) as u64);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
         relay.join().unwrap();
     }
 }

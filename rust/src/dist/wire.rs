@@ -75,6 +75,72 @@ pub(crate) fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>, String> {
         .collect())
 }
 
+/// Header prepended to every collective payload a worker sends the relay:
+/// `[kind u8][lo u64 LE][hi u64 LE]`. Kind 0 = full exchange (every rank
+/// needs every peer's whole vector; lo/hi are zero), kind 1 = ranged
+/// exchange (each rank only needs `[lo, hi)` of every peer's vector — the
+/// relay slices replies down to each receiver's requested window, cutting
+/// reduce-scatter reply traffic from w·n to n elements per step).
+pub(crate) const COMM_HDR_LEN: usize = 17;
+
+pub(crate) fn encode_comm_frame(need: Option<(usize, usize)>, data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(COMM_HDR_LEN + data.len() * 4);
+    match need {
+        Some((lo, hi)) => {
+            out.push(1);
+            out.extend_from_slice(&(lo as u64).to_le_bytes());
+            out.extend_from_slice(&(hi as u64).to_le_bytes());
+        }
+        None => out.extend_from_slice(&[0u8; COMM_HDR_LEN]),
+    }
+    for &x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Parse a collective frame's header; returns the requested range (if
+/// ranged) and the byte offset where the f32 body starts. Validates
+/// without allocating: a malformed header from a dying worker must turn
+/// into a relay-side named error, never a panic or a bogus slice.
+pub(crate) fn decode_comm_header(frame: &[u8]) -> Result<(Option<(usize, usize)>, usize), String> {
+    if frame.len() < COMM_HDR_LEN {
+        return Err(format!(
+            "collective frame of {} bytes is shorter than its {COMM_HDR_LEN}-byte header",
+            frame.len()
+        ));
+    }
+    if (frame.len() - COMM_HDR_LEN) % 4 != 0 {
+        return Err(format!(
+            "collective body length {} not a multiple of 4",
+            frame.len() - COMM_HDR_LEN
+        ));
+    }
+    let kind = frame[0];
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&frame[1..9]);
+    let lo = u64::from_le_bytes(b) as usize;
+    b.copy_from_slice(&frame[9..17]);
+    let hi = u64::from_le_bytes(b) as usize;
+    match kind {
+        0 => Ok((None, COMM_HDR_LEN)),
+        1 => {
+            let n = (frame.len() - COMM_HDR_LEN) / 4;
+            if lo > hi || hi > n {
+                return Err(format!(
+                    "collective range [{lo}, {hi}) out of bounds for {n}-element body"
+                ));
+            }
+            // Byte offsets must not overflow when the relay slices replies.
+            lo.checked_mul(4)
+                .and_then(|l| hi.checked_mul(4).map(|h| (l, h)))
+                .ok_or_else(|| format!("collective range [{lo}, {hi}) overflows byte offsets"))?;
+            Ok((Some((lo, hi)), COMM_HDR_LEN))
+        }
+        other => Err(format!("unknown collective frame kind {other}")),
+    }
+}
+
 /// Connection preamble a worker sends on each of its two sockets:
 /// `[kind u8][rank u64 LE]`. Encoded/decoded here (not in process.rs) so
 /// the byte layout lives with every other wire layout.
@@ -406,7 +472,14 @@ pub(crate) fn decode_cmd(bytes: &[u8]) -> Result<Cmd, String> {
 pub(crate) fn encode_reply(reply: &Reply) -> Vec<u8> {
     let mut out = Vec::new();
     match reply {
-        Reply::StepDone => push_u8(&mut out, 0),
+        Reply::StepDone {
+            comm_ns,
+            compute_ns,
+        } => {
+            push_u8(&mut out, 0);
+            push_u64(&mut out, *comm_ns);
+            push_u64(&mut out, *compute_ns);
+        }
         Reply::Params(ms) => {
             push_u8(&mut out, 1);
             push_matrices(&mut out, ms);
@@ -440,7 +513,10 @@ pub(crate) fn encode_reply(reply: &Reply) -> Vec<u8> {
 pub(crate) fn decode_reply(bytes: &[u8]) -> Result<Reply, String> {
     let mut r = Reader::new(bytes);
     Ok(match read_u8(&mut r)? {
-        0 => Reply::StepDone,
+        0 => Reply::StepDone {
+            comm_ns: r.u64()?,
+            compute_ns: r.u64()?,
+        },
         1 => Reply::Params(read_matrices(&mut r)?),
         2 => Reply::OptState(read_bytes(&mut r)?),
         3 => {
@@ -487,6 +563,39 @@ mod tests {
         let mut cursor = std::io::Cursor::new(buf);
         let err = read_frame(&mut cursor).unwrap_err();
         assert!(err.to_string().contains("cap"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn comm_frames_roundtrip_and_reject_bad_headers() {
+        // Full exchange: no range, body starts right after the header.
+        let full = encode_comm_frame(None, &[1.0, -2.5]);
+        let (need, off) = decode_comm_header(&full).unwrap();
+        assert_eq!((need, off), (None, COMM_HDR_LEN));
+        assert_eq!(bytes_to_f32s(&full[off..]).unwrap(), vec![1.0, -2.5]);
+        // Ranged exchange carries its window through the header.
+        let ranged = encode_comm_frame(Some((1, 3)), &[0.0, 1.0, 2.0, 3.0]);
+        let (need, off) = decode_comm_header(&ranged).unwrap();
+        assert_eq!((need, off), (Some((1, 3)), COMM_HDR_LEN));
+        assert_eq!(bytes_to_f32s(&ranged[off..]).unwrap().len(), 4);
+        // Empty ranged body with an empty window is legal (barriers).
+        let empty = encode_comm_frame(Some((0, 0)), &[]);
+        assert_eq!(decode_comm_header(&empty).unwrap().0, Some((0, 0)));
+        // Malformed headers error instead of panicking.
+        assert!(decode_comm_header(&[]).is_err(), "short frame accepted");
+        assert!(
+            decode_comm_header(&full[..COMM_HDR_LEN - 1]).is_err(),
+            "truncated header accepted"
+        );
+        let mut bad_kind = full.clone();
+        bad_kind[0] = 7;
+        assert!(decode_comm_header(&bad_kind).is_err(), "bad kind accepted");
+        let oob = encode_comm_frame(Some((1, 9)), &[0.0, 1.0]);
+        assert!(decode_comm_header(&oob).is_err(), "range past body accepted");
+        let inverted = encode_comm_frame(Some((3, 1)), &[0.0; 4]);
+        assert!(decode_comm_header(&inverted).is_err(), "lo > hi accepted");
+        let mut ragged = full.clone();
+        ragged.push(0);
+        assert!(decode_comm_header(&ragged).is_err(), "ragged body accepted");
     }
 
     #[test]
@@ -582,7 +691,10 @@ mod tests {
             traffic_elems: 123_456,
         };
         let cases = vec![
-            Reply::StepDone,
+            Reply::StepDone {
+                comm_ns: 17_000_000,
+                compute_ns: 42_000_001,
+            },
             Reply::Params(vec![Matrix::randn(2, 4, 1.0, &mut rng)]),
             Reply::OptState(vec![9; 33]),
             Reply::ImportDone(Ok(())),
@@ -592,7 +704,19 @@ mod tests {
         for reply in &cases {
             let back = decode_reply(&encode_reply(reply)).unwrap();
             match (reply, &back) {
-                (Reply::StepDone, Reply::StepDone) => {}
+                (
+                    Reply::StepDone {
+                        comm_ns,
+                        compute_ns,
+                    },
+                    Reply::StepDone {
+                        comm_ns: c2,
+                        compute_ns: p2,
+                    },
+                ) => {
+                    assert_eq!(comm_ns, c2);
+                    assert_eq!(compute_ns, p2);
+                }
                 (Reply::Params(a), Reply::Params(b)) => {
                     assert_eq!(a[0].data, b[0].data);
                 }

@@ -72,6 +72,8 @@ USAGE: galore2 <train|eval|memory|svd|lint|presets> [flags]
           --projection KIND --moments keep|reset|project
           --parallel single|fsdp|ddp --world N --threads N
           --transport threads|process (worker fabric for fsdp/ddp)
+          --overlap true|false (pipeline per-layer reduces behind
+            optimizer compute; false = serial bitwise reference)
           --engine native|pjrt --eval-batches N
           --on-failure abort|respawn|shrink (worker death mid-run:
             fail fast, rebuild at same world, or continue on world-1)

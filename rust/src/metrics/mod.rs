@@ -136,9 +136,11 @@ impl crate::train::StepObserver for Metrics {
                 tokens_seen,
                 wall_secs,
             } => self.log("val", *step, *tokens_seen, *loss, *lr, *wall_secs),
-            // Lifecycle events (checkpoints, worker loss/recovery) carry
-            // no loss point; the console observer narrates them.
-            StepEvent::Checkpoint { .. }
+            // Lifecycle events (checkpoints, worker loss/recovery) and the
+            // per-step timing firehose carry no loss point; the console
+            // observer narrates the former, benches consume the latter.
+            StepEvent::StepTimed { .. }
+            | StepEvent::Checkpoint { .. }
             | StepEvent::WorkerLost { .. }
             | StepEvent::RecoveryStarted { .. }
             | StepEvent::RecoveryComplete { .. } => {}

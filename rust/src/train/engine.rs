@@ -26,7 +26,9 @@
 //! world-locked for FSDP and fail loudly on mismatch.
 
 use crate::checkpoint::canonical::{CanonicalOptState, ImportOpts};
-use crate::dist::{DdpCluster, FsdpCluster, MemoryReport, ParamMeta, TransportKind, WorkerLoss};
+use crate::dist::{
+    DdpCluster, FsdpCluster, MemoryReport, ParamMeta, StepTiming, TransportKind, WorkerLoss,
+};
 use crate::optim::spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};
 use crate::tensor::Matrix;
 
@@ -90,6 +92,14 @@ pub trait TrainEngine {
 
     /// Per-rank memory/traffic telemetry (None for single-process).
     fn memory_reports(&self) -> Option<Vec<MemoryReport>>;
+
+    /// Comm/compute timing of the most recent successful step — the
+    /// slowest rank's worker-blocked collective time vs the rest of its
+    /// step wall (None for single-process engines, which do no
+    /// communication). Feeds `StepEvent::StepTimed`; observability only.
+    fn last_step_timing(&self) -> Option<StepTiming> {
+        None
+    }
 }
 
 /// Synthesize parameter metas from full parameter matrices — the geometry
@@ -300,6 +310,10 @@ impl TrainEngine for FsdpEngine {
     fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
         Some(self.cluster.memory_reports())
     }
+
+    fn last_step_timing(&self) -> Option<StepTiming> {
+        self.cluster.last_step_timing()
+    }
 }
 
 /// DDP engine: replicated parameters + optimizer state; every gather
@@ -415,6 +429,10 @@ impl TrainEngine for DdpEngine {
 
     fn memory_reports(&self) -> Option<Vec<MemoryReport>> {
         Some(self.cluster.memory_reports())
+    }
+
+    fn last_step_timing(&self) -> Option<StepTiming> {
+        self.cluster.last_step_timing()
     }
 }
 

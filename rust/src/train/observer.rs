@@ -6,6 +6,11 @@
 //! checkpoint). [`crate::metrics::Metrics`] is itself an observer — the
 //! loss curves every bench and the coordinator read are built from the
 //! same stream external observers see.
+//!
+//! One event is a per-step *firehose*: [`StepEvent::StepTimed`] fires on
+//! EVERY distributed step (not just at `log_every`), carrying the step's
+//! comm/compute split so benches and dashboards stop hand-rolling their
+//! own timing around `Cluster::step`.
 
 use std::path::PathBuf;
 
@@ -28,6 +33,18 @@ pub enum StepEvent {
         lr: f64,
         tokens_seen: u64,
         wall_secs: f64,
+    },
+    /// Per-step timing firehose: emitted on EVERY distributed step
+    /// (single-process mode has no cluster and emits none). `comm_ns` is
+    /// the slowest rank's worker-blocked collective time — with overlapped
+    /// collectives this is the *un-hidden* comm cost; `compute_ns` is the
+    /// rest of that rank's step wall time. Observability only: values are
+    /// wall-clock and NOT deterministic, so nothing downstream may feed
+    /// them back into training decisions.
+    StepTimed {
+        step: u64,
+        comm_ns: u64,
+        compute_ns: u64,
     },
     /// A checkpoint was written.
     Checkpoint { step: u64, path: PathBuf },

@@ -78,6 +78,10 @@ impl Trainer {
         // Spawn/handshake retry budget for the process transport
         // (`[dist] spawn_retries` / `--spawn-retries`).
         crate::dist::set_spawn_retries(cfg.spawn_retries);
+        // `--overlap false` keeps every collective inline on the worker
+        // (the serial bitwise reference); default pipelines per-layer
+        // reduces behind optimizer compute (bitwise identical).
+        crate::dist::set_overlap_enabled(cfg.overlap);
         let llama = LlamaCfg::preset(&cfg.preset)
             .with_context(|| format!("unknown preset {:?}", cfg.preset))?;
         let manifest = Manifest::load(
@@ -384,6 +388,16 @@ impl Trainer {
                     continue;
                 }
                 Supervised::Stepped => {}
+            }
+            // Per-step firehose (every step, not log_every): the slowest
+            // rank's comm/compute split, straight from the cluster —
+            // benches subscribe here instead of timing around step().
+            if let Some(timing) = self.supervisor.engine().last_step_timing() {
+                self.emit(StepEvent::StepTimed {
+                    step: t,
+                    comm_ns: timing.comm_ns,
+                    compute_ns: timing.compute_ns,
+                });
             }
             let loss = (losses.iter().sum::<f32>() / losses.len().max(1) as f32) as f64;
             last_train = loss;

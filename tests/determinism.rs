@@ -6,7 +6,9 @@
 //! full FSDP training run must produce identical bits at 1, 2 and 4
 //! worker threads.
 
-use galore2::dist::{set_worker_binary, FsdpCluster, OptimizerSpec, TransportKind};
+use galore2::dist::{
+    set_overlap_enabled, set_worker_binary, DdpCluster, FsdpCluster, OptimizerSpec, TransportKind,
+};
 use galore2::linalg::{randomized_svd, RandSvdOpts};
 use galore2::optim::{AdamCfg, GaLoreCfg};
 use galore2::parallel;
@@ -226,6 +228,118 @@ fn fsdp_run_is_reproducible_across_repeats() {
     let b = run_fsdp_galore(0);
     for (idx, (x, y)) in a.iter().zip(&b).enumerate() {
         assert_eq!(x.data, y.data, "param {idx}: repeat run diverged");
+    }
+}
+
+/// One tiny cluster run for the overlap matrix below: `mode` is "fsdp" or
+/// "ddp"; 5 steps at update_freq 2 cross SVD refreshes at t = 0, 2, 4, so
+/// the pipeline's refresh gating (all-reduce → broadcast FIFO order) is
+/// exercised, not just the steady-state reduce-scatter path.
+fn run_tiny_cluster(
+    mode: &str,
+    world: usize,
+    spec: &OptimizerSpec,
+    transport: TransportKind,
+    overlap: bool,
+) -> Vec<Matrix> {
+    set_overlap_enabled(overlap);
+    let shapes = vec![(12usize, 24usize), (24, 12), (16, 16), (1, 16)];
+    let init = fixtures::randn_set(&shapes, 0.1, 5, 0);
+    let steps = 5u64;
+    let out = match mode {
+        "fsdp" => {
+            let mut cluster = FsdpCluster::with_transport(
+                world,
+                fixtures::metas_for(&shapes),
+                spec.clone(),
+                77,
+                transport,
+            )
+            .unwrap_or_else(|e| panic!("spawning fsdp over {}: {e}", transport.name()));
+            cluster.init_params(&init);
+            for t in 0..steps {
+                let per_rank: Vec<Vec<Matrix>> = (0..world)
+                    .map(|r| fixtures::rank_grads(&shapes, t, r, 0.05))
+                    .collect();
+                cluster.step(t, per_rank, 0.02);
+            }
+            cluster.gather_params()
+        }
+        _ => {
+            let mut cluster = DdpCluster::with_transport(
+                world,
+                fixtures::metas_for(&shapes),
+                spec.clone(),
+                77,
+                transport,
+            )
+            .unwrap_or_else(|e| panic!("spawning ddp over {}: {e}", transport.name()));
+            cluster.init_params(&init);
+            for t in 0..steps {
+                let per_rank: Vec<Vec<Matrix>> = (0..world)
+                    .map(|r| fixtures::rank_grads(&shapes, t, r, 0.05))
+                    .collect();
+                cluster.step(t, per_rank, 0.02);
+            }
+            // gather_params additionally asserts replica equality.
+            cluster.gather_params()
+        }
+    };
+    set_overlap_enabled(true);
+    out
+}
+
+#[test]
+fn overlap_on_off_bitwise_identical_across_modes() {
+    let _g = lock();
+    // The comm pipeline (dist/pipeline.rs) must be bitwise INVISIBLE:
+    // overlapping moves only WHEN a collective runs relative to compute,
+    // never the fixed-tree reduction order within it. Pin overlap-on ==
+    // overlap-off over the full matrix: FSDP at worlds 2/4 + DDP at
+    // world 2, × galore (SVD-refresh-crossing) / qgalore / adamw, × both
+    // transports (worker threads and worker processes — the process path
+    // also covers the GALORE2_OVERLAP env relay to children).
+    set_worker_binary(env!("CARGO_BIN_EXE_galore2"));
+    let galore = GaLoreCfg {
+        rank: 4,
+        update_freq: 2,
+        alpha: 1.0,
+        ..GaLoreCfg::default()
+    };
+    let specs: Vec<(&str, OptimizerSpec)> = vec![
+        (
+            "galore",
+            OptimizerSpec::GaLore {
+                galore,
+                adam: AdamCfg::default(),
+            },
+        ),
+        (
+            "qgalore",
+            OptimizerSpec::QGaLore {
+                galore,
+                adam: AdamCfg::default(),
+                similarity_threshold: 1.0,
+            },
+        ),
+        ("adamw", OptimizerSpec::AdamW(AdamCfg::default())),
+    ];
+    for transport in [TransportKind::Threads, TransportKind::Process] {
+        for (spec_name, spec) in &specs {
+            for (mode, world) in [("fsdp", 2usize), ("fsdp", 4), ("ddp", 2)] {
+                let on = run_tiny_cluster(mode, world, spec, transport, true);
+                let off = run_tiny_cluster(mode, world, spec, transport, false);
+                for (idx, (x, y)) in on.iter().zip(&off).enumerate() {
+                    assert_eq!(
+                        x.data,
+                        y.data,
+                        "param {idx}: overlap changed bits ({mode} world {world}, \
+                         {spec_name}, {} transport)",
+                        transport.name()
+                    );
+                }
+            }
+        }
     }
 }
 

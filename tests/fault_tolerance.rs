@@ -606,6 +606,40 @@ fn repeated_kill_recover_cycles_leak_no_threads() {
 }
 
 #[test]
+fn pipelined_kill_mid_step_recovers_with_no_leaked_comm_threads() {
+    let _g = lock();
+    // Overlap is ON by default: every rank owns a dedicated comm thread
+    // (dist/pipeline.rs) with collectives in flight while the worker
+    // computes. Killing a rank mid-pipelined step must (a) recover
+    // promptly — the survivors' issued collectives all complete or
+    // poison, never hang — and (b) join every comm thread of both the
+    // dead and the rebuilt cluster: comm threads park on a condvar, so a
+    // leaked one would survive to process exit and show in
+    // /proc/self/task. GaLore at update_freq 3 puts refreshes at t=3/6,
+    // so the kill at t=5 lands mid-steady-state pipeline and the replay
+    // re-crosses a refresh (broadcast FIFO gating) on the rebuilt world.
+    galore2::dist::set_overlap_enabled(true);
+    galore2::parallel::shutdown_pool();
+    let baseline = thread_count();
+    for _cycle in 0..2 {
+        check_recovery(
+            Mode::Fsdp,
+            &galore_spec(),
+            TransportKind::Threads,
+            2,
+            OnFailure::Respawn,
+            (1, 5),
+        );
+    }
+    galore2::parallel::shutdown_pool();
+    let after = thread_count();
+    assert!(
+        after <= baseline + 2,
+        "comm threads leaked across pipelined kill→recover cycles: {baseline} → {after}"
+    );
+}
+
+#[test]
 fn pool_shutdown_joins_all_workers_and_pool_restarts() {
     let _g = lock();
     // Force the pool up with a wide parallel region, shut it down, and

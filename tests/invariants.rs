@@ -122,6 +122,23 @@ fn each_rule_fires_on_a_seeded_violation() {
             "train/bad.rs",
             "fn f(m: &M, c: &C) {\n    let g = m.lock();\n    c.barrier();\n    drop(g);\n}",
         ),
+        // The comm-pipeline serve loop (dist/pipeline.rs) is a SERVE_FN
+        // region: a worker death must flow through the FailureCell path
+        // as a named error, so a bare unwrap there is a finding.
+        (
+            "no-panic-dist",
+            "dist/pipeline.rs",
+            "fn serve(comm: Comm, q: &Q) { let r = q.pop().unwrap(); comm.run(r); }",
+        ),
+        // Holding the pipeline's queue lock across the collective itself
+        // would serialize ranks against each other (and deadlock under a
+        // poisoned peer) — the real serve loop pops under the lock, then
+        // drops the guard BEFORE running the collective.
+        (
+            "lock-across-collective",
+            "dist/pipeline.rs",
+            "fn f(s: &S, t: &mut T) {\n    let st = s.m.lock();\n    t.exchange(v, None, &mut r);\n    drop(st);\n}",
+        ),
     ];
     for (rule, file, src) in cases {
         let findings = lint_source(file, src);
