@@ -19,6 +19,11 @@
 //!      2/4 over both transports with the per-layer reduce pipeline on
 //!      vs off (`overlap_vs_serial` in BENCH_throughput.json, grepped by
 //!      CI) — the gap is hidden communication time (§Perf);
+//!   4d. shm vs sockets: the process-transport step at worlds 2/4 with
+//!      the shared-memory data plane on vs off, galore + adamw, overlap
+//!      on and off (`shm_vs_sockets` in BENCH_throughput.json, grepped
+//!      by CI) — the gap is payload copy + framing cost
+//!      (EXPERIMENTS.md §Transport);
 //!   5. full train-step wall time per optimizer (artifact execution +
 //!      optimizer, one untimed warmup step so one-time pool/thread startup
 //!      stays out of the per-step figures) — the headline table in
@@ -123,6 +128,28 @@ fn write_report(b: &Bench, speedup_4t: Option<f64>, hidden: usize, rank: usize) 
         }
     }
     report.set("overlap_vs_serial", overlap);
+    // §4d summary: per-step wall time over the process transport with the
+    // shm slot-table data plane vs socket frames. Trajectories are bitwise
+    // identical either way (tests/transport.rs), so speedup > 1 is pure
+    // payload copy + framing cost. CI greps for this key.
+    let mut shm = Json::obj();
+    for world in [2usize, 4] {
+        for opt in ["galore", "adamw"] {
+            for sched in ["serial", "overlap"] {
+                let sockets =
+                    mean_of(b, &format!("shmstep_fsdp{world}_{opt}_{sched}_sockets"));
+                let shm_ns = mean_of(b, &format!("shmstep_fsdp{world}_{opt}_{sched}_shm"));
+                if let (Some(s), Some(m)) = (sockets, shm_ns) {
+                    let mut row = Json::obj();
+                    row.set("sockets_ns", Json::num(s))
+                        .set("shm_ns", Json::num(m))
+                        .set("speedup", Json::num(s / m));
+                    shm.set(&format!("fsdp{world}_{opt}_{sched}"), row);
+                }
+            }
+        }
+    }
+    report.set("shm_vs_sockets", shm);
     std::fs::write("BENCH_throughput.json", report.to_pretty())?;
     println!("machine-readable report -> BENCH_throughput.json");
     Ok(())
@@ -332,11 +359,25 @@ fn main() -> anyhow::Result<()> {
         .expect("spawning bench cluster");
         cluster.init_params(&fixtures::randn_set(cluster_shapes, 0.1, 3, 0));
         let mut t = 0u64;
-        b.run(&format!("clusterstep_fsdp2_{}", transport.name()), || {
-            let grads = fixtures::rank_grads(cluster_shapes, t, 0, 0.05);
-            cluster.step(t, vec![grads; 2], 1e-3);
-            t += 1;
+        // One priming step, then take the per-step data-plane volume from
+        // the cluster's StepTraffic report — not a hand-maintained
+        // elems*4 loop that would drift from the real protocol. Threads
+        // move no data-plane bytes, so their row has no throughput.
+        cluster.step(t, vec![fixtures::rank_grads(cluster_shapes, t, 0, 0.05); 2], 1e-3);
+        t += 1;
+        let moved = cluster.last_step_traffic().and_then(|tr| {
+            let total = tr.socket_bytes + tr.shm_bytes;
+            (total > 0).then_some((total as f64, "B"))
         });
+        b.run_with_throughput(
+            &format!("clusterstep_fsdp2_{}", transport.name()),
+            moved,
+            || {
+                let grads = fixtures::rank_grads(cluster_shapes, t, 0, 0.05);
+                cluster.step(t, vec![grads; 2], 1e-3);
+                t += 1;
+            },
+        );
     }
     // The gap between the two rows IS the socket overhead per step
     // (serialize grads + relayed collectives) — paste per-host figures
@@ -375,6 +416,72 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+    galore2::dist::set_overlap_enabled(true);
+
+    println!("\n== 4d. shm vs sockets (process transport, FSDP worlds 2/4) ==");
+    // Same step, two data planes: sockets serialize every gradient
+    // element through the relay (two copies per element per collective);
+    // shm deposits payloads in the slot table and puts only fixed-size
+    // control frames on the socket. The reduction order is identical —
+    // tests/transport.rs pins shm-on bitwise against sockets, threads,
+    // and single — so the gap between the rows is pure payload copy +
+    // framing cost. Both knobs must be set BEFORE the cluster spawns;
+    // process children capture them from GALORE2_OVERLAP / GALORE2_SHM
+    // at exec.
+    for world in [2usize, 4] {
+        for (opt_name, spec) in [
+            (
+                "galore",
+                galore2::dist::OptimizerSpec::GaLore {
+                    galore: gcfg,
+                    adam: AdamCfg::default(),
+                },
+            ),
+            (
+                "adamw",
+                galore2::dist::OptimizerSpec::AdamW(AdamCfg::default()),
+            ),
+        ] {
+            for (sched, overlap) in [("serial", false), ("overlap", true)] {
+                for (plane, shm_on) in [("sockets", false), ("shm", true)] {
+                    galore2::dist::set_overlap_enabled(overlap);
+                    galore2::dist::set_shm_enabled(shm_on);
+                    let mut cluster = FsdpCluster::with_transport(
+                        world,
+                        fixtures::metas_for(cluster_shapes),
+                        spec.clone(),
+                        7,
+                        TransportKind::Process,
+                    )
+                    .expect("spawning shm bench cluster");
+                    cluster.init_params(&fixtures::randn_set(cluster_shapes, 0.1, 3, 0));
+                    let mut t = 0u64;
+                    // Prime one step; the throughput denominator is the
+                    // measured per-step StepTraffic volume (socket + shm).
+                    cluster.step(
+                        t,
+                        vec![fixtures::rank_grads(cluster_shapes, t, 0, 0.05); world],
+                        1e-3,
+                    );
+                    t += 1;
+                    let moved = cluster.last_step_traffic().and_then(|tr| {
+                        let total = tr.socket_bytes + tr.shm_bytes;
+                        (total > 0).then_some((total as f64, "B"))
+                    });
+                    b.run_with_throughput(
+                        &format!("shmstep_fsdp{world}_{opt_name}_{sched}_{plane}"),
+                        moved,
+                        || {
+                            let grads = fixtures::rank_grads(cluster_shapes, t, 0, 0.05);
+                            cluster.step(t, vec![grads; world], 1e-3);
+                            t += 1;
+                        },
+                    );
+                }
+            }
+        }
+    }
+    galore2::dist::set_shm_enabled(true);
     galore2::dist::set_overlap_enabled(true);
 
     println!("\n== 5. full train step (llama-nano, artifact + optimizer) ==");

@@ -16,14 +16,18 @@
 //!
 //! - `single-parser`: raw `from_le_bytes`/`to_le_bytes` byte-layout code
 //!   is confined to `optim::ser` (the `mod ser` block of `optim/mod.rs`),
-//!   `dist/wire.rs`, and `quant/`. Everything else goes through the
-//!   hardened `ser::Reader`/push helpers, so there is exactly one place
-//!   where a length field is trusted.
-//! - `checked-alloc`: in parser modules (`dist/wire.rs`, `quant/`,
-//!   `checkpoint/`, `optim/mod.rs`), a function that parses raw bytes
-//!   (uses `Reader`, `from_le_bytes`, `read_exact`, or `read_to_end`)
-//!   and allocates (`with_capacity`, `vec![…]`) must carry a visible
-//!   bound: `remaining`, `checked_mul`, `checked_add`, or `take`.
+//!   `shm::header` (the `mod header` block of `dist/shm.rs` — the shm
+//!   control/go frames, and ONLY them), `dist/wire.rs`, and `quant/`.
+//!   Everything else goes through the hardened `ser::Reader`/push
+//!   helpers, so there is exactly one place where a length field is
+//!   trusted.
+//! - `checked-alloc`: in parser modules (`dist/wire.rs`, `dist/shm.rs`,
+//!   `quant/`, `checkpoint/`, `optim/mod.rs`), a function that parses raw
+//!   bytes (uses `Reader`, `from_le_bytes`, `read_exact`, or
+//!   `read_to_end`) and allocates (`with_capacity`, `vec![…]`) must carry
+//!   a visible bound: `remaining`, `checked_mul`, `checked_add`, or
+//!   `take` — in `dist/shm.rs` this is what bounds the mapped slot-table
+//!   length against the setup-declared geometry before any IO.
 //! - `no-panic-dist`: inside `dist/` worker serve loops, the process
 //!   relay, collective/transport bodies, and `Drop` impls, `unwrap`,
 //!   `expect`, `panic!`-family macros, and slice indexing are banned —
@@ -207,6 +211,11 @@ fn rule_single_parser(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
     }
     let ser = if rel == "optim/mod.rs" {
         mod_region(toks, "ser")
+    } else if rel == "dist/shm.rs" {
+        // The shm control/go header codec is the one sanctioned raw
+        // byte-layout island in the shm module; slot payloads themselves
+        // go through wire.rs's f32 codec.
+        mod_region(toks, "header")
     } else {
         None
     };
@@ -234,6 +243,7 @@ fn rule_single_parser(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
 /// Parser modules where the checked-alloc rule applies.
 fn checked_alloc_scope(rel: &str) -> bool {
     rel == "dist/wire.rs"
+        || rel == "dist/shm.rs"
         || rel.starts_with("quant/")
         || rel.starts_with("checkpoint/")
         || rel == "optim/mod.rs"
@@ -617,6 +627,34 @@ mod tests {
         let f = check_file("optim/mod.rs", src);
         assert_eq!(f.len(), 1, "{f:?}");
         assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn single_parser_allows_only_the_shm_header_region() {
+        // Inside `mod header`: sanctioned (the 33-byte ctrl/go codec).
+        // The same token anywhere else in dist/shm.rs: a finding.
+        let src = "mod header { fn g(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) } }\nfn h(x: u64) -> [u8; 8] { x.to_le_bytes() }";
+        let f = check_file("dist/shm.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[0].rule, "single-parser");
+        // Other dist modules get no such region: both lines fire.
+        let f = check_file("dist/comm.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+    }
+
+    #[test]
+    fn checked_alloc_covers_the_shm_module() {
+        // An unbounded parse+alloc in dist/shm.rs must fire: the mapped
+        // slot-table length has to be validated against the declared
+        // geometry before allocating/reading.
+        let bad = "fn open(r: &mut Reader) -> Vec<u8> { let n = r.u64_raw(); Vec::with_capacity(n as usize) }";
+        let good = "fn open(r: &mut Reader) -> Vec<u8> { let n = (r.u64_raw() as usize).checked_mul(4).unwrap_or(0); Vec::with_capacity(n) }";
+        assert_eq!(
+            rules_of(&check_file("dist/shm.rs", bad)),
+            vec!["checked-alloc"]
+        );
+        assert!(check_file("dist/shm.rs", good).is_empty());
     }
 
     #[test]

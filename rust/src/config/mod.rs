@@ -114,6 +114,12 @@ pub struct TrainConfig {
     /// bitwise reference. Same trajectory either way
     /// (tests/determinism.rs pins overlap-on == overlap-off).
     pub overlap: bool,
+    /// Shared-memory data plane for the process transport (`[dist] shm` /
+    /// `--shm`; default true): gradient payloads move through a per-cluster
+    /// slot table and the comm sockets carry only 33-byte control frames.
+    /// `false` keeps payloads on the sockets — the fallback path. Bitwise
+    /// identical either way (tests/transport.rs pins shm-on == shm-off).
+    pub shm: bool,
     pub engine: Engine,
     /// What to do when a worker rank dies mid-run (`[train] on_failure` /
     /// `--on-failure abort|respawn|shrink`). Non-abort policies rebuild
@@ -169,6 +175,7 @@ impl Default for TrainConfig {
             pool: true,
             transport: TransportKind::Threads,
             overlap: true,
+            shm: true,
             engine: Engine::Native,
             on_failure: OnFailure::Abort,
             snapshot_every: 50,
@@ -238,6 +245,7 @@ impl TrainConfig {
             transport: TransportKind::parse(&doc.str_or("dist", "transport", "threads"))
                 .map_err(|e| anyhow::anyhow!(e))?,
             overlap: doc.bool_or("dist", "overlap", d.overlap),
+            shm: doc.bool_or("dist", "shm", d.shm),
             engine: Engine::parse(&doc.str_or("train", "engine", "native"))?,
             on_failure: OnFailure::parse(&doc.str_or("train", "on_failure", "abort"))
                 .map_err(|e| anyhow::anyhow!(e))?,
@@ -293,6 +301,7 @@ impl TrainConfig {
         self.threads = args.usize_or("threads", self.threads);
         self.pool = args.bool_or("pool", self.pool);
         self.overlap = args.bool_or("overlap", self.overlap);
+        self.shm = args.bool_or("shm", self.shm);
         if let Some(mode) = args.get("parallel") {
             self.parallel = ParallelMode::parse(mode)?;
         }
@@ -447,6 +456,7 @@ pool = false
 [dist]
 transport = "process"
 overlap = false
+shm = false
 "#;
 
     fn write_sample(name: &str, body: &str) -> std::path::PathBuf {
@@ -475,6 +485,8 @@ overlap = false
         assert_eq!(c.transport, TransportKind::Process);
         assert!(!c.overlap, "[dist] overlap = false must select serial");
         assert!(TrainConfig::default().overlap, "overlap defaults on");
+        assert!(!c.shm, "[dist] shm = false must select the socket plane");
+        assert!(TrainConfig::default().shm, "shm defaults on");
         std::fs::remove_file(path).ok();
     }
 
@@ -496,6 +508,15 @@ overlap = false
             Args::parse("train --overlap false".split_whitespace().map(String::from)).unwrap();
         c.apply_cli(&args).unwrap();
         assert!(!c.overlap, "--overlap false must select serial collectives");
+    }
+
+    #[test]
+    fn shm_flag_parses_from_cli() {
+        let mut c = TrainConfig::default();
+        assert!(c.shm);
+        let args = Args::parse("train --shm false".split_whitespace().map(String::from)).unwrap();
+        c.apply_cli(&args).unwrap();
+        assert!(!c.shm, "--shm false must select the socket data plane");
     }
 
     #[test]

@@ -47,9 +47,11 @@ impl StepObserver for ConsoleObserver {
             StepEvent::RecoveryComplete { resume_step, world } => {
                 println!("[recover] recovered — resuming at step {resume_step} on {world} rank(s)");
             }
-            // Train points go through Metrics; the per-step timing
-            // firehose is too chatty for the console.
-            StepEvent::Train { .. } | StepEvent::StepTimed { .. } => {}
+            // Train points go through Metrics; the per-step timing and
+            // traffic firehoses are too chatty for the console.
+            StepEvent::Train { .. }
+            | StepEvent::StepTimed { .. }
+            | StepEvent::StepTraffic { .. } => {}
         }
     }
 }

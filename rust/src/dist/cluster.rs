@@ -129,11 +129,19 @@ pub struct MemoryReport {
     pub param_shard_bytes: usize,
     /// Bytes of optimizer state (sharded moments + replicated projectors).
     pub optimizer_bytes: usize,
-    /// Peak bytes of transient buffers (reduced gradients, broadcast P)
-    /// live at once — bounded by ~one full layer gradient, not the model.
+    /// Peak bytes of transient buffers (reduced gradients, broadcast P,
+    /// one in-flight shm generation) live at once — bounded by ~one full
+    /// layer gradient, not the model.
     pub peak_transient_bytes: usize,
     /// f32 elements moved through collectives by this rank.
     pub traffic_elems: u64,
+    /// Actual payload bytes this rank moved over comm sockets (process
+    /// transport, shm off; 0 under threads). Pins the shm plane's
+    /// zero-socket-payload contract.
+    pub socket_bytes: u64,
+    /// Actual payload bytes this rank moved through the shm slot table
+    /// (deposits + peer reads; process transport, shm on).
+    pub shm_bytes: u64,
 }
 
 /// Per-step timing one rank measured while serving a `Step` command —
@@ -146,6 +154,22 @@ pub struct MemoryReport {
 pub struct StepTiming {
     pub comm_ns: u64,
     pub compute_ns: u64,
+}
+
+/// Per-step traffic one rank measured while serving a `Step` command —
+/// the payload of `StepEvent::StepTraffic` and the data-plane benches.
+/// Byte counters are per-step deltas of the process-wide transport
+/// counters (zero under the thread transport, which moves no bytes).
+/// Observability only — never feeds back into the trajectory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTraffic {
+    /// f32 payload bytes this step moved over comm sockets.
+    pub socket_bytes: u64,
+    /// Payload bytes this step moved through the shm slot table.
+    pub shm_bytes: u64,
+    /// Peak transient-buffer bytes live at once on this rank (includes
+    /// the in-flight shm generation under the overlap pipeline).
+    pub peak_transient_bytes: u64,
 }
 
 /// Which dimension a parameter is sharded along (always the *longer* one —
@@ -265,6 +289,12 @@ pub trait Worker: 'static {
     fn last_step_timing(&self) -> StepTiming {
         StepTiming::default()
     }
+
+    /// Traffic of this rank's most recent step (default: all zeros, for
+    /// workers that do not measure).
+    fn last_step_traffic(&self) -> StepTraffic {
+        StepTraffic::default()
+    }
 }
 
 pub(crate) enum Cmd {
@@ -280,7 +310,13 @@ pub(crate) enum Cmd {
 }
 
 pub(crate) enum Reply {
-    StepDone { comm_ns: u64, compute_ns: u64 },
+    StepDone {
+        comm_ns: u64,
+        compute_ns: u64,
+        socket_bytes: u64,
+        shm_bytes: u64,
+        peak_transient: u64,
+    },
     Params(Vec<Matrix>),
     OptState(Vec<u8>),
     ImportDone(Result<(), String>),
@@ -306,9 +342,13 @@ pub(crate) fn handle_cmd<W: Worker>(w: &mut W, cmd: Cmd) -> Served {
         Cmd::Step { t, lr, grads } => {
             w.step(t, lr, grads);
             let timing = w.last_step_timing();
+            let traffic = w.last_step_traffic();
             Served::Reply(Reply::StepDone {
                 comm_ns: timing.comm_ns,
                 compute_ns: timing.compute_ns,
+                socket_bytes: traffic.socket_bytes,
+                shm_bytes: traffic.shm_bytes,
+                peak_transient: traffic.peak_transient_bytes,
             })
         }
         Cmd::Params => Served::Reply(Reply::Params(w.params())),
@@ -364,6 +404,10 @@ enum Link {
         child: Child,
         rank: usize,
         mode: &'static str,
+        /// Per-connection receive scratch: the control plane reads one
+        /// reply per command and must not allocate per message. RefCell,
+        /// not Mutex: links live on the coordinator thread only.
+        scratch: std::cell::RefCell<Vec<u8>>,
     },
 }
 
@@ -402,9 +446,11 @@ impl Link {
                 control,
                 rank,
                 mode,
+                scratch,
                 ..
             } => {
-                let frame = wire::read_frame(&mut &*control).map_err(|e| {
+                let mut frame = scratch.borrow_mut();
+                wire::read_frame_into(&mut &*control, &mut frame).map_err(|e| {
                     format!(
                         "{mode} worker process rank {rank} died mid-command ({e}) — \
                          check its stderr for the original failure"
@@ -459,6 +505,9 @@ pub struct Cluster<W: Worker> {
     /// Rank-max timing of the most recent successful step (None before
     /// the first step).
     last_timing: Option<StepTiming>,
+    /// Data-plane traffic of the most recent successful step (None before
+    /// the first step).
+    last_traffic: Option<StepTraffic>,
     _mode: PhantomData<fn() -> W>,
 }
 
@@ -509,6 +558,7 @@ impl<W: Worker> Cluster<W> {
                         child,
                         rank,
                         mode: W::MODE,
+                        scratch: std::cell::RefCell::new(Vec::new()),
                     })
                     .collect();
                 (links, Some(spawned.relay), Some(spawned.socket_path))
@@ -524,6 +574,7 @@ impl<W: Worker> Cluster<W> {
             spec_name,
             failure,
             last_timing: None,
+            last_traffic: None,
             _mode: PhantomData,
         })
     }
@@ -614,16 +665,26 @@ impl<W: Worker> Cluster<W> {
         // rather than hang, and skipping them would desynchronize the
         // protocol for any rank that did survive.
         let mut timing = StepTiming::default();
+        let mut traffic = StepTraffic::default();
         for (rank, link) in self.links.iter().enumerate() {
             match link.try_recv() {
                 Ok(Reply::StepDone {
                     comm_ns,
                     compute_ns,
+                    socket_bytes,
+                    shm_bytes,
+                    peak_transient,
                 }) => {
                     // Rank-max of each component: the step is lockstep, so
                     // the slowest rank's stall is the step's stall.
                     timing.comm_ns = timing.comm_ns.max(comm_ns);
                     timing.compute_ns = timing.compute_ns.max(compute_ns);
+                    // Bytes sum across ranks (total data-plane volume);
+                    // transient footprint is a rank-max, like timing.
+                    traffic.socket_bytes += socket_bytes;
+                    traffic.shm_bytes += shm_bytes;
+                    traffic.peak_transient_bytes =
+                        traffic.peak_transient_bytes.max(peak_transient);
                 }
                 Ok(_) => unreachable!("protocol error: expected StepDone"),
                 Err(e) => {
@@ -634,6 +695,7 @@ impl<W: Worker> Cluster<W> {
         match first_err {
             None => {
                 self.last_timing = Some(timing);
+                self.last_traffic = Some(traffic);
                 Ok(())
             }
             Some((rank, cause)) => Err(self.classify(rank, cause)),
@@ -645,6 +707,13 @@ impl<W: Worker> Cluster<W> {
     /// first step.
     pub fn last_step_timing(&self) -> Option<StepTiming> {
         self.last_timing
+    }
+
+    /// Traffic of the most recent successful [`Cluster::step`] /
+    /// [`Cluster::try_step`] (bytes summed across ranks, transient
+    /// footprint rank-max); `None` before the first step.
+    pub fn last_step_traffic(&self) -> Option<StepTraffic> {
+        self.last_traffic
     }
 
     /// Attribute a link-level failure to the rank that actually died:

@@ -18,7 +18,7 @@
 //! plus the replica-specific surface; [`run_ddp`] remains as the
 //! closure-driven harness the dist tests use.
 
-use super::cluster::{Cluster, MemoryReport, ParamMeta, StepTiming, Worker};
+use super::cluster::{Cluster, MemoryReport, ParamMeta, StepTiming, StepTraffic, Worker};
 use super::comm::{Collective, Comm};
 use super::pipeline::{monotonic_ns, overlap_enabled, CommDriver};
 use super::{BuildTarget, OptimizerSpec, WorkerOpt};
@@ -39,6 +39,10 @@ pub struct DdpWorker {
     /// Timing of the most recent step (worker-blocked comm vs the rest),
     /// surfaced through `Worker::last_step_timing`.
     last_timing: StepTiming,
+    /// Data-plane traffic of the most recent step (per-step deltas of the
+    /// process-wide transport counters), surfaced through
+    /// `Worker::last_step_traffic`.
+    last_traffic: StepTraffic,
 }
 
 impl Worker for DdpWorker {
@@ -72,6 +76,7 @@ impl Worker for DdpWorker {
             params: Vec::new(),
             peak_transient: 0,
             last_timing: StepTiming::default(),
+            last_traffic: StepTraffic::default(),
         }
     }
 
@@ -82,6 +87,7 @@ impl Worker for DdpWorker {
     fn step(&mut self, t: u64, lr: f32, grads: Vec<Matrix>) {
         assert_eq!(grads.len(), self.params.len(), "init_params before step");
         let wall0 = monotonic_ns();
+        let (sock0, shm0) = super::process::wire_traffic();
         self.opt.as_opt().begin_step(t);
         let scale = 1.0 / self.world as f32;
         // Issue-ahead + consume-in-order: layer idx+1's all-reduce is in
@@ -122,6 +128,13 @@ impl Worker for DdpWorker {
             comm_ns,
             compute_ns: wall.saturating_sub(comm_ns),
         };
+        let (sock, shm) = super::process::wire_traffic();
+        self.last_traffic = StepTraffic {
+            socket_bytes: sock - sock0,
+            shm_bytes: shm - shm0,
+            peak_transient_bytes: (self.peak_transient + super::process::shm_inflight_bytes())
+                as u64,
+        };
     }
 
     fn params(&self) -> Vec<Matrix> {
@@ -139,18 +152,27 @@ impl Worker for DdpWorker {
     }
 
     fn report(&self) -> MemoryReport {
+        let (socket_bytes, shm_bytes) = super::process::wire_traffic();
         MemoryReport {
             rank: self.rank,
             // Full replica — the w× redundancy Table 1 charges DDP for.
             param_shard_bytes: self.params.iter().map(|p| p.numel() * 4).sum(),
             optimizer_bytes: self.opt.state_bytes(),
-            peak_transient_bytes: self.peak_transient,
+            // Charge the in-flight shm generation like the pipeline's
+            // extra gradient buffer.
+            peak_transient_bytes: self.peak_transient + super::process::shm_inflight_bytes(),
             traffic_elems: self.comm.traffic_elems(),
+            socket_bytes,
+            shm_bytes,
         }
     }
 
     fn last_step_timing(&self) -> StepTiming {
         self.last_timing
+    }
+
+    fn last_step_traffic(&self) -> StepTraffic {
+        self.last_traffic
     }
 }
 

@@ -34,7 +34,7 @@
 
 use super::cluster::{
     assemble, shard_axis, shard_bounds, slice_shard, Cluster, MemoryReport, ParamMeta, ShardAxis,
-    StepTiming, Worker,
+    StepTiming, StepTraffic, Worker,
 };
 use super::comm::{Collective, Comm};
 use super::pipeline::{monotonic_ns, overlap_enabled, CommDriver};
@@ -64,6 +64,10 @@ pub struct FsdpWorker {
     /// Timing of the most recent step (worker-blocked comm vs the rest),
     /// surfaced through `Worker::last_step_timing`.
     last_timing: StepTiming,
+    /// Data-plane traffic of the most recent step (per-step deltas of the
+    /// process-wide transport counters), surfaced through
+    /// `Worker::last_step_traffic`.
+    last_traffic: StepTraffic,
 }
 
 impl Worker for FsdpWorker {
@@ -102,6 +106,7 @@ impl Worker for FsdpWorker {
             svd_rng: Pcg64::new(seed, 0x6a10),
             peak_transient: 0,
             last_timing: StepTiming::default(),
+            last_traffic: StepTraffic::default(),
         }
     }
 
@@ -131,6 +136,7 @@ impl Worker for FsdpWorker {
     fn step(&mut self, t: u64, lr: f32, grads: Vec<Matrix>) {
         assert_eq!(grads.len(), self.shards.len(), "init_params before step");
         let wall0 = monotonic_ns();
+        let (sock0, shm0) = super::process::wire_traffic();
         self.opt.as_opt().begin_step(t);
         let scale = 1.0 / self.world as f32;
 
@@ -185,6 +191,13 @@ impl Worker for FsdpWorker {
             comm_ns,
             compute_ns: wall.saturating_sub(comm_ns),
         };
+        let (sock, shm) = super::process::wire_traffic();
+        self.last_traffic = StepTraffic {
+            socket_bytes: sock - sock0,
+            shm_bytes: shm - shm0,
+            peak_transient_bytes: (self.peak_transient + super::process::shm_inflight_bytes())
+                as u64,
+        };
     }
 
     fn params(&self) -> Vec<Matrix> {
@@ -209,17 +222,27 @@ impl Worker for FsdpWorker {
     }
 
     fn report(&self) -> MemoryReport {
+        let (socket_bytes, shm_bytes) = super::process::wire_traffic();
         MemoryReport {
             rank: self.rank,
             param_shard_bytes: self.shards.iter().map(|s| s.numel() * 4).sum(),
             optimizer_bytes: self.opt.state_bytes(),
-            peak_transient_bytes: self.peak_transient,
+            // The shm plane keeps one in-flight generation live in this
+            // rank's slot under the overlap pipeline — charge it like the
+            // pipeline's extra gradient buffer.
+            peak_transient_bytes: self.peak_transient + super::process::shm_inflight_bytes(),
             traffic_elems: self.comm.traffic_elems(),
+            socket_bytes,
+            shm_bytes,
         }
     }
 
     fn last_step_timing(&self) -> StepTiming {
         self.last_timing
+    }
+
+    fn last_step_traffic(&self) -> StepTraffic {
+        self.last_traffic
     }
 }
 

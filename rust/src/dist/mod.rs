@@ -41,17 +41,19 @@ mod ddp;
 mod fsdp;
 mod pipeline;
 mod process;
+mod shm;
 pub(crate) mod wire;
 
 pub use cluster::{
-    Cluster, MemoryReport, ParamMeta, StepTiming, TransportKind, Worker, WorkerLoss,
+    Cluster, MemoryReport, ParamMeta, StepTiming, StepTraffic, TransportKind, Worker, WorkerLoss,
 };
 pub use comm::{Comm, ThreadTransport, Transport};
 pub use ddp::{run_ddp, DdpCluster, DdpWorker};
 pub use fsdp::{FsdpCluster, FsdpWorker};
 pub use pipeline::set_overlap_enabled;
 pub use process::{
-    run_worker, set_spawn_retries, set_test_crash_hooks, set_worker_binary, WORKER_BIN_ENV,
+    run_worker, set_shm_enabled, set_spawn_retries, set_test_crash_hooks, set_test_shm_fail,
+    set_worker_binary, WORKER_BIN_ENV,
 };
 
 pub(crate) use cluster::{shard_axis, shard_bounds, ShardAxis};

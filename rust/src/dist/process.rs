@@ -8,16 +8,30 @@
 //!
 //! * a **control** connection carrying the framed [`Cmd`]/[`Reply`]
 //!   cluster protocol (`dist/wire.rs`), driven by the coordinator, and
-//! * a **comm** connection carrying collective payloads, serviced by a
-//!   dedicated relay thread in the coordinator process: per exchange it
-//!   reads one headered frame from every rank, then writes each sender's
-//!   contribution back to every rank — sliced down to the receiver's
-//!   requested element window for ranged exchanges (reduce-scatter asks
-//!   only for its own slot range, cutting reply bytes from w·n to n), or
-//!   whole for full exchanges. The worker-side [`ProcessTransport`] then
-//!   runs the same fixed-tree reduction the threaded transport runs over
-//!   the delivered windows, so results are **bitwise identical** to
-//!   `--transport threads`.
+//! * a **comm** connection synchronizing collectives. Two data planes:
+//!
+//!   **shm (default, `[dist] shm` / `--shm`)** — gradient payloads move
+//!   through a shared slot table (`dist/shm.rs`) the coordinator creates
+//!   in the private rendezvous directory and names in the setup frame.
+//!   Per exchange a rank deposits its payload into its own slot
+//!   (`pwrite`), sends a 33-byte control frame (`[kind][lo][hi][gen]
+//!   [elems]`), waits for the relay's release frame, then `pread`s every
+//!   peer's window straight out of the table — **zero f32 payload bytes
+//!   cross the socket** for all four collectives, and the relay is a pure
+//!   synchronizer. Lanes double-buffer generations so the overlap
+//!   pipeline's depth-2 FIFO never overwrites a slot a peer still reads.
+//!
+//!   **sockets (fallback)** — per exchange the relay reads one headered
+//!   frame from every rank, then writes each sender's contribution back
+//!   to every rank — sliced down to the receiver's requested element
+//!   window for ranged exchanges (reduce-scatter asks only for its own
+//!   slot range, cutting reply bytes from w·n to n), or whole for full
+//!   exchanges.
+//!
+//!   On both planes the worker-side [`ProcessTransport`] runs the same
+//!   fixed-tree reduction the threaded transport runs, over the peers'
+//!   windows in rank order, so results are **bitwise identical** to
+//!   `--transport threads` — and shm-on to shm-off.
 //!
 //! Spawn handshake (deadline-bounded, child-exit aware — a worker that
 //! dies or never connects is an error, not a hang):
@@ -40,7 +54,7 @@
 
 use super::cluster::{handle_cmd, record_failure, Cmd, FailureCell, ParamMeta, Served, Worker};
 use super::comm::{Comm, Transport};
-use super::{wire, OptimizerSpec};
+use super::{shm, wire, OptimizerSpec};
 use std::io::{Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
@@ -88,6 +102,53 @@ fn worker_bin_override() -> &'static RwLock<Option<PathBuf>> {
 /// read exactly once by `serve_worker` before any comm thread exists.
 const OVERLAP_ENV: &str = "GALORE2_OVERLAP";
 
+/// Same propagation for the shm data-plane knob (`[dist] shm` / `--shm`).
+/// The setup frame is the authoritative carrier (it names the slot-table
+/// file); the env keeps the worker's process-wide cell consistent.
+const SHM_ENV: &str = "GALORE2_SHM";
+
+/// Enable/disable the shared-memory data plane for process-transport
+/// clusters (`[dist] shm` / `--shm`, default on). With it off — or when
+/// slot-table creation fails at spawn — collective payloads ride the
+/// comm socket as before.
+pub fn set_shm_enabled(enabled: bool) {
+    *shm_cell().write().unwrap() = enabled;
+}
+
+pub(crate) fn shm_enabled() -> bool {
+    *shm_cell().read().unwrap()
+}
+
+fn shm_cell() -> &'static RwLock<bool> {
+    static CELL: RwLock<bool> = RwLock::new(true);
+    &CELL
+}
+
+/// Cumulative f32 payload bytes this process moved over comm sockets
+/// (deposits + replies; control/release headers excluded) and through the
+/// shm slot table (deposits + peer reads). A worker process owns exactly
+/// one transport, so these are exact per-rank figures; under the thread
+/// transport both stay zero.
+static SOCKET_PAYLOAD_BYTES: AtomicU64 = AtomicU64::new(0);
+static SHM_BYTES: AtomicU64 = AtomicU64::new(0);
+/// One slot's byte size when this worker runs the shm plane (else 0) —
+/// the in-flight-generation footprint charged into `peak_transient`.
+static SHM_SLOT_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// `(socket_payload_bytes, shm_bytes)` moved by this process so far.
+pub(crate) fn wire_traffic() -> (u64, u64) {
+    (
+        SOCKET_PAYLOAD_BYTES.load(Ordering::Relaxed),
+        SHM_BYTES.load(Ordering::Relaxed),
+    )
+}
+
+/// Bytes one in-flight pipelined generation keeps live in this worker's
+/// slot (0 off the shm plane) — workers add it to `peak_transient`.
+pub(crate) fn shm_inflight_bytes() -> usize {
+    SHM_SLOT_BYTES.load(Ordering::Relaxed) as usize
+}
+
 /// Test-only fault injection: a worker whose rank matches the value exits
 /// before answering `Ready` (handshake failure path) …
 const CRASH_SETUP_ENV: &str = "GALORE2_TEST_CRASH_SETUP_RANK";
@@ -95,6 +156,10 @@ const CRASH_SETUP_ENV: &str = "GALORE2_TEST_CRASH_SETUP_RANK";
 /// either a plain rank `R` (crash on the first step) or `R@N` (crash when
 /// serving a step with `t >= N`).
 const CRASH_STEP_ENV: &str = "GALORE2_TEST_CRASH_STEP_RANK";
+/// Test-only: a worker whose rank matches refuses to open the shm slot
+/// table during setup (the shm handshake itself fails — the coordinator
+/// must surface a named error, never hang).
+const SHM_FAIL_ENV: &str = "GALORE2_TEST_SHM_FAIL_RANK";
 
 /// The coordinator-side fault-injection plan (see tests/transport.rs and
 /// tests/fault_tolerance.rs). Both transports consume it: process spawns
@@ -110,6 +175,9 @@ struct CrashPlan {
     /// FIRST world spawned after it is set — a world rebuilt during
     /// recovery must not re-inject the same crash.
     step: Option<(usize, u64)>,
+    /// Fail rank R's shm slot-table open during setup, up to CREDITS
+    /// spawns of it — the shm-handshake-failure injection.
+    shm_fail: Option<(usize, u32)>,
 }
 
 /// Schedule test crashes: `setup = (rank, credits)` kills that rank during
@@ -120,13 +188,23 @@ struct CrashPlan {
 /// fallible handshake to exercise).
 #[doc(hidden)]
 pub fn set_test_crash_hooks(setup: Option<(usize, u32)>, step: Option<(usize, u64)>) {
-    *crash_plan().write().unwrap() = CrashPlan { setup, step };
+    let mut plan = crash_plan().write().unwrap();
+    plan.setup = setup;
+    plan.step = step;
+}
+
+/// Schedule an shm-handshake failure: rank R's slot-table open fails for
+/// the next CREDITS spawns of it (`(r, u32::MAX)` = persistent).
+#[doc(hidden)]
+pub fn set_test_shm_fail(fail: Option<(usize, u32)>) {
+    crash_plan().write().unwrap().shm_fail = fail;
 }
 
 fn crash_plan() -> &'static RwLock<CrashPlan> {
     static PLAN: RwLock<CrashPlan> = RwLock::new(CrashPlan {
         setup: None,
         step: None,
+        shm_fail: None,
     });
     &PLAN
 }
@@ -149,6 +227,18 @@ fn consume_setup_crash(rank: usize) -> bool {
 /// call this exactly once per world spawn).
 pub(crate) fn take_step_crash() -> Option<(usize, u64)> {
     crash_plan().write().unwrap().step.take()
+}
+
+/// Burn one shm-failure credit for this spawn of `rank`.
+fn consume_shm_fail(rank: usize) -> bool {
+    let mut plan = crash_plan().write().unwrap();
+    match &mut plan.shm_fail {
+        Some((r, credits)) if *r == rank && *credits > 0 => {
+            *credits -= 1;
+            true
+        }
+        _ => false,
+    }
 }
 
 /// Worker-process side of the setup hook: reads its OWN environment (set
@@ -223,10 +313,15 @@ fn fresh_socket_dir() -> Result<PathBuf, String> {
     Err(last_err)
 }
 
-/// Best-effort removal of the socket file and its private directory.
+/// Best-effort removal of the socket file, the shm slot-table file, and
+/// their private directory. Safe to call while workers run: established
+/// sockets and open slot-table fds outlive the unlink (the kernel
+/// reclaims the table when the last fd closes — even if a worker is
+/// killed mid-collective, its fds close at exit).
 pub(crate) fn cleanup_socket(path: &std::path::Path) {
     let _ = std::fs::remove_file(path);
     if let Some(dir) = path.parent() {
+        let _ = std::fs::remove_file(dir.join(shm::FILE_NAME));
         let _ = std::fs::remove_dir(dir);
     }
 }
@@ -265,19 +360,60 @@ pub(crate) fn spawn_world(
     seed: u64,
     failure: FailureCell,
 ) -> Result<SpawnedWorld, String> {
-    let path = fresh_socket_dir()?.join(SOCKET_NAME);
+    let dir = fresh_socket_dir()?;
+    let path = dir.join(SOCKET_NAME);
     let listener = UnixListener::bind(&path)
         .map_err(|e| format!("binding worker rendezvous socket {}: {e}", path.display()))?;
+    // Shared-memory data plane: create the slot table next to the socket
+    // and carry its name + geometry in the setup frame. Creation failure
+    // falls back LOUDLY to the socket plane — a silent fallback would let
+    // a perf regression masquerade as noise.
+    let shm_setup: Option<wire::ShmSetup> = if shm_enabled() {
+        let slot_elems = shm::slot_elems_for(metas) as u64;
+        match shm::SlotTable::create(&dir, world, slot_elems) {
+            Ok((table, table_path)) => {
+                // Workers open their own handles; the coordinator keeps
+                // no fd (the relay only synchronizes, it never touches
+                // payload data).
+                drop(table);
+                Some(wire::ShmSetup {
+                    path: table_path.display().to_string(),
+                    slot_elems,
+                })
+            }
+            Err(e) => {
+                eprintln!(
+                    "galore2: shm slot table unavailable ({e}); falling back to the \
+                     socket data plane for this cluster"
+                );
+                None
+            }
+        }
+    } else {
+        None
+    };
+    let relay_slot_elems = shm_setup.as_ref().map(|s| s.slot_elems);
     let mut children: Vec<Child> = Vec::with_capacity(world);
-    match establish(mode, world, metas, spec, seed, &listener, &path, &mut children) {
+    match establish(
+        mode,
+        world,
+        metas,
+        spec,
+        seed,
+        &listener,
+        &path,
+        &mut children,
+        shm_setup.as_ref(),
+    ) {
         Ok((controls, comm_streams)) => {
-            // All connections are up: the filesystem name is no longer
-            // needed (established sockets outlive the unlink).
+            // All connections are up: the filesystem names are no longer
+            // needed (established sockets and open slot-table fds outlive
+            // the unlink — from here the table behaves like a memfd).
             drop(listener);
             cleanup_socket(&path);
             let relay = std::thread::Builder::new()
                 .name(format!("{mode}-relay"))
-                .spawn(move || relay_loop(comm_streams, failure))
+                .spawn(move || relay_loop(comm_streams, failure, relay_slot_elems))
                 .map_err(|e| {
                     for c in &mut children {
                         let _ = c.kill();
@@ -344,9 +480,15 @@ fn spawn_rank(
                 "0"
             },
         )
+        // Data-plane knob, same propagation (authoritative carrier is the
+        // setup frame; the env keeps the worker's cell consistent).
+        .env(SHM_ENV, if shm_enabled() { "1" } else { "0" })
         .stdin(Stdio::null());
     if consume_setup_crash(rank) {
         cmd.env(CRASH_SETUP_ENV, rank.to_string());
+    }
+    if consume_shm_fail(rank) {
+        cmd.env(SHM_FAIL_ENV, rank.to_string());
     }
     if let Some((r, at)) = step_crash {
         if r == rank {
@@ -403,9 +545,10 @@ fn establish(
     listener: &UnixListener,
     path: &std::path::Path,
     children: &mut Vec<Child>,
+    shm_setup: Option<&wire::ShmSetup>,
 ) -> Result<(Vec<UnixStream>, Vec<UnixStream>), String> {
     // Refuse un-shippable specs BEFORE spawning anything.
-    let setup = wire::encode_setup(metas, spec, seed)?;
+    let setup = wire::encode_setup(metas, spec, seed, shm_setup)?;
 
     let bin = worker_binary();
     let retries = spawn_retries();
@@ -550,28 +693,116 @@ fn establish(
     Ok((controls, comms))
 }
 
-/// The coordinator-side collective hub: one round per exchange — read one
-/// headered frame from every rank (rank order; sockets buffer early
-/// senders), then write every sender's contribution back to each rank,
-/// sliced down to that receiver's requested element window (ranged
-/// exchanges carry `[lo, hi)` in their header; full exchanges get the
-/// whole body). Slicing happens hub-side, so a reduce-scatter reply costs
-/// n elements instead of w·n — and because each rank still receives the
-/// windows of ALL ranks in rank order, the fixed-tree reduction order is
-/// untouched and results stay bitwise identical. Exits on the first
-/// socket error/EOF, DROPPING every stream: that is what unblocks
-/// surviving workers when one rank dies (their reads fail instead of
-/// waiting forever). The errored rank is recorded into the shared failure
-/// cell FIRST, so the coordinator blames the rank that actually died
-/// rather than the first victim whose control link it happens to poll.
-fn relay_loop(mut streams: Vec<UnixStream>, failure: FailureCell) {
+/// The coordinator-side collective hub, one round per exchange. Reads one
+/// frame from every rank (rank order; sockets buffer early senders), then:
+///
+/// **Socket plane** (`shm_slot_elems = None`) — writes each sender's
+/// contribution back to every rank, sliced down to that receiver's
+/// requested element window (ranged exchanges carry `[lo, hi)` in their
+/// header; full exchanges get the whole body). Slicing happens hub-side,
+/// so a reduce-scatter reply costs n elements instead of w·n.
+///
+/// **Shm plane** (`Some(slot_elems)`) — the frames are 33-byte control
+/// messages; the relay is a pure synchronizer. It validates that every
+/// rank is at the same generation, that deposits fit the slots, and that
+/// requested windows fit every peer's deposit, then releases the round
+/// with one small go frame per rank (`[gen][elems × world]`). Payloads
+/// never pass through the hub: workers read each peer's slot directly and
+/// run the reduction themselves — in rank order, so the fixed-tree
+/// summation order (and therefore bitwise parity with sockets, threads,
+/// and single) is untouched.
+///
+/// Exits on the first socket error/EOF/desync, DROPPING every stream:
+/// that is what unblocks surviving workers when one rank dies (their
+/// reads fail instead of waiting forever). The errored rank is recorded
+/// into the shared failure cell FIRST, so the coordinator blames the rank
+/// that actually died rather than the first victim whose control link it
+/// happens to poll.
+fn relay_loop(mut streams: Vec<UnixStream>, failure: FailureCell, shm_slot_elems: Option<u64>) {
+    let world = streams.len();
+    // Per-rank receive buffers, reused across rounds: a long run reads
+    // millions of frames and must not allocate per message.
+    let mut frames: Vec<Vec<u8>> = vec![Vec::new(); world];
+    let mut gen: u64 = 0;
     loop {
-        let mut frames: Vec<Vec<u8>> = Vec::with_capacity(streams.len());
-        let mut needs: Vec<Option<(usize, usize)>> = Vec::with_capacity(streams.len());
-        for (rank, s) in streams.iter_mut().enumerate() {
-            let frame = match wire::read_frame(s) {
-                Ok(f) => f,
-                Err(e) => {
+        for (rank, (s, buf)) in streams.iter_mut().zip(frames.iter_mut()).enumerate() {
+            if let Err(e) = wire::read_frame_into(s, buf) {
+                record_failure(
+                    &failure,
+                    rank,
+                    format!("comm socket lost mid-collective ({e}) — check its stderr"),
+                );
+                return;
+            }
+        }
+        if let Some(slot_elems) = shm_slot_elems {
+            // Synchronizer round: validate every rank's control frame,
+            // then release. The go frame is control metadata (per-peer
+            // deposit lengths), not payload.
+            let mut elems: Vec<u64> = Vec::with_capacity(world);
+            let mut emin = u64::MAX;
+            let mut ranged_hi: Option<(usize, u64)> = None;
+            for (rank, f) in frames.iter().enumerate() {
+                let ctrl = match shm::header::decode_ctrl(f) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        record_failure(
+                            &failure,
+                            rank,
+                            format!("malformed shm control frame ({e}) — check its stderr"),
+                        );
+                        return;
+                    }
+                };
+                if ctrl.gen != gen {
+                    record_failure(
+                        &failure,
+                        rank,
+                        format!(
+                            "shm generation desync (rank at {}, relay at {gen}) — \
+                             ranks issued different collective schedules",
+                            ctrl.gen
+                        ),
+                    );
+                    return;
+                }
+                if ctrl.elems > slot_elems {
+                    record_failure(
+                        &failure,
+                        rank,
+                        format!(
+                            "shm deposit of {} elements exceeds the {slot_elems}-element slot",
+                            ctrl.elems
+                        ),
+                    );
+                    return;
+                }
+                if let Some((_, hi)) = ctrl.need {
+                    let hi = hi as u64;
+                    match ranged_hi {
+                        Some((_, h)) if hi <= h => {}
+                        _ => ranged_hi = Some((rank, hi)),
+                    }
+                }
+                emin = emin.min(ctrl.elems);
+                elems.push(ctrl.elems);
+            }
+            if let Some((rank, hi)) = ranged_hi {
+                if hi > emin {
+                    record_failure(
+                        &failure,
+                        rank,
+                        format!(
+                            "shm window reaching element {hi} exceeds a peer's \
+                             {emin}-element deposit — ranks desynced"
+                        ),
+                    );
+                    return;
+                }
+            }
+            let go = shm::header::encode_go(gen, &elems);
+            for (rank, s) in streams.iter_mut().enumerate() {
+                if let Err(e) = wire::write_frame(s, &go) {
                     record_failure(
                         &failure,
                         rank,
@@ -579,8 +810,13 @@ fn relay_loop(mut streams: Vec<UnixStream>, failure: FailureCell) {
                     );
                     return;
                 }
-            };
-            match wire::decode_comm_header(&frame) {
+            }
+            gen += 1;
+            continue;
+        }
+        let mut needs: Vec<Option<(usize, usize)>> = Vec::with_capacity(world);
+        for (rank, f) in frames.iter().enumerate() {
+            match wire::decode_comm_header(f) {
                 Ok((need, _)) => needs.push(need),
                 Err(e) => {
                     record_failure(
@@ -591,7 +827,6 @@ fn relay_loop(mut streams: Vec<UnixStream>, failure: FailureCell) {
                     return;
                 }
             }
-            frames.push(frame);
         }
         for (rank, (s, need)) in streams.iter_mut().zip(&needs).enumerate() {
             for f in &frames {
@@ -639,10 +874,15 @@ fn read_hello(stream: &mut UnixStream) -> std::io::Result<(u8, usize)> {
     Ok(wire::decode_hello(&hello))
 }
 
-/// The worker half of an exchange: ship this rank's headered contribution
-/// to the relay, read back each peer's (possibly range-sliced) window,
-/// reduce locally. Socket failures panic — in a worker process that exits
-/// the process with a diagnostic, which is exactly the EOF signal the
+/// The worker half of an exchange. Socket plane: ship this rank's
+/// headered contribution to the relay, read back each peer's (possibly
+/// range-sliced) window, reduce locally. Shm plane: deposit into this
+/// rank's slot, send a 33-byte control frame, wait for the relay's go,
+/// then read every peer's window straight out of the slot table — zero
+/// f32 payload bytes touch the socket. Either way the reduce closure sees
+/// per-rank views in rank order, so the fixed-tree summation is identical
+/// across planes. Failures panic — in a worker process that exits the
+/// process with a diagnostic, which is exactly the EOF signal the
 /// coordinator and relay react to.
 struct ProcessTransport {
     rank: usize,
@@ -650,9 +890,26 @@ struct ProcessTransport {
     stream: UnixStream,
     /// Actual reply bytes read off the comm socket — pins the hub-side
     /// scatter-range slicing (a ranged exchange costs w·(hi−lo)·4, not
-    /// w·n·4). Distinct from `Comm`'s modeled traffic counters, which
-    /// stay transport-uniform.
+    /// w·n·4) and, with shm on, pins the socket payload at exactly zero.
+    /// Distinct from `Comm`'s modeled traffic counters, which stay
+    /// transport-uniform.
     reply_bytes: u64,
+    /// Shared-memory data plane, when the setup handshake carried a slot
+    /// table. `None` falls back to framed socket payloads.
+    shm: Option<WorkerShm>,
+}
+
+/// Per-worker shared-memory state: this rank's handle onto the cluster's
+/// slot table, the local generation counter (must stay in lockstep with
+/// the relay's), and reusable scratch so the steady-state step path stops
+/// allocating per collective.
+struct WorkerShm {
+    table: shm::SlotTable,
+    gen: u64,
+    /// Byte staging for pread/pwrite ↔ f32 conversion.
+    bytes: Vec<u8>,
+    /// Per-peer decoded windows, reused across rounds.
+    slots: Vec<Vec<f32>>,
 }
 
 impl Transport for ProcessTransport {
@@ -670,6 +927,10 @@ impl Transport for ProcessTransport {
         need: Option<(usize, usize)>,
         reduce: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
     ) -> Vec<f32> {
+        if self.shm.is_some() {
+            return self.exchange_shm(data, need, reduce);
+        }
+        SOCKET_PAYLOAD_BYTES.fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
         wire::write_frame(&mut self.stream, &wire::encode_comm_frame(need, &data))
             .unwrap_or_else(|e| {
                 // lint: allow(no-panic-dist): worker-process exit IS the death signal — the relay sees EOF and records the rank into the coordinator's FailureCell
@@ -689,6 +950,7 @@ impl Transport for ProcessTransport {
                 )
             });
             self.reply_bytes += frame.len() as u64;
+            SOCKET_PAYLOAD_BYTES.fetch_add(frame.len() as u64, Ordering::Relaxed);
             slots.push(wire::bytes_to_f32s(&frame).unwrap_or_else(|e| {
                 // lint: allow(no-panic-dist): worker-process exit IS the death signal (relay EOF → FailureCell); corrupt frame has no recovery inside a collective
                 panic!("rank {}: corrupt collective frame: {e}", self.rank)
@@ -701,6 +963,94 @@ impl Transport for ProcessTransport {
     fn barrier(&mut self) {
         let mut noop = |_: &[&[f32]]| Vec::new();
         let _ = self.exchange(Vec::new(), None, &mut noop);
+    }
+}
+
+impl ProcessTransport {
+    /// The shared-memory collective: pwrite this rank's payload into its
+    /// `gen % LANES` slot, send a 33-byte control frame, block on the
+    /// relay's go frame, then pread every peer's window and reduce in rank
+    /// order. Two lanes make distance-2 slot reuse safe under the overlap
+    /// pipeline's depth-2 FIFO: depositing generation g+2 (same lane as g)
+    /// requires the relay to have released g+1, which it only does after
+    /// every rank deposited g+1 — i.e. after every rank finished reading g.
+    fn exchange_shm(
+        &mut self,
+        data: Vec<f32>,
+        need: Option<(usize, usize)>,
+        reduce: &mut dyn FnMut(&[&[f32]]) -> Vec<f32>,
+    ) -> Vec<f32> {
+        // Disjoint field borrows: the slot-table state and the socket are
+        // used simultaneously below.
+        let ProcessTransport {
+            rank,
+            world,
+            stream,
+            shm,
+            ..
+        } = self;
+        let rank = *rank;
+        let world = *world;
+        let w = match shm.as_mut() {
+            Some(w) => w,
+            // Unreachable: exchange() dispatches here only when shm is Some.
+            None => panic!("rank {rank}: exchange_shm without a slot table"),
+        };
+        let lane = w.gen % shm::LANES;
+        if let Err(e) = w.table.write_slot(rank, lane, &data, &mut w.bytes) {
+            panic!("rank {rank}: shm deposit failed ({e})");
+        }
+        SHM_BYTES.fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
+        let ctrl = shm::header::encode_ctrl(&shm::Ctrl {
+            need,
+            gen: w.gen,
+            elems: data.len() as u64,
+        });
+        drop(data);
+        if let Err(e) = wire::write_frame(stream, &ctrl) {
+            panic!("rank {rank}: collective send failed ({e}) — coordinator or a peer died");
+        }
+        let go = match wire::read_frame(stream) {
+            Ok(f) => f,
+            Err(e) => {
+                panic!("rank {rank}: collective receive failed ({e}) — coordinator or a peer died")
+            }
+        };
+        let (gen, elems) = match shm::header::decode_go(&go, world) {
+            Ok(v) => v,
+            Err(e) => panic!("rank {rank}: corrupt shm go frame: {e}"),
+        };
+        if gen != w.gen {
+            panic!(
+                "rank {rank}: shm generation desync (relay at {gen}, rank at {}) — \
+                 ranks issued different collective schedules",
+                w.gen
+            );
+        }
+        if w.slots.len() < world {
+            w.slots.resize_with(world, Vec::new);
+        }
+        for (r, (e, out)) in elems.iter().zip(w.slots.iter_mut()).enumerate() {
+            let (lo, hi) = match need {
+                Some((lo, hi)) => (lo, hi),
+                None => (0, *e as usize),
+            };
+            // The relay already validated windows against the minimum
+            // deposit, so a miss here means relay/worker disagreement.
+            if hi as u64 > *e {
+                panic!(
+                    "rank {rank}: shm window reaching element {hi} exceeds rank {r}'s \
+                     {e}-element deposit — ranks desynced"
+                );
+            }
+            if let Err(err) = w.table.read_slot(r, lane, lo, hi, &mut w.bytes, out) {
+                panic!("rank {rank}: shm read of rank {r}'s slot failed ({err})");
+            }
+            SHM_BYTES.fetch_add(((hi - lo) * 4) as u64, Ordering::Relaxed);
+        }
+        w.gen += 1;
+        let views: Vec<&[f32]> = w.slots[..world].iter().map(|s| s.as_slice()).collect();
+        reduce(&views)
     }
 }
 
@@ -729,7 +1079,7 @@ fn serve_worker<W: Worker>(rank: usize, world: usize, endpoint: &str) -> Result<
 
     let setup = wire::read_frame(&mut control)
         .map_err(|e| format!("rank {rank}: reading setup frame: {e}"))?;
-    let (metas, spec, seed) = wire::decode_setup(&setup)?;
+    let (metas, spec, seed, shm_setup) = wire::decode_setup(&setup)?;
 
     if crash_hook(CRASH_SETUP_ENV, rank) {
         // Test hook: die before Ready so the coordinator exercises its
@@ -739,23 +1089,52 @@ fn serve_worker<W: Worker>(rank: usize, world: usize, endpoint: &str) -> Result<
 
     // Same core-budget split as a worker thread in a world of this size.
     crate::parallel::set_thread_share(world);
-    // Adopt the coordinator's overlap setting (set at exec; read once,
-    // before any comm thread exists — no getenv on the step path).
+    // Adopt the coordinator's overlap/shm settings (set at exec; read
+    // once, before any comm thread exists — no getenv on the step path).
     if let Ok(v) = std::env::var(OVERLAP_ENV) {
         super::pipeline::set_overlap_enabled(v.trim() != "0");
     }
+    if let Ok(v) = std::env::var(SHM_ENV) {
+        set_shm_enabled(v.trim() != "0");
+    }
+    // Map the slot table the setup frame declared. Failing here — before
+    // Ready — makes the coordinator's handshake respawn/fail path name
+    // this rank instead of hanging a collective later.
+    let shm_state = match &shm_setup {
+        Some(s) => {
+            if crash_hook(SHM_FAIL_ENV, rank) {
+                return Err(format!(
+                    "rank {rank}: shm slot table: injected open failure (test hook)"
+                ));
+            }
+            let table = shm::SlotTable::open(std::path::Path::new(&s.path), world, s.slot_elems)
+                .map_err(|e| format!("rank {rank}: shm slot table: {e}"))?;
+            SHM_SLOT_BYTES.store(table.slot_bytes(), Ordering::Relaxed);
+            Some(WorkerShm {
+                table,
+                gen: 0,
+                bytes: Vec::new(),
+                slots: Vec::new(),
+            })
+        }
+        None => None,
+    };
     let comm = Comm::from_transport(Box::new(ProcessTransport {
         rank,
         world,
         stream: comm_stream,
         reply_bytes: 0,
+        shm: shm_state,
     }));
     let mut worker = W::new(rank, world, comm, metas, spec, seed);
     wire::write_frame(&mut control, READY)
         .map_err(|e| format!("rank {rank}: sending ready: {e}"))?;
 
+    // Per-connection scratch: the control loop reads one frame per step
+    // command and must not allocate per message.
+    let mut frame = Vec::new();
     loop {
-        let frame = wire::read_frame(&mut control).map_err(|e| {
+        wire::read_frame_into(&mut control, &mut frame).map_err(|e| {
             // EOF without a Shutdown command means the coordinator died.
             format!("rank {rank}: control connection lost ({e})")
         })?;
@@ -831,7 +1210,7 @@ mod tests {
         let serves: Vec<UnixStream> = (0..world).map(|_| listener.accept().unwrap().0).collect();
         cleanup_socket(&path);
         let cell: FailureCell = std::sync::Arc::new(std::sync::Mutex::new(None));
-        let relay = std::thread::spawn(move || relay_loop(serves, cell));
+        let relay = std::thread::spawn(move || relay_loop(serves, cell, None));
         let workers: Vec<std::thread::JoinHandle<Vec<Vec<f32>>>> = clients
             .into_iter()
             .enumerate()
@@ -842,6 +1221,7 @@ mod tests {
                         world,
                         stream,
                         reply_bytes: 0,
+                        shm: None,
                     };
                     let mut out = Vec::new();
                     for round in 0..4 {
@@ -887,7 +1267,7 @@ mod tests {
         let serves: Vec<UnixStream> = (0..world).map(|_| listener.accept().unwrap().0).collect();
         cleanup_socket(&path);
         let cell: FailureCell = std::sync::Arc::new(std::sync::Mutex::new(None));
-        let relay = std::thread::spawn(move || relay_loop(serves, cell));
+        let relay = std::thread::spawn(move || relay_loop(serves, cell, None));
         let handles: Vec<std::thread::JoinHandle<()>> = clients
             .into_iter()
             .enumerate()
@@ -898,6 +1278,7 @@ mod tests {
                         world,
                         stream,
                         reply_bytes: 0,
+                        shm: None,
                     };
                     // Rank r contributes [r*100, r*100+1, …]; every rank
                     // asks only for its own 2-element slot window.
@@ -932,5 +1313,88 @@ mod tests {
             h.join().unwrap();
         }
         relay.join().unwrap();
+    }
+
+    /// The shm-plane contract, in process: payloads move through the slot
+    /// table only, the relay releases rounds in lockstep generations,
+    /// ranged windows come back correct and in rank order — and the comm
+    /// socket carries ZERO payload bytes (`reply_bytes == 0`, the
+    /// transport-level half of the tentpole's zero-copy pin; the
+    /// process-spawn half lives in tests/transport.rs).
+    #[test]
+    fn shm_relay_synchronizes_without_payload_bytes() {
+        let world = 3usize;
+        let n = 6usize;
+        let dir = fresh_socket_dir().unwrap();
+        let slot_elems = (n + shm::SLOT_HEADROOM) as u64;
+        let (coord_table, table_path) = shm::SlotTable::create(&dir, world, slot_elems).unwrap();
+        // The coordinator holds no mapping: workers open their own handles.
+        drop(coord_table);
+        let sock = dir.join(SOCKET_NAME);
+        let listener = UnixListener::bind(&sock).unwrap();
+        let clients: Vec<UnixStream> = (0..world)
+            .map(|_| UnixStream::connect(&sock).unwrap())
+            .collect();
+        let serves: Vec<UnixStream> = (0..world).map(|_| listener.accept().unwrap().0).collect();
+        let cell: FailureCell = std::sync::Arc::new(std::sync::Mutex::new(None));
+        let relay = std::thread::spawn(move || relay_loop(serves, cell, Some(slot_elems)));
+        let handles: Vec<std::thread::JoinHandle<()>> = clients
+            .into_iter()
+            .enumerate()
+            .map(|(rank, stream)| {
+                let table_path = table_path.clone();
+                std::thread::spawn(move || {
+                    let table =
+                        shm::SlotTable::open(&table_path, world, slot_elems).unwrap();
+                    let mut t = ProcessTransport {
+                        rank,
+                        world,
+                        stream,
+                        reply_bytes: 0,
+                        shm: Some(WorkerShm {
+                            table,
+                            gen: 0,
+                            bytes: Vec::new(),
+                            slots: Vec::new(),
+                        }),
+                    };
+                    // Round 1: full exchange — every peer body, rank order.
+                    let data: Vec<f32> = (0..n).map(|i| (rank * 100 + i) as f32).collect();
+                    let mut check_full = |slots: &[&[f32]]| -> Vec<f32> {
+                        assert_eq!(slots.len(), world);
+                        for (r, s) in slots.iter().enumerate() {
+                            let expect: Vec<f32> =
+                                (0..n).map(|i| (r * 100 + i) as f32).collect();
+                            assert_eq!(s, &expect.as_slice(), "wrong body from rank {r}");
+                        }
+                        slots.iter().map(|s| s[0]).collect()
+                    };
+                    let _ = t.exchange(data.clone(), None, &mut check_full);
+                    // Round 2: ranged exchange — each rank reads only its
+                    // own 2-element window of every peer.
+                    let (lo, hi) = (rank * 2, rank * 2 + 2);
+                    let mut check_ranged = |slots: &[&[f32]]| -> Vec<f32> {
+                        for (r, s) in slots.iter().enumerate() {
+                            let expect: Vec<f32> =
+                                (lo..hi).map(|i| (r * 100 + i) as f32).collect();
+                            assert_eq!(s, &expect.as_slice(), "wrong window from rank {r}");
+                        }
+                        Vec::new()
+                    };
+                    let _ = t.exchange(data, Some((lo, hi)), &mut check_ranged);
+                    // Round 3: barrier (empty payload) still synchronizes.
+                    t.barrier();
+                    assert_eq!(
+                        t.reply_bytes, 0,
+                        "shm plane must put zero payload bytes on the socket"
+                    );
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        relay.join().unwrap();
+        cleanup_socket(&sock);
     }
 }

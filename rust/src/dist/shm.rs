@@ -1,0 +1,473 @@
+//! Shared-memory data plane for the process transport: the slot table.
+//!
+//! The coordinator allocates one tmpfs-backed slot-table file per cluster
+//! inside the private rendezvous directory (the same 0700 directory the
+//! Unix socket lives in), sized from the largest parameter. Workers open
+//! it by path during the setup handshake, and from then on gradient
+//! payloads move through the table instead of the socket byte stream: a
+//! rank `pwrite`s its contribution into its own slot, the relay
+//! synchronizes the round with header-only control frames, and every rank
+//! `pread`s its peers' windows and runs the same fixed-tree reduction it
+//! always ran — zero f32 payload bytes cross the socket.
+//!
+//! Design note: the ideal shape of this plane is `memfd_create` + `mmap`
+//! with the fd passed over the socket via `SCM_RIGHTS`. All three need
+//! raw syscalls the crate's no-new-dependencies rule keeps out (no
+//! `libc`), so the implementation uses the closest pure-std equivalent: a
+//! file in the already-private rendezvous dir (tmpfs on every target we
+//! run on), positioned reads/writes (`FileExt::{read_at, write_at}` —
+//! pread/pwrite, no shared cursor), and path-based open during the
+//! handshake. The file is unlinked as soon as every rank is ready, so —
+//! exactly like a memfd — it has no filesystem presence during the run
+//! and the kernel reclaims it when the last fd closes, even if a worker
+//! is killed mid-collective.
+//!
+//! Geometry: `world × LANES × slot_elems` f32 regions. `slot_elems` is
+//! the largest payload any collective can carry (max layer numel, plus
+//! headroom for the projector wire encoding's header words). `LANES = 2`
+//! double-buffers generations: with the overlap pipeline's depth-2 FIFO,
+//! rank A may deposit generation g+1 while rank B is still reading
+//! generation g, so each rank alternates lanes (`lane = gen % 2`). A
+//! third generation cannot be in flight: depositing g+2 requires having
+//! finished round g+1, which the relay only completes after every rank
+//! finished (and therefore fully read) round g.
+
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+/// Generations double-buffered per rank (see module docs).
+pub(crate) const LANES: u64 = 2;
+
+/// Elements of headroom beyond the largest layer: the projector broadcast
+/// ships `StoredTensor` bytes packed into words, whose header/scale
+/// overhead rides on top of a payload already bounded by the layer size.
+pub(crate) const SLOT_HEADROOM: usize = 64;
+
+/// Hard cap on the whole table (16 GiB) — mirrors the wire frame cap, so
+/// a corrupt setup frame can never size an absurd segment.
+pub(crate) const MAX_TABLE_BYTES: u64 = 1 << 34;
+
+/// File name inside the rendezvous directory.
+pub(crate) const FILE_NAME: &str = "slots.shm";
+
+/// Slot size covering every payload the collectives of `metas` can carry.
+pub(crate) fn slot_elems_for(metas: &[super::cluster::ParamMeta]) -> usize {
+    let largest = metas
+        .iter()
+        .map(|m| m.rows.saturating_mul(m.cols))
+        .max()
+        .unwrap_or(0);
+    largest.saturating_add(SLOT_HEADROOM)
+}
+
+/// Total table size in bytes, with every multiplication checked and the
+/// result bounded — this is the guard between a setup-declared geometry
+/// and any allocation or file mapping derived from it.
+pub(crate) fn table_bytes(world: usize, slot_elems: u64) -> Result<u64, String> {
+    let total = (world as u64)
+        .checked_mul(LANES)
+        .and_then(|x| x.checked_mul(slot_elems))
+        .and_then(|x| x.checked_mul(4))
+        .ok_or_else(|| {
+            format!("slot-table geometry overflows: {world} ranks x {LANES} lanes x {slot_elems} elems")
+        })?;
+    if total > MAX_TABLE_BYTES {
+        return Err(format!(
+            "slot table of {total} bytes exceeds the {MAX_TABLE_BYTES}-byte cap"
+        ));
+    }
+    Ok(total)
+}
+
+/// One mapped slot table: a file handle plus its validated geometry.
+pub(crate) struct SlotTable {
+    file: File,
+    world: usize,
+    slot_elems: u64,
+}
+
+impl SlotTable {
+    /// Coordinator side: create the table file inside the (private)
+    /// rendezvous directory and size it. The returned handle can be
+    /// dropped immediately — workers open their own.
+    pub(crate) fn create(dir: &Path, world: usize, slot_elems: u64) -> io::Result<(SlotTable, PathBuf)> {
+        let total = table_bytes(world, slot_elems)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidInput, e))?;
+        let path = dir.join(FILE_NAME);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)?;
+        file.set_len(total)?;
+        Ok((
+            SlotTable {
+                file,
+                world,
+                slot_elems,
+            },
+            path,
+        ))
+    }
+
+    /// Worker side: open the table the setup frame named and verify the
+    /// file is exactly the size the declared geometry implies — the
+    /// length is bounded (checked math + cap) *before* any region of it
+    /// is read or written.
+    pub(crate) fn open(path: &Path, world: usize, slot_elems: u64) -> Result<SlotTable, String> {
+        let declared = table_bytes(world, slot_elems)?;
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .map_err(|e| format!("open slot table {}: {e}", path.display()))?;
+        let got = file
+            .metadata()
+            .map_err(|e| format!("stat slot table {}: {e}", path.display()))?
+            .len();
+        if got != declared {
+            return Err(format!(
+                "slot table {} is {got} bytes but the setup-declared geometry needs {declared}",
+                path.display()
+            ));
+        }
+        Ok(SlotTable {
+            file,
+            world,
+            slot_elems,
+        })
+    }
+
+    /// Byte size of one slot — the per-rank in-flight footprint one
+    /// pipelined generation keeps live (charged into `peak_transient`).
+    pub(crate) fn slot_bytes(&self) -> u64 {
+        self.slot_elems * 4
+    }
+
+    fn offset(&self, rank: usize, lane: u64) -> Result<u64, String> {
+        if rank >= self.world || lane >= LANES {
+            return Err(format!(
+                "slot ({rank}, lane {lane}) outside {}x{LANES} table",
+                self.world
+            ));
+        }
+        // In-bounds by construction: table_bytes validated the product.
+        Ok(((rank as u64) * LANES + lane) * self.slot_elems * 4)
+    }
+
+    /// Deposit a payload into `(rank, lane)`. `scratch` is the reusable
+    /// byte conversion buffer.
+    pub(crate) fn write_slot(
+        &self,
+        rank: usize,
+        lane: u64,
+        data: &[f32],
+        scratch: &mut Vec<u8>,
+    ) -> Result<(), String> {
+        if data.len() as u64 > self.slot_elems {
+            return Err(format!(
+                "payload of {} elements exceeds the {}-element slot",
+                data.len(),
+                self.slot_elems
+            ));
+        }
+        super::wire::f32s_into_bytes(data, scratch);
+        let off = self.offset(rank, lane)?;
+        self.file
+            .write_all_at(scratch, off)
+            .map_err(|e| format!("slot ({rank}, lane {lane}) write: {e}"))
+    }
+
+    /// Read elements `[lo, hi)` of the payload in `(rank, lane)` into
+    /// `out` (cleared first); `scratch` is the reusable byte buffer.
+    pub(crate) fn read_slot(
+        &self,
+        rank: usize,
+        lane: u64,
+        lo: usize,
+        hi: usize,
+        scratch: &mut Vec<u8>,
+        out: &mut Vec<f32>,
+    ) -> Result<(), String> {
+        if lo > hi || hi as u64 > self.slot_elems {
+            return Err(format!(
+                "slot window [{lo}, {hi}) outside the {}-element slot",
+                self.slot_elems
+            ));
+        }
+        let nbytes = (hi - lo) * 4;
+        scratch.clear();
+        scratch.resize(nbytes, 0);
+        let off = self.offset(rank, lane)? + (lo as u64) * 4;
+        self.file
+            .read_exact_at(scratch, off)
+            .map_err(|e| format!("slot ({rank}, lane {lane}) read [{lo}, {hi}): {e}"))?;
+        super::wire::bytes_into_f32s(scratch, out)
+    }
+}
+
+/// A worker's per-round control message: replaces the f32 payload on the
+/// socket when the shm data plane is active.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Ctrl {
+    /// Scatter window this rank wants of every peer (`None` = full).
+    pub need: Option<(usize, usize)>,
+    /// Round counter; the relay verifies all ranks agree before releasing
+    /// the round, so a desynced worker dies loudly instead of reading a
+    /// stale lane.
+    pub gen: u64,
+    /// Elements this rank deposited in its slot this round.
+    pub elems: u64,
+}
+
+/// Byte layout of the shm control plane. This `mod header` region is the
+/// one sanctioned raw-`le_bytes` island outside `dist/wire.rs` /
+/// `optim::ser` / `quant/` — the single-parser lint rule allowlists
+/// exactly this block.
+pub(crate) mod header {
+    use super::Ctrl;
+
+    /// `[kind u8][lo u64][hi u64][gen u64][elems u64]` — fixed size, no
+    /// payload bytes ever follow.
+    pub(crate) const CTRL_LEN: usize = 33;
+    /// Full exchange through the slot table (lo/hi unused, zero).
+    pub(crate) const KIND_SHM_FULL: u8 = 2;
+    /// Ranged exchange: each rank reads only `[lo, hi)` of every peer.
+    pub(crate) const KIND_SHM_RANGED: u8 = 3;
+
+    pub(crate) fn encode_ctrl(c: &Ctrl) -> [u8; CTRL_LEN] {
+        let mut out = [0u8; CTRL_LEN];
+        match c.need {
+            Some((lo, hi)) => {
+                out[0] = KIND_SHM_RANGED;
+                out[1..9].copy_from_slice(&(lo as u64).to_le_bytes());
+                out[9..17].copy_from_slice(&(hi as u64).to_le_bytes());
+            }
+            None => out[0] = KIND_SHM_FULL,
+        }
+        out[17..25].copy_from_slice(&c.gen.to_le_bytes());
+        out[25..33].copy_from_slice(&c.elems.to_le_bytes());
+        out
+    }
+
+    pub(crate) fn decode_ctrl(frame: &[u8]) -> Result<Ctrl, String> {
+        if frame.len() != CTRL_LEN {
+            return Err(format!(
+                "shm control frame is {} bytes, expected exactly {CTRL_LEN}",
+                frame.len()
+            ));
+        }
+        let u64_at = |at: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&frame[at..at + 8]);
+            u64::from_le_bytes(b)
+        };
+        let gen = u64_at(17);
+        let elems = u64_at(25);
+        let need = match frame[0] {
+            KIND_SHM_FULL => None,
+            KIND_SHM_RANGED => {
+                let (lo, hi) = (u64_at(1), u64_at(9));
+                if lo > hi || hi > elems {
+                    return Err(format!(
+                        "shm window [{lo}, {hi}) out of bounds for a {elems}-element deposit"
+                    ));
+                }
+                Some((lo as usize, hi as usize))
+            }
+            other => return Err(format!("unknown shm control kind {other}")),
+        };
+        Ok(Ctrl { need, gen, elems })
+    }
+
+    /// The relay's release frame: `[gen u64][elems u64 × world]` — every
+    /// rank learns each peer's deposit length, then reads the table
+    /// directly. Control metadata only; carries no f32 payload.
+    pub(crate) fn encode_go(gen: u64, elems: &[u64]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + elems.len() * 8);
+        out.extend_from_slice(&gen.to_le_bytes());
+        for &e in elems {
+            out.extend_from_slice(&e.to_le_bytes());
+        }
+        out
+    }
+
+    pub(crate) fn decode_go(frame: &[u8], world: usize) -> Result<(u64, Vec<u64>), String> {
+        let want = world
+            .checked_mul(8)
+            .and_then(|x| x.checked_add(8))
+            .ok_or_else(|| format!("go-frame size overflows for world {world}"))?;
+        if frame.len() != want {
+            return Err(format!(
+                "shm go frame is {} bytes, expected {want} for world {world}",
+                frame.len()
+            ));
+        }
+        let u64_at = |at: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&frame[at..at + 8]);
+            u64::from_le_bytes(b)
+        };
+        let gen = u64_at(0);
+        let mut elems = Vec::with_capacity(world);
+        for r in 0..world {
+            elems.push(u64_at(8 + r * 8));
+        }
+        Ok((gen, elems))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn scratch_dir() -> PathBuf {
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "g2shm-test-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn geometry_is_checked_and_capped() {
+        assert_eq!(table_bytes(2, 10).unwrap(), 2 * 2 * 10 * 4);
+        assert!(table_bytes(4, u64::MAX / 2).is_err(), "overflow accepted");
+        assert!(
+            table_bytes(4, MAX_TABLE_BYTES).is_err(),
+            "table over the cap accepted"
+        );
+    }
+
+    #[test]
+    fn slot_elems_covers_the_largest_layer_plus_headroom() {
+        let metas = vec![
+            super::super::cluster::ParamMeta {
+                name: "a".into(),
+                rows: 12,
+                cols: 24,
+            },
+            super::super::cluster::ParamMeta {
+                name: "b".into(),
+                rows: 1,
+                cols: 16,
+            },
+        ];
+        assert_eq!(slot_elems_for(&metas), 12 * 24 + SLOT_HEADROOM);
+        assert_eq!(slot_elems_for(&[]), SLOT_HEADROOM);
+    }
+
+    #[test]
+    fn slots_roundtrip_bit_exactly_and_windows_slice() {
+        let dir = scratch_dir();
+        let (table, path) = SlotTable::create(&dir, 2, 8).unwrap();
+        let payload = vec![1.0f32, -0.0, f32::NAN, 2.5, -3.0, 0.125];
+        let mut scratch = Vec::new();
+        table.write_slot(1, 1, &payload, &mut scratch).unwrap();
+        let mut out = Vec::new();
+        table.read_slot(1, 1, 0, 6, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.len(), 6);
+        for (a, b) in payload.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // A window reads only its elements, re-indexed from the window.
+        table.read_slot(1, 1, 2, 5, &mut scratch, &mut out).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].to_bits(), f32::NAN.to_bits());
+        assert_eq!(out[1], 2.5);
+        // Other slots are untouched (zero-initialized by set_len).
+        table.read_slot(0, 0, 0, 8, &mut scratch, &mut out).unwrap();
+        assert!(out.iter().all(|x| x.to_bits() == 0));
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_dir(&dir).unwrap();
+    }
+
+    #[test]
+    fn out_of_bounds_slots_and_windows_error() {
+        let dir = scratch_dir();
+        let (table, path) = SlotTable::create(&dir, 2, 4).unwrap();
+        let mut scratch = Vec::new();
+        let mut out = Vec::new();
+        assert!(table.write_slot(2, 0, &[1.0], &mut scratch).is_err());
+        assert!(table.write_slot(0, 2, &[1.0], &mut scratch).is_err());
+        assert!(table.write_slot(0, 0, &[0.0; 5], &mut scratch).is_err());
+        assert!(table.read_slot(0, 0, 3, 5, &mut scratch, &mut out).is_err());
+        assert!(table.read_slot(0, 0, 3, 2, &mut scratch, &mut out).is_err());
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_dir(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_validates_size_against_declared_geometry() {
+        let dir = scratch_dir();
+        let (table, path) = SlotTable::create(&dir, 2, 8).unwrap();
+        drop(table);
+        assert!(SlotTable::open(&path, 2, 8).is_ok());
+        // Wrong geometry (a lying setup frame) is refused before any IO.
+        let err = SlotTable::open(&path, 4, 8).unwrap_err();
+        assert!(err.contains("bytes"), "unhelpful error: {err}");
+        assert!(SlotTable::open(&path, 2, 9).is_err());
+        // Oversized declared geometry is refused by the cap, not mapped.
+        assert!(SlotTable::open(&path, 2, MAX_TABLE_BYTES).is_err());
+        std::fs::remove_file(&path).unwrap();
+        std::fs::remove_dir(&dir).unwrap();
+        // A vanished file is a named error, not a hang.
+        assert!(SlotTable::open(&path, 2, 8).is_err());
+    }
+
+    #[test]
+    fn ctrl_frames_roundtrip_and_reject_bad_input() {
+        use header::*;
+        for c in [
+            Ctrl {
+                need: None,
+                gen: 0,
+                elems: 0,
+            },
+            Ctrl {
+                need: None,
+                gen: 7,
+                elems: 123,
+            },
+            Ctrl {
+                need: Some((2, 9)),
+                gen: u64::MAX,
+                elems: 12,
+            },
+        ] {
+            assert_eq!(decode_ctrl(&encode_ctrl(&c)).unwrap(), c);
+        }
+        assert!(decode_ctrl(&[]).is_err());
+        assert!(decode_ctrl(&[0u8; CTRL_LEN - 1]).is_err());
+        assert!(decode_ctrl(&[0u8; CTRL_LEN + 1]).is_err());
+        let mut bad_kind = encode_ctrl(&Ctrl {
+            need: None,
+            gen: 1,
+            elems: 2,
+        });
+        bad_kind[0] = 0; // socket kind on the shm plane
+        assert!(decode_ctrl(&bad_kind).is_err());
+        // Window past the deposit length.
+        let oob = encode_ctrl(&Ctrl {
+            need: Some((1, 50)),
+            gen: 1,
+            elems: 10,
+        });
+        assert!(decode_ctrl(&oob).is_err());
+    }
+
+    #[test]
+    fn go_frames_roundtrip_and_validate_length() {
+        use header::*;
+        let (gen, elems) = decode_go(&encode_go(9, &[3, 0, 77]), 3).unwrap();
+        assert_eq!((gen, elems), (9, vec![3, 0, 77]));
+        assert!(decode_go(&encode_go(9, &[3, 0, 77]), 2).is_err());
+        assert!(decode_go(&[], 1).is_err());
+    }
+}

@@ -34,6 +34,16 @@ pub(crate) fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result
 }
 
 pub(crate) fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    read_frame_into(r, &mut buf)?;
+    Ok(buf)
+}
+
+/// Read one frame into a caller-owned scratch buffer. The buffer is
+/// cleared first and keeps its capacity across calls, so a long-lived
+/// connection (the cluster control plane, the relay) pays the payload
+/// allocation once instead of per message.
+pub(crate) fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> std::io::Result<()> {
     let mut len_b = [0u8; 8];
     r.read_exact(&mut len_b)?;
     let len = u64::from_le_bytes(len_b);
@@ -47,32 +57,51 @@ pub(crate) fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
     // instead of trusting the prefix up front: a torn length under the
     // cap costs at most the real bytes on the socket, and EOF mid-frame
     // surfaces as the short-read error below.
-    let mut buf = Vec::new();
-    let got = r.by_ref().take(len).read_to_end(&mut buf)?;
+    buf.clear();
+    let got = r.by_ref().take(len).read_to_end(buf)?;
     if got as u64 != len {
         return Err(std::io::Error::new(
             std::io::ErrorKind::UnexpectedEof,
             format!("torn frame: length prefix {len}, got {got} bytes"),
         ));
     }
-    Ok(buf)
+    Ok(())
 }
 
 pub(crate) fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 4);
-    for &x in xs {
-        out.extend_from_slice(&x.to_le_bytes());
-    }
+    f32s_into_bytes(xs, &mut out);
     out
 }
 
+/// Scratch-reusing byte encoding of an f32 payload (clears `out` first) —
+/// the shm data plane converts one slot per collective and must not
+/// allocate per round.
+pub(crate) fn f32s_into_bytes(xs: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
 pub(crate) fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>, String> {
+    let mut out = Vec::new();
+    bytes_into_f32s(b, &mut out)?;
+    Ok(out)
+}
+
+/// Scratch-reusing decode of an f32 payload (clears `out` first).
+pub(crate) fn bytes_into_f32s(b: &[u8], out: &mut Vec<f32>) -> Result<(), String> {
     if b.len() % 4 != 0 {
         return Err(format!("f32 payload length {} not a multiple of 4", b.len()));
     }
-    Ok(b.chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+    out.clear();
+    out.reserve(b.len() / 4);
+    for c in b.chunks_exact(4) {
+        out.push(f32::from_le_bytes(c.try_into().unwrap()));
+    }
+    Ok(())
 }
 
 /// Header prepended to every collective payload a worker sends the relay:
@@ -387,12 +416,26 @@ pub(crate) fn decode_spec(r: &mut Reader) -> Result<OptimizerSpec, String> {
 
 // ------------------------------------------------------------------ setup
 
+/// Shared-memory data-plane parameters carried in the setup frame: where
+/// the coordinator created the slot table and how it is shaped. Absent
+/// (`None`) when the cluster runs on the socket data plane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct ShmSetup {
+    /// Filesystem path of the slot-table file (inside the private
+    /// rendezvous directory; unlinked once every rank is ready).
+    pub path: String,
+    /// Elements per slot — workers re-derive and bound the full table size
+    /// from this before touching the segment.
+    pub slot_elems: u64,
+}
+
 /// The first frame on a worker's control connection: everything
 /// `Worker::new` needs beyond what the command line carries.
 pub(crate) fn encode_setup(
     metas: &[ParamMeta],
     spec: &OptimizerSpec,
     seed: u64,
+    shm: Option<&ShmSetup>,
 ) -> Result<Vec<u8>, String> {
     let mut out = Vec::new();
     push_u64(&mut out, metas.len() as u64);
@@ -403,12 +446,21 @@ pub(crate) fn encode_setup(
     }
     encode_spec(&mut out, spec)?;
     push_u64(&mut out, seed);
+    match shm {
+        Some(s) => {
+            push_u8(&mut out, 1);
+            push_str(&mut out, &s.path);
+            push_u64(&mut out, s.slot_elems);
+        }
+        None => push_u8(&mut out, 0),
+    }
     Ok(out)
 }
 
+#[allow(clippy::type_complexity)]
 pub(crate) fn decode_setup(
     bytes: &[u8],
-) -> Result<(Vec<ParamMeta>, OptimizerSpec, u64), String> {
+) -> Result<(Vec<ParamMeta>, OptimizerSpec, u64, Option<ShmSetup>), String> {
     let mut r = Reader::new(bytes);
     let n = read_usize(&mut r)?;
     let mut metas = Vec::new();
@@ -421,7 +473,15 @@ pub(crate) fn decode_setup(
     }
     let spec = decode_spec(&mut r)?;
     let seed = r.u64()?;
-    Ok((metas, spec, seed))
+    let shm = match read_u8(&mut r)? {
+        0 => None,
+        1 => Some(ShmSetup {
+            path: read_str(&mut r)?,
+            slot_elems: r.u64()?,
+        }),
+        other => return Err(format!("unknown shm-setup tag {other}")),
+    };
+    Ok((metas, spec, seed, shm))
 }
 
 // ------------------------------------------------------------- cmd/reply
@@ -475,10 +535,16 @@ pub(crate) fn encode_reply(reply: &Reply) -> Vec<u8> {
         Reply::StepDone {
             comm_ns,
             compute_ns,
+            socket_bytes,
+            shm_bytes,
+            peak_transient,
         } => {
             push_u8(&mut out, 0);
             push_u64(&mut out, *comm_ns);
             push_u64(&mut out, *compute_ns);
+            push_u64(&mut out, *socket_bytes);
+            push_u64(&mut out, *shm_bytes);
+            push_u64(&mut out, *peak_transient);
         }
         Reply::Params(ms) => {
             push_u8(&mut out, 1);
@@ -505,6 +571,8 @@ pub(crate) fn encode_reply(reply: &Reply) -> Vec<u8> {
             push_u64(&mut out, rep.optimizer_bytes as u64);
             push_u64(&mut out, rep.peak_transient_bytes as u64);
             push_u64(&mut out, rep.traffic_elems);
+            push_u64(&mut out, rep.socket_bytes);
+            push_u64(&mut out, rep.shm_bytes);
         }
     }
     out
@@ -516,6 +584,9 @@ pub(crate) fn decode_reply(bytes: &[u8]) -> Result<Reply, String> {
         0 => Reply::StepDone {
             comm_ns: r.u64()?,
             compute_ns: r.u64()?,
+            socket_bytes: r.u64()?,
+            shm_bytes: r.u64()?,
+            peak_transient: r.u64()?,
         },
         1 => Reply::Params(read_matrices(&mut r)?),
         2 => Reply::OptState(read_bytes(&mut r)?),
@@ -532,6 +603,8 @@ pub(crate) fn decode_reply(bytes: &[u8]) -> Result<Reply, String> {
             optimizer_bytes: read_usize(&mut r)?,
             peak_transient_bytes: read_usize(&mut r)?,
             traffic_elems: r.u64()?,
+            socket_bytes: r.u64()?,
+            shm_bytes: r.u64()?,
         }),
         other => return Err(format!("unknown reply tag {other}")),
     })
@@ -689,11 +762,16 @@ mod tests {
             optimizer_bytes: 2048,
             peak_transient_bytes: 4096,
             traffic_elems: 123_456,
+            socket_bytes: 777,
+            shm_bytes: 8_888_888,
         };
         let cases = vec![
             Reply::StepDone {
                 comm_ns: 17_000_000,
                 compute_ns: 42_000_001,
+                socket_bytes: 4096,
+                shm_bytes: 65_536,
+                peak_transient: 131_072,
             },
             Reply::Params(vec![Matrix::randn(2, 4, 1.0, &mut rng)]),
             Reply::OptState(vec![9; 33]),
@@ -708,14 +786,23 @@ mod tests {
                     Reply::StepDone {
                         comm_ns,
                         compute_ns,
+                        socket_bytes,
+                        shm_bytes,
+                        peak_transient,
                     },
                     Reply::StepDone {
                         comm_ns: c2,
                         compute_ns: p2,
+                        socket_bytes: s2,
+                        shm_bytes: h2,
+                        peak_transient: t2,
                     },
                 ) => {
                     assert_eq!(comm_ns, c2);
                     assert_eq!(compute_ns, p2);
+                    assert_eq!(socket_bytes, s2);
+                    assert_eq!(shm_bytes, h2);
+                    assert_eq!(peak_transient, t2);
                 }
                 (Reply::Params(a), Reply::Params(b)) => {
                     assert_eq!(a[0].data, b[0].data);
@@ -729,6 +816,8 @@ mod tests {
                     assert_eq!(a.optimizer_bytes, b.optimizer_bytes);
                     assert_eq!(a.peak_transient_bytes, b.peak_transient_bytes);
                     assert_eq!(a.traffic_elems, b.traffic_elems);
+                    assert_eq!(a.socket_bytes, b.socket_bytes);
+                    assert_eq!(a.shm_bytes, b.shm_bytes);
                 }
                 _ => panic!("reply changed variant over the wire"),
             }
@@ -777,9 +866,10 @@ mod tests {
             },
         ];
         for spec in &specs {
-            let frame = encode_setup(&metas, spec, 0xdead_beef).unwrap();
-            let (m2, s2, seed) = decode_setup(&frame).unwrap();
+            let frame = encode_setup(&metas, spec, 0xdead_beef, None).unwrap();
+            let (m2, s2, seed, shm) = decode_setup(&frame).unwrap();
             assert_eq!(seed, 0xdead_beef);
+            assert_eq!(shm, None);
             assert_eq!(m2.len(), 2);
             assert_eq!(m2[0].name, "blocks.0.wq");
             assert_eq!((m2[1].rows, m2[1].cols), (1, 128));
@@ -812,7 +902,37 @@ mod tests {
             galore,
             adam: AdamCfg::default(),
         };
-        assert!(encode_setup(&metas, &pjrt, 1).is_err());
+        assert!(encode_setup(&metas, &pjrt, 1, None).is_err());
+    }
+
+    #[test]
+    fn setup_carries_the_shm_slot_table() {
+        let metas = vec![ParamMeta {
+            name: "w".into(),
+            rows: 4,
+            cols: 8,
+        }];
+        let shm = ShmSetup {
+            path: "/tmp/g2w-1/slots.shm".into(),
+            slot_elems: 96,
+        };
+        let frame = encode_setup(
+            &metas,
+            &OptimizerSpec::AdamW(AdamCfg::default()),
+            7,
+            Some(&shm),
+        )
+        .unwrap();
+        let (_, _, _, back) = decode_setup(&frame).unwrap();
+        assert_eq!(back, Some(shm));
+        // A corrupt shm tag errors instead of silently running socket-mode
+        // against an shm-mode coordinator. Layout from the tail: the tag
+        // byte precedes [len u64][path bytes][slot_elems u64].
+        let tag_idx = frame.len() - 8 - "/tmp/g2w-1/slots.shm".len() - 8 - 1;
+        assert_eq!(frame[tag_idx], 1, "shm tag not where the layout says");
+        let mut bad = frame.clone();
+        bad[tag_idx] = 9;
+        assert!(decode_setup(&bad).is_err());
     }
 
     #[test]
@@ -825,6 +945,7 @@ mod tests {
             }],
             &OptimizerSpec::AdamW(AdamCfg::default()),
             9,
+            None,
         )
         .unwrap();
         for cut in [0, 1, frame.len() / 2, frame.len() - 1] {

@@ -74,6 +74,8 @@ USAGE: galore2 <train|eval|memory|svd|lint|presets> [flags]
           --transport threads|process (worker fabric for fsdp/ddp)
           --overlap true|false (pipeline per-layer reduces behind
             optimizer compute; false = serial bitwise reference)
+          --shm true|false (process-transport data plane: shared slot
+            table with zero socket payload bytes; false = socket frames)
           --engine native|pjrt --eval-batches N
           --on-failure abort|respawn|shrink (worker death mid-run:
             fail fast, rebuild at same world, or continue on world-1)

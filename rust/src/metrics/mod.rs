@@ -137,9 +137,11 @@ impl crate::train::StepObserver for Metrics {
                 wall_secs,
             } => self.log("val", *step, *tokens_seen, *loss, *lr, *wall_secs),
             // Lifecycle events (checkpoints, worker loss/recovery) and the
-            // per-step timing firehose carry no loss point; the console
-            // observer narrates the former, benches consume the latter.
+            // per-step timing/traffic firehoses carry no loss point; the
+            // console observer narrates the former, benches consume the
+            // latter.
             StepEvent::StepTimed { .. }
+            | StepEvent::StepTraffic { .. }
             | StepEvent::Checkpoint { .. }
             | StepEvent::WorkerLost { .. }
             | StepEvent::RecoveryStarted { .. }

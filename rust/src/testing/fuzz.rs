@@ -83,6 +83,8 @@ pub fn sample_report_frame() -> Vec<u8> {
         optimizer_bytes: 2048,
         peak_transient_bytes: 4096,
         traffic_elems: 123_456,
+        socket_bytes: 777,
+        shm_bytes: 8_888,
     }))
 }
 
@@ -103,6 +105,10 @@ pub fn sample_setup_frame() -> Vec<u8> {
         ],
         &OptimizerSpec::AdamW(AdamCfg::default()),
         0xdead_beef,
+        Some(&wire::ShmSetup {
+            path: "/tmp/g2w-0-0/slots.shm".into(),
+            slot_elems: 192,
+        }),
     )
     .expect("AdamW spec is always encodable")
 }

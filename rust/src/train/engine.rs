@@ -27,7 +27,8 @@
 
 use crate::checkpoint::canonical::{CanonicalOptState, ImportOpts};
 use crate::dist::{
-    DdpCluster, FsdpCluster, MemoryReport, ParamMeta, StepTiming, TransportKind, WorkerLoss,
+    DdpCluster, FsdpCluster, MemoryReport, ParamMeta, StepTiming, StepTraffic, TransportKind,
+    WorkerLoss,
 };
 use crate::optim::spec::{BuildTarget, OptimizerSpec, PjrtResources, WorkerOpt};
 use crate::tensor::Matrix;
@@ -98,6 +99,14 @@ pub trait TrainEngine {
     /// step wall (None for single-process engines, which do no
     /// communication). Feeds `StepEvent::StepTimed`; observability only.
     fn last_step_timing(&self) -> Option<StepTiming> {
+        None
+    }
+
+    /// Data-plane traffic of the most recent successful step — payload
+    /// bytes summed across ranks plus the largest rank's transient
+    /// footprint (None for single-process engines). Feeds
+    /// `StepEvent::StepTraffic`; observability only.
+    fn last_step_traffic(&self) -> Option<StepTraffic> {
         None
     }
 }
@@ -314,6 +323,10 @@ impl TrainEngine for FsdpEngine {
     fn last_step_timing(&self) -> Option<StepTiming> {
         self.cluster.last_step_timing()
     }
+
+    fn last_step_traffic(&self) -> Option<StepTraffic> {
+        self.cluster.last_step_traffic()
+    }
 }
 
 /// DDP engine: replicated parameters + optimizer state; every gather
@@ -433,6 +446,10 @@ impl TrainEngine for DdpEngine {
 
     fn last_step_timing(&self) -> Option<StepTiming> {
         self.cluster.last_step_timing()
+    }
+
+    fn last_step_traffic(&self) -> Option<StepTraffic> {
+        self.cluster.last_step_traffic()
     }
 }
 

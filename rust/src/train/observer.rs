@@ -46,6 +46,18 @@ pub enum StepEvent {
         comm_ns: u64,
         compute_ns: u64,
     },
+    /// Per-step data-plane firehose: emitted on EVERY distributed step
+    /// alongside [`StepEvent::StepTimed`]. `socket_bytes`/`shm_bytes` are
+    /// the step's payload bytes summed across ranks (socket frames vs the
+    /// shared-memory slot table — both zero under the thread transport,
+    /// which moves no bytes); `peak_transient` is the largest rank's
+    /// transient-buffer footprint. Observability only.
+    StepTraffic {
+        step: u64,
+        socket_bytes: u64,
+        shm_bytes: u64,
+        peak_transient: u64,
+    },
     /// A checkpoint was written.
     Checkpoint { step: u64, path: PathBuf },
     /// A worker rank died mid-run (`step` is the step being served when

@@ -82,6 +82,10 @@ impl Trainer {
         // (the serial bitwise reference); default pipelines per-layer
         // reduces behind optimizer compute (bitwise identical).
         crate::dist::set_overlap_enabled(cfg.overlap);
+        // `--shm false` keeps process-transport payloads on the comm
+        // sockets; default moves them through the shared slot table
+        // (bitwise identical — the data plane never reorders the tree).
+        crate::dist::set_shm_enabled(cfg.shm);
         let llama = LlamaCfg::preset(&cfg.preset)
             .with_context(|| format!("unknown preset {:?}", cfg.preset))?;
         let manifest = Manifest::load(
@@ -397,6 +401,14 @@ impl Trainer {
                     step: t,
                     comm_ns: timing.comm_ns,
                     compute_ns: timing.compute_ns,
+                });
+            }
+            if let Some(traffic) = self.supervisor.engine().last_step_traffic() {
+                self.emit(StepEvent::StepTraffic {
+                    step: t,
+                    socket_bytes: traffic.socket_bytes,
+                    shm_bytes: traffic.shm_bytes,
+                    peak_transient: traffic.peak_transient_bytes,
                 });
             }
             let loss = (losses.iter().sum::<f32>() / losses.len().max(1) as f32) as f64;

@@ -34,7 +34,9 @@
 //! process-global. CI runs it with `GALORE2_DENY_SKIP=1`; nothing here
 //! needs compiled artifacts.
 
-use galore2::dist::{set_test_crash_hooks, set_worker_binary, OptimizerSpec, TransportKind};
+use galore2::dist::{
+    set_test_crash_hooks, set_test_shm_fail, set_worker_binary, OptimizerSpec, TransportKind,
+};
 use galore2::optim::{AdamCfg, GaLoreCfg, ProjectionKind};
 use galore2::tensor::Matrix;
 use galore2::testing::fixtures;
@@ -366,6 +368,7 @@ fn process_fsdp_galore_respawn_recovers_bitwise() {
     let _g = lock();
     use_real_worker_bin();
     let dirs_before = worker_tmp_dirs();
+    let fds_before = open_fds();
     check_recovery(
         Mode::Fsdp,
         &galore_spec(),
@@ -378,6 +381,17 @@ fn process_fsdp_galore_respawn_recovers_bitwise() {
         worker_tmp_dirs(),
         dirs_before,
         "kill→recover must not leak rendezvous socket directories"
+    );
+    // Each cluster the recovery built and tore down opened sockets plus
+    // (shm default on) a slot-table fd per side; all of them must be
+    // closed again once both the dead and the rebuilt cluster are gone.
+    // Small slack for harness churn (e.g. a lazily opened urandom fd) —
+    // a leaked slot table or stream would add several fds per cycle.
+    let fds_after = open_fds();
+    assert!(
+        fds_after <= fds_before + 2,
+        "fds leaked across kill→recover (slot table or stream not closed): \
+         {fds_before} → {fds_after}"
     );
 }
 
@@ -550,8 +564,55 @@ fn persistent_spawn_crash_names_rank_and_attempts() {
     );
 }
 
+#[test]
+fn shm_handshake_failure_during_setup_errors_naming_rank_never_hangs() {
+    let _g = lock();
+    use_real_worker_bin();
+    // The shm data plane adds a step to worker setup: map the slot table
+    // the setup frame declared. Rank 1's open fails on EVERY spawn
+    // attempt (persistent credits), so each respawn burns a retry until
+    // the coordinator gives up. The failure lands BEFORE the rank's
+    // Ready, i.e. inside the handshake — the coordinator must surface a
+    // named error through the spawn-retry path, never hang a collective
+    // waiting for a rank that will not come up.
+    set_test_shm_fail(Some((1, u32::MAX)));
+    let result = build(Mode::Fsdp, 2, &galore_spec(), TransportKind::Process);
+    set_test_shm_fail(None);
+    let err = result
+        .err()
+        .expect("a rank whose shm handshake always fails must fail the build");
+    assert!(err.contains("rank 1"), "error must name the failing rank: {err}");
+
+    // One credit: the first spawn of rank 1 fails its shm handshake, the
+    // respawn maps the (still-linked) slot table cleanly, and the
+    // cluster trains bitwise-identically to the thread transport.
+    set_test_shm_fail(Some((1, 1)));
+    let result = build(Mode::Fsdp, 2, &galore_spec(), TransportKind::Process);
+    set_test_shm_fail(None);
+    let mut engine = result.expect("one transient shm-handshake failure must be retried");
+    for t in 0..3 {
+        engine.step(t, vec![grads(t); 2], LR);
+    }
+    let mut want = build(Mode::Fsdp, 2, &galore_spec(), TransportKind::Threads).unwrap();
+    for t in 0..3 {
+        want.step(t, vec![grads(t); 2], LR);
+    }
+    for (idx, (a, b)) in engine.params().iter().zip(want.params()).enumerate() {
+        assert_eq!(a.data, b.data, "param {idx} diverged after a retried shm handshake");
+    }
+}
+
 fn thread_count() -> usize {
     std::fs::read_dir("/proc/self/task")
+        .map(|d| d.count())
+        .unwrap_or(0)
+}
+
+/// Open file descriptors of this process (entries in `/proc/self/fd`).
+/// The `read_dir` handle itself is open during both sides of a bracket,
+/// so before/after deltas are comparable.
+fn open_fds() -> usize {
+    std::fs::read_dir("/proc/self/fd")
         .map(|d| d.count())
         .unwrap_or(0)
 }

@@ -139,6 +139,21 @@ fn each_rule_fires_on_a_seeded_violation() {
             "dist/pipeline.rs",
             "fn f(s: &S, t: &mut T) {\n    let st = s.m.lock();\n    t.exchange(v, None, &mut r);\n    drop(st);\n}",
         ),
+        // The shm module's raw-le_bytes allowlist covers ONLY the
+        // `mod header` codec region: the same token outside it fires.
+        (
+            "single-parser",
+            "dist/shm.rs",
+            "mod header { fn g(b: [u8; 8]) -> u64 { u64::from_le_bytes(b) } }\nfn f(x: u64) -> [u8; 8] { x.to_le_bytes() }",
+        ),
+        // dist/shm.rs is a parser module: an unbounded parse+alloc (a
+        // declared slot-table length trusted without a checked bound
+        // before mapping) is a finding.
+        (
+            "checked-alloc",
+            "dist/shm.rs",
+            "fn open(r: &mut Reader) -> Vec<u8> {\n    let n = r.u64().unwrap_or(0) as usize;\n    Vec::with_capacity(n)\n}",
+        ),
     ];
     for (rule, file, src) in cases {
         let findings = lint_source(file, src);

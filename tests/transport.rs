@@ -9,6 +9,9 @@
 //!   `TransportKind::Threads` and to `SingleEngine` (identical per-rank
 //!   microbatches make power-of-two-world averages exact — same
 //!   construction as tests/resharding.rs);
+//! * the shared-memory data plane (`--shm`, default on) is bitwise
+//!   identical to the socket plane, and with it on gradient collectives
+//!   put exactly ZERO payload bytes on the comm sockets;
 //! * per-rank telemetry (memory reports, traffic counters) and the
 //!   optimizer-state frame protocol round-trip through the sockets;
 //! * a worker that crashes during setup is a spawn **error**; one that
@@ -23,8 +26,8 @@
 //! the fixtures' skip guard keeps it that way if one ever does.
 
 use galore2::dist::{
-    set_test_crash_hooks, set_worker_binary, DdpCluster, FsdpCluster, OptimizerSpec,
-    TransportKind, WORKER_BIN_ENV,
+    set_shm_enabled, set_test_crash_hooks, set_worker_binary, DdpCluster, FsdpCluster,
+    OptimizerSpec, TransportKind, WORKER_BIN_ENV,
 };
 use galore2::optim::{AdamCfg, GaLoreCfg, ProjectionKind};
 use galore2::tensor::Matrix;
@@ -168,6 +171,103 @@ fn ddp_process_bitwise_equals_threads_and_single() {
     }
 }
 
+/// The tentpole parity pin: with the shared-memory data plane ON (the
+/// default) the process transport stays bitwise identical to the socket
+/// plane — and, through the sibling suites above, to threads and single —
+/// for FSDP at worlds 1/2/4 and DDP at world 2, galore and adamw. STEPS=7
+/// with update_freq=3 crosses two subspace refreshes, so the leader
+/// broadcast rides both planes too.
+#[test]
+fn shm_plane_bitwise_equals_socket_plane() {
+    let _g = lock();
+    use_real_worker_bin();
+    for spec in [galore_spec(), adamw_spec()] {
+        for world in [1usize, 2, 4] {
+            set_shm_enabled(true);
+            let on = run(fsdp(world, &spec, TransportKind::Process));
+            set_shm_enabled(false);
+            let off = run(fsdp(world, &spec, TransportKind::Process));
+            set_shm_enabled(true);
+            assert_params_eq(
+                &on,
+                &off,
+                &format!("{} fsdp({world}) shm vs sockets", spec.name()),
+            );
+        }
+        set_shm_enabled(true);
+        let on = run(ddp(2, &spec, TransportKind::Process));
+        set_shm_enabled(false);
+        let off = run(ddp(2, &spec, TransportKind::Process));
+        set_shm_enabled(true);
+        assert_params_eq(&on, &off, &format!("{} ddp(2) shm vs sockets", spec.name()));
+    }
+}
+
+/// The zero-copy pin: with shm on, gradient collectives put EXACTLY zero
+/// payload bytes on the comm sockets (the per-rank counters are measured
+/// inside the worker processes, which each own one transport); with shm
+/// off, the same run moves every payload byte over the sockets and none
+/// through the slot table.
+#[test]
+fn shm_plane_puts_zero_payload_bytes_on_the_socket() {
+    let _g = lock();
+    use_real_worker_bin();
+    let world = 2;
+    let mut drive = |shm: bool| {
+        set_shm_enabled(shm);
+        let mut cluster = FsdpCluster::with_transport(
+            world,
+            fixtures::metas_for(SHAPES),
+            galore_spec(),
+            SEED,
+            TransportKind::Process,
+        )
+        .unwrap();
+        cluster.init_params(&init());
+        for t in 0..4 {
+            cluster.step(t, vec![grads(t); world], LR);
+        }
+        let reports = cluster.memory_reports();
+        let traffic = cluster
+            .last_step_traffic()
+            .expect("distributed steps must report traffic");
+        (reports, traffic)
+    };
+
+    let (reports, traffic) = drive(true);
+    for r in &reports {
+        assert_eq!(
+            r.socket_bytes, 0,
+            "rank {}: shm-on collectives must move ZERO payload bytes over the socket",
+            r.rank
+        );
+        assert!(
+            r.shm_bytes > 0,
+            "rank {}: shm-on payloads must flow through the slot table",
+            r.rank
+        );
+    }
+    assert_eq!(traffic.socket_bytes, 0, "per-step socket payload, shm on");
+    assert!(traffic.shm_bytes > 0, "per-step shm payload, shm on");
+
+    let (reports, traffic) = drive(false);
+    set_shm_enabled(true);
+    for r in &reports {
+        assert!(
+            r.socket_bytes > 0,
+            "rank {}: shm-off payloads ride the sockets",
+            r.rank
+        );
+        assert_eq!(
+            r.shm_bytes, 0,
+            "rank {}: shm-off runs must not touch the slot table",
+            r.rank
+        );
+    }
+    assert!(traffic.socket_bytes > 0, "per-step socket payload, shm off");
+    assert_eq!(traffic.shm_bytes, 0, "per-step shm payload, shm off");
+}
+
 #[test]
 fn process_cluster_telemetry_and_state_frames_roundtrip() {
     let _g = lock();
@@ -243,6 +343,14 @@ fn rendezvous_socket_is_unlinked() {
         !path.exists(),
         "rendezvous socket {} must be unlinked once the world is connected",
         path.display()
+    );
+    // The shm slot table is unlinked with it: workers keep the file alive
+    // through their open fds (memfd-like semantics), so no name persists.
+    let table = path.with_file_name("slots.shm");
+    assert!(
+        !table.exists(),
+        "shm slot table {} must be unlinked once the world is connected",
+        table.display()
     );
     drop(cluster);
     assert!(!path.exists(), "socket file resurrected by Drop");
